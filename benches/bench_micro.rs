@@ -1,0 +1,124 @@
+//! Hot-path micro-benches used by the §Perf optimization pass
+//! (EXPERIMENTS.md §Perf): the L3 coordinator primitives that run between
+//! every pair of HLO executions, plus block-execution dispatch on both
+//! paths. criterion is not vendored offline; testutil::Bencher prints
+//! comparable summary lines.
+//!
+//! Usage: cargo bench --bench bench_micro [-- <filter>]
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fastcache_dit::cache::AffineFit;
+use fastcache_dit::config::{FastCacheConfig, PolicyKind, Variant};
+use fastcache_dit::model::{native, DitModel};
+use fastcache_dit::rng::Rng;
+use fastcache_dit::runtime::{ArtifactStore, Client};
+use fastcache_dit::scheduler::{DenoiseEngine, GenRequest};
+use fastcache_dit::tensor::Tensor;
+use fastcache_dit::testutil::Bencher;
+use fastcache_dit::tokens;
+
+fn rnd(seed: u64, shape: &[usize]) -> Tensor {
+    let mut r = Rng::new(seed);
+    Tensor::new(r.normal_vec(shape.iter().product(), 1.0), shape)
+}
+
+fn main() {
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"));
+    let want = |name: &str| filter.as_deref().map_or(true, |f| name.contains(f));
+    let b = Bencher::from_env();
+
+    let d = 288; // dit-xl width
+    let h = rnd(1, &[64, d]);
+    let hp = rnd(2, &[64, d]);
+
+    if want("delta_rel") {
+        b.bench("L3/delta_rel 64x288", || {
+            std::hint::black_box(native::delta_rel(&h, &hp));
+        });
+    }
+    if want("saliency") {
+        b.bench("L3/saliency 64x288", || {
+            std::hint::black_box(native::saliency(&h, &hp));
+        });
+    }
+    if want("partition") {
+        b.bench("L3/partition+pad 64x288", || {
+            let p = tokens::partition(&h, &hp, 0.05);
+            std::hint::black_box(tokens::pad_to_bucket(&p));
+        });
+    }
+    if want("affine") {
+        let mut fit = AffineFit::new(d, 0.98);
+        fit.update(&h, &hp);
+        b.bench("L3/affine_fit.update 64x288", || {
+            let mut f2 = fit.clone();
+            f2.update(&h, &hp);
+            std::hint::black_box(f2);
+        });
+        b.bench("L3/affine_fit.apply 64x288", || {
+            std::hint::black_box(fit.apply(&h));
+        });
+    }
+    if want("knn") {
+        b.bench("L3/knn_density k=5 64x288", || {
+            std::hint::black_box(tokens::knn_density(&h, 5));
+        });
+    }
+    if want("merge") {
+        let scores = vec![1.0f32; 64];
+        b.bench("L3/local_ctm 64->32", || {
+            std::hint::black_box(tokens::local_ctm(&h, &scores, 32));
+        });
+    }
+    if want("block_native") {
+        let m = DitModel::native(Variant::Xl, 1);
+        let hb = rnd(3, &[1, 64, 288]);
+        let c = rnd(4, &[1, 288]);
+        b.bench("L2-native/block dit-xl 64 tok", || {
+            std::hint::black_box(m.block(0, &hb, &c).unwrap());
+        });
+        let hb16 = rnd(5, &[1, 16, 288]);
+        b.bench("L2-native/block dit-xl 16 tok", || {
+            std::hint::black_box(m.block(0, &hb16, &c).unwrap());
+        });
+    }
+    if want("block_hlo") && Path::new("artifacts/manifest.txt").exists() {
+        let client = Arc::new(Client::cpu().unwrap());
+        let store = Arc::new(ArtifactStore::open(Path::new("artifacts")).unwrap());
+        let m = DitModel::load(client, store, Variant::Xl, 1).unwrap();
+        let hb = rnd(3, &[1, 64, 288]);
+        let c = rnd(4, &[1, 288]);
+        // Warm the executable cache before timing dispatch.
+        let _ = m.block(0, &hb, &c).unwrap();
+        b.bench("L1+runtime/block HLO dit-xl 64 tok", || {
+            std::hint::black_box(m.block(0, &hb, &c).unwrap());
+        });
+        let hb16 = rnd(5, &[1, 16, 288]);
+        let _ = m.block(0, &hb16, &c).unwrap();
+        b.bench("L1+runtime/block HLO dit-xl 16 tok", || {
+            std::hint::black_box(m.block(0, &hb16, &c).unwrap());
+        });
+        let w = rnd(6, &[288, 288]);
+        let bias = rnd(7, &[288]);
+        let _ = m.linear_approx_full(&hb, &w, &bias).unwrap();
+        b.bench("L1+runtime/linear_approx HLO (pallas)", || {
+            std::hint::black_box(m.linear_approx_full(&hb, &w, &bias).unwrap());
+        });
+    }
+    if want("e2e") {
+        let m = DitModel::native(Variant::B, 1);
+        b.bench("E2E-native/fastcache dit-b 10 steps", || {
+            let mut eng = DenoiseEngine::new(&m, FastCacheConfig::default());
+            std::hint::black_box(eng.generate(&GenRequest::simple(0, 42, 10)).unwrap());
+        });
+        b.bench("E2E-native/nocache dit-b 10 steps", || {
+            let mut eng =
+                DenoiseEngine::new(&m, FastCacheConfig::with_policy(PolicyKind::NoCache));
+            std::hint::black_box(eng.generate(&GenRequest::simple(0, 42, 10)).unwrap());
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! Policy explorer: run every cache policy on the same workload and print
+//! the quality/efficiency frontier — the interactive companion to the
+//! paper's Table 1 for trying custom knobs.
+//!
+//!   cargo run --release --example policy_explorer [--model l] [--steps 20]
+//!   [--requests 8] [--alpha 0.05] [--tau-s 0.05] [--gamma 0.5]
+
+use anyhow::{Context, Result};
+use fastcache_dit::config::{Args, FastCacheConfig, PolicyKind, Variant};
+use fastcache_dit::experiments::{eval_policies, EvalConfig};
+use fastcache_dit::metrics::report::{f1, f2, pct, Table};
+use fastcache_dit::model::DitModel;
+use fastcache_dit::workload::MotionProfile;
+
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let variant = Variant::parse(args.get_or("model", "l")).context("bad --model")?;
+    let model = DitModel::native(variant, 0xD17);
+
+    let mut ecfg = EvalConfig::quick(variant);
+    ecfg.steps = args.parse_num("steps", ecfg.steps).map_err(anyhow::Error::msg)?;
+    ecfg.requests = args.parse_num("requests", ecfg.requests).map_err(anyhow::Error::msg)?;
+    ecfg.profile = match args.get_or("motion", "mixed") {
+        "calm" => MotionProfile::CALM,
+        "stormy" => MotionProfile::STORMY,
+        _ => MotionProfile::MIXED,
+    };
+
+    let mut policies: Vec<(String, FastCacheConfig)> = Vec::new();
+    for kind in PolicyKind::ALL {
+        let mut c = FastCacheConfig::with_policy(kind);
+        if kind == PolicyKind::FastCache {
+            c.alpha = args.parse_num("alpha", c.alpha).map_err(anyhow::Error::msg)?;
+            c.tau_s = args.parse_num("tau-s", c.tau_s).map_err(anyhow::Error::msg)?;
+            c.gamma = args.parse_num("gamma", c.gamma).map_err(anyhow::Error::msg)?;
+        }
+        policies.push((kind.paper_name().to_string(), c));
+    }
+
+    println!(
+        "exploring {} policies on {} ({} requests x {} steps, motion {:?})\n",
+        policies.len(),
+        variant.paper_name(),
+        ecfg.requests,
+        ecfg.steps,
+        ecfg.profile
+    );
+    let rows = eval_policies(&model, &policies, &ecfg)?;
+    let mut t = Table::new(
+        "Policy frontier",
+        &["Method", "FID↓", "t-FID↓", "CLIP↑", "Time (ms)↓", "Mem (MiB)↓", "Skip↑", "Speedup↑"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            f2(r.fid),
+            f2(r.tfid),
+            f1(r.clip),
+            format!("{:.0}", r.time_ms),
+            f1(r.mem_mib),
+            pct(r.skip_ratio),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(FID/t-FID are Fréchet proxies vs the NoCache reference — see DESIGN.md §2)");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts into a PJRT CPU client, spin up a
+//! DiT-S model, and generate one image latent with FastCache on — the
+//! minimal end-to-end tour of the public API.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fastcache_dit::config::{FastCacheConfig, Variant};
+use fastcache_dit::model::DitModel;
+use fastcache_dit::runtime::{ArtifactStore, Client};
+use fastcache_dit::scheduler::{DenoiseEngine, GenRequest};
+
+fn main() -> Result<()> {
+    // 1. PJRT CPU client + compiled artifact store (HLO text -> executable).
+    let client = Arc::new(Client::cpu()?);
+    println!("PJRT platform: {}", client.platform());
+    let store = Arc::new(ArtifactStore::open(std::path::Path::new("artifacts"))?);
+    println!("artifacts loaded: {} programs available", store.names().count());
+
+    // 2. A servable model: weights generated (seeded) and uploaded once.
+    let model = DitModel::load(client.clone(), store, Variant::S, 0xD17)?;
+    println!(
+        "model {} — {} layers, d={}, {:.1}M params",
+        model.cfg.variant.paper_name(),
+        model.cfg.layers,
+        model.cfg.d,
+        model.cfg.param_count() as f64 / 1e6
+    );
+
+    // 3. FastCache engine with the paper's default knobs (α=0.05, τ_s=0.05,
+    //    γ=0.5, STR+SC+MB all on).
+    let fc = FastCacheConfig::default();
+    let mut engine = DenoiseEngine::new(&model, fc);
+
+    // 4. Generate.
+    let req = GenRequest::simple(0, 42, 25);
+    let out = engine.generate(&req)?;
+    println!(
+        "generated latent {:?} in {:.1} ms",
+        out.latent.shape(),
+        out.wall_ms
+    );
+    println!(
+        "cache behaviour: {} computed / {} approximated / {} reused block-sites \
+         ({:.1}% skipped, {:.1}% of FLOPs executed)",
+        out.computed,
+        out.approximated,
+        out.reused,
+        out.skip_ratio() * 100.0,
+        out.flops_ratio() * 100.0
+    );
+    println!(
+        "device memory: live {:.1} MiB, peak {:.1} MiB",
+        client.meter.live_bytes() as f64 / (1 << 20) as f64,
+        client.meter.peak_bytes() as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}

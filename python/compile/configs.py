@@ -1,0 +1,29 @@
+"""Model-variant table, mirrored exactly by rust/src/config/model.rs.
+
+The four DiT variants of the paper (DiT-S/2..XL/2) scaled for single-core
+CPU PJRT execution: same depth *ratios* and adaLN-zero block structure, a
+uniform head_dim of 32, and a fixed 8x8 latent grid (N=64 tokens, 4 latent
+channels — the Stable-Diffusion-VAE latent layout the paper uses).
+
+Shape buckets: the serving coordinator pads motion-token sets to the next
+bucket so every executable has a static shape (vLLM-style bucketing).
+"""
+
+# name -> (layers, hidden dim D, attention heads)
+CONFIGS = {
+    "s": dict(layers=3, d=96, heads=3),
+    "b": dict(layers=6, d=192, heads=6),
+    "l": dict(layers=12, d=256, heads=8),
+    "xl": dict(layers=14, d=288, heads=9),
+}
+
+N_TOKENS = 64          # 8x8 latent patches
+C_IN = 4               # latent channels
+MLP_RATIO = 4
+TOKEN_BUCKETS = (16, 32, 64)   # token-count buckets for reduced paths
+BATCH_SIZES = (1, 4)           # compiled batch sizes for full-N serving
+
+
+def head_dim(cfg: dict) -> int:
+    assert cfg["d"] % cfg["heads"] == 0
+    return cfg["d"] // cfg["heads"]

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref.py).
+
+Import surface used by model.py and the tests:
+    saliency, linear_approx, attention, pairwise_sqdist, knn_density
+"""
+
+from .attention import attention
+from .knn_density import knn_density, pairwise_sqdist
+from .linear_approx import linear_approx
+from .saliency import saliency
+
+__all__ = [
+    "attention",
+    "knn_density",
+    "pairwise_sqdist",
+    "linear_approx",
+    "saliency",
+]

@@ -1,0 +1,64 @@
+"""Pallas kernel: pairwise squared distances for kNN spatial density
+(paper Eq. 10, the token-merging importance score).
+
+rho_sp,i = exp(-(1/K) * sum_{j in kNN(i)} ||h_i - h_j||^2)
+
+The FLOPs hot-spot is the N x N distance matrix (an MXU-friendly
+-2 X X^T + row/col squared-norm rank-1 update); the kernel computes row
+tiles of it against the full token set, with the D contraction on the MXU.
+Top-k selection is a tiny O(N K) data-dependent step that stays in jnp
+(lax.top_k) — selection is not MXU work and would serialize a Pallas kernel.
+
+VMEM per grid step: (BN*D + N*D + BN*N) * 4B, e.g. at dit-xl
+(16*288 + 64*288 + 16*64) * 4B ≈ 95 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqdist_kernel(xr_ref, xc_ref, o_ref):
+    xr = xr_ref[...].astype(jnp.float32)  # [BN, D]
+    xc = xc_ref[...].astype(jnp.float32)  # [N, D]
+    cross = jnp.dot(xr, xc.T, preferred_element_type=jnp.float32)
+    sq_r = jnp.sum(xr * xr, axis=-1, keepdims=True)
+    sq_c = jnp.sum(xc * xc, axis=-1, keepdims=True).T
+    o_ref[...] = jnp.maximum(sq_r + sq_c - 2.0 * cross, 0.0)
+
+
+def _row_tile(n: int) -> int:
+    for cand in (16, 8, 4, 2, 1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pairwise_sqdist(x):
+    """Pairwise squared L2 distances. x: [N, D] -> [N, N] (f32)."""
+    n, d = x.shape
+    bn = _row_tile(n)
+    return pl.pallas_call(
+        _sqdist_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x, x)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def knn_density(x, k: int):
+    """Spatial kNN density rho_sp, self excluded. x: [N, D] -> [N]."""
+    n = x.shape[0]
+    d2 = pairwise_sqdist(x)
+    d2 = d2 + jnp.eye(n, dtype=jnp.float32) * jnp.float32(1e30)
+    neg_topk, _ = jax.lax.top_k(-d2, k)
+    return jnp.exp(jnp.mean(neg_topk, axis=-1))

@@ -1,0 +1,61 @@
+"""Pallas kernel: learnable linear approximation H W + b (paper Eq. 3 / 6).
+
+This is the compute path that replaces a skipped transformer block for
+static tokens (Eq. 3) and for statistically-cached blocks (Eq. 6).
+
+Hardware adaptation: the paper runs a cuBLAS GEMM per skipped block. On TPU
+the same operation targets the MXU systolic array: a (BM, BK) x (BK, BN)
+tiled matmul with an f32 accumulator tile held in VMEM across the K loop
+(grid order (m, n, k) with k innermost so the output tile is revisited, the
+canonical Pallas accumulation pattern). Tiles are capped at 128 — the MXU
+native dimension — and shrink to the actual D for the small serving configs.
+VMEM per step: (BM*BK + BK*BN + BM*BN) * 4B <= 3 * 128^2 * 4B = 192 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(h_ref, w_ref, b_ref, o_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...].astype(jnp.float32), o_ref.shape)
+
+    o_ref[...] += jnp.dot(
+        h_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _tile(dim: int, cap: int = 128) -> int:
+    for cand in (cap, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= cap and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=())
+def linear_approx(h, w, b):
+    """H W + b. h: [N, D], w: [D, Dout], b: [Dout] -> [N, Dout] (f32)."""
+    n, d = h.shape
+    d2, dout = w.shape
+    assert d == d2, (d, d2)
+    bm, bk, bn = _tile(n), _tile(d), _tile(dout)
+    k_steps = d // bk
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bm, dout // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dout), jnp.float32),
+        interpret=True,
+    )(h, w, b)

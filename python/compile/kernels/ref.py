@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest asserts each Pallas kernel
+(interpret=True) against these references across shapes and dtypes
+(hypothesis sweeps in python/tests/test_kernels.py). They are also the
+numerical spec for the Rust native fallbacks in rust/src/model/native.rs
+(tested with the same seeds and tolerances on the Rust side).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def saliency_ref(x_t, x_prev):
+    """Token-wise temporal saliency S_t = ||x_t - x_{t-1}||_2^2  (paper Eq. 1).
+
+    x_t, x_prev: [N, D] -> [N]
+    """
+    d = (x_t - x_prev).astype(jnp.float32)
+    return jnp.sum(d * d, axis=-1)
+
+
+def linear_approx_ref(h, w, b):
+    """Learnable linear approximation H W + b  (paper Eq. 3 / Eq. 6).
+
+    h: [N, D], w: [D, D], b: [D] -> [N, D]
+    """
+    return (h.astype(jnp.float32) @ w.astype(jnp.float32)) + b.astype(jnp.float32)
+
+
+def attention_ref(q, k, v):
+    """Multi-head attention, heads batched on the leading axis.
+
+    q, k, v: [H, N, dh] -> [H, N, dh]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("hnd,hmd->hnm", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hnm,hmd->hnd", p, v.astype(jnp.float32))
+
+
+def pairwise_sqdist_ref(x):
+    """Pairwise squared L2 distances. x: [N, D] -> [N, N]."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def knn_density_ref(x, k):
+    """Spatial kNN density rho_sp (paper Eq. 10), self excluded.
+
+    rho_i = exp(-(1/K) * sum_{j in kNN(i)} ||x_i - x_j||^2).
+    x: [N, D] -> [N]
+    """
+    d2 = pairwise_sqdist_ref(x)
+    n = x.shape[0]
+    d2 = d2 + jnp.eye(n, dtype=jnp.float32) * jnp.float32(1e30)
+    neg_topk, _ = jax.lax.top_k(-d2, k)  # k smallest distances per row
+    mean_k = -jnp.mean(neg_topk, axis=-1)
+    return jnp.exp(-mean_k)
+
+
+def delta_rel_ref(h, h_prev):
+    """Relative Frobenius change delta_{t,l}  (paper Eq. 4).
+
+    h, h_prev: [N, D] -> scalar
+    """
+    num = jnp.linalg.norm((h - h_prev).astype(jnp.float32))
+    den = jnp.linalg.norm(h_prev.astype(jnp.float32))
+    return num / jnp.maximum(den, 1e-12)

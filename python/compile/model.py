@@ -1,0 +1,206 @@
+"""L2: DiT forward pieces in JAX, calling the L1 Pallas kernels.
+
+Mirrors the Meta DiT (Peebles & Xie 2023) block exactly in structure —
+adaLN-zero conditioning, pre-LN MHA + pre-LN MLP with gated residuals —
+at the serving-scale dims of configs.CONFIGS.
+
+These functions are the AOT units: aot.py lowers each one, per model config
+and shape bucket, to HLO text that the Rust coordinator loads at startup.
+Weights are FUNCTION PARAMETERS, not constants — one compiled block
+executable serves every layer of a model (the Rust side passes per-layer
+weight Literals). That is the key serving-framework decision: dit-xl needs
+one block compile, not 14.
+
+All functions take a leading batch axis B; per-example math is vmapped so
+batched serving (B=4 artifacts) reuses the identical per-example graph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import attention, linear_approx, saliency
+
+# ---------------------------------------------------------------------------
+# Weight pytree layout (order matters: it is the Rust-side calling convention)
+# ---------------------------------------------------------------------------
+
+BLOCK_PARAM_NAMES = (
+    "wqkv",   # [D, 3D]
+    "bqkv",   # [3D]
+    "wo",     # [D, D]
+    "bo",     # [D]
+    "w1",     # [D, 4D]  MLP in
+    "b1",     # [4D]
+    "w2",     # [4D, D]  MLP out
+    "b2",     # [D]
+    "wmod",   # [D, 6D]  adaLN modulation
+    "bmod",   # [6D]
+)
+
+TEMB_PARAM_NAMES = ("w1", "b1", "w2", "b2")          # [D,D],[D],[D,D],[D]
+FINAL_PARAM_NAMES = ("wmod", "bmod", "wout", "bout")  # [D,2D],[2D],[D,C],[C]
+
+
+def block_param_shapes(d: int):
+    """Shapes of the per-layer block weights, in calling-convention order."""
+    return (
+        (d, 3 * d), (3 * d,),
+        (d, d), (d,),
+        (d, configs.MLP_RATIO * d), (configs.MLP_RATIO * d,),
+        (configs.MLP_RATIO * d, d), (d,),
+        (d, 6 * d), (6 * d,),
+    )
+
+
+def temb_param_shapes(d: int):
+    return ((d, d), (d,), (d, d), (d,))
+
+
+def final_param_shapes(d: int, c: int = configs.C_IN):
+    return ((d, 2 * d), (2 * d,), (d, c), (c,))
+
+
+# ---------------------------------------------------------------------------
+# Primitive pieces
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, eps: float = 1e-6):
+    """Parameter-free LayerNorm (DiT uses elementwise_affine=False under adaLN)."""
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def timestep_embedding(t, d: int, max_period: float = 10000.0):
+    """Sinusoidal timestep embedding. t: [B] -> [B, d]."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AOT units
+# ---------------------------------------------------------------------------
+
+def temb_forward(t, w1, b1, w2, b2):
+    """Timestep -> conditioning embedding. t: [B] -> [B, D].
+
+    sinusoidal(D) -> Linear -> SiLU -> Linear, as in the DiT TimestepEmbedder.
+    """
+    d = w1.shape[0]
+    e = timestep_embedding(t, d)
+    e = jax.nn.silu(e @ w1 + b1)
+    return e @ w2 + b2
+
+
+def _block_one(h, c, heads, wqkv, bqkv, wo, bo, w1, b1, w2, b2, wmod, bmod):
+    """adaLN-zero DiT block for ONE example. h: [N, D], c: [D] -> [N, D]."""
+    n, d = h.shape
+    dh = d // heads
+    mod = jax.nn.silu(c) @ wmod + bmod                       # [6D]
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6)
+
+    # Attention branch (L1 Pallas kernel does the softmax(QK^T)V hot-spot).
+    x = layer_norm(h) * (1.0 + sc1) + sh1
+    qkv = x @ wqkv + bqkv                                    # [N, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    to_heads = lambda y: y.reshape(n, heads, dh).transpose(1, 0, 2)
+    a = attention(to_heads(q), to_heads(k), to_heads(v))     # [H, N, dh]
+    a = a.transpose(1, 0, 2).reshape(n, d)
+    h = h + g1 * (a @ wo + bo)
+
+    # MLP branch.
+    x = layer_norm(h) * (1.0 + sc2) + sh2
+    h = h + g2 * (jax.nn.gelu(x @ w1 + b1) @ w2 + b2)
+    return h
+
+
+def block_forward(h, c, heads: int, *params):
+    """One DiT block, batched. h: [B, N, D], c: [B, D] -> [B, N, D]."""
+    f = lambda hh, cc: _block_one(hh, cc, heads, *params)
+    return jax.vmap(f)(h, c)
+
+
+def embed_forward(x, wemb, bemb):
+    """Patch/latent embedding: [B, N, C] @ [C, D] + [D] -> [B, N, D]."""
+    return x @ wemb + bemb
+
+
+def final_forward(h, c, wmod, bmod, wout, bout):
+    """DiT final layer: adaLN -> linear to latent channels.
+
+    h: [B, N, D], c: [B, D] -> [B, N, C].
+    """
+    def one(hh, cc):
+        mod = jax.nn.silu(cc) @ wmod + bmod
+        sh, sc = jnp.split(mod, 2)
+        x = layer_norm(hh) * (1.0 + sc) + sh
+        return x @ wout + bout
+    return jax.vmap(one)(h, c)
+
+
+def linear_approx_forward(h, w, b):
+    """Learnable linear substitute for a skipped block (paper Eq. 3/6).
+
+    h: [B, N, D] -> [B, N, D], via the L1 Pallas tiled matmul.
+    """
+    return jax.vmap(lambda hh: linear_approx(hh, w, b))(h)
+
+
+def saliency_forward(x_t, x_prev):
+    """Batched token saliency (paper Eq. 1). [B, N, D] x2 -> [B, N]."""
+    return jax.vmap(saliency)(x_t, x_prev)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used by tests and by aot self-check; NOT an AOT unit
+# — the Rust coordinator owns the layer loop so it can make cache decisions
+# between blocks)
+# ---------------------------------------------------------------------------
+
+def dit_forward(h, t, heads: int, temb_params, block_params_list, final_params):
+    """Full DiT forward: embed t, run L blocks, final projection."""
+    c = temb_forward(t, *temb_params)
+    for bp in block_params_list:
+        h = block_forward(h, c, heads, *bp)
+    return final_forward(h, c, *final_params)
+
+
+def init_params(key, cfg_name: str):
+    """Seeded init of a full variant's weights (tests / self-check only —
+    the serving weights are generated Rust-side with the same layout)."""
+    cfg = configs.CONFIGS[cfg_name]
+    d, nl = cfg["d"], cfg["layers"]
+
+    def dense(k, shape, scale=None):
+        fan_in = shape[0] if len(shape) == 2 else shape[0]
+        s = scale if scale is not None else (1.0 / jnp.sqrt(jnp.float32(fan_in)))
+        return jax.random.normal(k, shape, jnp.float32) * s
+
+    keys = jax.random.split(key, 3 + nl)
+    temb = tuple(
+        dense(kk, sh) if len(sh) == 2 else jnp.zeros(sh, jnp.float32)
+        for kk, sh in zip(jax.random.split(keys[0], 4), temb_param_shapes(d))
+    )
+    blocks = []
+    for i in range(nl):
+        bks = jax.random.split(keys[3 + i], len(BLOCK_PARAM_NAMES))
+        params = []
+        for kk, name, sh in zip(bks, BLOCK_PARAM_NAMES, block_param_shapes(d)):
+            if len(sh) == 1:
+                params.append(jnp.zeros(sh, jnp.float32))
+            elif name == "wmod":
+                # adaLN-zero: gates start at zero => identity block at init.
+                params.append(jnp.zeros(sh, jnp.float32))
+            else:
+                params.append(dense(kk, sh))
+        blocks.append(tuple(params))
+    fks = jax.random.split(keys[1], 4)
+    final = tuple(
+        dense(kk, sh) if len(sh) == 2 else jnp.zeros(sh, jnp.float32)
+        for kk, sh in zip(fks, final_param_shapes(d))
+    )
+    return temb, blocks, final

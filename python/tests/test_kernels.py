@@ -1,0 +1,197 @@
+"""L1 correctness: every Pallas kernel (interpret=True) vs its pure-jnp
+oracle in ref.py, swept over shapes and dtypes with hypothesis.
+
+This is the core numerical signal of the compile path: if these pass, the
+HLO the Rust runtime executes computes what the paper's equations say.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    knn_density,
+    linear_approx,
+    pairwise_sqdist,
+    saliency,
+)
+from compile.kernels import ref
+
+SHAPE_N = st.sampled_from([1, 4, 16, 33, 64])
+SHAPE_D = st.sampled_from([8, 96, 100, 192, 288])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def rng_array(seed, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# saliency
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=SHAPE_N, d=SHAPE_D, dtype=DTYPES, seed=st.integers(0, 2**16))
+def test_saliency_matches_ref(n, d, dtype, seed):
+    x = rng_array(seed, (n, d), dtype)
+    p = rng_array(seed + 1, (n, d), dtype)
+    got = saliency(x, p)
+    want = ref.saliency_ref(x, p)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+def test_saliency_zero_for_identical_states():
+    x = rng_array(0, (64, 96))
+    np.testing.assert_allclose(saliency(x, x), np.zeros(64), atol=0.0)
+
+
+def test_saliency_scales_quadratically():
+    x = rng_array(1, (16, 32))
+    p = jnp.zeros_like(x)
+    s1 = saliency(x, p)
+    s2 = saliency(2.0 * x, p)
+    np.testing.assert_allclose(s2, 4.0 * s1, rtol=1e-5)
+
+
+def test_saliency_detects_single_moving_token():
+    x = rng_array(2, (64, 96))
+    p = x.at[17].add(3.0)
+    s = np.asarray(saliency(x, p))
+    assert s.argmax() == 17
+    assert s[17] > 10 * np.delete(s, 17).max() if np.delete(s, 17).max() > 0 else True
+
+
+# ---------------------------------------------------------------------------
+# linear_approx
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=SHAPE_N, d=st.sampled_from([8, 96, 128, 288]), seed=st.integers(0, 2**16))
+def test_linear_approx_matches_ref(n, d, seed):
+    h = rng_array(seed, (n, d))
+    w = rng_array(seed + 1, (d, d), scale=d ** -0.5)
+    b = rng_array(seed + 2, (d,))
+    got = linear_approx(h, w, b)
+    want = ref.linear_approx_ref(h, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_linear_approx_rectangular():
+    h = rng_array(3, (32, 96))
+    w = rng_array(4, (96, 192), scale=0.1)
+    b = rng_array(5, (192,))
+    np.testing.assert_allclose(
+        linear_approx(h, w, b), ref.linear_approx_ref(h, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_linear_approx_identity_weights():
+    h = rng_array(6, (64, 96))
+    w = jnp.eye(96)
+    b = jnp.zeros(96)
+    np.testing.assert_allclose(linear_approx(h, w, b), h, rtol=1e-6, atol=1e-6)
+
+
+def test_linear_approx_bias_only():
+    h = jnp.zeros((16, 32))
+    w = jnp.zeros((32, 32))
+    b = rng_array(7, (32,))
+    got = np.asarray(linear_approx(h, w, b))
+    np.testing.assert_allclose(got, np.broadcast_to(np.asarray(b), (16, 32)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 3, 9]),
+    n=st.sampled_from([4, 16, 64]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(h, n, dh, seed):
+    q = rng_array(seed, (h, n, dh))
+    k = rng_array(seed + 1, (h, n, dh))
+    v = rng_array(seed + 2, (h, n, dh))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    """softmax rows sum to 1 => output within [min(v), max(v)] per dim."""
+    q = rng_array(10, (2, 16, 8), scale=5.0)
+    k = rng_array(11, (2, 16, 8), scale=5.0)
+    v = rng_array(12, (2, 16, 8))
+    out = np.asarray(attention(q, k, v))
+    vmin = np.asarray(v).min(axis=1, keepdims=True) - 1e-5
+    vmax = np.asarray(v).max(axis=1, keepdims=True) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+def test_attention_uniform_when_keys_identical():
+    """Identical keys => uniform attention => output = mean of V rows."""
+    q = rng_array(13, (1, 8, 4))
+    k = jnp.broadcast_to(rng_array(14, (1, 1, 4)), (1, 8, 4))
+    v = rng_array(15, (1, 8, 4))
+    out = np.asarray(attention(q, k, v))
+    want = np.broadcast_to(np.asarray(v).mean(axis=1, keepdims=True), out.shape)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_numerically_stable_large_logits():
+    q = rng_array(16, (1, 8, 4), scale=100.0)
+    k = rng_array(17, (1, 8, 4), scale=100.0)
+    v = rng_array(18, (1, 8, 4))
+    out = np.asarray(attention(q, k, v))
+    assert np.isfinite(out).all()
+
+
+# ---------------------------------------------------------------------------
+# knn density / pairwise distances
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([4, 16, 64]), d=st.sampled_from([8, 96, 288]), seed=st.integers(0, 2**16))
+def test_pairwise_sqdist_matches_ref(n, d, seed):
+    x = rng_array(seed, (n, d))
+    np.testing.assert_allclose(
+        pairwise_sqdist(x), ref.pairwise_sqdist_ref(x), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_pairwise_sqdist_diagonal_zero_and_symmetric():
+    x = rng_array(20, (32, 48))
+    d2 = np.asarray(pairwise_sqdist(x))
+    np.testing.assert_allclose(np.diag(d2), np.zeros(32), atol=1e-3)
+    np.testing.assert_allclose(d2, d2.T, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 64]), k=st.sampled_from([1, 3, 5, 7]), seed=st.integers(0, 2**16))
+def test_knn_density_matches_ref(n, k, seed):
+    x = rng_array(seed, (n, 32))
+    np.testing.assert_allclose(
+        knn_density(x, k), ref.knn_density_ref(x, k), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_knn_density_in_unit_interval():
+    # exp(-mean kNN distance) in [0, 1]; underflows to 0 for far tokens.
+    x = rng_array(21, (64, 96))
+    rho = np.asarray(knn_density(x, 5))
+    assert (rho >= 0).all() and (rho <= 1.0 + 1e-6).all()
+
+
+def test_knn_density_cluster_center_is_densest():
+    """A tight cluster + one far outlier: outlier has the lowest density."""
+    x = np.array(rng_array(22, (16, 8), scale=0.01))
+    x[0] += 50.0
+    rho = np.asarray(knn_density(jnp.asarray(x), 3))
+    assert rho.argmin() == 0

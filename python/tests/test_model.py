@@ -1,0 +1,130 @@
+"""L2 correctness: DiT block / temb / final / embed shapes, adaLN-zero
+invariants, and vmapped batching consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+
+@pytest.fixture(scope="module")
+def params_s():
+    return model.init_params(jax.random.PRNGKey(0), "s")
+
+
+def rnd(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+@pytest.mark.parametrize("cname", list(configs.CONFIGS))
+def test_shapes_per_config(cname):
+    cfg = configs.CONFIGS[cname]
+    d, heads = cfg["d"], cfg["heads"]
+    temb, blocks, final = model.init_params(jax.random.PRNGKey(1), cname)
+    assert len(blocks) == cfg["layers"]
+    h = rnd(2, (1, configs.N_TOKENS, d))
+    t = jnp.array([7.0])
+    c = model.temb_forward(t, *temb)
+    assert c.shape == (1, d)
+    h2 = model.block_forward(h, c, heads, *blocks[0])
+    assert h2.shape == h.shape
+    out = model.final_forward(h2, c, *final)
+    assert out.shape == (1, configs.N_TOKENS, configs.C_IN)
+
+
+def test_adaln_zero_block_is_identity_at_init(params_s):
+    """adaLN-zero: modulation weights start at zero => gates are zero =>
+    the block is the identity function at init (the DiT init invariant)."""
+    _, blocks, _ = params_s
+    h = rnd(3, (1, 64, 96))
+    c = rnd(4, (1, 96))
+    out = model.block_forward(h, c, 3, *blocks[0])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), rtol=1e-5, atol=1e-5)
+
+
+def test_block_nonidentity_with_nonzero_mod(params_s):
+    _, blocks, _ = params_s
+    params = list(blocks[0])
+    params[8] = rnd(5, params[8].shape, scale=0.02)  # wmod
+    h = rnd(6, (1, 64, 96))
+    c = rnd(7, (1, 96))
+    out = model.block_forward(h, c, 3, *params)
+    assert float(jnp.abs(out - h).max()) > 1e-4
+
+
+def test_block_vmap_consistency(params_s):
+    """Batched forward == per-example forwards stacked."""
+    _, blocks, _ = params_s
+    params = list(blocks[0])
+    params[8] = rnd(8, params[8].shape, scale=0.02)
+    h = rnd(9, (3, 64, 96))
+    c = rnd(10, (3, 96))
+    batched = model.block_forward(h, c, 3, *params)
+    singles = jnp.stack(
+        [model.block_forward(h[i : i + 1], c[i : i + 1], 3, *params)[0] for i in range(3)]
+    )
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(singles), rtol=1e-5, atol=1e-5)
+
+
+def test_layer_norm_is_normalized():
+    x = rnd(11, (4, 64, 96), scale=3.0) + 2.0
+    y = model.layer_norm(x)
+    mu = np.asarray(jnp.mean(y, axis=-1))
+    sd = np.asarray(jnp.std(y, axis=-1))
+    np.testing.assert_allclose(mu, np.zeros_like(mu), atol=1e-4)
+    np.testing.assert_allclose(sd, np.ones_like(sd), atol=1e-3)
+
+
+def test_timestep_embedding_distinct_and_bounded():
+    t = jnp.array([0.0, 1.0, 10.0, 100.0, 999.0])
+    e = model.timestep_embedding(t, 96)
+    assert e.shape == (5, 96)
+    assert float(jnp.abs(e).max()) <= 1.0 + 1e-6
+    # distinct timesteps -> distinct embeddings
+    d = np.asarray(jnp.sum((e[:, None] - e[None, :]) ** 2, -1))
+    off = d[~np.eye(5, dtype=bool)]
+    assert (off > 1e-3).all()
+
+
+def test_temb_deterministic(params_s):
+    temb, _, _ = params_s
+    t = jnp.array([13.0])
+    a = model.temb_forward(t, *temb)
+    b = model.temb_forward(t, *temb)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_embed_forward_shapes():
+    x = rnd(12, (2, 64, configs.C_IN))
+    w = rnd(13, (configs.C_IN, 96))
+    b = rnd(14, (96,))
+    e = model.embed_forward(x, w, b)
+    assert e.shape == (2, 64, 96)
+    np.testing.assert_allclose(
+        np.asarray(e), np.asarray(x @ w + b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_full_dit_forward_finite(params_s):
+    temb, blocks, final = params_s
+    # randomize modulation so blocks actually do work
+    blocks = [
+        tuple(p if i != 8 else rnd(20 + j, p.shape, scale=0.02) for i, p in enumerate(bp))
+        for j, bp in enumerate(blocks)
+    ]
+    h = rnd(15, (1, 64, 96))
+    out = model.dit_forward(h, jnp.array([25.0]), 3, temb, blocks, final)
+    assert out.shape == (1, 64, configs.C_IN)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_param_shape_tables_consistent():
+    for cname, cfg in configs.CONFIGS.items():
+        d = cfg["d"]
+        shapes = model.block_param_shapes(d)
+        assert len(shapes) == len(model.BLOCK_PARAM_NAMES)
+        assert shapes[0] == (d, 3 * d)
+        assert shapes[-2] == (d, 6 * d)
+        assert cfg["d"] % cfg["heads"] == 0, cname

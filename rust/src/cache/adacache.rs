@@ -1,0 +1,134 @@
+//! AdaCache (Kahatapitiya et al. 2024): content-adaptive caching — the
+//! distance between the current and cached representations sets a
+//! *recompute interval*: similar content stretches the interval (more
+//! reuse), dissimilar content shrinks it to 1 (always compute). Decisions
+//! are step-granular, matching the published block-skipping-over-time
+//! scheme.
+
+use crate::config::PolicyKind;
+
+use super::{BlockAction, BlockCtx, CachePolicy, StepInfo};
+
+pub struct AdaCache {
+    /// Distance knee: input_delta at/above which the interval collapses to 1.
+    knee: f64,
+    /// Steps remaining until the next forced compute.
+    until_compute: usize,
+    computing_this_step: bool,
+    cold: bool,
+}
+
+impl AdaCache {
+    pub fn new(knee: f64) -> AdaCache {
+        AdaCache { knee, until_compute: 0, computing_this_step: true, cold: true }
+    }
+
+    /// Map a content distance to a reuse interval (codebook-style rate
+    /// schedule: tiny change -> reuse up to 4 steps; large -> none).
+    fn interval(&self, dist: f64) -> usize {
+        let r = (dist / self.knee).max(0.0);
+        if r >= 1.0 {
+            0
+        } else if r >= 0.5 {
+            1
+        } else if r >= 0.25 {
+            2
+        } else {
+            4
+        }
+    }
+}
+
+impl CachePolicy for AdaCache {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::AdaCache
+    }
+
+    fn begin_step(&mut self, info: &StepInfo) {
+        if info.step == 0 {
+            self.cold = true;
+            self.computing_this_step = true;
+            self.until_compute = 0;
+            return;
+        }
+        self.cold = false;
+        if self.until_compute == 0 {
+            self.computing_this_step = true;
+            self.until_compute = self.interval(info.input_delta);
+        } else {
+            self.computing_this_step = false;
+            self.until_compute -= 1;
+        }
+    }
+
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction {
+        if self.cold || ctx.delta.is_none() {
+            return BlockAction::Compute;
+        }
+        if self.computing_this_step {
+            BlockAction::Compute
+        } else {
+            BlockAction::Reuse
+        }
+    }
+
+    fn reset(&mut self) {
+        self.until_compute = 0;
+        self.computing_this_step = true;
+        self.cold = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(step: usize, input_delta: f64) -> StepInfo {
+        StepInfo { step, num_steps: 50, temb_delta: 0.0, input_delta }
+    }
+
+    fn ctx(delta: Option<f64>) -> BlockCtx {
+        BlockCtx { layer: 1, num_layers: 6, step: 1, delta, nd: 6144 }
+    }
+
+    #[test]
+    fn cold_start_computes() {
+        let mut p = AdaCache::new(0.05);
+        p.begin_step(&info(0, 0.0));
+        assert_eq!(p.decide(&ctx(None)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn static_content_reuses_many_steps() {
+        let mut p = AdaCache::new(0.05);
+        p.begin_step(&info(0, 0.0));
+        let _ = p.decide(&ctx(None));
+        let mut reuse_count = 0;
+        for s in 1..=10 {
+            p.begin_step(&info(s, 0.001)); // near-static
+            if p.decide(&ctx(Some(0.001))) == BlockAction::Reuse {
+                reuse_count += 1;
+            }
+        }
+        assert!(reuse_count >= 6, "reuse_count={reuse_count}");
+    }
+
+    #[test]
+    fn dynamic_content_computes_every_step() {
+        let mut p = AdaCache::new(0.05);
+        p.begin_step(&info(0, 0.0));
+        let _ = p.decide(&ctx(None));
+        for s in 1..=5 {
+            p.begin_step(&info(s, 0.5)); // high motion
+            assert_eq!(p.decide(&ctx(Some(0.5))), BlockAction::Compute, "step {s}");
+        }
+    }
+
+    #[test]
+    fn interval_monotone_in_distance() {
+        let p = AdaCache::new(0.05);
+        assert!(p.interval(0.001) >= p.interval(0.02));
+        assert!(p.interval(0.02) >= p.interval(0.04));
+        assert_eq!(p.interval(0.1), 0);
+    }
+}

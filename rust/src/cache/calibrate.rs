@@ -1,0 +1,243 @@
+//! Calibration flows: record per-(step, layer) relative hidden-state
+//! deltas from a full-compute rollout — the "training" pass behind
+//! Learning-to-Cache and a useful diagnostic for every policy's threshold
+//! (the per-layer delta profile IS Fig. 1's derivative heat, aggregated).
+
+use anyhow::Result;
+
+use crate::config::{FastCacheConfig, PolicyKind};
+use crate::model::DitModel;
+use crate::scheduler::{DenoiseEngine, GenRequest};
+
+use super::l2c::L2C;
+
+/// A recorded delta profile: deltas[step][layer], averaged over requests.
+#[derive(Clone, Debug)]
+pub struct DeltaProfile {
+    pub deltas: Vec<Vec<f64>>,
+}
+
+impl DeltaProfile {
+    pub fn steps(&self) -> usize {
+        self.deltas.len()
+    }
+
+    /// Mean delta per layer across steps (depth profile).
+    pub fn layer_means(&self) -> Vec<f64> {
+        if self.deltas.is_empty() {
+            return Vec::new();
+        }
+        let layers = self.deltas[0].len();
+        let mut means = vec![0.0; layers];
+        let mut counts = vec![0usize; layers];
+        for row in &self.deltas {
+            for (l, &d) in row.iter().enumerate() {
+                if d.is_finite() {
+                    means[l] += d;
+                    counts[l] += 1;
+                }
+            }
+        }
+        for (m, c) in means.iter_mut().zip(counts) {
+            if c > 0 {
+                *m /= c as f64;
+            }
+        }
+        means
+    }
+
+    /// Fraction of ALL sites whose delta falls below `thr` (the skip rate
+    /// a threshold policy would achieve on this trajectory). Cold sites
+    /// (infinite delta, e.g. the whole first step) count in the
+    /// denominator — they are never skippable.
+    pub fn skippable_fraction(&self, thr: f64) -> f64 {
+        let mut below = 0usize;
+        let mut total = 0usize;
+        for row in &self.deltas {
+            for &d in row {
+                total += 1;
+                if d.is_finite() && d < thr {
+                    below += 1;
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            below as f64 / total as f64
+        }
+    }
+}
+
+/// Run full-compute rollouts over `reqs` and record the mean per-(step,
+/// layer) delta profile. This uses the engine's StepRecord mean deltas per
+/// step plus a per-layer refinement pass.
+pub fn record_profile(model: &DitModel, reqs: &[GenRequest]) -> Result<DeltaProfile> {
+    assert!(!reqs.is_empty());
+    let steps = reqs[0].steps;
+    let layers = model.cfg.layers;
+    let mut acc = vec![vec![0.0f64; layers]; steps];
+    let mut cnt = vec![vec![0usize; layers]; steps];
+
+    // Recording policy: NoCache with a probe that mirrors the engine's
+    // internal deltas. The engine already exposes mean per-step deltas in
+    // StepRecord; for the per-layer table we re-run with an instrumented
+    // recorder policy.
+    for req in reqs {
+        let recorder = RecorderPolicy::new(steps, layers);
+        let cell = recorder.cells.clone();
+        let mut eng = DenoiseEngine::new(
+            model,
+            FastCacheConfig::with_policy(PolicyKind::NoCache),
+        );
+        eng.set_policy(Box::new(recorder));
+        let _ = eng.generate(req)?;
+        let recorded = cell.lock().unwrap();
+        for (s, row) in recorded.iter().enumerate() {
+            for (l, &d) in row.iter().enumerate() {
+                if let Some(d) = d {
+                    acc[s][l] += d;
+                    cnt[s][l] += 1;
+                }
+            }
+        }
+    }
+    for s in 0..steps {
+        for l in 0..layers {
+            if cnt[s][l] > 0 {
+                acc[s][l] /= cnt[s][l] as f64;
+            } else {
+                acc[s][l] = f64::INFINITY; // cold sites are never skippable
+            }
+        }
+    }
+    Ok(DeltaProfile { deltas: acc })
+}
+
+/// Build a calibrated Learning-to-Cache policy from a delta profile.
+pub fn calibrated_l2c(profile: &DeltaProfile, threshold: f64, num_layers: usize) -> L2C {
+    let mut p = L2C::new(threshold, num_layers);
+    p.calibrate(profile.deltas.clone());
+    p
+}
+
+/// Internal: a pass-through policy that records every observed delta and
+/// always computes.
+struct RecorderPolicy {
+    cells: std::sync::Arc<std::sync::Mutex<Vec<Vec<Option<f64>>>>>,
+    step: usize,
+}
+
+impl RecorderPolicy {
+    fn new(steps: usize, layers: usize) -> RecorderPolicy {
+        RecorderPolicy {
+            cells: std::sync::Arc::new(std::sync::Mutex::new(vec![vec![None; layers]; steps])),
+            step: 0,
+        }
+    }
+}
+
+impl super::CachePolicy for RecorderPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::NoCache
+    }
+
+    fn begin_step(&mut self, info: &super::StepInfo) {
+        self.step = info.step;
+    }
+
+    fn decide(&mut self, ctx: &super::BlockCtx) -> super::BlockAction {
+        if let Some(d) = ctx.delta {
+            let mut cells = self.cells.lock().unwrap();
+            if let Some(row) = cells.get_mut(ctx.step) {
+                if let Some(slot) = row.get_mut(ctx.layer) {
+                    *slot = Some(d);
+                }
+            }
+        }
+        super::BlockAction::Compute
+    }
+
+    fn reset(&mut self) {
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{BlockCtx, CachePolicy};
+    use crate::config::Variant;
+    use crate::scheduler::GenRequest;
+
+    fn profile() -> (DitModel, DeltaProfile) {
+        let model = DitModel::native(Variant::S, 5);
+        let reqs: Vec<GenRequest> = (0..2).map(|i| GenRequest::simple(i, 30 + i, 6)).collect();
+        let p = record_profile(&model, &reqs).unwrap();
+        (model, p)
+    }
+
+    #[test]
+    fn profile_shape_and_monotone_trend() {
+        let (model, p) = profile();
+        assert_eq!(p.steps(), 6);
+        assert_eq!(p.deltas[0].len(), model.cfg.layers);
+        // Step 0 has no cache -> infinite (never skippable).
+        assert!(p.deltas[0].iter().all(|d| d.is_infinite()));
+        // Later steps have smaller deltas than the first cached step (the
+        // denoising trajectory settles).
+        let early: f64 = p.deltas[1].iter().sum();
+        let late: f64 = p.deltas[5].iter().sum();
+        assert!(late < early, "late {late} vs early {early}");
+    }
+
+    #[test]
+    fn skippable_fraction_monotone_in_threshold() {
+        let (_, p) = profile();
+        assert!(p.skippable_fraction(0.01) <= p.skippable_fraction(0.2));
+        assert!(p.skippable_fraction(0.2) <= p.skippable_fraction(10.0));
+        assert!(p.skippable_fraction(1e9) < 1.0); // step-0 sites never skip
+    }
+
+    #[test]
+    fn calibrated_l2c_follows_profile() {
+        let (model, p) = profile();
+        let mut l2c = calibrated_l2c(&p, 0.15, model.cfg.layers);
+        assert!(l2c.is_calibrated());
+        // Pick a known-small site and a known-large site.
+        let small = p
+            .deltas
+            .iter()
+            .enumerate()
+            .flat_map(|(s, row)| row.iter().enumerate().map(move |(l, d)| (s, l, *d)))
+            .filter(|(_, _, d)| d.is_finite())
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        let skip = l2c.decide(&BlockCtx {
+            layer: small.1,
+            num_layers: model.cfg.layers,
+            step: small.0,
+            delta: Some(1.0),
+            nd: 64,
+        });
+        if small.2 < 0.15 {
+            assert_eq!(skip, crate::cache::BlockAction::Reuse);
+        }
+        // Step 0 always computes (infinite calibration delta).
+        let a0 = l2c.decide(&BlockCtx {
+            layer: 0,
+            num_layers: model.cfg.layers,
+            step: 0,
+            delta: Some(0.0),
+            nd: 64,
+        });
+        assert_eq!(a0, crate::cache::BlockAction::Compute);
+    }
+
+    #[test]
+    fn layer_means_finite_for_cached_steps() {
+        let (_, p) = profile();
+        let means = p.layer_means();
+        assert!(!means.is_empty());
+    }
+}

@@ -1,0 +1,113 @@
+//! The paper's policy: per-(step, layer) χ² hypothesis test on the relative
+//! hidden-state change (Eq. 4–7); on "not significant", substitute the
+//! learnable linear approximation (Eq. 6) instead of running the block.
+//!
+//! SC off (ablation) degrades to always-compute here; the STR and MB
+//! modules live in the scheduler/engine (token partition and blending act
+//! on tensors, not decisions).
+
+use crate::config::{ApproxMode, FastCacheConfig, PolicyKind};
+
+use super::decision::Chi2Rule;
+use super::{BlockAction, BlockCtx, CachePolicy};
+
+pub struct FastCachePolicy {
+    rule: Chi2Rule,
+    enable_sc: bool,
+    approx: ApproxMode,
+}
+
+impl FastCachePolicy {
+    pub fn new(cfg: &FastCacheConfig) -> FastCachePolicy {
+        FastCachePolicy {
+            rule: Chi2Rule::new(cfg.alpha, cfg.tau_delta0),
+            enable_sc: cfg.enable_sc,
+            approx: cfg.approx,
+        }
+    }
+
+    pub fn error_bound(&mut self, nd: usize) -> f64 {
+        self.rule.error_bound(nd)
+    }
+}
+
+impl CachePolicy for FastCachePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::FastCache
+    }
+
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction {
+        if !self.enable_sc {
+            return BlockAction::Compute;
+        }
+        let Some(delta) = ctx.delta else {
+            return BlockAction::Compute; // first step: nothing cached
+        };
+        if self.rule.should_skip(delta, ctx.nd) {
+            match self.approx {
+                ApproxMode::Reuse => BlockAction::Reuse,
+                ApproxMode::DiagAffine | ApproxMode::FullMatrix => BlockAction::Approx,
+            }
+        } else {
+            BlockAction::Compute
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(delta: Option<f64>, nd: usize) -> BlockCtx {
+        BlockCtx { layer: 2, num_layers: 12, step: 5, delta, nd }
+    }
+
+    #[test]
+    fn first_step_computes() {
+        let mut p = FastCachePolicy::new(&FastCacheConfig::default());
+        assert_eq!(p.decide(&ctx(None, 6144)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn small_delta_approximates_large_computes() {
+        let cfg = FastCacheConfig::default(); // delta0=0.15, alpha=0.05
+        let mut p = FastCachePolicy::new(&cfg);
+        assert_eq!(p.decide(&ctx(Some(0.01), 6144)), BlockAction::Approx);
+        assert_eq!(p.decide(&ctx(Some(0.5), 6144)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn sc_disabled_always_computes() {
+        let mut cfg = FastCacheConfig::default();
+        cfg.enable_sc = false;
+        let mut p = FastCachePolicy::new(&cfg);
+        assert_eq!(p.decide(&ctx(Some(0.0), 6144)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn reuse_mode_reuses() {
+        let mut cfg = FastCacheConfig::default();
+        cfg.approx = ApproxMode::Reuse;
+        let mut p = FastCachePolicy::new(&cfg);
+        assert_eq!(p.decide(&ctx(Some(0.01), 6144)), BlockAction::Reuse);
+    }
+
+    #[test]
+    fn alpha_sweep_changes_skip_region() {
+        // delta chosen between the two thresholds.
+        let nd = 64 * 288;
+        let mut loose = FastCacheConfig::default();
+        loose.alpha = 0.01;
+        let mut strict = FastCacheConfig::default();
+        strict.alpha = 0.30;
+        let mut pl = FastCachePolicy::new(&loose);
+        let mut ps = FastCachePolicy::new(&strict);
+        let tl = Chi2Rule::new(0.01, 0.15).threshold_sq(nd).sqrt();
+        let ts = Chi2Rule::new(0.30, 0.15).threshold_sq(nd).sqrt();
+        let mid = 0.5 * (tl + ts);
+        assert_eq!(pl.decide(&ctx(Some(mid), nd)), BlockAction::Approx);
+        assert_eq!(ps.decide(&ctx(Some(mid), nd)), BlockAction::Compute);
+    }
+}

@@ -1,0 +1,122 @@
+//! FBCache (first-block cache, after ParaAttention/FBCache): always compute
+//! block 0; if its OUTPUT's relative change vs the previous step is below
+//! the `rdt` threshold, reuse the cached outputs of ALL remaining blocks
+//! for this step; otherwise compute the whole stack.
+//!
+//! This is the strongest published training-free baseline in the paper's
+//! tables (Tab. 1/5/12) and the one FastCache is contrasted against for
+//! threshold robustness (Tab. 6).
+
+use crate::config::PolicyKind;
+
+use super::{BlockAction, BlockCtx, CachePolicy, StepInfo};
+
+pub struct FbCache {
+    rdt: f64,
+    /// Whether the remainder of the current step is being reused.
+    skip_rest: bool,
+    seen_first_output: bool,
+}
+
+impl FbCache {
+    pub fn new(rdt: f64) -> FbCache {
+        FbCache { rdt, skip_rest: false, seen_first_output: false }
+    }
+}
+
+impl CachePolicy for FbCache {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::FbCache
+    }
+
+    fn begin_step(&mut self, _info: &StepInfo) {
+        self.skip_rest = false;
+        self.seen_first_output = false;
+    }
+
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction {
+        if ctx.layer == 0 {
+            return BlockAction::Compute;
+        }
+        if ctx.delta.is_none() {
+            return BlockAction::Compute; // first step — cache is cold
+        }
+        if self.skip_rest {
+            BlockAction::Reuse
+        } else {
+            BlockAction::Compute
+        }
+    }
+
+    fn observe_output(&mut self, layer: usize, delta_out: f64) {
+        if layer == 0 && !self.seen_first_output {
+            self.seen_first_output = true;
+            self.skip_rest = delta_out < self.rdt;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.skip_rest = false;
+        self.seen_first_output = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(layer: usize, delta: Option<f64>) -> BlockCtx {
+        BlockCtx { layer, num_layers: 12, step: 4, delta, nd: 6144 }
+    }
+
+    #[test]
+    fn first_block_always_computes() {
+        let mut p = FbCache::new(0.1);
+        p.begin_step(&StepInfo { step: 4, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        assert_eq!(p.decide(&ctx(0, Some(0.0))), BlockAction::Compute);
+    }
+
+    #[test]
+    fn small_first_delta_skips_rest() {
+        let mut p = FbCache::new(0.1);
+        p.begin_step(&StepInfo { step: 4, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        assert_eq!(p.decide(&ctx(0, Some(0.5))), BlockAction::Compute);
+        p.observe_output(0, 0.05); // below rdt
+        for l in 1..12 {
+            assert_eq!(p.decide(&ctx(l, Some(0.5))), BlockAction::Reuse);
+        }
+    }
+
+    #[test]
+    fn large_first_delta_computes_everything() {
+        let mut p = FbCache::new(0.1);
+        p.begin_step(&StepInfo { step: 4, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        let _ = p.decide(&ctx(0, Some(0.5)));
+        p.observe_output(0, 0.5); // above rdt
+        for l in 1..12 {
+            assert_eq!(p.decide(&ctx(l, Some(0.001))), BlockAction::Compute);
+        }
+    }
+
+    #[test]
+    fn cold_cache_computes() {
+        let mut p = FbCache::new(0.1);
+        p.begin_step(&StepInfo { step: 0, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        let _ = p.decide(&ctx(0, None));
+        p.observe_output(0, 0.0);
+        assert_eq!(p.decide(&ctx(1, None)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn gate_resets_each_step() {
+        let mut p = FbCache::new(0.1);
+        p.begin_step(&StepInfo { step: 1, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        let _ = p.decide(&ctx(0, Some(0.5)));
+        p.observe_output(0, 0.01);
+        assert_eq!(p.decide(&ctx(1, Some(0.5))), BlockAction::Reuse);
+        p.begin_step(&StepInfo { step: 2, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        let _ = p.decide(&ctx(0, Some(0.5)));
+        p.observe_output(0, 0.9);
+        assert_eq!(p.decide(&ctx(1, Some(0.5))), BlockAction::Compute);
+    }
+}

@@ -1,0 +1,138 @@
+//! Learning-to-Cache (Ma et al. 2024): a *learned, static* per-(step,
+//! layer) skip schedule. The published method trains a router; here the
+//! router is "trained" by a calibration rollout — run one NoCache
+//! trajectory, record per-(step, layer) deltas, and skip the sites whose
+//! calibration delta falls below the threshold. Uncalibrated, it falls
+//! back to a structural prior (later denoising steps and deeper layers are
+//! more skippable), matching the shape of the published learned schedules.
+
+use crate::config::PolicyKind;
+
+use super::{BlockAction, BlockCtx, CachePolicy, StepInfo};
+
+pub struct L2C {
+    threshold: f64,
+    num_layers: usize,
+    /// Calibrated per-(step, layer) deltas, if a calibration ran.
+    calibrated: Option<Vec<Vec<f64>>>,
+    step: usize,
+    num_steps: usize,
+}
+
+impl L2C {
+    pub fn new(threshold: f64, num_layers: usize) -> L2C {
+        L2C { threshold, num_layers, calibrated: None, step: 0, num_steps: 50 }
+    }
+
+    /// Install a calibration table: deltas[step][layer] recorded from a
+    /// full-compute rollout on representative inputs.
+    pub fn calibrate(&mut self, deltas: Vec<Vec<f64>>) {
+        assert!(deltas.iter().all(|row| row.len() == self.num_layers));
+        self.calibrated = Some(deltas);
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.calibrated.is_some()
+    }
+
+    /// Structural prior used when no calibration is available: a smooth
+    /// proxy for the learned schedule — progress through denoising lowers
+    /// the pseudo-delta, depth lowers it further.
+    fn prior_delta(&self, step: usize, num_steps: usize, layer: usize) -> f64 {
+        let t = 1.0 - step as f64 / num_steps.max(1) as f64; // 1 -> 0
+        let depth = 1.0 - 0.5 * layer as f64 / self.num_layers.max(1) as f64;
+        0.3 * t * depth
+    }
+}
+
+impl CachePolicy for L2C {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::L2C
+    }
+
+    fn begin_step(&mut self, info: &StepInfo) {
+        self.step = info.step;
+        self.num_steps = info.num_steps;
+    }
+
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction {
+        if ctx.delta.is_none() {
+            return BlockAction::Compute; // cold cache
+        }
+        let cal = match &self.calibrated {
+            Some(table) => table
+                .get(ctx.step)
+                .and_then(|row| row.get(ctx.layer))
+                .copied()
+                .unwrap_or(f64::INFINITY),
+            None => self.prior_delta(ctx.step, self.num_steps, ctx.layer),
+        };
+        if cal < self.threshold {
+            BlockAction::Reuse
+        } else {
+            BlockAction::Compute
+        }
+    }
+
+    fn reset(&mut self) {
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(step: usize, layer: usize, delta: Option<f64>) -> BlockCtx {
+        BlockCtx { layer, num_layers: 4, step, delta, nd: 6144 }
+    }
+
+    #[test]
+    fn calibrated_schedule_is_followed() {
+        let mut p = L2C::new(0.1, 4);
+        // step 0: all large; step 1: layer 2 small.
+        p.calibrate(vec![vec![0.5; 4], vec![0.5, 0.5, 0.01, 0.5]]);
+        assert_eq!(p.decide(&ctx(1, 2, Some(0.3))), BlockAction::Reuse);
+        assert_eq!(p.decide(&ctx(1, 1, Some(0.3))), BlockAction::Compute);
+        assert_eq!(p.decide(&ctx(0, 2, Some(0.3))), BlockAction::Compute);
+    }
+
+    #[test]
+    fn decisions_are_static_wrt_runtime_delta() {
+        // The learned schedule ignores the observed delta value (that is
+        // what makes L2C fragile — the paper's Tab. 10 story).
+        let mut p = L2C::new(0.1, 4);
+        p.calibrate(vec![vec![0.01; 4]]);
+        assert_eq!(p.decide(&ctx(0, 0, Some(99.0))), BlockAction::Reuse);
+    }
+
+    #[test]
+    fn cold_cache_computes() {
+        let mut p = L2C::new(0.1, 4);
+        assert_eq!(p.decide(&ctx(0, 0, None)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn higher_threshold_skips_more_under_prior() {
+        let mk = |thr: f64| {
+            let mut p = L2C::new(thr, 4);
+            let mut skipped = 0;
+            for step in 0..50 {
+                for layer in 0..4 {
+                    if p.decide(&ctx(step, layer, Some(0.2))) == BlockAction::Reuse {
+                        skipped += 1;
+                    }
+                }
+            }
+            skipped
+        };
+        assert!(mk(0.15) > mk(0.05));
+    }
+
+    #[test]
+    fn out_of_range_step_computes() {
+        let mut p = L2C::new(0.1, 4);
+        p.calibrate(vec![vec![0.01; 4]]);
+        assert_eq!(p.decide(&ctx(7, 0, Some(0.0))), BlockAction::Compute);
+    }
+}

@@ -1,0 +1,185 @@
+//! The *learnable* linear approximation (paper Eq. 3/6): Ĥ = W·H + b.
+//!
+//! The paper trains a D×D linear layer per block offline. Serving-side we
+//! fit the same regression ONLINE, per channel (diagonal W plus bias):
+//! whenever a block is actually computed we feed (input, output) token
+//! pairs into per-channel sufficient statistics (PairStats), and when the
+//! χ² test says "skip" we apply the fitted affine map. Exponential
+//! forgetting tracks the temporal drift of hidden dynamics (Appendix A).
+//!
+//! This is the cheap estimator of the paper's regression: O(D) state per
+//! layer, O(N·D) apply cost — and it strictly dominates raw reuse in
+//! approximation error (tested below), which is what the paper's FID
+//! ordering needs. The full-matrix variant (ApproxMode::FullMatrix) runs
+//! the AOT Pallas matmul artifact with a W calibrated from the same
+//! statistics lifted to a diagonal matrix.
+
+use crate::stats::PairStats;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct AffineFit {
+    d: usize,
+    chan: Vec<PairStats>,
+    decay: f64,
+    updates: u64,
+}
+
+impl AffineFit {
+    pub fn new(d: usize, decay: f64) -> AffineFit {
+        AffineFit { d, chan: vec![PairStats::new(); d], decay, updates: 0 }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Feed a computed (input, output) pair. Shapes [N, D] (or [B, N, D]
+    /// flattened — any leading structure collapses to rows of D).
+    pub fn update(&mut self, input: &Tensor, output: &Tensor) {
+        assert_eq!(input.shape(), output.shape());
+        assert_eq!(input.len() % self.d, 0);
+        self.updates += 1;
+        for c in self.chan.iter_mut() {
+            c.decay(self.decay);
+        }
+        for (ri, ro) in input.data().chunks(self.d).zip(output.data().chunks(self.d)) {
+            for j in 0..self.d {
+                self.chan[j].push(ri[j] as f64, ro[j] as f64);
+            }
+        }
+    }
+
+    /// Per-channel (a, b) coefficients.
+    pub fn coeffs(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut a = Vec::with_capacity(self.d);
+        let mut b = Vec::with_capacity(self.d);
+        for c in &self.chan {
+            let (ai, bi) = c.fit();
+            a.push(ai);
+            b.push(bi);
+        }
+        (a, b)
+    }
+
+    /// Apply the fit: Ĥ[:, j] = a_j·H[:, j] + b_j. Identity before any
+    /// update (the conservative fallback).
+    pub fn apply(&self, input: &Tensor) -> Tensor {
+        let (a, b) = self.coeffs();
+        let mut out = input.clone();
+        for row in out.data_mut().chunks_mut(self.d) {
+            for j in 0..self.d {
+                row[j] = a[j] * row[j] + b[j];
+            }
+        }
+        out
+    }
+
+    /// Lift the diagonal fit to a full [D, D] matrix + bias (inputs to the
+    /// AOT linear_approx artifact).
+    pub fn to_full_matrix(&self) -> (Tensor, Tensor) {
+        let (a, b) = self.coeffs();
+        let mut w = Tensor::zeros(&[self.d, self.d]);
+        for j in 0..self.d {
+            w.data_mut()[j * self.d + j] = a[j];
+        }
+        (w, Tensor::new(b, &[self.d]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rnd(seed: u64, shape: &[usize]) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::new(r.normal_vec(shape.iter().product(), 1.0), shape)
+    }
+
+    #[test]
+    fn identity_before_updates() {
+        let f = AffineFit::new(8, 0.98);
+        let x = rnd(1, &[16, 8]);
+        assert!(f.apply(&x).max_abs_diff(&x) < 1e-7);
+    }
+
+    #[test]
+    fn recovers_exact_channelwise_affine() {
+        let d = 8;
+        let mut f = AffineFit::new(d, 1.0);
+        let x = rnd(2, &[64, d]);
+        let mut y = x.clone();
+        for row in y.data_mut().chunks_mut(d) {
+            for j in 0..d {
+                row[j] = (j as f32 * 0.25 + 0.5) * row[j] - 1.5 + j as f32 * 0.1;
+            }
+        }
+        f.update(&x, &y);
+        let got = f.apply(&x);
+        assert!(got.max_abs_diff(&y) < 1e-3, "err={}", got.max_abs_diff(&y));
+    }
+
+    #[test]
+    fn beats_raw_reuse_on_scaled_dynamics() {
+        // Model a block whose output is ~0.9x its input drifting over
+        // steps: the affine fit must approximate the CURRENT output better
+        // than reusing the PREVIOUS output (the paper's key claim for
+        // learnable approximation vs plain caching).
+        let d = 16;
+        let n = 32;
+        let mut f = AffineFit::new(d, 0.95);
+        let mut prev_out: Option<Tensor> = None;
+        let mut err_fit = 0.0f64;
+        let mut err_reuse = 0.0f64;
+        for step in 0..30 {
+            let x = rnd(100 + step, &[n, d]);
+            let mut y = x.clone();
+            for v in y.data_mut().iter_mut() {
+                *v *= 0.9;
+            }
+            if step >= 5 {
+                let approx = f.apply(&x);
+                err_fit += approx.max_abs_diff(&y) as f64;
+                if let Some(p) = &prev_out {
+                    err_reuse += p.max_abs_diff(&y) as f64;
+                }
+            }
+            f.update(&x, &y);
+            prev_out = Some(y);
+        }
+        assert!(
+            err_fit < 0.5 * err_reuse,
+            "fit err {err_fit} should beat reuse err {err_reuse}"
+        );
+    }
+
+    #[test]
+    fn full_matrix_matches_diag_apply() {
+        let d = 6;
+        let mut f = AffineFit::new(d, 1.0);
+        let x = rnd(5, &[32, d]);
+        let mut y = x.clone();
+        for row in y.data_mut().chunks_mut(d) {
+            for j in 0..d {
+                row[j] = 1.7 * row[j] + 0.3;
+            }
+        }
+        f.update(&x, &y);
+        let (w, b) = f.to_full_matrix();
+        let x2 = rnd(6, &[4, d]);
+        let diag = f.apply(&x2);
+        // x2 @ W + b with diagonal W.
+        let mut full = x2.clone();
+        for row in full.data_mut().chunks_mut(d) {
+            for j in 0..d {
+                row[j] = row[j] * w.data()[j * d + j] + b.data()[j];
+            }
+        }
+        assert!(diag.max_abs_diff(&full) < 1e-6);
+    }
+}

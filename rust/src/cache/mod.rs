@@ -1,0 +1,108 @@
+//! Hidden-state caching: the paper's FastCache policy and every baseline it
+//! is compared against, behind one `CachePolicy` trait the scheduler calls
+//! between transformer blocks (Algorithm 1).
+//!
+//! Action semantics:
+//! - `Compute` — run the block program (HLO through PJRT).
+//! - `Approx`  — substitute the learnable linear approximation (Eq. 6),
+//!   optionally blended with the cached output (motion-aware blending).
+//! - `Reuse`   — return the cached previous-step output verbatim (what the
+//!   reuse-style baselines do).
+
+pub mod adacache;
+pub mod calibrate;
+pub mod decision;
+pub mod fastcache;
+pub mod fbcache;
+pub mod l2c;
+pub mod linear_fit;
+pub mod nocache;
+pub mod state;
+pub mod static_cache;
+pub mod teacache;
+
+pub use decision::Chi2Rule;
+pub use linear_fit::AffineFit;
+pub use state::CacheState;
+
+use crate::config::{FastCacheConfig, PolicyKind};
+
+/// What to do for one (step, layer) site.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BlockAction {
+    Compute,
+    Approx,
+    Reuse,
+}
+
+/// Per-step information available before any block runs.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    pub step: usize,
+    pub num_steps: usize,
+    /// Relative change of the conditioning embedding vs the previous step
+    /// (TeaCache's gating signal).
+    pub temb_delta: f64,
+    /// Relative change of the post-embed hidden state vs the previous step.
+    pub input_delta: f64,
+}
+
+/// Per-block information at decision time.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockCtx {
+    pub layer: usize,
+    pub num_layers: usize,
+    pub step: usize,
+    /// Relative Frobenius change δ of the pre-block hidden state vs the
+    /// cached previous-step value (Eq. 4). `None` on the first step
+    /// (nothing cached yet).
+    pub delta: Option<f64>,
+    /// Degrees of freedom N·D of the hidden state.
+    pub nd: usize,
+}
+
+/// A cache policy decides per (step, layer) whether to compute, approximate
+/// or reuse, and observes the outcome of computed blocks to adapt.
+pub trait CachePolicy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    /// Called once per denoising step before any block decision.
+    fn begin_step(&mut self, _info: &StepInfo) {}
+
+    /// The per-block decision.
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction;
+
+    /// Feedback after a block was computed: relative change of its OUTPUT
+    /// vs the cached previous output (drives FBCache-style gates).
+    fn observe_output(&mut self, _layer: usize, _delta_out: f64) {}
+
+    /// Reset all adaptive state (new request).
+    fn reset(&mut self);
+}
+
+/// Instantiate the policy named by the config.
+pub fn build_policy(cfg: &FastCacheConfig, num_layers: usize) -> Box<dyn CachePolicy> {
+    match cfg.policy {
+        PolicyKind::NoCache => Box::new(nocache::NoCache),
+        PolicyKind::FastCache => Box::new(fastcache::FastCachePolicy::new(cfg)),
+        PolicyKind::FbCache => Box::new(fbcache::FbCache::new(cfg.fb_rdt)),
+        PolicyKind::TeaCache => Box::new(teacache::TeaCache::new(cfg.tea_threshold)),
+        PolicyKind::AdaCache => Box::new(adacache::AdaCache::new(cfg.ada_knee)),
+        PolicyKind::L2C => Box::new(l2c::L2C::new(cfg.l2c_threshold, num_layers)),
+        PolicyKind::StaticCache => Box::new(static_cache::StaticCache::new(cfg.static_period)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_policy_matches_kind() {
+        for kind in PolicyKind::ALL {
+            let cfg = FastCacheConfig::with_policy(kind);
+            let p = build_policy(&cfg, 12);
+            assert_eq!(p.kind(), kind);
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Baseline: no caching — every block computes every step (the paper's
+//! "No Cache" reference rows, and the source of the FID-proxy reference
+//! distribution).
+
+use crate::config::PolicyKind;
+
+use super::{BlockAction, BlockCtx, CachePolicy};
+
+pub struct NoCache;
+
+impl CachePolicy for NoCache {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::NoCache
+    }
+
+    fn decide(&mut self, _ctx: &BlockCtx) -> BlockAction {
+        BlockAction::Compute
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_computes() {
+        let mut p = NoCache;
+        for layer in 0..20 {
+            let ctx = BlockCtx {
+                layer,
+                num_layers: 20,
+                step: 3,
+                delta: Some(0.0),
+                nd: 6144,
+            };
+            assert_eq!(p.decide(&ctx), BlockAction::Compute);
+        }
+    }
+}

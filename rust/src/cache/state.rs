@@ -1,0 +1,151 @@
+//! Per-request cache state: the previous step's hidden states (pre-block
+//! inputs and block outputs) per layer, the online affine fits, and
+//! bookkeeping counters — everything Algorithm 1 needs between timesteps.
+
+use crate::tensor::Tensor;
+
+use super::linear_fit::AffineFit;
+
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub computed: usize,
+    pub approximated: usize,
+    pub reused: usize,
+}
+
+impl CacheCounters {
+    pub fn total(&self) -> usize {
+        self.computed + self.approximated + self.reused
+    }
+
+    /// Fraction of block sites that did NOT run the full block.
+    pub fn skip_ratio(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            (self.approximated + self.reused) as f64 / self.total() as f64
+        }
+    }
+}
+
+pub struct CacheState {
+    /// H_{t−1, l−1}: pre-block hidden per layer, previous step.
+    prev_input: Vec<Option<Tensor>>,
+    /// H_{t−1, l}: block output per layer, previous step.
+    prev_output: Vec<Option<Tensor>>,
+    /// Previous step's conditioning embedding.
+    pub prev_temb: Option<Tensor>,
+    /// Previous step's post-embed hidden (STR saliency base).
+    pub prev_embed: Option<Tensor>,
+    /// Online learnable approximations, one per layer.
+    fits: Vec<AffineFit>,
+    pub counters: CacheCounters,
+    /// Cache-state bytes currently held (for the memory accounting the
+    /// paper reports).
+    bytes: usize,
+}
+
+impl CacheState {
+    pub fn new(num_layers: usize, d: usize, fit_decay: f64) -> CacheState {
+        CacheState {
+            prev_input: vec![None; num_layers],
+            prev_output: vec![None; num_layers],
+            prev_temb: None,
+            prev_embed: None,
+            fits: (0..num_layers).map(|_| AffineFit::new(d, fit_decay)).collect(),
+            counters: CacheCounters::default(),
+            bytes: 0,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.prev_input.len()
+    }
+
+    pub fn prev_input(&self, layer: usize) -> Option<&Tensor> {
+        self.prev_input[layer].as_ref()
+    }
+
+    pub fn prev_output(&self, layer: usize) -> Option<&Tensor> {
+        self.prev_output[layer].as_ref()
+    }
+
+    pub fn fit(&self, layer: usize) -> &AffineFit {
+        &self.fits[layer]
+    }
+
+    pub fn fit_mut(&mut self, layer: usize) -> &mut AffineFit {
+        &mut self.fits[layer]
+    }
+
+    fn track_replace(bytes: &mut usize, slot: &mut Option<Tensor>, t: Tensor) {
+        if let Some(old) = slot.take() {
+            *bytes -= old.size_bytes();
+        }
+        *bytes += t.size_bytes();
+        *slot = Some(t);
+    }
+
+    pub fn store_input(&mut self, layer: usize, t: Tensor) {
+        Self::track_replace(&mut self.bytes, &mut self.prev_input[layer], t);
+    }
+
+    pub fn store_output(&mut self, layer: usize, t: Tensor) {
+        Self::track_replace(&mut self.bytes, &mut self.prev_output[layer], t);
+    }
+
+    pub fn store_temb(&mut self, t: Tensor) {
+        Self::track_replace(&mut self.bytes, &mut self.prev_temb, t);
+    }
+
+    pub fn store_embed(&mut self, t: Tensor) {
+        Self::track_replace(&mut self.bytes, &mut self.prev_embed, t);
+    }
+
+    /// Cache-state footprint in bytes (hidden copies; fits are O(D) and
+    /// counted at 3 floats per channel).
+    pub fn size_bytes(&self) -> usize {
+        self.bytes + self.fits.iter().map(|f| f.d() * 3 * 8).sum::<usize>()
+    }
+
+    pub fn clear(&mut self) {
+        for s in self.prev_input.iter_mut().chain(self.prev_output.iter_mut()) {
+            *s = None;
+        }
+        self.prev_temb = None;
+        self.prev_embed = None;
+        self.bytes = 0;
+        self.counters = CacheCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_ratio() {
+        let mut c = CacheCounters::default();
+        c.computed = 6;
+        c.approximated = 3;
+        c.reused = 1;
+        assert_eq!(c.total(), 10);
+        assert!((c.skip_ratio() - 0.4).abs() < 1e-12);
+        assert_eq!(CacheCounters::default().skip_ratio(), 0.0);
+    }
+
+    #[test]
+    fn byte_accounting_replaces() {
+        let mut s = CacheState::new(2, 4, 0.98);
+        assert_eq!(s.size_bytes(), 2 * 4 * 3 * 8);
+        s.store_input(0, Tensor::zeros(&[8, 4]));
+        let base = s.size_bytes();
+        s.store_input(0, Tensor::zeros(&[8, 4])); // replace, same size
+        assert_eq!(s.size_bytes(), base);
+        s.store_output(1, Tensor::zeros(&[8, 4]));
+        assert!(s.size_bytes() > base);
+        s.clear();
+        assert_eq!(s.size_bytes(), 2 * 4 * 3 * 8);
+        assert!(s.prev_input(0).is_none());
+    }
+}

@@ -1,0 +1,84 @@
+//! PAB-style static caching: a fixed broadcast period — recompute on every
+//! k-th step, reuse otherwise, independent of content (the pyramid
+//! attention broadcast baseline reduced to its temporal schedule).
+
+use crate::config::PolicyKind;
+
+use super::{BlockAction, BlockCtx, CachePolicy, StepInfo};
+
+pub struct StaticCache {
+    period: usize,
+    compute_this_step: bool,
+}
+
+impl StaticCache {
+    pub fn new(period: usize) -> StaticCache {
+        assert!(period >= 1);
+        StaticCache { period, compute_this_step: true }
+    }
+}
+
+impl CachePolicy for StaticCache {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::StaticCache
+    }
+
+    fn begin_step(&mut self, info: &StepInfo) {
+        self.compute_this_step = info.step % self.period == 0;
+    }
+
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction {
+        if ctx.delta.is_none() || self.compute_this_step {
+            BlockAction::Compute
+        } else {
+            BlockAction::Reuse
+        }
+    }
+
+    fn reset(&mut self) {
+        self.compute_this_step = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_2_alternates() {
+        let mut p = StaticCache::new(2);
+        let ctx = |step| BlockCtx { layer: 0, num_layers: 3, step, delta: Some(0.2), nd: 64 };
+        let mut acts = Vec::new();
+        for s in 0..4 {
+            p.begin_step(&StepInfo { step: s, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+            acts.push(p.decide(&ctx(s)));
+        }
+        assert_eq!(
+            acts,
+            vec![
+                BlockAction::Compute,
+                BlockAction::Reuse,
+                BlockAction::Compute,
+                BlockAction::Reuse
+            ]
+        );
+    }
+
+    #[test]
+    fn period_1_is_nocache() {
+        let mut p = StaticCache::new(1);
+        for s in 0..5 {
+            p.begin_step(&StepInfo { step: s, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+            let ctx = BlockCtx { layer: 0, num_layers: 3, step: s, delta: Some(0.0), nd: 64 };
+            assert_eq!(p.decide(&ctx), BlockAction::Compute);
+        }
+    }
+
+    #[test]
+    fn cold_cache_always_computes() {
+        let mut p = StaticCache::new(4);
+        p.begin_step(&StepInfo { step: 1, num_steps: 50, temb_delta: 0.0, input_delta: 0.0 });
+        let ctx = BlockCtx { layer: 0, num_layers: 3, step: 1, delta: None, nd: 64 };
+        assert_eq!(p.decide(&ctx), BlockAction::Compute);
+    }
+}

@@ -1,0 +1,134 @@
+//! TeaCache (Liu et al. 2024): "timestep embedding tells" — the relative
+//! change of the timestep-embedding-modulated INPUT between steps,
+//! accumulated since the last full compute, gates whole-step reuse (the
+//! published method rescales this distance with a fitted polynomial, then
+//! thresholds the accumulator). When the accumulated modulated change
+//! stays under the threshold the entire step reuses the cache; crossing it
+//! forces a full compute and resets the accumulator.
+
+use crate::config::PolicyKind;
+
+use super::{BlockAction, BlockCtx, CachePolicy, StepInfo};
+
+pub struct TeaCache {
+    threshold: f64,
+    accumulated: f64,
+    skip_step: bool,
+    /// Polynomial rescale of the raw temb delta (TeaCache fits a small
+    /// polynomial mapping embedding distance to output distance; we use the
+    /// monotone quadratic y = x + 2x², a fixed stand-in with the same
+    /// shape).
+    had_history: bool,
+}
+
+impl TeaCache {
+    pub fn new(threshold: f64) -> TeaCache {
+        TeaCache { threshold, accumulated: 0.0, skip_step: false, had_history: false }
+    }
+
+    fn rescale(x: f64) -> f64 {
+        x + 2.0 * x * x
+    }
+}
+
+impl CachePolicy for TeaCache {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::TeaCache
+    }
+
+    fn begin_step(&mut self, info: &StepInfo) {
+        if info.step == 0 {
+            self.skip_step = false;
+            self.accumulated = 0.0;
+            self.had_history = false;
+            return;
+        }
+        self.had_history = true;
+        self.accumulated += Self::rescale(info.input_delta.max(0.0).min(10.0));
+        if self.accumulated < self.threshold {
+            self.skip_step = true;
+        } else {
+            self.skip_step = false;
+            self.accumulated = 0.0;
+        }
+    }
+
+    fn decide(&mut self, ctx: &BlockCtx) -> BlockAction {
+        if ctx.delta.is_none() || !self.had_history {
+            return BlockAction::Compute;
+        }
+        if self.skip_step {
+            BlockAction::Reuse
+        } else {
+            BlockAction::Compute
+        }
+    }
+
+    fn reset(&mut self) {
+        self.accumulated = 0.0;
+        self.skip_step = false;
+        self.had_history = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(step: usize, input_delta: f64) -> StepInfo {
+        StepInfo { step, num_steps: 50, temb_delta: input_delta, input_delta }
+    }
+
+    fn ctx(delta: Option<f64>) -> BlockCtx {
+        BlockCtx { layer: 3, num_layers: 12, step: 1, delta, nd: 6144 }
+    }
+
+    #[test]
+    fn first_step_computes() {
+        let mut p = TeaCache::new(0.15);
+        p.begin_step(&info(0, 0.0));
+        assert_eq!(p.decide(&ctx(None)), BlockAction::Compute);
+    }
+
+    #[test]
+    fn small_changes_accumulate_until_threshold() {
+        let mut p = TeaCache::new(0.15);
+        p.begin_step(&info(0, 0.0));
+        let _ = p.decide(&ctx(None));
+        // Accumulation: rescale(0.04) = 0.0432 per step -> skips for 3
+        // steps (0.0432, 0.0864, 0.1296), computes on the 4th (0.1728).
+        let mut actions = Vec::new();
+        for s in 1..=4 {
+            p.begin_step(&info(s, 0.04));
+            actions.push(p.decide(&ctx(Some(0.1))));
+        }
+        assert_eq!(
+            actions,
+            vec![
+                BlockAction::Reuse,
+                BlockAction::Reuse,
+                BlockAction::Reuse,
+                BlockAction::Compute
+            ]
+        );
+    }
+
+    #[test]
+    fn large_change_computes_immediately() {
+        let mut p = TeaCache::new(0.15);
+        p.begin_step(&info(0, 0.0));
+        let _ = p.decide(&ctx(None));
+        p.begin_step(&info(1, 0.5));
+        assert_eq!(p.decide(&ctx(Some(0.3))), BlockAction::Compute);
+    }
+
+    #[test]
+    fn reset_clears_accumulator() {
+        let mut p = TeaCache::new(0.15);
+        p.begin_step(&info(0, 0.0));
+        p.begin_step(&info(1, 0.1));
+        p.reset();
+        p.begin_step(&info(0, 0.0));
+        assert_eq!(p.decide(&ctx(None)), BlockAction::Compute);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal CLI argument parser (clap is not vendored in the offline
+//! registry). Supports `--key value`, `--key=value`, boolean `--flag`,
+//! and positional arguments, with typed getters and error reporting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option names that take a value (everything else starting with `--` is a
+/// boolean flag). Kept as an explicit list so typos fail loudly.
+const VALUE_OPTS: &[&str] = &[
+    "model", "policy", "config", "alpha", "tau-s", "gamma", "steps", "guidance",
+    "requests", "max-batch", "queue-depth", "artifacts", "seed", "workers",
+    "knn-k", "merge-target", "motion", "frames", "approx", "fb-rdt",
+    "tea-threshold", "l2c-threshold", "static-period", "out", "table",
+    "warmup", "iters", "quant",
+];
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if VALUE_OPTS.contains(&rest) {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| format!("option --{rest} expects a value"))?;
+                    args.opts.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse() -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| format!("--{key} {v}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = args(&["--model", "xl", "--alpha=0.01", "pos1"]);
+        assert_eq!(a.get("model"), Some("xl"));
+        assert_eq!(a.get("alpha"), Some("0.01"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn flags_are_boolean() {
+        let a = args(&["--verbose", "--model", "s"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("model"), Some("s"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse_from(vec!["--model".to_string()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args(&["--steps", "25", "--gamma=0.7"]);
+        assert_eq!(a.parse_num::<usize>("steps", 50).unwrap(), 25);
+        assert!((a.parse_num::<f32>("gamma", 0.5).unwrap() - 0.7).abs() < 1e-6);
+        assert_eq!(a.parse_num::<usize>("absent", 7).unwrap(), 7);
+        assert!(a.parse_num::<usize>("gamma", 1).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! FastCache + baseline cache-policy configuration (the knobs of §5 and
+//! Appendix E of the paper, all sweepable from the CLI and the benches).
+
+use std::fmt;
+
+/// Which cache policy the engine runs. Each maps to a `CachePolicy` impl in
+/// `crate::cache` and, for the baselines, to the corresponding row label of
+/// the paper's tables.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PolicyKind {
+    /// Full computation, no reuse — the paper's "No Cache" row.
+    NoCache,
+    /// The paper's contribution: χ²-gated reuse + learnable linear approx.
+    FastCache,
+    /// First-block cache (FBCache / ParaAttention-style): the first block's
+    /// relative change gates reuse of the whole remaining stack.
+    FbCache,
+    /// TeaCache: timestep-embedding-modulated accumulated change gate.
+    TeaCache,
+    /// AdaCache: content-similarity-scheduled reuse rate.
+    AdaCache,
+    /// Learning-to-Cache: static learned per-(step, layer) skip schedule.
+    L2C,
+    /// PAB-style fixed-frequency reuse (every k-th step recomputes).
+    StaticCache,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 7] = [
+        PolicyKind::NoCache,
+        PolicyKind::FastCache,
+        PolicyKind::FbCache,
+        PolicyKind::TeaCache,
+        PolicyKind::AdaCache,
+        PolicyKind::L2C,
+        PolicyKind::StaticCache,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::NoCache => "nocache",
+            PolicyKind::FastCache => "fastcache",
+            PolicyKind::FbCache => "fbcache",
+            PolicyKind::TeaCache => "teacache",
+            PolicyKind::AdaCache => "adacache",
+            PolicyKind::L2C => "l2c",
+            PolicyKind::StaticCache => "static",
+        }
+    }
+
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            PolicyKind::NoCache => "No Cache",
+            PolicyKind::FastCache => "FastCache (Ours)",
+            PolicyKind::FbCache => "FBCache",
+            PolicyKind::TeaCache => "TeaCache",
+            PolicyKind::AdaCache => "AdaCache",
+            PolicyKind::L2C => "Learning-to-Cache",
+            PolicyKind::StaticCache => "PAB-Static",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "nocache" | "none" | "no-cache" => Some(PolicyKind::NoCache),
+            "fastcache" | "fast" => Some(PolicyKind::FastCache),
+            "fbcache" | "fb" => Some(PolicyKind::FbCache),
+            "teacache" | "tea" => Some(PolicyKind::TeaCache),
+            "adacache" | "ada" => Some(PolicyKind::AdaCache),
+            "l2c" | "learning-to-cache" => Some(PolicyKind::L2C),
+            "static" | "pab" => Some(PolicyKind::StaticCache),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How a skipped block's output is approximated.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ApproxMode {
+    /// Reuse the cached output verbatim (what FBCache/TeaCache/... do).
+    Reuse,
+    /// Online per-channel learnable affine fit (FastCache default).
+    DiagAffine,
+    /// Full D×D matmul through the AOT linear_approx artifact.
+    FullMatrix,
+}
+
+/// FastCache knobs (paper §5.2 defaults).
+#[derive(Clone, Debug)]
+pub struct FastCacheConfig {
+    pub policy: PolicyKind,
+    /// Significance level α of the χ² test (paper: 0.05).
+    pub alpha: f64,
+    /// Noise-floor relative change δ₀ scaling the χ² rule (see
+    /// cache::decision — the paper's literal rule degenerates at serving
+    /// sizes; δ₀ is the sliding-window scale it implies).
+    pub tau_delta0: f64,
+    /// Spatial saliency threshold τ_s for motion/static partition
+    /// (paper table 6 sweeps 0.02–0.05; saliency is normalized per-token
+    /// mean squared change, see tokens::partition).
+    pub tau_s: f64,
+    /// Motion-aware blending factor γ (paper: 0.5). 1.0 = pure approx.
+    pub gamma: f32,
+    /// Spatial token reduction module on/off (ablation STR).
+    pub enable_str: bool,
+    /// Statistical caching module on/off (ablation SC).
+    pub enable_sc: bool,
+    /// Motion-aware blending on/off (ablation MB).
+    pub enable_mb: bool,
+    /// Token merging (Appendix D) on/off, and its kNN K / λ.
+    pub enable_merge: bool,
+    pub knn_k: usize,
+    pub merge_lambda: f32,
+    /// Target merged token count (bucketized).
+    pub merge_target: usize,
+    /// How skipped blocks are approximated.
+    pub approx: ApproxMode,
+    /// Forgetting factor for the online affine fit.
+    pub fit_decay: f64,
+    /// FBCache relative-delta threshold (their `rdt` knob, table 6).
+    pub fb_rdt: f64,
+    /// TeaCache accumulated-delta threshold.
+    pub tea_threshold: f64,
+    /// AdaCache similarity→rate knee.
+    pub ada_knee: f64,
+    /// L2C learned-schedule threshold (their cache-threshold knob, table 10).
+    pub l2c_threshold: f64,
+    /// StaticCache recompute period (PAB broadcast frequency).
+    pub static_period: usize,
+}
+
+impl Default for FastCacheConfig {
+    fn default() -> Self {
+        FastCacheConfig {
+            policy: PolicyKind::FastCache,
+            alpha: 0.05,
+            tau_delta0: 0.15,
+            tau_s: 0.05,
+            gamma: 0.5,
+            enable_str: true,
+            enable_sc: true,
+            enable_mb: true,
+            enable_merge: false,
+            knn_k: 5,
+            merge_lambda: 0.5,
+            merge_target: 32,
+            approx: ApproxMode::DiagAffine,
+            fit_decay: 0.98,
+            fb_rdt: 0.25,
+            tea_threshold: 1.20,
+            ada_knee: 0.30,
+            l2c_threshold: 0.10,
+            static_period: 2,
+        }
+    }
+}
+
+impl FastCacheConfig {
+    /// Policy-appropriate defaults: STR, MB, and token merging are
+    /// FastCache modules — the baselines (and the vanilla NoCache rows)
+    /// run without them, exactly as in the paper's comparison tables.
+    pub fn with_policy(policy: PolicyKind) -> Self {
+        let fastcache = policy == PolicyKind::FastCache;
+        FastCacheConfig {
+            policy,
+            enable_str: fastcache,
+            enable_mb: fastcache,
+            enable_merge: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0 < self.alpha && self.alpha < 1.0) {
+            return Err(format!("alpha out of (0,1): {}", self.alpha));
+        }
+        if self.tau_delta0 <= 0.0 {
+            return Err(format!("tau_delta0 must be > 0: {}", self.tau_delta0));
+        }
+        if self.tau_s < 0.0 {
+            return Err(format!("tau_s must be >= 0: {}", self.tau_s));
+        }
+        if !(0.0..=1.0).contains(&self.gamma) {
+            return Err(format!("gamma out of [0,1]: {}", self.gamma));
+        }
+        if self.knn_k == 0 {
+            return Err("knn_k must be >= 1".into());
+        }
+        if self.static_period == 0 {
+            return Err("static_period must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.fit_decay) {
+            return Err(format!("fit_decay out of [0,1]: {}", self.fit_decay));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_defaults() {
+        let c = FastCacheConfig::default();
+        assert_eq!(c.alpha, 0.05);
+        assert_eq!(c.tau_s, 0.05);
+        assert_eq!(c.gamma, 0.5);
+        assert!(c.enable_str && c.enable_sc && c.enable_mb);
+        assert_eq!(c.knn_k, 5);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut c = FastCacheConfig::default();
+        c.alpha = 0.0;
+        assert!(c.validate().is_err());
+        c = FastCacheConfig::default();
+        c.gamma = 1.5;
+        assert!(c.validate().is_err());
+        c = FastCacheConfig::default();
+        c.knn_k = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+}

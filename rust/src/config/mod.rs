@@ -1,0 +1,15 @@
+//! Configuration layer: model-variant table (mirrors python configs.py),
+//! FastCache / policy knobs, server knobs, and the CLI parser.
+
+pub mod cli;
+pub mod fastcache;
+pub mod model;
+pub mod server;
+pub mod toml;
+
+pub use cli::Args;
+pub use fastcache::{ApproxMode, FastCacheConfig, PolicyKind};
+pub use model::{
+    token_bucket, ModelConfig, Variant, BATCH_SIZES, C_IN, MLP_RATIO, N_TOKENS, TOKEN_BUCKETS,
+};
+pub use server::ServerConfig;

@@ -1,0 +1,196 @@
+//! Model-variant table — MUST mirror python/compile/configs.py exactly
+//! (the AOT manifest is cross-checked against this at load time).
+
+use std::fmt;
+
+pub const N_TOKENS: usize = 64;
+pub const C_IN: usize = 4;
+pub const MLP_RATIO: usize = 4;
+pub const TOKEN_BUCKETS: [usize; 3] = [16, 32, 64];
+pub const BATCH_SIZES: [usize; 2] = [1, 4];
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Variant {
+    S,
+    B,
+    L,
+    Xl,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] = [Variant::S, Variant::B, Variant::L, Variant::Xl];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Variant::S => "s",
+            Variant::B => "b",
+            Variant::L => "l",
+            Variant::Xl => "xl",
+        }
+    }
+
+    /// Paper-facing name.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Variant::S => "DiT-S/2",
+            Variant::B => "DiT-B/2",
+            Variant::L => "DiT-L/2",
+            Variant::Xl => "DiT-XL/2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "s" | "dit-s" | "dit-s/2" => Some(Variant::S),
+            "b" | "dit-b" | "dit-b/2" => Some(Variant::B),
+            "l" | "dit-l" | "dit-l/2" => Some(Variant::L),
+            "xl" | "dit-xl" | "dit-xl/2" => Some(Variant::Xl),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub variant: Variant,
+    pub layers: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub n_tokens: usize,
+    pub c_in: usize,
+}
+
+impl ModelConfig {
+    pub fn of(variant: Variant) -> ModelConfig {
+        let (layers, d, heads) = match variant {
+            Variant::S => (3, 96, 3),
+            Variant::B => (6, 192, 6),
+            Variant::L => (12, 256, 8),
+            Variant::Xl => (14, 288, 9),
+        };
+        ModelConfig { variant, layers, d, heads, n_tokens: N_TOKENS, c_in: C_IN }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    /// N·D — the χ² degrees of freedom of the cache test at full tokens.
+    pub fn nd(&self) -> usize {
+        self.n_tokens * self.d
+    }
+
+    /// Approximate parameter count (for reporting).
+    pub fn param_count(&self) -> usize {
+        let d = self.d;
+        let per_block = d * 3 * d + 3 * d   // qkv
+            + d * d + d                     // proj
+            + d * MLP_RATIO * d + MLP_RATIO * d
+            + MLP_RATIO * d * d + d
+            + d * 6 * d + 6 * d; // adaLN mod
+        let temb = 2 * d * d + 2 * d;
+        let final_l = d * 2 * d + 2 * d + d * C_IN + C_IN;
+        let embed = C_IN * d + d;
+        self.layers * per_block + temb + final_l + embed
+    }
+
+    /// FLOPs of one full block forward at `n` tokens (2·mults convention).
+    pub fn block_flops(&self, n: usize) -> u64 {
+        let d = self.d as u64;
+        let n = n as u64;
+        let qkv = 2 * n * d * 3 * d;
+        let attn = 2 * 2 * self.heads as u64 * n * n * self.head_dim() as u64;
+        let proj = 2 * n * d * d;
+        let mlp = 2 * 2 * n * d * MLP_RATIO as u64 * d;
+        let moddot = 2 * d * 6 * d;
+        qkv + attn + proj + mlp + moddot
+    }
+
+    /// FLOPs of the linear approximation at `n` tokens (diag-affine native
+    /// path is O(nd); the full-matrix HLO path is 2·n·d²).
+    pub fn approx_flops(&self, n: usize, full_matrix: bool) -> u64 {
+        let d = self.d as u64;
+        let n = n as u64;
+        if full_matrix {
+            2 * n * d * d
+        } else {
+            2 * n * d
+        }
+    }
+}
+
+/// Pick the smallest token bucket that holds `n` tokens.
+pub fn token_bucket(n: usize) -> usize {
+    for &b in TOKEN_BUCKETS.iter() {
+        if n <= b {
+            return b;
+        }
+    }
+    *TOKEN_BUCKETS.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_python_configs() {
+        let s = ModelConfig::of(Variant::S);
+        assert_eq!((s.layers, s.d, s.heads), (3, 96, 3));
+        let b = ModelConfig::of(Variant::B);
+        assert_eq!((b.layers, b.d, b.heads), (6, 192, 6));
+        let l = ModelConfig::of(Variant::L);
+        assert_eq!((l.layers, l.d, l.heads), (12, 256, 8));
+        let xl = ModelConfig::of(Variant::Xl);
+        assert_eq!((xl.layers, xl.d, xl.heads), (14, 288, 9));
+    }
+
+    #[test]
+    fn head_dim_uniform_32() {
+        for v in Variant::ALL {
+            assert_eq!(ModelConfig::of(v).head_dim(), 32, "{v}");
+        }
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.key()), Some(v));
+            assert_eq!(Variant::parse(v.paper_name()), Some(v));
+        }
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(token_bucket(1), 16);
+        assert_eq!(token_bucket(16), 16);
+        assert_eq!(token_bucket(17), 32);
+        assert_eq!(token_bucket(64), 64);
+        assert_eq!(token_bucket(999), 64);
+    }
+
+    #[test]
+    fn params_scale_with_variant() {
+        let mut prev = 0;
+        for v in Variant::ALL {
+            let p = ModelConfig::of(v).param_count();
+            assert!(p > prev, "{v}: {p} <= {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn flops_monotone_in_tokens() {
+        let cfg = ModelConfig::of(Variant::B);
+        assert!(cfg.block_flops(64) > cfg.block_flops(32));
+        assert!(cfg.block_flops(32) > cfg.block_flops(16));
+        assert!(cfg.approx_flops(64, true) > cfg.approx_flops(64, false));
+    }
+}

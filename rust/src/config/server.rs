@@ -1,0 +1,77 @@
+//! Serving-side configuration: batcher, queue, scheduler knobs.
+
+use super::model::Variant;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Model variant served by this worker.
+    pub variant: Variant,
+    /// Maximum step-aligned batch (must be <= the compiled B=4 artifact).
+    pub max_batch: usize,
+    /// Bounded request-queue depth; admission fails beyond this
+    /// (backpressure to the client).
+    pub queue_depth: usize,
+    /// Denoising steps per request (paper default 50).
+    pub steps: usize,
+    /// Classifier-free-guidance scale (paper default 7.5).
+    pub guidance: f32,
+    /// Number of worker threads (1-core CPU default 1; kept configurable
+    /// for multi-core hosts).
+    pub workers: usize,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+    /// Base seed for weight generation (fixed => reproducible serving).
+    pub weight_seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            variant: Variant::S,
+            max_batch: 4,
+            queue_depth: 64,
+            steps: 50,
+            guidance: 7.5,
+            workers: 1,
+            artifacts_dir: "artifacts".to_string(),
+            weight_seed: 0xD17,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 || self.max_batch > 4 {
+            return Err(format!("max_batch must be 1..=4 (compiled artifacts), got {}", self.max_batch));
+        }
+        if self.steps == 0 {
+            return Err("steps must be >= 1".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("queue_depth must be >= 1".into());
+        }
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(ServerConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_oversized_batch() {
+        let mut c = ServerConfig::default();
+        c.max_batch = 8;
+        assert!(c.validate().is_err());
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Minimal TOML-subset parser for server config files (the `toml` crate is
+//! not vendored in the offline registry). Supports:
+//!
+//!   [section]
+//!   key = "string"            # comments
+//!   key = 3.5 | 42 | true
+//!
+//! No nested tables, arrays, or multi-line strings — exactly what
+//! fastcache-serve's config files need (see `--config` in main.rs).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key` -> value (keys before any section header
+/// live under the empty section "").
+#[derive(Default, Debug)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|k| k.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {lineno}: unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("line {lineno}: cannot parse value {s:?}"))
+}
+
+/// Apply a parsed config file onto (FastCacheConfig, ServerConfig).
+/// Recognized keys mirror the CLI options (see main.rs):
+///
+///   [model]    variant = "xl"
+///   [cache]    policy = "fastcache"  alpha = 0.05  tau_s = 0.05 …
+///   [server]   steps = 50  max_batch = 4  queue_depth = 64 …
+pub fn apply(
+    doc: &TomlDoc,
+    fc: &mut super::FastCacheConfig,
+    scfg: &mut super::ServerConfig,
+) -> Result<(), String> {
+    use super::{PolicyKind, Variant};
+    if let Some(v) = doc.get("model.variant").and_then(|v| v.as_str()) {
+        scfg.variant = Variant::parse(v).ok_or_else(|| format!("bad model.variant {v:?}"))?;
+    }
+    if let Some(v) = doc.get("cache.policy").and_then(|v| v.as_str()) {
+        fc.policy = PolicyKind::parse(v).ok_or_else(|| format!("bad cache.policy {v:?}"))?;
+    }
+    macro_rules! f64_key {
+        ($key:literal, $slot:expr) => {
+            if let Some(v) = doc.get($key) {
+                $slot = v.as_f64().ok_or_else(|| format!("{} must be a number", $key))?;
+            }
+        };
+    }
+    macro_rules! usize_key {
+        ($key:literal, $slot:expr) => {
+            if let Some(v) = doc.get($key) {
+                $slot = v.as_usize().ok_or_else(|| format!("{} must be an integer", $key))?;
+            }
+        };
+    }
+    macro_rules! bool_key {
+        ($key:literal, $slot:expr) => {
+            if let Some(v) = doc.get($key) {
+                $slot = v.as_bool().ok_or_else(|| format!("{} must be a bool", $key))?;
+            }
+        };
+    }
+    f64_key!("cache.alpha", fc.alpha);
+    f64_key!("cache.tau_delta0", fc.tau_delta0);
+    f64_key!("cache.tau_s", fc.tau_s);
+    if let Some(v) = doc.get("cache.gamma") {
+        fc.gamma = v.as_f64().ok_or("cache.gamma must be a number")? as f32;
+    }
+    bool_key!("cache.enable_str", fc.enable_str);
+    bool_key!("cache.enable_sc", fc.enable_sc);
+    bool_key!("cache.enable_mb", fc.enable_mb);
+    bool_key!("cache.enable_merge", fc.enable_merge);
+    usize_key!("cache.knn_k", fc.knn_k);
+    usize_key!("cache.merge_target", fc.merge_target);
+    f64_key!("cache.fb_rdt", fc.fb_rdt);
+    f64_key!("cache.tea_threshold", fc.tea_threshold);
+    f64_key!("cache.ada_knee", fc.ada_knee);
+    f64_key!("cache.l2c_threshold", fc.l2c_threshold);
+    usize_key!("cache.static_period", fc.static_period);
+    usize_key!("server.steps", scfg.steps);
+    usize_key!("server.max_batch", scfg.max_batch);
+    usize_key!("server.queue_depth", scfg.queue_depth);
+    usize_key!("server.workers", scfg.workers);
+    if let Some(v) = doc.get("server.guidance") {
+        scfg.guidance = v.as_f64().ok_or("server.guidance must be a number")? as f32;
+    }
+    if let Some(v) = doc.get("server.artifacts_dir").and_then(|v| v.as_str()) {
+        scfg.artifacts_dir = v.to_string();
+    }
+    if let Some(v) = doc.get("server.weight_seed") {
+        scfg.weight_seed = v.as_usize().ok_or("server.weight_seed must be an integer")? as u64;
+    }
+    fc.validate()?;
+    scfg.validate()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FastCacheConfig, PolicyKind, ServerConfig, Variant};
+
+    const SAMPLE: &str = r#"
+# fastcache-serve config
+[model]
+variant = "xl"
+
+[cache]
+policy = "fbcache"   # a baseline
+alpha = 0.01
+gamma = 0.7
+enable_str = false
+knn_k = 7
+
+[server]
+steps = 25
+max_batch = 2
+artifacts_dir = "artifacts"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("model.variant").unwrap().as_str(), Some("xl"));
+        assert_eq!(doc.get("cache.alpha").unwrap().as_f64(), Some(0.01));
+        assert_eq!(doc.get("cache.knn_k").unwrap().as_usize(), Some(7));
+        assert_eq!(doc.get("cache.enable_str").unwrap().as_bool(), Some(false));
+        assert_eq!(doc.get("server.steps").unwrap().as_usize(), Some(25));
+    }
+
+    #[test]
+    fn applies_onto_configs() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let mut fc = FastCacheConfig::default();
+        let mut scfg = ServerConfig::default();
+        apply(&doc, &mut fc, &mut scfg).unwrap();
+        assert_eq!(scfg.variant, Variant::Xl);
+        assert_eq!(fc.policy, PolicyKind::FbCache);
+        assert_eq!(fc.alpha, 0.01);
+        assert!((fc.gamma - 0.7).abs() < 1e-6);
+        assert!(!fc.enable_str);
+        assert_eq!(scfg.steps, 25);
+        assert_eq!(scfg.max_batch, 2);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = \"open").is_err());
+        assert!(TomlDoc::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_semantics() {
+        let doc = TomlDoc::parse("[cache]\nalpha = 7.0").unwrap();
+        let mut fc = FastCacheConfig::default();
+        let mut scfg = ServerConfig::default();
+        assert!(apply(&doc, &mut fc, &mut scfg).is_err());
+        let doc = TomlDoc::parse("[cache]\npolicy = \"bogus\"").unwrap();
+        assert!(apply(&doc, &mut fc, &mut scfg).is_err());
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let doc = TomlDoc::parse("x = \"a # b\" # trailing").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_str(), Some("a # b"));
+    }
+}

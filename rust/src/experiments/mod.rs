@@ -1,0 +1,277 @@
+//! Shared experiment runners behind the benches and examples: evaluate a
+//! set of cache policies on a workload, producing the rows the paper's
+//! tables report (FID/t-FID proxies, CLIP proxy, time, memory, ratios).
+//!
+//! See DESIGN.md §6 for the experiment index mapping every paper table and
+//! figure to a bench target, and EXPERIMENTS.md for recorded outputs.
+
+use anyhow::Result;
+
+use crate::config::{FastCacheConfig, ModelConfig, PolicyKind, Variant};
+use crate::metrics::{clip_display, clip_proxy, FidAccumulator};
+use crate::model::DitModel;
+use crate::scheduler::{DenoiseEngine, GenRequest};
+use crate::workload::{MotionProfile, WorkloadGen};
+
+/// One table row: a policy evaluated on a request set.
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub label: String,
+    pub policy: PolicyKind,
+    /// Fréchet distance to the NoCache reference set (FID-proxy).
+    pub fid: f64,
+    /// Fréchet distance over temporal-difference features (t-FID proxy).
+    pub tfid: f64,
+    /// CLIP-proxy display score.
+    pub clip: f64,
+    /// Total wall time across the request set, ms.
+    pub time_ms: f64,
+    /// Estimated memory: weights + peak cache state + activations, MiB.
+    pub mem_mib: f64,
+    /// Block-site skip ratio.
+    pub skip_ratio: f64,
+    /// Token-site static ratio (Tab. 5).
+    pub static_ratio: f64,
+    /// Executed / full FLOPs.
+    pub flops_ratio: f64,
+    /// Speedup vs the NoCache row of the same eval (1.0 for NoCache).
+    pub speedup: f64,
+}
+
+impl EvalRow {
+    pub fn speedup_pct(&self) -> f64 {
+        (self.speedup - 1.0) * 100.0
+    }
+}
+
+/// Evaluation knobs (scaled-down defaults keep single-core runs tractable;
+/// BENCH_FULL=1 switches to the paper-faithful 50-step / larger sets).
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub variant: Variant,
+    pub steps: usize,
+    pub requests: usize,
+    pub profile: MotionProfile,
+    pub seed: u64,
+    pub guidance: f32,
+}
+
+impl EvalConfig {
+    pub fn quick(variant: Variant) -> EvalConfig {
+        if std::env::var("BENCH_FULL").as_deref() == Ok("1") {
+            EvalConfig {
+                variant, steps: 50, requests: 24,
+                profile: MotionProfile::MIXED, seed: 0xE7A1, guidance: 7.5,
+            }
+        } else {
+            EvalConfig {
+                variant, steps: 20, requests: 8,
+                profile: MotionProfile::MIXED, seed: 0xE7A1, guidance: 7.5,
+            }
+        }
+    }
+}
+
+/// Estimated serving memory in MiB: weights + peak cache + transient
+/// activations (a few [N, D] f32 buffers per concurrent request).
+fn mem_mib(model: &DitModel, cache_peak: usize) -> f64 {
+    let act = 6 * model.cfg.n_tokens * model.cfg.d * 4;
+    (model.weight_bytes() + cache_peak + act) as f64 / (1 << 20) as f64
+}
+
+/// Run one policy over a request set; returns (row-sans-fid, latents).
+fn run_policy(
+    model: &DitModel,
+    label: &str,
+    fc: &FastCacheConfig,
+    reqs: &[GenRequest],
+) -> Result<(EvalRow, Vec<crate::tensor::Tensor>, Vec<Vec<f32>>)> {
+    let mut eng = DenoiseEngine::new(model, fc.clone());
+    let mut latents = Vec::with_capacity(reqs.len());
+    let mut conds = Vec::with_capacity(reqs.len());
+    let mut time_ms = 0.0;
+    let mut skip_num = 0usize;
+    let mut skip_den = 0usize;
+    let mut tok_num = 0u64;
+    let mut tok_den = 0u64;
+    let mut flops_done = 0u64;
+    let mut flops_full = 0u64;
+    let mut cache_peak = 0usize;
+    for req in reqs {
+        let r = eng.generate(req)?;
+        time_ms += r.wall_ms;
+        skip_num += r.approximated + r.reused;
+        skip_den += r.computed + r.approximated + r.reused;
+        tok_num += r.token_sites_computed;
+        tok_den += r.token_sites_total;
+        flops_done += r.flops_done;
+        flops_full += r.flops_full;
+        cache_peak = cache_peak.max(r.cache_bytes_peak);
+        conds.push(r.cond.clone());
+        latents.push(r.latent);
+    }
+    let mut clip_sum = 0.0;
+    for (l, c) in latents.iter().zip(&conds) {
+        clip_sum += clip_display(clip_proxy(model, l, c));
+    }
+    let row = EvalRow {
+        label: label.to_string(),
+        policy: fc.policy,
+        fid: 0.0,
+        tfid: 0.0,
+        clip: clip_sum / latents.len().max(1) as f64,
+        time_ms,
+        mem_mib: mem_mib(model, cache_peak),
+        skip_ratio: skip_num as f64 / skip_den.max(1) as f64,
+        static_ratio: 1.0 - tok_num as f64 / tok_den.max(1) as f64,
+        flops_ratio: flops_done as f64 / flops_full.max(1) as f64,
+        speedup: 1.0,
+    };
+    Ok((row, latents, conds))
+}
+
+/// Evaluate labeled policy configs against the NoCache reference on one
+/// model: the general engine behind table1/2/6/9/10/13/14.
+pub fn eval_policies(
+    model: &DitModel,
+    policies: &[(String, FastCacheConfig)],
+    ecfg: &EvalConfig,
+) -> Result<Vec<EvalRow>> {
+    let mut wl = WorkloadGen::new(ecfg.seed);
+    let reqs: Vec<GenRequest> = wl
+        .image_set(ecfg.requests, ecfg.steps, ecfg.profile)
+        .into_iter()
+        .map(|mut r| {
+            r.guidance = ecfg.guidance;
+            r
+        })
+        .collect();
+
+    // Reference: NoCache on the same requests.
+    let ref_fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
+    let (ref_row, ref_latents, _) = run_policy(model, "No Cache", &ref_fc, &reqs)?;
+    let mut ref_fid = FidAccumulator::new();
+    let mut ref_tfid = FidAccumulator::new();
+    for (i, l) in ref_latents.iter().enumerate() {
+        ref_fid.push_latent(l);
+        if i > 0 {
+            ref_tfid.push_temporal(l, &ref_latents[i - 1]);
+        }
+    }
+    let base_ms = ref_row.time_ms;
+
+    let mut rows = Vec::new();
+    for (label, fc) in policies {
+        if fc.policy == PolicyKind::NoCache {
+            let mut row = ref_row.clone();
+            row.label = label.clone();
+            rows.push(row);
+            continue;
+        }
+        let (mut row, latents, _) = run_policy(model, label, fc, &reqs)?;
+        let mut fid = FidAccumulator::new();
+        let mut tfid = FidAccumulator::new();
+        for (i, l) in latents.iter().enumerate() {
+            fid.push_latent(l);
+            if i > 0 {
+                tfid.push_temporal(l, &latents[i - 1]);
+            }
+        }
+        row.fid = fid.distance_to(&ref_fid);
+        row.tfid = tfid.distance_to(&ref_tfid);
+        row.speedup = base_ms / row.time_ms.max(1e-9);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// The paper's baseline set (Tab. 1 / Tab. 12 rows).
+pub fn baseline_policies() -> Vec<(String, FastCacheConfig)> {
+    [
+        PolicyKind::TeaCache,
+        PolicyKind::AdaCache,
+        PolicyKind::L2C,
+        PolicyKind::FbCache,
+        PolicyKind::FastCache,
+    ]
+    .into_iter()
+    .map(|p| (FastCacheConfig::with_policy(p).policy.paper_name().to_string(),
+              FastCacheConfig::with_policy(p)))
+    .collect()
+}
+
+/// Video evaluation: a clip's frames through one policy; FVD-proxy over
+/// frame-to-frame temporal features vs the NoCache rendering of the SAME
+/// clip (Tab. 8).
+pub fn eval_video(
+    model: &DitModel,
+    fc: &FastCacheConfig,
+    frames: usize,
+    steps: usize,
+    profile: MotionProfile,
+    seed: u64,
+) -> Result<(EvalRow, f64)> {
+    let mut wl = WorkloadGen::new(seed);
+    let clip = wl.video_clip(frames, steps, profile);
+
+    let ref_fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
+    let (ref_row, ref_frames, _) = run_policy(model, "No Cache", &ref_fc, &clip)?;
+    let mut ref_acc = FidAccumulator::new();
+    for i in 1..ref_frames.len() {
+        ref_acc.push_temporal(&ref_frames[i], &ref_frames[i - 1]);
+    }
+
+    let (mut row, frames_out, _) = run_policy(model, fc.policy.paper_name(), fc, &clip)?;
+    let mut acc = FidAccumulator::new();
+    for i in 1..frames_out.len() {
+        acc.push_temporal(&frames_out[i], &frames_out[i - 1]);
+    }
+    let fvd = if fc.policy == PolicyKind::NoCache { 0.0 } else { acc.distance_to(&ref_acc) };
+    row.fid = fvd;
+    row.speedup = ref_row.time_ms / row.time_ms.max(1e-9);
+    Ok((row, fvd))
+}
+
+/// Model cards for the cross-variant tables.
+pub fn variant_cfgs() -> Vec<ModelConfig> {
+    Variant::ALL.iter().map(|v| ModelConfig::of(*v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_policies_produces_ordered_rows() {
+        let model = DitModel::native(Variant::S, 5);
+        let mut ecfg = EvalConfig::quick(Variant::S);
+        ecfg.steps = 8;
+        ecfg.requests = 8;
+        let policies = vec![
+            ("No Cache".to_string(), FastCacheConfig::with_policy(PolicyKind::NoCache)),
+            ("FastCache".to_string(), FastCacheConfig::with_policy(PolicyKind::FastCache)),
+        ];
+        let rows = eval_policies(&model, &policies, &ecfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].fid, 0.0); // reference row
+        assert!(rows[1].fid >= 0.0);
+        assert!(rows[1].speedup > 1.0, "caching should speed up: {}", rows[1].speedup);
+        // At 8 steps the chi-square gate may not fire (per-step deltas are
+        // large); token reduction must still produce static token-sites.
+        assert!(
+            rows[1].static_ratio > 0.0 || rows[1].skip_ratio > 0.0,
+            "no compression at all: static {} skip {}",
+            rows[1].static_ratio,
+            rows[1].skip_ratio
+        );
+    }
+
+    #[test]
+    fn eval_video_runs() {
+        let model = DitModel::native(Variant::S, 5);
+        let fc = FastCacheConfig::default();
+        let (row, fvd) = eval_video(&model, &fc, 4, 6, MotionProfile::CALM, 3).unwrap();
+        assert!(fvd >= 0.0);
+        assert!(row.speedup > 0.5);
+    }
+}

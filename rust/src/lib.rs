@@ -1,0 +1,44 @@
+//! # FastCache-DiT
+//!
+//! A diffusion-transformer *serving* framework reproducing
+//! **FastCache: Fast Caching for Diffusion Transformer Through Learnable
+//! Linear Approximation** (Liu et al., 2025) in the three-layer
+//! Rust + JAX + Pallas architecture:
+//!
+//! - **L3 (this crate)** — request router, dynamic batcher, denoise
+//!   scheduler, and the paper's χ²-gated hidden-state cache with learnable
+//!   linear approximation, plus every baseline policy the paper compares
+//!   against (FBCache, TeaCache, AdaCache, Learning-to-Cache, PAB-static).
+//! - **L2 (python/compile/model.py)** — the DiT block/temb/final forward in
+//!   JAX, AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (attention, linear approximation, saliency, kNN density).
+//!
+//! Python never runs at serving time: the `xla` crate loads the HLO
+//! artifacts into a PJRT CPU client and this crate owns every loop.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod cache;
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod stats;
+pub mod tensor;
+pub mod testutil;
+pub mod tokens;
+pub mod workload;
+
+pub use config::{FastCacheConfig, ModelConfig, PolicyKind, ServerConfig, Variant};
+pub use tensor::Tensor;
+
+/// Crate version (matches Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,247 @@
+//! `fastcache-serve` — the L3 leader binary.
+//!
+//! Subcommands:
+//!   info                         — platform + artifact + model summary
+//!   generate [opts]              — run N requests through one engine
+//!   serve [opts]                 — start the batching server, replay a
+//!                                  synthetic workload, report latency /
+//!                                  throughput / quality
+//!
+//! Common options: --model s|b|l|xl  --policy fastcache|fbcache|...
+//!   --steps N --requests N --alpha A --tau-s T --gamma G --max-batch B
+//!   --artifacts DIR --seed S --motion calm|mixed|stormy --native
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use fastcache_dit::cache::state::CacheCounters;
+use fastcache_dit::config::{Args, FastCacheConfig, PolicyKind, ServerConfig, Variant};
+use fastcache_dit::metrics::{clip_display, clip_proxy, FidAccumulator};
+use fastcache_dit::model::DitModel;
+use fastcache_dit::runtime::{ArtifactStore, Client};
+use fastcache_dit::scheduler::DenoiseEngine;
+use fastcache_dit::server::Server;
+use fastcache_dit::workload::{MotionProfile, WorkloadGen};
+
+fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)> {
+    // Config file first (if any), CLI options override.
+    let mut file_fc = FastCacheConfig::default();
+    let mut file_scfg = ServerConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --config {path}"))?;
+        let doc = fastcache_dit::config::toml::TomlDoc::parse(&text)
+            .map_err(anyhow::Error::msg)?;
+        fastcache_dit::config::toml::apply(&doc, &mut file_fc, &mut file_scfg)
+            .map_err(anyhow::Error::msg)?;
+    }
+
+    let variant = Variant::parse(args.get_or("model", file_scfg.variant.key()))
+        .context("bad --model (want s|b|l|xl)")?;
+    let policy = PolicyKind::parse(args.get_or("policy", file_fc.policy.name()))
+        .context("bad --policy")?;
+    let mut fc = FastCacheConfig { policy, ..file_fc };
+    fc.alpha = args.parse_num("alpha", fc.alpha).map_err(anyhow::Error::msg)?;
+    fc.tau_s = args.parse_num("tau-s", fc.tau_s).map_err(anyhow::Error::msg)?;
+    fc.gamma = args.parse_num("gamma", fc.gamma).map_err(anyhow::Error::msg)?;
+    fc.knn_k = args.parse_num("knn-k", fc.knn_k).map_err(anyhow::Error::msg)?;
+    if args.flag("no-str") {
+        fc.enable_str = false;
+    }
+    if args.flag("no-sc") {
+        fc.enable_sc = false;
+    }
+    if args.flag("no-mb") {
+        fc.enable_mb = false;
+    }
+    if args.flag("merge") {
+        fc.enable_merge = true;
+    }
+    fc.validate().map_err(anyhow::Error::msg)?;
+
+    let mut scfg = file_scfg;
+    scfg.variant = variant;
+    scfg.steps = args.parse_num("steps", scfg.steps).map_err(anyhow::Error::msg)?;
+    scfg.guidance = args.parse_num("guidance", scfg.guidance).map_err(anyhow::Error::msg)?;
+    scfg.max_batch = args.parse_num("max-batch", scfg.max_batch).map_err(anyhow::Error::msg)?;
+    scfg.queue_depth =
+        args.parse_num("queue-depth", scfg.queue_depth).map_err(anyhow::Error::msg)?;
+    scfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    scfg.weight_seed = args.parse_num("seed", scfg.weight_seed).map_err(anyhow::Error::msg)?;
+    scfg.validate().map_err(anyhow::Error::msg)?;
+    Ok((variant, fc, scfg))
+}
+
+fn load_model(scfg: &ServerConfig, native: bool) -> Result<DitModel> {
+    if native {
+        return Ok(DitModel::native(scfg.variant, scfg.weight_seed));
+    }
+    let client = Arc::new(Client::cpu()?);
+    let store = Arc::new(ArtifactStore::open(std::path::Path::new(&scfg.artifacts_dir))?);
+    DitModel::load(client, store, scfg.variant, scfg.weight_seed)
+}
+
+fn motion_profile(name: &str) -> Result<MotionProfile> {
+    Ok(match name {
+        "calm" => MotionProfile::CALM,
+        "mixed" => MotionProfile::MIXED,
+        "stormy" => MotionProfile::STORMY,
+        other => bail!("bad --motion {other} (want calm|mixed|stormy)"),
+    })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (_, _, scfg) = parse_common(args)?;
+    println!("fastcache-dit v{}", fastcache_dit::version());
+    match Client::cpu() {
+        Ok(c) => println!("PJRT platform: {}", c.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    match ArtifactStore::open(std::path::Path::new(&scfg.artifacts_dir)) {
+        Ok(store) => {
+            let mut names: Vec<&str> = store.names().collect();
+            names.sort();
+            println!("artifacts ({}): {}", names.len(), scfg.artifacts_dir);
+            println!("variants: {:?}", store.variants());
+        }
+        Err(e) => println!("artifacts: {e:#}"),
+    }
+    for v in Variant::ALL {
+        let cfg = fastcache_dit::config::ModelConfig::of(v);
+        println!(
+            "  {:<9} layers={:<3} d={:<4} heads={:<2} params={:.1}M",
+            cfg.variant.paper_name(),
+            cfg.layers,
+            cfg.d,
+            cfg.heads,
+            cfg.param_count() as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let (variant, fc, scfg) = parse_common(args)?;
+    let n_req: usize = args.parse_num("requests", 4).map_err(anyhow::Error::msg)?;
+    let profile = motion_profile(args.get_or("motion", "mixed"))?;
+    let model = load_model(&scfg, args.flag("native"))?;
+    println!(
+        "model {} ({} layers, d={}), policy {}, {} steps, {} requests",
+        variant.paper_name(),
+        model.cfg.layers,
+        model.cfg.d,
+        fc.policy,
+        scfg.steps,
+        n_req
+    );
+
+    let mut wl = WorkloadGen::new(scfg.weight_seed ^ 0x77);
+    let reqs = wl.image_set(n_req, scfg.steps, profile);
+    let mut eng = DenoiseEngine::new(&model, fc);
+    let mut counters = CacheCounters::default();
+    let mut fid = FidAccumulator::new();
+    let mut total_ms = 0.0;
+    for req in &reqs {
+        let r = eng.generate(req)?;
+        counters.computed += r.computed;
+        counters.approximated += r.approximated;
+        counters.reused += r.reused;
+        total_ms += r.wall_ms;
+        fid.push_latent(&r.latent);
+        let clip = clip_display(clip_proxy(&model, &r.latent, &r.cond));
+        println!(
+            "  req {:>3}: {:>8.1} ms  skip={:>5.1}%  static={:>5.1}%  flops={:>5.1}%  clip={:.1}",
+            r.id,
+            r.wall_ms,
+            r.skip_ratio() * 100.0,
+            r.static_ratio() * 100.0,
+            r.flops_ratio() * 100.0,
+            clip
+        );
+    }
+    println!(
+        "total {:.1} ms | sites computed {} approximated {} reused {} (skip {:.1}%)",
+        total_ms,
+        counters.computed,
+        counters.approximated,
+        counters.reused,
+        counters.skip_ratio() * 100.0
+    );
+    if let Some(meter) = model.meter() {
+        println!(
+            "device memory: live {:.1} MiB, peak {:.1} MiB",
+            meter.live_bytes() as f64 / (1 << 20) as f64,
+            meter.peak_bytes() as f64 / (1 << 20) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (variant, fc, scfg) = parse_common(args)?;
+    let n_req: usize = args.parse_num("requests", 16).map_err(anyhow::Error::msg)?;
+    let profile = motion_profile(args.get_or("motion", "mixed"))?;
+    let native = args.flag("native");
+    println!(
+        "serving {} with policy {} (max_batch={}, queue_depth={}, steps={})",
+        variant.paper_name(),
+        fc.policy,
+        scfg.max_batch,
+        scfg.queue_depth,
+        scfg.steps
+    );
+
+    let scfg2 = scfg.clone();
+    let server = Server::start(scfg.clone(), fc, move || load_model(&scfg2, native));
+
+    let mut wl = WorkloadGen::new(scfg.weight_seed ^ 0x5EED);
+    let reqs = wl.image_set(n_req, scfg.steps, profile);
+    let mut pending = Vec::new();
+    for req in reqs {
+        loop {
+            match server.submit(req.clone()) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(fastcache_dit::server::queue::SubmitError::QueueFull) => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => bail!("submit failed: {e}"),
+            }
+        }
+    }
+    for rx in pending {
+        let resp = rx.recv().context("response channel closed")?;
+        println!(
+            "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%",
+            resp.result.id,
+            resp.e2e_ms,
+            resp.queued_ms,
+            resp.result.skip_ratio() * 100.0
+        );
+    }
+    let report = server.shutdown();
+    println!(
+        "served {} requests in {:.2}s — {:.2} req/s, mean batch {:.2}, p50 {:.0} ms, p95 {:.0} ms",
+        report.completed,
+        report.wall_s,
+        report.throughput_rps(),
+        report.mean_batch_size(),
+        report.e2e.percentile(50.0),
+        report.e2e.percentile(95.0)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        other => bail!("unknown command {other} (want info|generate|serve)"),
+    }
+}

@@ -1,0 +1,178 @@
+//! FID / t-FID / FVD proxies over latent features (substitution documented
+//! in DESIGN.md §2 and stats::frechet).
+//!
+//! Feature extractor: per-sample latent [N, C] (N = 8×8 grid) maps to a
+//! 3C-dim feature — per-channel mean, per-channel std, and per-channel
+//! spatial-gradient energy on the 8×8 grid. This captures first/second
+//! moments and spatial structure, the aspects cache-induced error corrupts.
+//! Temporal features (t-FID / FVD) apply the same extractor to the
+//! DIFFERENCE of consecutive frames, which is what t-FID's temporal
+//! sensitivity measures.
+
+use crate::config::C_IN;
+use crate::stats::{frechet_distance, FeatureStats};
+use crate::tensor::Tensor;
+
+pub const FEAT_DIM: usize = 3 * C_IN;
+
+/// Latent [N, C] (N a perfect square grid) -> feature vector [3C].
+pub fn latent_features(latent: &Tensor) -> Vec<f32> {
+    let n = latent.shape()[0];
+    let c = latent.shape()[1];
+    assert_eq!(c, C_IN);
+    let side = (n as f64).sqrt() as usize;
+    assert_eq!(side * side, n, "token count must be a square grid");
+    let data = latent.data();
+    let mut feat = vec![0.0f32; 3 * c];
+    for ch in 0..c {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += data[i * c + ch] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let d = data[i * c + ch] as f64 - mean;
+            var += d * d;
+        }
+        var /= n as f64;
+        // Spatial gradient energy over the grid.
+        let mut grad = 0.0f64;
+        let mut cnt = 0usize;
+        for r in 0..side {
+            for q in 0..side {
+                let i = r * side + q;
+                if q + 1 < side {
+                    let d = (data[i * c + ch] - data[(i + 1) * c + ch]) as f64;
+                    grad += d * d;
+                    cnt += 1;
+                }
+                if r + 1 < side {
+                    let d = (data[i * c + ch] - data[(i + side) * c + ch]) as f64;
+                    grad += d * d;
+                    cnt += 1;
+                }
+            }
+        }
+        grad /= cnt.max(1) as f64;
+        feat[ch] = mean as f32;
+        feat[c + ch] = var.sqrt() as f32;
+        feat[2 * c + ch] = grad.sqrt() as f32;
+    }
+    feat
+}
+
+/// Temporal-difference features between consecutive latents.
+pub fn temporal_features(cur: &Tensor, prev: &Tensor) -> Vec<f32> {
+    assert_eq!(cur.shape(), prev.shape());
+    let diff = Tensor::new(
+        cur.data().iter().zip(prev.data()).map(|(a, b)| a - b).collect(),
+        cur.shape(),
+    );
+    latent_features(&diff)
+}
+
+/// Accumulator for a generated set's feature statistics.
+pub struct FidAccumulator {
+    stats: FeatureStats,
+}
+
+impl FidAccumulator {
+    pub fn new() -> FidAccumulator {
+        FidAccumulator { stats: FeatureStats::new(FEAT_DIM) }
+    }
+
+    pub fn push_latent(&mut self, latent: &Tensor) {
+        self.stats.push(&latent_features(latent));
+    }
+
+    pub fn push_temporal(&mut self, cur: &Tensor, prev: &Tensor) {
+        self.stats.push(&temporal_features(cur, prev));
+    }
+
+    pub fn push_features(&mut self, f: &[f32]) {
+        self.stats.push(f);
+    }
+
+    pub fn count(&self) -> usize {
+        self.stats.count()
+    }
+
+    /// Fréchet distance to a reference set's statistics.
+    pub fn distance_to(&self, reference: &FidAccumulator) -> f64 {
+        frechet_distance(&self.stats, &reference.stats)
+    }
+}
+
+impl Default for FidAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn latents(seed: u64, count: usize, perturb: f32) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                let mut t = Tensor::new(rng.normal_vec(64 * C_IN, 1.0), &[64, C_IN]);
+                if perturb > 0.0 {
+                    for v in t.data_mut().iter_mut() {
+                        *v += perturb * rng.normal() + perturb;
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identical_sets_zero_distance() {
+        let set = latents(1, 64, 0.0);
+        let mut a = FidAccumulator::new();
+        let mut b = FidAccumulator::new();
+        for l in &set {
+            a.push_latent(l);
+            b.push_latent(l);
+        }
+        assert!(a.distance_to(&b) < 1e-9);
+    }
+
+    #[test]
+    fn distance_grows_with_perturbation() {
+        let reference = {
+            let mut r = FidAccumulator::new();
+            for l in latents(2, 96, 0.0) {
+                r.push_latent(&l);
+            }
+            r
+        };
+        let mut prev = -1.0f64;
+        for (i, p) in [0.05f32, 0.2, 0.8].iter().enumerate() {
+            let mut acc = FidAccumulator::new();
+            for l in latents(100 + i as u64, 96, *p) {
+                acc.push_latent(&l);
+            }
+            let d = acc.distance_to(&reference);
+            assert!(d > prev, "p={p}: d={d} prev={prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn temporal_features_zero_for_static_video() {
+        let a = latents(3, 1, 0.0).remove(0);
+        let f = temporal_features(&a, &a);
+        assert!(f.iter().all(|v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn feature_dim_consistent() {
+        let l = latents(4, 1, 0.0).remove(0);
+        assert_eq!(latent_features(&l).len(), FEAT_DIM);
+    }
+}

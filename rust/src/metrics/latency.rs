@@ -1,0 +1,129 @@
+//! Latency histogram + throughput counters for the serving layer.
+
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// Log-spaced bucket upper bounds in ms.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum_ms: f64,
+    max_ms: f64,
+    n: u64,
+    /// Raw samples kept for exact percentiles (serving runs are small
+    /// enough that this is fine; capped to protect long-lived servers).
+    samples: Vec<f64>,
+}
+
+const SAMPLE_CAP: usize = 100_000;
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        // 0.1ms .. ~100s, 1.6x steps.
+        let mut bounds = Vec::new();
+        let mut b = 0.1f64;
+        while b < 100_000.0 {
+            bounds.push(b);
+            b *= 1.6;
+        }
+        let len = bounds.len();
+        LatencyHistogram {
+            bounds,
+            counts: vec![0; len + 1],
+            sum_ms: 0.0,
+            max_ms: 0.0,
+            n: 0,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        let idx = self.bounds.partition_point(|&b| b < ms);
+        self.counts[idx] += 1;
+        self.sum_ms += ms;
+        self.max_ms = self.max_ms.max(ms);
+        self.n += 1;
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(ms);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Exact percentile from retained samples (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum_ms += other.sum_ms;
+        self.max_ms = self.max_ms.max(other.max_ms);
+        self.n += other.n;
+        for &s in other.samples.iter().take(SAMPLE_CAP - self.samples.len().min(SAMPLE_CAP)) {
+            self.samples.push(s);
+        }
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let mut h = LatencyHistogram::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            h.record(ms);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 22.0).abs() < 1e-9);
+        assert_eq!(h.max(), 100.0);
+        assert!((h.percentile(50.0) - 3.0).abs() < 1e-9);
+        assert!(h.percentile(100.0) >= 100.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1.0);
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_percentile_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation metrics: FID-family proxies, CLIP proxy, latency
+//! histograms, and paper-style table rendering.
+
+pub mod clip;
+pub mod fid;
+pub mod latency;
+pub mod report;
+
+pub use clip::{clip_display, clip_proxy};
+pub use fid::{latent_features, temporal_features, FidAccumulator, FEAT_DIM};
+pub use latency::LatencyHistogram;
+pub use report::Table;

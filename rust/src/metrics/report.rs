@@ -1,0 +1,112 @@
+//! Paper-style table formatting: fixed-width rows with the ↓/↑ headers the
+//! benches print so EXPERIMENTS.md diffs read like the paper's tables.
+
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$} | ", c, width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers shared by the benches.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+pub fn speedup_pct(base_ms: f64, ms: f64) -> String {
+    if ms <= 0.0 {
+        return "n/a".into();
+    }
+    format!("+{:.1}%", (base_ms / ms - 1.0) * 100.0)
+}
+
+pub fn ms(v: f64) -> String {
+    format!("{v:.0}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Test", &["Method", "FID↓", "Time (ms)↓"]);
+        t.row(&["FastCache".into(), "4.46".into(), "15875".into()]);
+        t.row(&["FB".into(), "4.48".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("## Test"));
+        assert!(s.contains("| FastCache | 4.46 | 15875"));
+        let lines: Vec<&str> = s.lines().collect();
+        // All data lines equal display width (chars, not bytes — headers
+        // contain multi-byte ↓ arrows).
+        assert_eq!(lines[1].chars().count(), lines[3].chars().count());
+        assert_eq!(lines[3].chars().count(), lines[4].chars().count());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(speedup_pct(150.0, 100.0), "+50.0%");
+        assert_eq!(pct(0.424), "42.4%");
+    }
+}

@@ -1,0 +1,307 @@
+//! `DitModel`: a loaded, servable DiT variant — compiled AOT programs plus
+//! resident device weights, with a native-math fallback used by tests and
+//! artifact-free environments.
+//!
+//! The model intentionally does NOT own the denoising loop: the scheduler
+//! (`crate::scheduler::engine`) drives per-layer execution so the cache
+//! policy can intervene between blocks (Algorithm 1 of the paper).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ModelConfig, Variant, C_IN, N_TOKENS};
+use crate::runtime::{run, ArtifactStore, Arg, Client, DeviceTensor, ProgramKey};
+use crate::tensor::Tensor;
+
+use super::native;
+use super::weights::WeightBank;
+
+/// How forward ops execute.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ExecMode {
+    /// AOT HLO through PJRT (the production path).
+    Hlo,
+    /// Pure-Rust math (test / no-artifacts path; numerically equivalent,
+    /// see rust/tests/runtime_roundtrip.rs).
+    Native,
+}
+
+struct DeviceBlock {
+    params: Vec<DeviceTensor>, // 10, calling-convention order
+}
+
+struct DeviceWeights {
+    blocks: Vec<DeviceBlock>,
+    temb: Vec<DeviceTensor>,   // 4
+    final_: Vec<DeviceTensor>, // 4
+    embed: Vec<DeviceTensor>,  // 2
+}
+
+pub struct DitModel {
+    pub cfg: ModelConfig,
+    pub mode: ExecMode,
+    pub bank: WeightBank,
+    client: Option<Arc<Client>>,
+    store: Option<Arc<ArtifactStore>>,
+    dev: Option<DeviceWeights>,
+}
+
+impl DitModel {
+    /// Load for HLO execution: uploads all weights to the device once.
+    pub fn load(
+        client: Arc<Client>,
+        store: Arc<ArtifactStore>,
+        variant: Variant,
+        seed: u64,
+    ) -> Result<DitModel> {
+        let cfg = ModelConfig::of(variant);
+        if !store.has(&ProgramKey::block(variant, N_TOKENS, 1)) {
+            bail!("artifacts for variant {variant} missing — run `make artifacts`");
+        }
+        let bank = WeightBank::generate(cfg, seed);
+        let upload_all = |ts: &[&Tensor]| -> Result<Vec<DeviceTensor>> {
+            ts.iter().map(|t| client.upload(t)).collect()
+        };
+        let blocks = bank
+            .blocks
+            .iter()
+            .map(|b| Ok(DeviceBlock { params: upload_all(&b.ordered())? }))
+            .collect::<Result<Vec<_>>>()?;
+        let dev = DeviceWeights {
+            blocks,
+            temb: upload_all(&bank.temb.ordered())?,
+            final_: upload_all(&bank.final_.ordered())?,
+            embed: upload_all(&[&bank.embed.w, &bank.embed.b])?,
+        };
+        Ok(DitModel {
+            cfg,
+            mode: ExecMode::Hlo,
+            bank,
+            client: Some(client),
+            store: Some(store),
+            dev: Some(dev),
+        })
+    }
+
+    /// Native-only model (no PJRT), for tests and development.
+    pub fn native(variant: Variant, seed: u64) -> DitModel {
+        let cfg = ModelConfig::of(variant);
+        DitModel {
+            cfg,
+            mode: ExecMode::Native,
+            bank: WeightBank::generate(cfg, seed),
+            client: None,
+            store: None,
+            dev: None,
+        }
+    }
+
+    fn exec(&self, key: &ProgramKey, args: &[Arg<'_>]) -> Result<Tensor> {
+        let client = self.client.as_ref().ok_or_else(|| anyhow!("native model has no client"))?;
+        let store = self.store.as_ref().unwrap();
+        let exe = store.executable(client, key)?;
+        run(client, &exe, args, &key.out_shape(&self.cfg))
+            .with_context(|| format!("executing {}", key.file_stem()))
+    }
+
+    /// Timestep conditioning: t (len B) -> [B, D].
+    pub fn temb(&self, t: &[f32]) -> Result<Tensor> {
+        let b = t.len();
+        match self.mode {
+            ExecMode::Native => {
+                let d = self.cfg.d;
+                let mut out = Vec::with_capacity(b * d);
+                for &tv in t {
+                    out.extend(native::temb_forward(tv, &self.bank.temb));
+                }
+                Ok(Tensor::new(out, &[b, d]))
+            }
+            ExecMode::Hlo => {
+                let key = ProgramKey::temb(self.cfg.variant, b);
+                let tt = Tensor::new(t.to_vec(), &[b]);
+                let dev = self.dev.as_ref().unwrap();
+                let mut args = vec![Arg::Host(&tt)];
+                args.extend(dev.temb.iter().map(Arg::Device));
+                self.exec(&key, &args)
+            }
+        }
+    }
+
+    /// Latent embedding: x [B, N, C] -> [B, N, D].
+    pub fn embed(&self, x: &Tensor) -> Result<Tensor> {
+        let (b, n) = (x.shape()[0], x.shape()[1]);
+        match self.mode {
+            ExecMode::Native => {
+                let d = self.cfg.d;
+                let mut out = Vec::with_capacity(b * n * d);
+                for bi in 0..b {
+                    let sl = Tensor::new(
+                        x.data()[bi * n * C_IN..(bi + 1) * n * C_IN].to_vec(),
+                        &[n, C_IN],
+                    );
+                    out.extend(native::embed_forward(&sl, &self.bank.embed).into_data());
+                }
+                Ok(Tensor::new(out, &[b, n, d]))
+            }
+            ExecMode::Hlo => {
+                let key = ProgramKey::embed(self.cfg.variant, n, b);
+                let dev = self.dev.as_ref().unwrap();
+                let args = vec![
+                    Arg::Host(x),
+                    Arg::Device(&dev.embed[0]),
+                    Arg::Device(&dev.embed[1]),
+                ];
+                self.exec(&key, &args)
+            }
+        }
+    }
+
+    /// One transformer block. h: [B, N, D], c: [B, D] -> [B, N, D].
+    /// (B, N) must match a compiled artifact shape in HLO mode.
+    pub fn block(&self, layer: usize, h: &Tensor, c: &Tensor) -> Result<Tensor> {
+        let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+        assert_eq!(d, self.cfg.d);
+        assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        match self.mode {
+            ExecMode::Native => {
+                let w = &self.bank.blocks[layer];
+                let mut out = Vec::with_capacity(b * n * d);
+                for bi in 0..b {
+                    let hs = Tensor::new(h.data()[bi * n * d..(bi + 1) * n * d].to_vec(), &[n, d]);
+                    let cs = &c.data()[bi * d..(bi + 1) * d];
+                    out.extend(native::block_forward(&hs, cs, &self.cfg, w).into_data());
+                }
+                Ok(Tensor::new(out, &[b, n, d]))
+            }
+            ExecMode::Hlo => {
+                let key = ProgramKey::block(self.cfg.variant, n, b);
+                let dev = self.dev.as_ref().unwrap();
+                let mut args = vec![Arg::Host(h), Arg::Host(c)];
+                args.extend(dev.blocks[layer].params.iter().map(Arg::Device));
+                self.exec(&key, &args)
+            }
+        }
+    }
+
+    /// Final projection. h: [B, N, D], c: [B, D] -> [B, N, C].
+    pub fn final_layer(&self, h: &Tensor, c: &Tensor) -> Result<Tensor> {
+        let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+        match self.mode {
+            ExecMode::Native => {
+                let mut out = Vec::with_capacity(b * n * C_IN);
+                for bi in 0..b {
+                    let hs = Tensor::new(h.data()[bi * n * d..(bi + 1) * n * d].to_vec(), &[n, d]);
+                    let cs = &c.data()[bi * d..(bi + 1) * d];
+                    out.extend(native::final_forward(&hs, cs, &self.bank.final_).into_data());
+                }
+                Ok(Tensor::new(out, &[b, n, C_IN]))
+            }
+            ExecMode::Hlo => {
+                let key = ProgramKey::final_(self.cfg.variant, n, b);
+                let dev = self.dev.as_ref().unwrap();
+                let mut args = vec![Arg::Host(h), Arg::Host(c)];
+                args.extend(dev.final_.iter().map(Arg::Device));
+                self.exec(&key, &args)
+            }
+        }
+    }
+
+    /// Full-matrix linear approximation through the AOT Pallas artifact.
+    /// h: [1, N, D], w: [D, D], b: [D] -> [1, N, D]. HLO mode only falls
+    /// back to native matmul when no client is present.
+    pub fn linear_approx_full(&self, h: &Tensor, w: &Tensor, bvec: &Tensor) -> Result<Tensor> {
+        let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+        match self.mode {
+            ExecMode::Native => {
+                let mut out = Vec::with_capacity(b * n * d);
+                for bi in 0..b {
+                    let hs = &h.data()[bi * n * d..(bi + 1) * n * d];
+                    out.extend(native::matmul_bias(hs, w, Some(bvec), n));
+                }
+                Ok(Tensor::new(out, &[b, n, d]))
+            }
+            ExecMode::Hlo => {
+                let key = ProgramKey::linear_approx(self.cfg.variant, n);
+                let args = vec![Arg::Host(h), Arg::Host(w), Arg::Host(bvec)];
+                self.exec(&key, &args)
+            }
+        }
+    }
+
+    /// Weight memory footprint in bytes (host copy; device mirrors it).
+    pub fn weight_bytes(&self) -> usize {
+        self.bank.size_bytes()
+    }
+
+    pub fn meter(&self) -> Option<&crate::runtime::MemoryMeter> {
+        self.client.as_deref().map(|c| &*c.meter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rnd(seed: u64, shape: &[usize]) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::new(r.normal_vec(shape.iter().product(), 1.0), shape)
+    }
+
+    #[test]
+    fn native_model_shapes() {
+        let m = DitModel::native(Variant::S, 1);
+        let c = m.temb(&[3.0]).unwrap();
+        assert_eq!(c.shape(), &[1, 96]);
+        let x = rnd(2, &[1, 64, C_IN]);
+        let h = m.embed(&x).unwrap();
+        assert_eq!(h.shape(), &[1, 64, 96]);
+        let h2 = m.block(0, &h, &c).unwrap();
+        assert_eq!(h2.shape(), &[1, 64, 96]);
+        let eps = m.final_layer(&h2, &c).unwrap();
+        assert_eq!(eps.shape(), &[1, 64, C_IN]);
+    }
+
+    #[test]
+    fn native_batched_matches_single() {
+        let m = DitModel::native(Variant::S, 5);
+        let c = m.temb(&[3.0, 9.0]).unwrap();
+        let x = rnd(7, &[2, 64, C_IN]);
+        let h = m.embed(&x).unwrap();
+        let out = m.block(1, &h, &c).unwrap();
+        // Per-example slices must equal single-example runs.
+        for bi in 0..2 {
+            let hx = Tensor::new(h.data()[bi * 64 * 96..(bi + 1) * 64 * 96].to_vec(), &[1, 64, 96]);
+            let cx = Tensor::new(c.data()[bi * 96..(bi + 1) * 96].to_vec(), &[1, 96]);
+            let single = m.block(1, &hx, &cx).unwrap();
+            let got = &out.data()[bi * 64 * 96..(bi + 1) * 64 * 96];
+            for (a, b) in got.iter().zip(single.data()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m1 = DitModel::native(Variant::S, 11);
+        let m2 = DitModel::native(Variant::S, 11);
+        let x = rnd(3, &[1, 64, C_IN]);
+        let c1 = m1.temb(&[5.0]).unwrap();
+        let c2 = m2.temb(&[5.0]).unwrap();
+        assert_eq!(c1.data(), c2.data());
+        let h1 = m1.embed(&x).unwrap();
+        let h2 = m2.embed(&x).unwrap();
+        assert_eq!(h1.data(), h2.data());
+    }
+
+    #[test]
+    fn linear_approx_native_identity() {
+        let m = DitModel::native(Variant::S, 13);
+        let h = rnd(4, &[1, 64, 96]);
+        let w = Tensor::eye(96);
+        let b = Tensor::zeros(&[96]);
+        let out = m.linear_approx_full(&h, &w, &b).unwrap();
+        assert!(h.max_abs_diff(&out) < 1e-6);
+    }
+}

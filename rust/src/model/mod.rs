@@ -1,0 +1,9 @@
+//! Model layer: weight banks, the servable `DitModel` (HLO or native
+//! execution), and the native math reference.
+
+pub mod dit;
+pub mod native;
+pub mod weights;
+
+pub use dit::{DitModel, ExecMode};
+pub use weights::{BlockWeights, EmbedWeights, FinalWeights, TembWeights, WeightBank};

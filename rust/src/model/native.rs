@@ -1,0 +1,354 @@
+//! Native Rust reference implementation of the DiT forward pieces.
+//!
+//! Semantics MUST match python/compile/model.py exactly (same layer-norm
+//! epsilon, tanh-approximate GELU — jax.nn.gelu's default — and SiLU); the
+//! integration test rust/tests/runtime_roundtrip.rs executes the AOT HLO
+//! and this module on identical weights and asserts allclose.
+//!
+//! Used for (a) cross-validating the artifacts, (b) the cheap non-matmul
+//! hot-path math (saliency, delta, affine application) where a PJRT
+//! dispatch would cost more than the arithmetic, and (c) running the full
+//! test suite without compiled artifacts present.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+use super::weights::{BlockWeights, EmbedWeights, FinalWeights, TembWeights};
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// tanh-approximate GELU (jax.nn.gelu default).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// y = x @ w + b, x: [n, k] row-major, w: [k, m], b: [m] or empty.
+pub fn matmul_bias(x: &[f32], w: &Tensor, b: Option<&Tensor>, n: usize) -> Vec<f32> {
+    let (k, m) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(x.len(), n * k);
+    let mut y = vec![0.0f32; n * m];
+    if let Some(b) = b {
+        assert_eq!(b.len(), m);
+        for r in 0..n {
+            y[r * m..(r + 1) * m].copy_from_slice(b.data());
+        }
+    }
+    let wd = w.data();
+    for r in 0..n {
+        let xr = &x[r * k..(r + 1) * k];
+        let yr = &mut y[r * m..(r + 1) * m];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &wd[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                yr[j] += xv * wrow[j];
+            }
+        }
+    }
+    y
+}
+
+/// Parameter-free LayerNorm over the last dim (eps = 1e-6, matches model.py).
+pub fn layer_norm(x: &mut [f32], d: usize) {
+    let eps = 1e-6f32;
+    for row in x.chunks_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+}
+
+/// Sinusoidal timestep embedding, matching model.timestep_embedding:
+/// freqs = exp(-ln(10000) * arange(half)/half); [cos(t·f), sin(t·f)].
+pub fn timestep_embedding(t: f32, d: usize) -> Vec<f32> {
+    let half = d / 2;
+    let mut e = vec![0.0f32; d];
+    for i in 0..half {
+        let freq = (-(10000.0f32).ln() * i as f32 / half as f32).exp();
+        let arg = t * freq;
+        e[i] = arg.cos();
+        e[half + i] = arg.sin();
+    }
+    e
+}
+
+/// Timestep -> conditioning embedding. Returns [D].
+pub fn temb_forward(t: f32, w: &TembWeights) -> Vec<f32> {
+    let d = w.w1.shape()[0];
+    let e = timestep_embedding(t, d);
+    let mut h = matmul_bias(&e, &w.w1, Some(&w.b1), 1);
+    for v in h.iter_mut() {
+        *v = silu(*v);
+    }
+    matmul_bias(&h, &w.w2, Some(&w.b2), 1)
+}
+
+/// Latent -> hidden embedding. x: [N, C] -> [N, D].
+pub fn embed_forward(x: &Tensor, w: &EmbedWeights) -> Tensor {
+    let n = x.shape()[0];
+    let d = w.w.shape()[1];
+    Tensor::new(matmul_bias(x.data(), &w.w, Some(&w.b), n), &[n, d])
+}
+
+/// Multi-head attention on already-projected q,k,v (each [N, D] with
+/// `heads` interleaved as D = heads * dh, token-major like model.py's
+/// reshape(n, heads, dh)).
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, heads: usize, d: usize) -> Vec<f32> {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; n * d];
+    let mut logits = vec![0.0f32; n];
+    for h in 0..heads {
+        let off = h * dh;
+        for i in 0..n {
+            let qi = &q[i * d + off..i * d + off + dh];
+            let mut maxv = f32::NEG_INFINITY;
+            for j in 0..n {
+                let kj = &k[j * d + off..j * d + off + dh];
+                let mut dot = 0.0f32;
+                for c in 0..dh {
+                    dot += qi[c] * kj[c];
+                }
+                let l = dot * scale;
+                logits[j] = l;
+                if l > maxv {
+                    maxv = l;
+                }
+            }
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - maxv).exp();
+                denom += *l;
+            }
+            let oi = &mut out[i * d + off..i * d + off + dh];
+            for j in 0..n {
+                let p = logits[j] / denom;
+                if p == 0.0 {
+                    continue;
+                }
+                let vj = &v[j * d + off..j * d + off + dh];
+                for c in 0..dh {
+                    oi[c] += p * vj[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One adaLN-zero DiT block. h: [N, D], c: [D] -> [N, D].
+pub fn block_forward(h: &Tensor, c: &[f32], cfg: &ModelConfig, w: &BlockWeights) -> Tensor {
+    let (n, d) = (h.shape()[0], h.shape()[1]);
+    assert_eq!(d, cfg.d);
+
+    // Modulation: silu(c) @ wmod + bmod -> 6 chunks of D.
+    let cs: Vec<f32> = c.iter().map(|&x| silu(x)).collect();
+    let mod6 = matmul_bias(&cs, &w.wmod, Some(&w.bmod), 1);
+    let (sh1, rest) = mod6.split_at(d);
+    let (sc1, rest) = rest.split_at(d);
+    let (g1, rest) = rest.split_at(d);
+    let (sh2, rest) = rest.split_at(d);
+    let (sc2, g2) = rest.split_at(d);
+
+    let mut out = h.clone();
+
+    // Attention branch.
+    let mut x = h.data().to_vec();
+    layer_norm(&mut x, d);
+    for row in x.chunks_mut(d) {
+        for j in 0..d {
+            row[j] = row[j] * (1.0 + sc1[j]) + sh1[j];
+        }
+    }
+    let qkv = matmul_bias(&x, &w.wqkv, Some(&w.bqkv), n);
+    // qkv rows are [3D]: q | k | v contiguous (jnp.split on axis -1).
+    let mut q = vec![0.0f32; n * d];
+    let mut k = vec![0.0f32; n * d];
+    let mut v = vec![0.0f32; n * d];
+    for r in 0..n {
+        q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
+        k[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
+        v[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
+    }
+    let a = attention(&q, &k, &v, n, cfg.heads, d);
+    let proj = matmul_bias(&a, &w.wo, Some(&w.bo), n);
+    for r in 0..n {
+        let orow = out.row_mut(r);
+        for j in 0..d {
+            orow[j] += g1[j] * proj[r * d + j];
+        }
+    }
+
+    // MLP branch.
+    let mut x2 = out.data().to_vec();
+    layer_norm(&mut x2, d);
+    for row in x2.chunks_mut(d) {
+        for j in 0..d {
+            row[j] = row[j] * (1.0 + sc2[j]) + sh2[j];
+        }
+    }
+    let mut hidden = matmul_bias(&x2, &w.w1, Some(&w.b1), n);
+    for vv in hidden.iter_mut() {
+        *vv = gelu(*vv);
+    }
+    let mlp = matmul_bias(&hidden, &w.w2, Some(&w.b2), n);
+    for r in 0..n {
+        let orow = out.row_mut(r);
+        for j in 0..d {
+            orow[j] += g2[j] * mlp[r * d + j];
+        }
+    }
+    out
+}
+
+/// Final layer: adaLN -> linear to C channels. h: [N, D] -> [N, C].
+pub fn final_forward(h: &Tensor, c: &[f32], w: &FinalWeights) -> Tensor {
+    let (n, d) = (h.shape()[0], h.shape()[1]);
+    let cch = w.wout.shape()[1];
+    let cs: Vec<f32> = c.iter().map(|&x| silu(x)).collect();
+    let mod2 = matmul_bias(&cs, &w.wmod, Some(&w.bmod), 1);
+    let (sh, sc) = mod2.split_at(d);
+    let mut x = h.data().to_vec();
+    layer_norm(&mut x, d);
+    for row in x.chunks_mut(d) {
+        for j in 0..d {
+            row[j] = row[j] * (1.0 + sc[j]) + sh[j];
+        }
+    }
+    Tensor::new(matmul_bias(&x, &w.wout, Some(&w.bout), n), &[n, cch])
+}
+
+/// Token-wise saliency ‖x_t − x_{t−1}‖² (paper Eq. 1) — [N, D] x2 -> [N].
+pub fn saliency(x_t: &Tensor, x_prev: &Tensor) -> Vec<f32> {
+    assert_eq!(x_t.shape(), x_prev.shape());
+    let d = x_t.shape()[1];
+    x_t.data()
+        .chunks(d)
+        .zip(x_prev.data().chunks(d))
+        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum())
+        .collect()
+}
+
+/// Relative Frobenius change δ (paper Eq. 4).
+pub fn delta_rel(h: &Tensor, h_prev: &Tensor) -> f64 {
+    assert_eq!(h.shape(), h_prev.shape());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in h.data().iter().zip(h_prev.data()) {
+        let d = (*a - *b) as f64;
+        num += d * d;
+        den += (*b as f64) * (*b as f64);
+    }
+    (num.sqrt()) / den.sqrt().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+    use crate::model::weights::WeightBank;
+    use crate::rng::Rng;
+
+    fn rnd_tensor(seed: u64, shape: &[usize], scale: f32) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::new(r.normal_vec(shape.iter().product(), scale), shape)
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // Values from jax.nn.gelu (approximate=True).
+        assert!((gelu(0.0) - 0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-5);
+        assert!((gelu(3.0) - 2.9963627).abs() < 1e-4);
+    }
+
+    #[test]
+    fn silu_matches_reference_points() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-7);
+        assert!((silu(1.0) - 0.7310586).abs() < 1e-6);
+        assert!((silu(-1.0) + 0.2689414).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        layer_norm(&mut x, 4);
+        for row in x.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn attention_uniform_for_identical_keys() {
+        let n = 4;
+        let d = 8;
+        let q = rnd_tensor(1, &[n, d], 1.0).into_data();
+        let k = vec![0.5f32; n * d]; // identical keys -> uniform weights
+        let v = rnd_tensor(2, &[n, d], 1.0).into_data();
+        let out = attention(&q, &k, &v, n, 2, d);
+        // Each output row should be the mean of v rows.
+        for j in 0..d {
+            let want: f32 = (0..n).map(|r| v[r * d + j]).sum::<f32>() / n as f32;
+            for i in 0..n {
+                assert!((out[i * d + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn block_identity_with_zero_modulation() {
+        let cfg = ModelConfig::of(Variant::S);
+        let mut w = WeightBank::generate(cfg, 9).blocks.remove(0);
+        w.wmod = Tensor::zeros(&[cfg.d, 6 * cfg.d]);
+        w.bmod = Tensor::zeros(&[6 * cfg.d]);
+        let h = rnd_tensor(3, &[16, cfg.d], 1.0);
+        let c = vec![0.3f32; cfg.d];
+        let out = block_forward(&h, &c, &cfg, &w);
+        assert!(h.max_abs_diff(&out) < 1e-6);
+    }
+
+    #[test]
+    fn block_changes_with_modulation() {
+        let cfg = ModelConfig::of(Variant::S);
+        let w = &WeightBank::generate(cfg, 9).blocks[0];
+        let h = rnd_tensor(4, &[16, cfg.d], 1.0);
+        let c = rnd_tensor(5, &[cfg.d], 1.0).into_data();
+        let out = block_forward(&h, &c, &cfg, &w);
+        assert!(h.max_abs_diff(&out) > 1e-5);
+    }
+
+    #[test]
+    fn saliency_and_delta_basics() {
+        let a = rnd_tensor(6, &[8, 4], 1.0);
+        let s = saliency(&a, &a);
+        assert!(s.iter().all(|&v| v == 0.0));
+        assert!(delta_rel(&a, &a) < 1e-12);
+        let mut b = a.clone();
+        b.row_mut(3)[0] += 2.0;
+        let s2 = saliency(&b, &a);
+        assert!((s2[3] - 4.0).abs() < 1e-5);
+        assert!(s2.iter().enumerate().all(|(i, &v)| i == 3 || v == 0.0));
+        assert!(delta_rel(&b, &a) > 0.0);
+    }
+
+    #[test]
+    fn timestep_embedding_bounded_and_distinct() {
+        let a = timestep_embedding(10.0, 96);
+        let b = timestep_embedding(11.0, 96);
+        assert!(a.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-3);
+    }
+}

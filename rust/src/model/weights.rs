@@ -1,0 +1,206 @@
+//! Seeded weight-bank generation for a DiT variant.
+//!
+//! Layout mirrors python/compile/model.py's BLOCK_PARAM_NAMES calling
+//! convention exactly — the order in which weight buffers are passed to the
+//! block executable. Serving weights are generated Rust-side (the AOT
+//! artifacts are weight-agnostic: weights are runtime parameters), seeded
+//! for reproducibility.
+//!
+//! Init scheme is DiT-faithful where it matters for *dynamics*: matrices
+//! ~ N(0, 1/fan_in), biases zero, and adaLN modulation weights SMALL but
+//! non-zero (a pretrained DiT has small, structured modulations; exactly
+//! zero would make every block the identity and caching trivially perfect).
+
+use crate::config::{ModelConfig, C_IN, MLP_RATIO};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Per-block weights, in calling-convention order.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub wqkv: Tensor, // [D, 3D]
+    pub bqkv: Tensor, // [3D]
+    pub wo: Tensor,   // [D, D]
+    pub bo: Tensor,   // [D]
+    pub w1: Tensor,   // [D, 4D]
+    pub b1: Tensor,   // [4D]
+    pub w2: Tensor,   // [4D, D]
+    pub b2: Tensor,   // [D]
+    pub wmod: Tensor, // [D, 6D]
+    pub bmod: Tensor, // [6D]
+}
+
+impl BlockWeights {
+    /// Calling-convention-ordered views (matches BLOCK_PARAM_NAMES).
+    pub fn ordered(&self) -> [&Tensor; 10] {
+        [
+            &self.wqkv, &self.bqkv, &self.wo, &self.bo, &self.w1, &self.b1, &self.w2,
+            &self.b2, &self.wmod, &self.bmod,
+        ]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TembWeights {
+    pub w1: Tensor, // [D, D]
+    pub b1: Tensor, // [D]
+    pub w2: Tensor, // [D, D]
+    pub b2: Tensor, // [D]
+}
+
+impl TembWeights {
+    pub fn ordered(&self) -> [&Tensor; 4] {
+        [&self.w1, &self.b1, &self.w2, &self.b2]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FinalWeights {
+    pub wmod: Tensor, // [D, 2D]
+    pub bmod: Tensor, // [2D]
+    pub wout: Tensor, // [D, C]
+    pub bout: Tensor, // [C]
+}
+
+impl FinalWeights {
+    pub fn ordered(&self) -> [&Tensor; 4] {
+        [&self.wmod, &self.bmod, &self.wout, &self.bout]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EmbedWeights {
+    pub w: Tensor, // [C, D]
+    pub b: Tensor, // [D]
+}
+
+/// Full weight bank for one model variant.
+#[derive(Clone, Debug)]
+pub struct WeightBank {
+    pub cfg: ModelConfig,
+    pub embed: EmbedWeights,
+    pub temb: TembWeights,
+    pub blocks: Vec<BlockWeights>,
+    pub final_: FinalWeights,
+}
+
+fn dense(rng: &mut Rng, rows: usize, cols: usize, scale: Option<f32>) -> Tensor {
+    let s = scale.unwrap_or(1.0 / (rows as f32).sqrt());
+    Tensor::new(rng.normal_vec(rows * cols, s), &[rows, cols])
+}
+
+impl WeightBank {
+    pub fn generate(cfg: ModelConfig, seed: u64) -> WeightBank {
+        let d = cfg.d;
+        let mut root = Rng::new(seed ^ (cfg.variant.key().len() as u64) << 32);
+
+        let mut er = root.fork(0xE);
+        let embed = EmbedWeights {
+            w: dense(&mut er, C_IN, d, None),
+            b: Tensor::zeros(&[d]),
+        };
+
+        let mut tr = root.fork(0x7);
+        let temb = TembWeights {
+            w1: dense(&mut tr, d, d, None),
+            b1: Tensor::zeros(&[d]),
+            w2: dense(&mut tr, d, d, None),
+            b2: Tensor::zeros(&[d]),
+        };
+
+        let mut blocks = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let mut br = root.fork(0x100 + l as u64);
+            // Small modulation: pretrained-DiT-like gentle conditioning.
+            // Depth-dependent scale: later layers modulate slightly less,
+            // which produces the paper's "later blocks are more cacheable"
+            // structure (Fig. 1 / Fig. 2 narrative).
+            let depth_frac = l as f32 / cfg.layers.max(1) as f32;
+            let mod_scale = 0.02 * (1.0 - 0.5 * depth_frac) / (d as f32).sqrt();
+            blocks.push(BlockWeights {
+                wqkv: dense(&mut br, d, 3 * d, None),
+                bqkv: Tensor::zeros(&[3 * d]),
+                wo: dense(&mut br, d, d, Some(0.5 / (d as f32).sqrt())),
+                bo: Tensor::zeros(&[d]),
+                w1: dense(&mut br, d, MLP_RATIO * d, None),
+                b1: Tensor::zeros(&[MLP_RATIO * d]),
+                w2: dense(&mut br, MLP_RATIO * d, d, Some(0.5 / ((MLP_RATIO * d) as f32).sqrt())),
+                b2: Tensor::zeros(&[d]),
+                wmod: dense(&mut br, d, 6 * d, Some(mod_scale)),
+                bmod: Tensor::zeros(&[6 * d]),
+            });
+        }
+
+        let mut fr = root.fork(0xF);
+        let final_ = FinalWeights {
+            wmod: dense(&mut fr, d, 2 * d, Some(0.02 / (d as f32).sqrt())),
+            bmod: Tensor::zeros(&[2 * d]),
+            wout: dense(&mut fr, d, C_IN, None),
+            bout: Tensor::zeros(&[C_IN]),
+        };
+
+        WeightBank { cfg, embed, temb, blocks, final_ }
+    }
+
+    /// Total parameter bytes (for memory reporting).
+    pub fn size_bytes(&self) -> usize {
+        let block: usize = self
+            .blocks
+            .iter()
+            .map(|b| b.ordered().iter().map(|t| t.size_bytes()).sum::<usize>())
+            .sum();
+        block
+            + self.temb.ordered().iter().map(|t| t.size_bytes()).sum::<usize>()
+            + self.final_.ordered().iter().map(|t| t.size_bytes()).sum::<usize>()
+            + self.embed.w.size_bytes()
+            + self.embed.b.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = ModelConfig::of(Variant::S);
+        let a = WeightBank::generate(cfg, 42);
+        let b = WeightBank::generate(cfg, 42);
+        assert_eq!(a.blocks[0].wqkv.data(), b.blocks[0].wqkv.data());
+        let c = WeightBank::generate(cfg, 43);
+        assert_ne!(a.blocks[0].wqkv.data(), c.blocks[0].wqkv.data());
+    }
+
+    #[test]
+    fn per_layer_weights_differ() {
+        let cfg = ModelConfig::of(Variant::B);
+        let w = WeightBank::generate(cfg, 1);
+        assert_ne!(w.blocks[0].wqkv.data(), w.blocks[1].wqkv.data());
+    }
+
+    #[test]
+    fn shapes_match_convention() {
+        let cfg = ModelConfig::of(Variant::L);
+        let w = WeightBank::generate(cfg, 7);
+        let d = cfg.d;
+        assert_eq!(w.blocks.len(), cfg.layers);
+        let b0 = &w.blocks[0];
+        assert_eq!(b0.wqkv.shape(), &[d, 3 * d]);
+        assert_eq!(b0.w1.shape(), &[d, MLP_RATIO * d]);
+        assert_eq!(b0.wmod.shape(), &[d, 6 * d]);
+        assert_eq!(w.final_.wout.shape(), &[d, C_IN]);
+        assert_eq!(w.embed.w.shape(), &[C_IN, d]);
+    }
+
+    #[test]
+    fn size_bytes_close_to_param_count() {
+        let cfg = ModelConfig::of(Variant::S);
+        let w = WeightBank::generate(cfg, 3);
+        let got = w.size_bytes() / 4;
+        let want = cfg.param_count();
+        // param_count is an estimate of the same layout; allow 1% slack.
+        let rel = (got as f64 - want as f64).abs() / want as f64;
+        assert!(rel < 0.01, "got {got} want {want}");
+    }
+}

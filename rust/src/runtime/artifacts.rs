@@ -1,0 +1,246 @@
+//! AOT artifact registry: parses `artifacts/manifest.txt`, verifies shapes
+//! against the Rust-side model table, and lazily compiles each HLO text
+//! program on first use (compiled executables are cached for the process
+//! lifetime — one compile per (program, shape), reused across all layers,
+//! steps, and requests).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ModelConfig, Variant, C_IN};
+
+use super::client::Client;
+
+/// Program kinds emitted by python/compile/aot.py.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ProgramKind {
+    Block,
+    Temb,
+    Final,
+    Embed,
+    LinearApprox,
+    Saliency,
+    KnnDensity,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct ProgramKey {
+    pub kind: ProgramKind,
+    pub variant: Variant,
+    /// Token count (0 where not applicable, e.g. temb).
+    pub n: usize,
+    /// Batch size (0 where not applicable, e.g. knn).
+    pub b: usize,
+}
+
+impl ProgramKey {
+    pub fn block(variant: Variant, n: usize, b: usize) -> Self {
+        ProgramKey { kind: ProgramKind::Block, variant, n, b }
+    }
+    pub fn temb(variant: Variant, b: usize) -> Self {
+        ProgramKey { kind: ProgramKind::Temb, variant, n: 0, b }
+    }
+    pub fn final_(variant: Variant, n: usize, b: usize) -> Self {
+        ProgramKey { kind: ProgramKind::Final, variant, n, b }
+    }
+    pub fn embed(variant: Variant, n: usize, b: usize) -> Self {
+        ProgramKey { kind: ProgramKind::Embed, variant, n, b }
+    }
+    pub fn linear_approx(variant: Variant, n: usize) -> Self {
+        ProgramKey { kind: ProgramKind::LinearApprox, variant, n, b: 1 }
+    }
+    pub fn saliency(variant: Variant, n: usize) -> Self {
+        ProgramKey { kind: ProgramKind::Saliency, variant, n, b: 1 }
+    }
+    pub fn knn_density(variant: Variant, n: usize) -> Self {
+        ProgramKey { kind: ProgramKind::KnnDensity, variant, n, b: 0 }
+    }
+
+    /// Artifact file stem as produced by aot.py.
+    pub fn file_stem(&self) -> String {
+        let v = self.variant.key();
+        match self.kind {
+            ProgramKind::Block => format!("block_{v}_n{}_b{}", self.n, self.b),
+            ProgramKind::Temb => format!("temb_{v}_b{}", self.b),
+            ProgramKind::Final => format!("final_{v}_n{}_b{}", self.n, self.b),
+            ProgramKind::Embed => format!("embed_{v}_n{}_b{}", self.n, self.b),
+            ProgramKind::LinearApprox => format!("linear_approx_{v}_n{}_b1", self.n),
+            ProgramKind::Saliency => format!("saliency_{v}_n{}_b1", self.n),
+            ProgramKind::KnnDensity => format!("knn_density_{v}_n{}_k5", self.n),
+        }
+    }
+
+    /// Output tensor shape of the program.
+    pub fn out_shape(&self, cfg: &ModelConfig) -> Vec<usize> {
+        match self.kind {
+            ProgramKind::Block | ProgramKind::Embed | ProgramKind::LinearApprox => {
+                vec![self.b, self.n, cfg.d]
+            }
+            ProgramKind::Temb => vec![self.b, cfg.d],
+            ProgramKind::Final => vec![self.b, self.n, C_IN],
+            ProgramKind::Saliency => vec![self.b, self.n],
+            ProgramKind::KnnDensity => vec![self.n],
+        }
+    }
+}
+
+/// Parse a `f32[a,b,c]` shape string from the manifest.
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    let inner = s
+        .strip_prefix("f32[")
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("bad shape string {s:?}"))?;
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+        .collect()
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+/// The artifact store: manifest + lazily compiled executables.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    entries: HashMap<String, ManifestEntry>,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Load and validate the manifest (no compilation yet).
+    pub fn open(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} — run `make artifacts` first", manifest.display()))?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("artifact") => {}
+                _ => bail!("unexpected manifest line: {line:?}"),
+            }
+            let name = parts.next().ok_or_else(|| anyhow!("manifest line missing name"))?;
+            match parts.next() {
+                Some("params") => {}
+                _ => bail!("manifest line missing params: {line:?}"),
+            }
+            let param_shapes = parts.map(parse_shape).collect::<Result<Vec<_>>>()?;
+            if !dir.join(format!("{name}.hlo.txt")).exists() {
+                bail!("manifest references missing artifact {name}");
+            }
+            entries.insert(
+                name.to_string(),
+                ManifestEntry { name: name.to_string(), param_shapes },
+            );
+        }
+        if entries.is_empty() {
+            bail!("empty manifest at {}", manifest.display());
+        }
+        Ok(ArtifactStore { dir: dir.to_path_buf(), entries, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn entry(&self, key: &ProgramKey) -> Result<&ManifestEntry> {
+        let stem = key.file_stem();
+        self.entries
+            .get(&stem)
+            .ok_or_else(|| anyhow!("artifact {stem} not in manifest (regenerate with `make artifacts`)"))
+    }
+
+    pub fn has(&self, key: &ProgramKey) -> bool {
+        self.entries.contains_key(&key.file_stem())
+    }
+
+    /// Variants present in the manifest (any block artifact counts).
+    pub fn variants(&self) -> Vec<Variant> {
+        Variant::ALL
+            .iter()
+            .copied()
+            .filter(|v| self.entries.contains_key(&ProgramKey::block(*v, 64, 1).file_stem()))
+            .collect()
+    }
+
+    /// Compile (or fetch the cached) executable for a program.
+    pub fn executable(
+        &self,
+        client: &Client,
+        key: &ProgramKey,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let stem = key.file_stem();
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(exe) = cache.get(&stem) {
+                return Ok(exe.clone());
+            }
+        }
+        // Compile outside the lock (single-threaded in practice; harmless
+        // duplicate compile under a race, last write wins).
+        let _entry = self.entry(key)?;
+        let path = self.dir.join(format!("{stem}.hlo.txt"));
+        let exe = std::sync::Arc::new(client.compile_file(&path)?);
+        self.compiled.lock().unwrap().insert(stem, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled programs so far (for perf reporting).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shape_ok() {
+        assert_eq!(parse_shape("f32[1,64,96]").unwrap(), vec![1, 64, 96]);
+        assert_eq!(parse_shape("f32[4]").unwrap(), vec![4]);
+        assert!(parse_shape("f64[1]").is_err());
+        assert!(parse_shape("f32[1,x]").is_err());
+    }
+
+    #[test]
+    fn program_key_stems_match_aot_naming() {
+        let k = ProgramKey::block(Variant::Xl, 32, 1);
+        assert_eq!(k.file_stem(), "block_xl_n32_b1");
+        assert_eq!(ProgramKey::temb(Variant::S, 4).file_stem(), "temb_s_b4");
+        assert_eq!(
+            ProgramKey::linear_approx(Variant::B, 64).file_stem(),
+            "linear_approx_b_n64_b1"
+        );
+        assert_eq!(
+            ProgramKey::knn_density(Variant::L, 64).file_stem(),
+            "knn_density_l_n64_k5"
+        );
+    }
+
+    #[test]
+    fn out_shapes() {
+        let cfg = ModelConfig::of(Variant::S);
+        assert_eq!(ProgramKey::block(Variant::S, 64, 4).out_shape(&cfg), vec![4, 64, 96]);
+        assert_eq!(ProgramKey::temb(Variant::S, 1).out_shape(&cfg), vec![1, 96]);
+        assert_eq!(ProgramKey::final_(Variant::S, 64, 1).out_shape(&cfg), vec![1, 64, 4]);
+        assert_eq!(ProgramKey::saliency(Variant::S, 64).out_shape(&cfg), vec![1, 64]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client, plus host<->device
+//! staging helpers and byte-level memory accounting.
+//!
+//! The pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`. Weights are uploaded ONCE as
+//! `PjRtBuffer`s and reused across every step (the serving hot path only
+//! stages activations).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Global-ish accounting of live device bytes (this process, this client).
+#[derive(Default, Debug)]
+pub struct MemoryMeter {
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemoryMeter {
+    pub fn alloc(&self, bytes: usize) {
+        let live = self.live.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(live, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, bytes: usize) {
+        self.live.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak.store(self.live.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// A device buffer together with its logical shape and accounted size.
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+    bytes: usize,
+    meter: Arc<MemoryMeter>,
+}
+
+impl DeviceTensor {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl Drop for DeviceTensor {
+    fn drop(&mut self) {
+        self.meter.free(self.bytes);
+    }
+}
+
+/// PJRT CPU client wrapper.
+pub struct Client {
+    pub(crate) client: xla::PjRtClient,
+    pub meter: Arc<MemoryMeter>,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { client, meter: Arc::new(MemoryMeter::default()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Stage a host tensor onto the device.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let buffer = self
+            .client
+            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+            .with_context(|| format!("uploading tensor shape {:?}", t.shape()))?;
+        let bytes = t.size_bytes();
+        self.meter.alloc(bytes);
+        Ok(DeviceTensor { buffer, shape: t.shape().to_vec(), bytes, meter: self.meter.clone() })
+    }
+
+    /// Compile HLO text from a file path.
+    pub fn compile_file(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// Read an executable's (single-tuple) output buffer back to the host.
+///
+/// All AOT artifacts are lowered with `return_tuple=True`, so execution
+/// yields one tuple buffer whose first element is the result tensor.
+pub fn fetch_tuple1(out: &xla::PjRtBuffer, shape: &[usize]) -> Result<Tensor> {
+    let lit = out.to_literal_sync().context("device->host transfer")?;
+    let first = lit.to_tuple1().context("unwrapping 1-tuple output")?;
+    let data = first.to_vec::<f32>().context("reading f32 payload")?;
+    Ok(Tensor::new(data, shape))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_meter_tracks_peak() {
+        let m = MemoryMeter::default();
+        m.alloc(100);
+        m.alloc(50);
+        m.free(100);
+        m.alloc(10);
+        assert_eq!(m.live_bytes(), 60);
+        assert_eq!(m.peak_bytes(), 150);
+        m.reset_peak();
+        assert_eq!(m.peak_bytes(), 60);
+    }
+}

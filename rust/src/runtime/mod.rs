@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT client, AOT artifact registry, and the execute
+//! helper. Follows /opt/xla-example/load_hlo — HLO text in, PJRT CPU out.
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+
+pub use artifacts::{ArtifactStore, ProgramKey, ProgramKind};
+pub use client::{Client, DeviceTensor, MemoryMeter};
+pub use exec::{run, Arg};

@@ -1,0 +1,142 @@
+//! DDIM sampling schedule (deterministic, η = 0) with a cosine ᾱ schedule —
+//! the 50-step default inference setting of the paper (§5.2).
+
+/// Cosine cumulative signal level ᾱ(u), u ∈ [0, 1] (Nichol & Dhariwal).
+fn alpha_bar(u: f64) -> f64 {
+    let s = 0.008;
+    let f = ((u + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos();
+    (f * f).clamp(1e-5, 1.0)
+}
+
+#[derive(Clone, Debug)]
+pub struct DdimSchedule {
+    /// Discrete timestep values fed to the model (descending, e.g. 999→0).
+    pub timesteps: Vec<f32>,
+    /// ᾱ at each sampling step (aligned with `timesteps`).
+    pub alphas: Vec<f64>,
+    /// ᾱ after the step (the "previous" diffusion time).
+    pub alphas_prev: Vec<f64>,
+}
+
+impl DdimSchedule {
+    pub fn new(steps: usize, train_steps: usize) -> DdimSchedule {
+        assert!(steps >= 1);
+        let mut timesteps = Vec::with_capacity(steps);
+        let mut alphas = Vec::with_capacity(steps);
+        let mut alphas_prev = Vec::with_capacity(steps);
+        for i in 0..steps {
+            // Uniformly strided, descending.
+            let frac = 1.0 - i as f64 / steps as f64;
+            let frac_next = 1.0 - (i + 1) as f64 / steps as f64;
+            timesteps.push((frac * (train_steps as f64 - 1.0)) as f32);
+            alphas.push(alpha_bar(frac));
+            alphas_prev.push(alpha_bar(frac_next.max(0.0)));
+        }
+        DdimSchedule { timesteps, alphas, alphas_prev }
+    }
+
+    pub fn len(&self) -> usize {
+        self.timesteps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.timesteps.is_empty()
+    }
+
+    /// One deterministic DDIM update: given x_t and ε̂, produce x_{t−1}.
+    /// Operates in place over the latent buffer.
+    ///
+    /// The x₀ prediction is clipped to ±X0_CLIP (static thresholding, the
+    /// standard sampler guard — Imagen-style — against ε̂ mis-scale at high
+    /// noise levels; latents are ~unit-variance, so ±3σ is permissive).
+    pub fn update(&self, step: usize, x: &mut [f32], eps: &[f32]) {
+        const X0_CLIP: f32 = 3.0;
+        assert_eq!(x.len(), eps.len());
+        let ab = self.alphas[step];
+        let ab_prev = self.alphas_prev[step];
+        let sq_ab = ab.sqrt() as f32;
+        let sq_1m = (1.0 - ab).sqrt() as f32;
+        let sq_abp = ab_prev.sqrt() as f32;
+        let sq_1mp = (1.0 - ab_prev).sqrt() as f32;
+        for (xi, ei) in x.iter_mut().zip(eps) {
+            let x0 = ((*xi - sq_1m * ei) / sq_ab).clamp(-X0_CLIP, X0_CLIP);
+            *xi = sq_abp * x0 + sq_1mp * ei;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_descending_in_time_ascending_in_alpha() {
+        let s = DdimSchedule::new(50, 1000);
+        assert_eq!(s.len(), 50);
+        for w in s.timesteps.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        for i in 0..s.len() {
+            assert!(s.alphas_prev[i] >= s.alphas[i], "step {i}");
+            assert!(s.alphas[i] > 0.0 && s.alphas[i] <= 1.0);
+        }
+        // Near-complete denoising at the end.
+        assert!(*s.alphas_prev.last().unwrap() > 0.99);
+    }
+
+    #[test]
+    fn zero_eps_contracts_toward_x0() {
+        // Late step (ᾱ close to 1, no clipping active): with eps=0 the
+        // update amplifies by sqrt(ab_prev/ab) >= 1 toward the clean signal.
+        let s = DdimSchedule::new(10, 1000);
+        let last = s.len() - 1;
+        let mut x = vec![0.5f32, -1.0, 0.25];
+        let eps = vec![0.0f32; 3];
+        let before = x.clone();
+        s.update(last, &mut x, &eps);
+        for (a, b) in x.iter().zip(&before) {
+            assert!(a.abs() >= b.abs() * 0.999, "{a} vs {b}");
+            assert_eq!(a.signum(), b.signum());
+        }
+    }
+
+    #[test]
+    fn x0_clipping_bounds_trajectory() {
+        // At the highest noise level a zero-eps prediction would explode
+        // x0 by 1/sqrt(ab) ~ 300x; the clip keeps the update bounded.
+        let s = DdimSchedule::new(50, 1000);
+        let mut x = vec![1.0f32, -2.0, 0.5];
+        let eps = vec![0.0f32; 3];
+        s.update(0, &mut x, &eps);
+        for v in &x {
+            assert!(v.abs() <= 3.0 + 1e-5, "unbounded update: {v}");
+        }
+    }
+
+    #[test]
+    fn perfect_eps_recovers_x0_at_final_step() {
+        // If the model predicts the exact noise, the final update lands on
+        // ~x0 (ab_prev ~ 1 at the last step).
+        let s = DdimSchedule::new(25, 1000);
+        let x0 = vec![0.7f32, -1.1];
+        let noise = vec![0.3f32, 0.9];
+        let last = s.len() - 1;
+        let ab = s.alphas[last];
+        let mut x: Vec<f32> = x0
+            .iter()
+            .zip(&noise)
+            .map(|(x0i, ni)| (ab.sqrt() as f32) * x0i + ((1.0 - ab).sqrt() as f32) * ni)
+            .collect();
+        s.update(last, &mut x, &noise);
+        for (xi, x0i) in x.iter().zip(&x0) {
+            assert!((xi - x0i).abs() < 0.05, "{xi} vs {x0i}");
+        }
+    }
+
+    #[test]
+    fn single_step_schedule_valid() {
+        let s = DdimSchedule::new(1, 1000);
+        assert_eq!(s.len(), 1);
+        assert!(s.alphas_prev[0] > s.alphas[0]);
+    }
+}

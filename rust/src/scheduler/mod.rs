@@ -1,0 +1,11 @@
+//! Denoise scheduling: the DDIM schedule, the single-request engine
+//! (Algorithm 1 + the Algorithm 2 token-merge extension), and the
+//! step-aligned batched engine.
+
+pub mod batch;
+pub mod ddim;
+pub mod engine;
+
+pub use batch::BatchEngine;
+pub use ddim::DdimSchedule;
+pub use engine::{DenoiseEngine, GenRequest, GenResult, StepRecord, Turbulence};

@@ -1,0 +1,14 @@
+//! Serving layer: bounded request queue with backpressure, a worker loop
+//! that forms step-aligned batches, and per-server metrics.
+//!
+//! Threading note: tokio is not vendored in the offline registry, so the
+//! server uses std threads + channels. On the single-core CPU testbed this
+//! is also the faithful design — one PJRT worker saturates the core; the
+//! queue provides admission control and batching the way an async runtime
+//! would.
+
+pub mod queue;
+pub mod worker;
+
+pub use queue::{GenResponse, Job};
+pub use worker::{Server, ServerReport};

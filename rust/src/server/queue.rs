@@ -1,0 +1,44 @@
+//! Request/response plumbing: job envelope, response type, and submission
+//! errors (bounded-queue backpressure).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::scheduler::{GenRequest, GenResult};
+
+/// What the server returns per request.
+#[derive(Debug)]
+pub struct GenResponse {
+    pub result: GenResult,
+    /// Time spent queued before a worker picked the request up (ms).
+    pub queued_ms: f64,
+    /// End-to-end latency: submit -> response (ms).
+    pub e2e_ms: f64,
+}
+
+/// Internal job envelope.
+pub struct Job {
+    pub req: GenRequest,
+    pub resp: mpsc::Sender<GenResponse>,
+    pub submitted: Instant,
+}
+
+/// Submission failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue is full — caller should back off (backpressure).
+    QueueFull,
+    /// Server is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "server closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}

@@ -1,0 +1,267 @@
+//! The serving worker: drains the bounded queue, forms step-aligned
+//! batches, and runs them through the batch engine (full-token mode) or
+//! the single-request engine (token-reduction mode, whose bucketed shapes
+//! cannot share a batch).
+
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{FastCacheConfig, ServerConfig};
+use crate::metrics::LatencyHistogram;
+use crate::model::DitModel;
+use crate::scheduler::{BatchEngine, DenoiseEngine, GenRequest};
+
+use super::queue::{GenResponse, Job, SubmitError};
+
+/// Final report when the server shuts down.
+#[derive(Debug)]
+pub struct ServerReport {
+    pub completed: u64,
+    pub e2e: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub wall_s: f64,
+    pub batches: u64,
+    pub batched_requests: u64,
+}
+
+impl ServerReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A running server instance.
+pub struct Server {
+    tx: Option<SyncSender<Job>>,
+    handle: Option<JoinHandle<ServerReport>>,
+}
+
+impl Server {
+    /// Start the worker. `model_factory` runs ON the worker thread (PJRT
+    /// clients are not shared across threads).
+    pub fn start<F>(scfg: ServerConfig, fc: FastCacheConfig, model_factory: F) -> Server
+    where
+        F: FnOnce() -> Result<DitModel> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Job>(scfg.queue_depth);
+        let handle = std::thread::spawn(move || worker_loop(scfg, fc, model_factory, rx));
+        Server { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Submit a request; returns the response channel or backpressure.
+    pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
+        let (rtx, rrx) = mpsc::channel();
+        let job = Job { req, resp: rtx, submitted: Instant::now() };
+        match self.tx.as_ref().ok_or(SubmitError::Closed)?.try_send(job) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Close the queue and wait for the worker to drain.
+    pub fn shutdown(mut self) -> ServerReport {
+        drop(self.tx.take());
+        self.handle.take().expect("not yet joined").join().expect("worker panicked")
+    }
+}
+
+fn worker_loop<F>(
+    scfg: ServerConfig,
+    fc: FastCacheConfig,
+    model_factory: F,
+    rx: Receiver<Job>,
+) -> ServerReport
+where
+    F: FnOnce() -> Result<DitModel>,
+{
+    let model = model_factory().expect("model load failed");
+    let mut report = ServerReport {
+        completed: 0,
+        e2e: LatencyHistogram::new(),
+        queue_wait: LatencyHistogram::new(),
+        wall_s: 0.0,
+        batches: 0,
+        batched_requests: 0,
+    };
+    let t0 = Instant::now();
+
+    // STR produces per-request bucket shapes; batching needs uniform
+    // full-token shapes.
+    let can_batch = !fc.enable_str && !fc.enable_merge && scfg.max_batch > 1;
+
+    loop {
+        // Blocking wait for the first job; drain compatible ones behind it.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => break, // queue closed and empty
+        };
+        let mut group = vec![first];
+        if can_batch {
+            while group.len() < scfg.max_batch {
+                match rx.try_recv() {
+                    Ok(j) if j.req.steps == group[0].req.steps => group.push(j),
+                    Ok(j) => {
+                        // Step-misaligned: serve it solo right after.
+                        process_group(&model, &fc, vec![j], &mut report, false);
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        let batched = can_batch && group.len() > 1;
+        process_group(&model, &fc, group, &mut report, batched);
+    }
+
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report
+}
+
+fn process_group(
+    model: &DitModel,
+    fc: &FastCacheConfig,
+    group: Vec<Job>,
+    report: &mut ServerReport,
+    batched: bool,
+) {
+    let picked = Instant::now();
+    for j in &group {
+        report
+            .queue_wait
+            .record(picked.duration_since(j.submitted).as_secs_f64() * 1e3);
+    }
+    report.batches += 1;
+    report.batched_requests += group.len() as u64;
+
+    if batched {
+        let reqs: Vec<GenRequest> = group.iter().map(|j| j.req.clone()).collect();
+        let be = BatchEngine::new(model, fc.clone(), group.len().max(1));
+        match be.generate(&reqs) {
+            Ok(results) => {
+                for (job, result) in group.into_iter().zip(results) {
+                    let e2e = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    report.e2e.record(e2e);
+                    report.completed += 1;
+                    let queued_ms = picked.duration_since(job.submitted).as_secs_f64() * 1e3;
+                    let _ = job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e });
+                }
+            }
+            Err(e) => panic!("batch generation failed: {e:#}"),
+        }
+    } else {
+        for job in group {
+            let mut eng = DenoiseEngine::new(model, fc.clone());
+            match eng.generate(&job.req) {
+                Ok(result) => {
+                    let e2e = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    report.e2e.record(e2e);
+                    report.completed += 1;
+                    let queued_ms = picked.duration_since(job.submitted).as_secs_f64() * 1e3;
+                    let _ = job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e });
+                }
+                Err(e) => panic!("generation failed: {e:#}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyKind, Variant};
+    use crate::scheduler::GenRequest;
+
+    fn test_server(policy: PolicyKind, max_batch: usize, queue_depth: usize) -> Server {
+        let mut scfg = ServerConfig::default();
+        scfg.max_batch = max_batch;
+        scfg.queue_depth = queue_depth;
+        let mut fc = FastCacheConfig::with_policy(policy);
+        fc.enable_str = false;
+        Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)))
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let server = test_server(PolicyKind::FastCache, 4, 16);
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            rxs.push(server.submit(GenRequest::simple(i, 100 + i, 4)).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
+            assert!(resp.e2e_ms >= resp.queued_ms);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 6);
+        assert!(report.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn backpressure_when_queue_full() {
+        // Tiny queue; flood it faster than the worker drains.
+        let server = test_server(PolicyKind::NoCache, 1, 1);
+        let mut saw_full = false;
+        let mut rxs = Vec::new();
+        for i in 0..50 {
+            match server.submit(GenRequest::simple(i, i, 8)) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::QueueFull) => {
+                    saw_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        assert!(saw_full, "bounded queue never pushed back");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let server = test_server(PolicyKind::NoCache, 1, 4);
+        let rx = server.submit(GenRequest::simple(0, 0, 2)).unwrap();
+        let _ = rx.recv();
+        // Shutdown consumes the server; a clone of tx would be Closed.
+        let report = server.shutdown();
+        assert_eq!(report.completed, 1);
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let server = test_server(PolicyKind::FastCache, 4, 32);
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            rxs.push(server.submit(GenRequest::simple(i, 7 + i, 4)).unwrap());
+        }
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 12);
+        assert!(
+            report.mean_batch_size() > 1.0,
+            "no batching happened: {}",
+            report.mean_batch_size()
+        );
+    }
+}

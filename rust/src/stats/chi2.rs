@@ -1,0 +1,105 @@
+//! χ² distribution pieces for the statistical cache decision (paper Eq. 5-9).
+//!
+//! The paper's rule: skip block `l` iff  δ²_{t,l} ≤ χ²_{ND,1−α} / ND, where
+//! (ND)·δ² ~ χ²_{ND} under the weak-stationarity null. With ND in the
+//! thousands (N=64 tokens × D≥96 channels), the Wilson–Hilferty cube
+//! approximation to the χ² quantile is accurate to ~1e-4 relative — far
+//! tighter than any sensitivity the decision exhibits (see the α-sweep in
+//! bench `fig3`).
+
+use super::normal::{norm_cdf, norm_quantile};
+
+/// χ² quantile at probability `p` with `k` degrees of freedom
+/// (Wilson–Hilferty: χ²_{k,p} ≈ k(1 − 2/(9k) + z_p √(2/(9k)))³).
+pub fn chi2_quantile(p: f64, k: f64) -> f64 {
+    assert!(k > 0.0, "chi2_quantile: dof={k}");
+    let z = norm_quantile(p);
+    let a = 2.0 / (9.0 * k);
+    let c = 1.0 - a + z * a.sqrt();
+    k * c * c * c
+}
+
+/// χ² CDF via the same normal approximation (inverse of the above).
+pub fn chi2_cdf(x: f64, k: f64) -> f64 {
+    assert!(k > 0.0);
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let a = 2.0 / (9.0 * k);
+    let z = ((x / k).powf(1.0 / 3.0) - (1.0 - a)) / a.sqrt();
+    norm_cdf(z)
+}
+
+/// The paper's cache threshold on δ² (Eq. 7): χ²_{ND,1−α} / ND.
+///
+/// `nd` is the hidden-state element count N·D; `alpha` the significance
+/// level (paper default 0.05).
+pub fn delta_sq_threshold(nd: usize, alpha: f64) -> f64 {
+    assert!(alpha > 0.0 && alpha < 1.0, "alpha={alpha}");
+    chi2_quantile(1.0 - alpha, nd as f64) / nd as f64
+}
+
+/// Error bound for a type-II cache use (Eq. 9): √(χ²_{ND,1−α}/ND).
+pub fn cache_error_bound(nd: usize, alpha: f64) -> f64 {
+    delta_sq_threshold(nd, alpha).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // scipy.stats.chi2.ppf reference values.
+    const CASES: [(f64, f64, f64); 6] = [
+        // (p, k, chi2.ppf(p, k))
+        (0.95, 10.0, 18.307038053275146),
+        (0.95, 100.0, 124.3421134287216),
+        (0.99, 1000.0, 1106.9689807976193),
+        (0.95, 6144.0, 6327.46401218988), // ND for dit-s full tokens
+        (0.90, 18432.0, 18678.48217581182), // ND for dit-xl full tokens
+        (0.50, 50.0, 49.33493944581455),
+    ];
+
+    #[test]
+    fn quantile_close_to_scipy() {
+        for (p, k, want) in CASES {
+            let got = chi2_quantile(p, k);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 2e-3, "p={p} k={k}: got {got} want {want} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        for k in [10.0, 100.0, 6144.0] {
+            for p in [0.05, 0.5, 0.9, 0.95, 0.99] {
+                let x = chi2_quantile(p, k);
+                assert!((chi2_cdf(x, k) - p).abs() < 1e-6, "k={k} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_decreases_with_alpha() {
+        // Larger alpha (less confidence required) => smaller quantile =>
+        // stricter threshold; the paper sweeps alpha in [0.01, 0.1].
+        let nd = 64 * 288;
+        let t01 = delta_sq_threshold(nd, 0.01);
+        let t05 = delta_sq_threshold(nd, 0.05);
+        let t10 = delta_sq_threshold(nd, 0.10);
+        assert!(t01 > t05 && t05 > t10, "{t01} {t05} {t10}");
+    }
+
+    #[test]
+    fn threshold_near_one_for_large_nd() {
+        // χ²_{k,1−α}/k -> 1 as k -> ∞; at serving sizes it's 1 + O(k^-1/2).
+        let t = delta_sq_threshold(64 * 288, 0.05);
+        assert!(t > 1.0 && t < 1.05, "t={t}");
+    }
+
+    #[test]
+    fn error_bound_is_sqrt_threshold() {
+        let nd = 64 * 96;
+        let t = delta_sq_threshold(nd, 0.05);
+        assert!((cache_error_bound(nd, 0.05) - t.sqrt()).abs() < 1e-12);
+    }
+}

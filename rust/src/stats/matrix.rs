@@ -1,0 +1,195 @@
+//! Small dense symmetric-matrix linear algebra for the Fréchet metric:
+//! matmul, Jacobi eigendecomposition, and the symmetric matrix square root.
+//!
+//! Feature dims here are small (latent channels C=4 up to D≤288 pooled
+//! features), so an O(n³) cyclic Jacobi sweep is plenty and has the
+//! robustness we want for nearly-PSD empirical covariances.
+
+/// Row-major n×n matmul: C = A·B.
+pub fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Trace of an n×n matrix.
+pub fn trace(a: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns-rowmajor V) with A = V Λ Vᵀ.
+pub fn jacobi_eigh(a_in: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut a = a_in.to_vec();
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of A.
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                // Accumulate V.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| a[i * n + i]).collect();
+    (eig, v)
+}
+
+/// Symmetric PSD square root via eigendecomposition, clamping tiny negative
+/// eigenvalues from sampling noise to zero.
+pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
+    let (eig, v) = jacobi_eigh(a, n);
+    // S = V diag(sqrt(max(eig,0))) Vᵀ
+    let mut s = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += v[i * n + k] * eig[k].max(0.0).sqrt() * v[j * n + k];
+            }
+            s[i * n + j] = acc;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let n = 4;
+        let mut i4 = vec![0.0; 16];
+        for i in 0..4 {
+            i4[i * 4 + i] = 1.0;
+        }
+        let a: Vec<f64> = (0..16).map(|x| x as f64).collect();
+        assert_eq!(matmul(&a, &i4, n), a);
+        assert_eq!(matmul(&i4, &a, n), a);
+    }
+
+    #[test]
+    fn jacobi_diagonalizes_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (mut eig, _) = jacobi_eigh(&a, 2);
+        eig.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        // A random-ish symmetric 5x5; check V Λ Vᵀ = A.
+        let n = 5;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = ((i * 3 + j * 7) % 11) as f64 / 11.0;
+                a[i * n + j] = v;
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                let s = 0.5 * (a[i * n + j] + a[j * n + i]);
+                a[i * n + j] = s;
+                a[j * n + i] = s;
+            }
+        }
+        let (eig, v) = jacobi_eigh(&a, n);
+        let mut recon = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += v[i * n + k] * eig[k] * v[j * n + k];
+                }
+                recon[i * n + j] = acc;
+            }
+        }
+        for (x, y) in recon.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        // SPD matrix: AᵀA + I.
+        let n = 3;
+        let b = vec![1.0, 2.0, 0.0, 0.5, 1.0, 1.0, 0.0, 0.25, 2.0];
+        let mut a = vec![0.0; 9];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    acc += b[k * n + i] * b[k * n + j];
+                }
+                a[i * n + j] = acc;
+            }
+        }
+        let s = sqrtm_psd(&a, n);
+        let s2 = matmul(&s, &s, n);
+        for (x, y) in s2.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn trace_sums_diagonal() {
+        let a = vec![1.0, 9.0, 9.0, 2.0];
+        assert_eq!(trace(&a, 2), 3.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Statistical substrate: normal/χ² distributions for the paper's cache
+//! decision rule, online moment accumulators for the learnable linear
+//! approximation, and the Fréchet machinery behind the FID-family metrics.
+
+pub mod chi2;
+pub mod frechet;
+pub mod matrix;
+pub mod normal;
+pub mod welford;
+
+pub use chi2::{cache_error_bound, chi2_cdf, chi2_quantile, delta_sq_threshold};
+pub use frechet::{frechet_distance, FeatureStats};
+pub use normal::{norm_cdf, norm_quantile};
+pub use welford::{PairStats, Welford};

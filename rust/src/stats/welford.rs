@@ -1,0 +1,191 @@
+//! Welford online mean/variance and an online covariance accumulator.
+//!
+//! Used by (a) the online learnable affine fit (`cache/linear_fit.rs`),
+//! which needs running per-channel cov(in, out)/var(in), and (b) the
+//! Fréchet metric's feature statistics.
+
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (biased); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+}
+
+/// Online accumulator for a scalar pair (x, y): running means, variances,
+/// and covariance — the sufficient statistics of 1-D least squares
+/// y ≈ a·x + b with closed form a = cov/var, b = ȳ − a·x̄.
+#[derive(Clone, Debug, Default)]
+pub struct PairStats {
+    n: u64,
+    mean_x: f64,
+    mean_y: f64,
+    m2_x: f64,
+    c_xy: f64,
+}
+
+impl PairStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.n += 1;
+        let nf = self.n as f64;
+        let dx = x - self.mean_x; // vs OLD mean_x
+        self.mean_x += dx / nf;
+        self.mean_y += (y - self.mean_y) / nf;
+        // Welford cross-moment: old-mean dx times NEW-mean y residual.
+        self.c_xy += dx * (y - self.mean_y);
+        self.m2_x += dx * (x - self.mean_x);
+    }
+
+    /// Exponential forgetting: decay all sufficient statistics so the fit
+    /// tracks non-stationary hidden-state dynamics (paper Appendix A drift).
+    pub fn decay(&mut self, lambda: f64) {
+        debug_assert!((0.0..=1.0).contains(&lambda));
+        // Effective count shrinks; means stay (they are averages).
+        self.n = ((self.n as f64) * lambda).round() as u64;
+        self.m2_x *= lambda;
+        self.c_xy *= lambda;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// (a, b) of the least-squares fit y ≈ a x + b; identity (1, 0) until
+    /// there is enough signal.
+    pub fn fit(&self) -> (f32, f32) {
+        if self.n < 2 || self.m2_x <= 1e-12 {
+            return (1.0, 0.0);
+        }
+        let a = self.c_xy / self.m2_x;
+        let b = self.mean_y - a * self.mean_x;
+        (a as f32, b as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut all = Welford::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn pair_fit_recovers_exact_line() {
+        let mut p = PairStats::new();
+        for i in 0..50 {
+            let x = i as f64 * 0.1;
+            p.push(x, 2.5 * x - 1.25);
+        }
+        let (a, b) = p.fit();
+        assert!((a - 2.5).abs() < 1e-5, "a={a}");
+        assert!((b + 1.25).abs() < 1e-5, "b={b}");
+    }
+
+    #[test]
+    fn pair_fit_identity_until_informed() {
+        let p = PairStats::new();
+        assert_eq!(p.fit(), (1.0, 0.0));
+        let mut p2 = PairStats::new();
+        p2.push(3.0, 5.0);
+        assert_eq!(p2.fit(), (1.0, 0.0)); // single point: underdetermined
+    }
+
+    #[test]
+    fn pair_fit_tracks_after_decay() {
+        let mut p = PairStats::new();
+        for i in 0..200 {
+            let x = (i % 17) as f64;
+            p.push(x, 1.0 * x);
+        }
+        // Regime change: slope becomes 3. With decay the fit must move.
+        for i in 0..200 {
+            p.decay(0.95);
+            let x = (i % 17) as f64;
+            p.push(x, 3.0 * x);
+        }
+        let (a, _) = p.fit();
+        assert!((a - 3.0).abs() < 0.15, "a={a}");
+    }
+}

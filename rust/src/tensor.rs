@@ -1,0 +1,220 @@
+//! A minimal dense f32 tensor: contiguous row-major `Vec<f32>` plus shape.
+//!
+//! This is deliberately NOT a general ndarray — the coordinator only needs
+//! 1-3D row-major f32 host buffers to stage data in and out of PJRT and to
+//! run the cheap native math (saliency, delta metric, affine fits) that is
+//! not worth a device dispatch.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Self { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Identity matrix [n, n].
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of bytes this tensor occupies on host (and device, f32).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Gather rows of a 2-D tensor into a new [idx.len(), D] tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        let mut out = Vec::with_capacity(idx.len() * d);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        Tensor::new(out, &[idx.len(), d])
+    }
+
+    /// Scatter rows of `src` ([idx.len(), D]) back into self at `idx`.
+    pub fn scatter_rows(&mut self, idx: &[usize], src: &Tensor) {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(src.shape.len(), 2);
+        assert_eq!(src.shape[0], idx.len());
+        assert_eq!(src.shape[1], self.shape[1]);
+        let d = self.shape[1];
+        for (r, &i) in idx.iter().enumerate() {
+            self.row_mut(i).copy_from_slice(&src.data[r * d..(r + 1) * d]);
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|v| *v as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Elementwise a*self + b*other (shapes must match).
+    pub fn lerp(&self, other: &Tensor, w_self: f32, w_other: f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| w_self * a + w_other * b)
+            .collect();
+        Tensor::new(data, &self.shape)
+    }
+
+    /// Max |self - other|.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[", self.shape)?;
+        for (i, v) in self.data.iter().take(6).enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.data.len() > 6 {
+            write!(f, ", …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = Tensor::new((0..12).map(|v| v as f32).collect(), &[4, 3]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), &[6.0, 7.0, 8.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0, 2.0]);
+        let mut t2 = Tensor::zeros(&[4, 3]);
+        t2.scatter_rows(&[2, 0], &g);
+        assert_eq!(t2.row(2), &[6.0, 7.0, 8.0]);
+        assert_eq!(t2.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(t2.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let t = Tensor::new(vec![3.0, 4.0], &[2]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eye_is_identity() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.row(0), &[1.0, 0.0, 0.0]);
+        assert_eq!(i.row(2), &[0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn lerp_blends() {
+        let a = Tensor::full(&[4], 1.0);
+        let b = Tensor::full(&[4], 3.0);
+        let c = a.lerp(&b, 0.5, 0.5);
+        assert_eq!(c.data(), &[2.0, 2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,81 @@
+//! In-repo bench harness (criterion is not vendored in the offline
+//! registry): warmup + timed iterations with trimmed-mean reporting,
+//! printing criterion-style lines the bench binaries and EXPERIMENTS.md
+//! capture.
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub iters: usize,
+}
+
+pub struct Bencher {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Bencher {
+        assert!(iters >= 1);
+        Bencher { warmup, iters }
+    }
+
+    /// Environment-tunable default: BENCH_ITERS / BENCH_WARMUP.
+    pub fn from_env() -> Bencher {
+        let iters = std::env::var("BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+        let warmup = std::env::var("BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+        Bencher::new(warmup, iters)
+    }
+
+    /// Time `f`, returning trimmed statistics and printing a summary line.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Trim one from each end when we have enough samples.
+        let trimmed: &[f64] = if times.len() >= 5 { &times[1..times.len() - 1] } else { &times };
+        let mean = trimmed.iter().sum::<f64>() / trimmed.len() as f64;
+        let res = BenchResult {
+            mean_ms: mean,
+            min_ms: times[0],
+            max_ms: *times.last().unwrap(),
+            iters: self.iters,
+        };
+        println!(
+            "{name:<48} time: [{:.3} ms {:.3} ms {:.3} ms]",
+            res.min_ms, res.mean_ms, res.max_ms
+        );
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_positive_times() {
+        let b = Bencher::new(0, 5);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.mean_ms && r.mean_ms <= r.max_ms);
+        assert_eq!(r.iters, 5);
+    }
+}

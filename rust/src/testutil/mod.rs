@@ -1,0 +1,8 @@
+//! Test & bench substrate: a mini property-testing harness and a bench
+//! timer (proptest/criterion are not vendored in the offline registry).
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{BenchResult, Bencher};
+pub use prop::{gens, PropRunner};

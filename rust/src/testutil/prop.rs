@@ -1,0 +1,111 @@
+//! Minimal property-based testing harness (proptest is not vendored in the
+//! offline registry). Seeded generation + a forall runner that reports the
+//! failing seed, so failures are reproducible with `PROP_SEED=<n>`.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+pub struct PropRunner {
+    seed: u64,
+    cases: usize,
+}
+
+impl PropRunner {
+    pub fn new(cases: usize) -> PropRunner {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xFA57CACE);
+        PropRunner { seed, cases }
+    }
+
+    pub fn with_seed(seed: u64, cases: usize) -> PropRunner {
+        PropRunner { seed, cases }
+    }
+
+    /// Run `prop` on `cases` generated inputs; panics with the case seed on
+    /// the first failure.
+    pub fn forall<T, G, P>(&self, gen: G, prop: P)
+    where
+        G: Fn(&mut Rng) -> T,
+        P: Fn(&T) -> Result<(), String>,
+        T: std::fmt::Debug,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64);
+            let mut rng = Rng::new(case_seed);
+            let input = gen(&mut rng);
+            if let Err(msg) = prop(&input) {
+                panic!(
+                    "property failed on case {case} (PROP_SEED={case_seed}): {msg}\ninput: {input:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::*;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        rng.range(lo, hi)
+    }
+
+    /// Random tensor with dims drawn from the given candidates.
+    pub fn tensor2(rng: &mut Rng, ns: &[usize], ds: &[usize], scale: f32) -> Tensor {
+        let n = ns[rng.below(ns.len())];
+        let d = ds[rng.below(ds.len())];
+        Tensor::new(rng.normal_vec(n * d, scale), &[n, d])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        PropRunner::with_seed(1, 50).forall(
+            |rng| rng.normal_vec(8, 1.0),
+            |v| {
+                if v.len() == 8 {
+                    Ok(())
+                } else {
+                    Err("wrong length".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        PropRunner::with_seed(2, 10).forall(
+            |rng| rng.uniform(),
+            |v| {
+                if *v < 0.5 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 0.5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let u = gens::usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&u));
+            let t = gens::tensor2(&mut rng, &[4, 8], &[2, 16], 1.0);
+            assert!(t.shape()[0] == 4 || t.shape()[0] == 8);
+            assert!(t.shape()[1] == 2 || t.shape()[1] == 16);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Spatial-Temporal Token Merging (paper §3.4 + Appendix D):
+//! multi-criteria importance S_i = ρ_sp,i · (1 + λ·ρ_tm,i), local
+//! clustering-based merge (Local CTM) with importance-weighted averaging
+//! (Eq. 13), and the stored-mapping unpool that restores full resolution.
+
+use crate::model::native;
+use crate::tensor::Tensor;
+
+/// kNN spatial density ρ_sp (Eq. 10). Self-excluded, exp(−mean kNN d²).
+/// Matches the Pallas kernel + ref.py semantics.
+pub fn knn_density(x: &Tensor, k: usize) -> Vec<f32> {
+    let n = x.shape()[0];
+    let d = x.shape()[1];
+    assert!(k >= 1 && k < n, "need 1 <= k < n (k={k}, n={n})");
+    // Pairwise squared distances (O(N²D); N<=64 at serving sizes).
+    let mut rho = Vec::with_capacity(n);
+    let data = x.data();
+    let mut dists = vec![0.0f32; n];
+    for i in 0..n {
+        let xi = &data[i * d..(i + 1) * d];
+        for j in 0..n {
+            if j == i {
+                dists[j] = f32::INFINITY;
+                continue;
+            }
+            let xj = &data[j * d..(j + 1) * d];
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                let df = xi[c] - xj[c];
+                acc += df * df;
+            }
+            dists[j] = acc;
+        }
+        // Partial select of k smallest.
+        let mut sel = dists.clone();
+        sel.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+        let mean_k: f32 = sel[..k].iter().sum::<f32>() / k as f32;
+        rho.push((-mean_k).exp());
+    }
+    rho
+}
+
+/// Temporal saliency ρ_tm (Eq. 11): per-token L2 norm of the state change.
+pub fn temporal_saliency(x_t: &Tensor, x_prev: &Tensor) -> Vec<f32> {
+    native::saliency(x_t, x_prev).iter().map(|s| s.sqrt()).collect()
+}
+
+/// Unified importance score S_i (Eq. 12).
+pub fn importance(rho_sp: &[f32], rho_tm: &[f32], lambda: f32) -> Vec<f32> {
+    assert_eq!(rho_sp.len(), rho_tm.len());
+    rho_sp
+        .iter()
+        .zip(rho_tm)
+        .map(|(sp, tm)| sp * (1.0 + lambda * tm))
+        .collect()
+}
+
+/// The merge mapping M: for each original token, the cluster it joined.
+#[derive(Clone, Debug)]
+pub struct MergeMap {
+    pub assignment: Vec<usize>,
+    pub num_clusters: usize,
+}
+
+/// Local clustering-based token merge: greedy importance-ranked seeding,
+/// then nearest-seed assignment — merged token = importance-weighted mean
+/// of its cluster (Eq. 13). Returns ([num_clusters, D], M).
+pub fn local_ctm(x: &Tensor, scores: &[f32], target: usize) -> (Tensor, MergeMap) {
+    let n = x.shape()[0];
+    let d = x.shape()[1];
+    assert_eq!(scores.len(), n);
+    let target = target.clamp(1, n);
+
+    // Seeds: greedy score-weighted farthest-point sampling ("local"
+    // clustering: the first seed is the most important token; each next
+    // seed maximizes importance × distance-to-selected, so dense distinct
+    // regions each get a representative).
+    let data = x.data();
+    let sqdist = |a: usize, b: usize| -> f32 {
+        let xa = &data[a * d..(a + 1) * d];
+        let xb = &data[b * d..(b + 1) * d];
+        let mut acc = 0.0f32;
+        for c in 0..d {
+            let df = xa[c] - xb[c];
+            acc += df * df;
+        }
+        acc
+    };
+    let mut seeds: Vec<usize> = Vec::with_capacity(target);
+    let first = (0..n)
+        .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal))
+        .unwrap();
+    seeds.push(first);
+    let mut min_d: Vec<f32> = (0..n).map(|i| sqdist(i, first)).collect();
+    while seeds.len() < target {
+        let next = (0..n)
+            .filter(|i| !seeds.contains(i))
+            .max_by(|&a, &b| {
+                let va = scores[a].max(1e-12) * (min_d[a] + 1e-12);
+                let vb = scores[b].max(1e-12) * (min_d[b] + 1e-12);
+                va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+        seeds.push(next);
+        for i in 0..n {
+            min_d[i] = min_d[i].min(sqdist(i, next));
+        }
+    }
+    let seeds = &seeds[..];
+
+    // Assign every token to its nearest seed.
+    let mut assignment = vec![0usize; n];
+    for i in 0..n {
+        let xi = &data[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (ci, &s) in seeds.iter().enumerate() {
+            let xs = &data[s * d..(s + 1) * d];
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                let df = xi[c] - xs[c];
+                acc += df * df;
+            }
+            if acc < best_d {
+                best_d = acc;
+                best = ci;
+            }
+        }
+        assignment[i] = best;
+    }
+
+    // Importance-weighted cluster means (Eq. 13).
+    let mut merged = vec![0.0f32; target * d];
+    let mut wsum = vec![0.0f32; target];
+    for i in 0..n {
+        let c = assignment[i];
+        let w = scores[i].max(1e-12);
+        wsum[c] += w;
+        let xi = &data[i * d..(i + 1) * d];
+        let row = &mut merged[c * d..(c + 1) * d];
+        for j in 0..d {
+            row[j] += w * xi[j];
+        }
+    }
+    for c in 0..target {
+        let w = wsum[c].max(1e-12);
+        for v in &mut merged[c * d..(c + 1) * d] {
+            *v /= w;
+        }
+    }
+
+    (
+        Tensor::new(merged, &[target, d]),
+        MergeMap { assignment, num_clusters: target },
+    )
+}
+
+/// Unpool: scatter merged rows back to original resolution via the stored
+/// mapping (each token receives its cluster representative).
+pub fn unpool(merged: &Tensor, map: &MergeMap) -> Tensor {
+    let d = merged.shape()[1];
+    assert_eq!(merged.shape()[0], map.num_clusters);
+    let n = map.assignment.len();
+    let mut out = Vec::with_capacity(n * d);
+    for &c in &map.assignment {
+        out.extend_from_slice(&merged.data()[c * d..(c + 1) * d]);
+    }
+    Tensor::new(out, &[n, d])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rnd(seed: u64, shape: &[usize], scale: f32) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::new(r.normal_vec(shape.iter().product(), scale), shape)
+    }
+
+    #[test]
+    fn knn_density_matches_python_semantics() {
+        // Cluster + outlier, mirrors test_knn_density_cluster_center_is_densest.
+        let mut x = rnd(1, &[16, 8], 0.01);
+        for v in x.row_mut(0) {
+            *v += 50.0;
+        }
+        let rho = knn_density(&x, 3);
+        let min_i = rho
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(min_i, 0);
+        assert!(rho.iter().all(|&r| (0.0..=1.0 + 1e-6).contains(&r)));
+    }
+
+    #[test]
+    fn importance_scales_with_motion() {
+        let sp = vec![0.5, 0.5];
+        let tm = vec![0.0, 2.0];
+        let s = importance(&sp, &tm, 0.5);
+        assert!((s[0] - 0.5).abs() < 1e-6);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ctm_reduces_to_target_and_unpool_restores_shape() {
+        let x = rnd(2, &[64, 8], 1.0);
+        let scores = vec![1.0f32; 64];
+        let (merged, map) = local_ctm(&x, &scores, 16);
+        assert_eq!(merged.shape(), &[16, 8]);
+        assert_eq!(map.assignment.len(), 64);
+        assert!(map.assignment.iter().all(|&c| c < 16));
+        let restored = unpool(&merged, &map);
+        assert_eq!(restored.shape(), &[64, 8]);
+    }
+
+    #[test]
+    fn identical_tokens_merge_losslessly() {
+        // All tokens identical -> any clustering reproduces them exactly.
+        let x = Tensor::full(&[32, 4], 1.5);
+        let scores = vec![1.0f32; 32];
+        let (merged, map) = local_ctm(&x, &scores, 8);
+        let restored = unpool(&merged, &map);
+        assert!(restored.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn two_well_separated_clusters_stay_separated() {
+        let mut x = rnd(3, &[16, 4], 0.01);
+        for i in 8..16 {
+            for v in x.row_mut(i) {
+                *v += 10.0;
+            }
+        }
+        let scores = vec![1.0f32; 16];
+        let (_, map) = local_ctm(&x, &scores, 2);
+        // Tokens 0-7 in one cluster, 8-15 in the other.
+        let c0 = map.assignment[0];
+        assert!(map.assignment[..8].iter().all(|&c| c == c0));
+        assert!(map.assignment[8..].iter().all(|&c| c != c0));
+    }
+
+    #[test]
+    fn target_clamped() {
+        let x = rnd(4, &[8, 4], 1.0);
+        let scores = vec![1.0f32; 8];
+        let (merged, _) = local_ctm(&x, &scores, 100);
+        assert_eq!(merged.shape()[0], 8);
+    }
+}

@@ -1,0 +1,9 @@
+//! Token-level compression: the Spatial-Temporal Token Reduction module
+//! (motion/static partition, §3.2) and the kNN-density token merging
+//! module (§3.4 + Appendix D).
+
+pub mod merge;
+pub mod partition;
+
+pub use merge::{importance, knn_density, local_ctm, temporal_saliency, unpool, MergeMap};
+pub use partition::{pad_to_bucket, partition, Partition};

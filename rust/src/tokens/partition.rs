@@ -1,0 +1,181 @@
+//! Spatial-Temporal Token Reduction (paper §3.2, Eq. 1–3): split tokens
+//! into motion and static sets by temporal saliency, so static tokens can
+//! bypass the whole transformer stack through the learnable linear
+//! approximation while motion tokens run bucketed block programs.
+//!
+//! Saliency is normalized by the mean per-token energy so τ_s is a
+//! *relative* threshold (the paper's τ_s ∈ [0.02, 0.05] sweep, Tab. 6).
+
+use crate::config::{token_bucket, TOKEN_BUCKETS};
+use crate::model::native;
+use crate::tensor::Tensor;
+
+/// The motion/static split of one hidden state.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Indices of motion tokens (ascending).
+    pub motion: Vec<usize>,
+    /// Indices of static tokens (ascending).
+    pub static_: Vec<usize>,
+    /// Raw per-token saliency S_t (Eq. 1).
+    pub saliency: Vec<f32>,
+}
+
+impl Partition {
+    pub fn n_tokens(&self) -> usize {
+        self.motion.len() + self.static_.len()
+    }
+
+    pub fn motion_ratio(&self) -> f64 {
+        self.motion.len() as f64 / self.n_tokens().max(1) as f64
+    }
+
+    /// The compiled token bucket the motion set runs in (None if no motion
+    /// tokens — the whole state is approximated).
+    pub fn bucket(&self) -> Option<usize> {
+        if self.motion.is_empty() {
+            None
+        } else {
+            Some(token_bucket(self.motion.len()))
+        }
+    }
+}
+
+/// Partition tokens of `x_t` ([N, D]) against `x_prev` by relative
+/// saliency threshold `tau_s`.
+pub fn partition(x_t: &Tensor, x_prev: &Tensor, tau_s: f64) -> Partition {
+    assert_eq!(x_t.shape(), x_prev.shape());
+    let n = x_t.shape()[0];
+    let sal = native::saliency(x_t, x_prev);
+
+    // Normalizer: mean per-token squared norm of the current state, so the
+    // threshold is scale-free. ||x_i - y_i||^2 / mean_i ||x_i||^2 > tau_s.
+    let energy: f64 = x_t.data().iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+        / n as f64;
+    let norm = energy.max(1e-12);
+
+    let mut motion = Vec::new();
+    let mut static_ = Vec::new();
+    for (i, &s) in sal.iter().enumerate() {
+        if (s as f64) / norm > tau_s {
+            motion.push(i);
+        } else {
+            static_.push(i);
+        }
+    }
+    Partition { motion, static_, saliency: sal }
+}
+
+/// Pad a motion-token index set up to its bucket size by borrowing the
+/// highest-saliency static tokens (keeps the compiled shape exact and
+/// spends the padding on the most informative extra tokens).
+pub fn pad_to_bucket(p: &Partition) -> Vec<usize> {
+    let Some(bucket) = p.bucket() else {
+        return Vec::new();
+    };
+    let mut idx = p.motion.clone();
+    if idx.len() < bucket {
+        let mut statics: Vec<usize> = p.static_.clone();
+        statics.sort_by(|&a, &b| {
+            p.saliency[b]
+                .partial_cmp(&p.saliency[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for s in statics {
+            if idx.len() == bucket {
+                break;
+            }
+            idx.push(s);
+        }
+        idx.sort_unstable();
+    }
+    debug_assert!(idx.len() == bucket || idx.len() == p.n_tokens());
+    idx
+}
+
+/// Largest compiled bucket (the full-token path).
+pub fn max_bucket() -> usize {
+    *TOKEN_BUCKETS.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rnd(seed: u64, shape: &[usize], scale: f32) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::new(r.normal_vec(shape.iter().product(), scale), shape)
+    }
+
+    #[test]
+    fn identical_states_all_static() {
+        let x = rnd(1, &[64, 16], 1.0);
+        let p = partition(&x, &x, 0.02);
+        assert!(p.motion.is_empty());
+        assert_eq!(p.static_.len(), 64);
+        assert_eq!(p.bucket(), None);
+    }
+
+    #[test]
+    fn moved_tokens_detected() {
+        let x_prev = rnd(2, &[64, 16], 1.0);
+        let mut x_t = x_prev.clone();
+        for &i in &[3usize, 17, 40] {
+            for v in x_t.row_mut(i) {
+                *v += 2.0;
+            }
+        }
+        let p = partition(&x_t, &x_prev, 0.05);
+        assert_eq!(p.motion, vec![3, 17, 40]);
+        assert_eq!(p.bucket(), Some(16));
+    }
+
+    #[test]
+    fn threshold_monotonicity() {
+        let x_prev = rnd(3, &[64, 16], 1.0);
+        let mut x_t = x_prev.clone();
+        let mut r = Rng::new(9);
+        for v in x_t.data_mut().iter_mut() {
+            *v += 0.3 * r.normal();
+        }
+        let loose = partition(&x_t, &x_prev, 0.01).motion.len();
+        let tight = partition(&x_t, &x_prev, 0.30).motion.len();
+        assert!(loose >= tight, "loose={loose} tight={tight}");
+    }
+
+    #[test]
+    fn partition_covers_all_tokens_disjointly() {
+        let x_prev = rnd(4, &[64, 8], 1.0);
+        let x_t = rnd(5, &[64, 8], 1.0);
+        let p = partition(&x_t, &x_prev, 0.05);
+        let mut all: Vec<usize> = p.motion.iter().chain(p.static_.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn padding_fills_bucket_with_top_salient_statics() {
+        let x_prev = rnd(6, &[64, 16], 1.0);
+        let mut x_t = x_prev.clone();
+        // 3 strong movers + graded static saliency.
+        for &i in &[1usize, 2, 3] {
+            for v in x_t.row_mut(i) {
+                *v += 3.0;
+            }
+        }
+        for v in x_t.row_mut(10) {
+            *v += 0.05; // mildly salient static
+        }
+        let p = partition(&x_t, &x_prev, 0.05);
+        let idx = pad_to_bucket(&p);
+        assert_eq!(idx.len(), 16);
+        assert!(idx.contains(&1) && idx.contains(&2) && idx.contains(&3));
+        assert!(idx.contains(&10), "mildly-salient token should be borrowed first");
+        // Sorted, unique.
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, idx);
+    }
+}

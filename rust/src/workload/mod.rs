@@ -1,0 +1,7 @@
+//! Workload synthesis: deterministic request sets with controllable
+//! motion structure (the offline substitution for the paper's
+//! ImageNet / MS-COCO / video sampling sets).
+
+pub mod synth;
+
+pub use synth::{MotionProfile, WorkloadGen};

@@ -1,0 +1,215 @@
+//! Synthetic workload generation (substitution for ImageNet/MS-COCO
+//! sampling sets, DESIGN.md §2): request sets with controllable motion
+//! structure — a contiguous "moving region" of tokens receives per-step
+//! turbulence, the rest settles like static background. Motion fraction
+//! and amplitude are the two knobs the paper's image/video splits vary.
+
+use crate::config::N_TOKENS;
+use crate::rng::Rng;
+use crate::scheduler::{GenRequest, Turbulence};
+use crate::tensor::Tensor;
+
+/// Workload profile: how much of the content moves, how hard.
+#[derive(Clone, Copy, Debug)]
+pub struct MotionProfile {
+    /// Fraction of tokens in the moving region [0, 1].
+    pub motion_fraction: f64,
+    /// Per-step turbulence amplitude (relative to unit-variance latents).
+    pub amplitude: f32,
+}
+
+impl MotionProfile {
+    /// Mostly-static content (paper's low-motion / image setting).
+    pub const CALM: MotionProfile = MotionProfile { motion_fraction: 0.2, amplitude: 0.25 };
+    /// Mixed content (default evaluation set).
+    pub const MIXED: MotionProfile = MotionProfile { motion_fraction: 0.4, amplitude: 0.4 };
+    /// High-motion content (paper's dynamic-video setting).
+    pub const STORMY: MotionProfile = MotionProfile { motion_fraction: 0.75, amplitude: 0.8 };
+}
+
+/// Deterministic request-set generator.
+pub struct WorkloadGen {
+    rng: Rng,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> WorkloadGen {
+        WorkloadGen { rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// A contiguous square-ish blob of motion tokens on the 8x8 grid.
+    fn motion_region(&mut self, fraction: f64) -> Vec<usize> {
+        let count = ((N_TOKENS as f64 * fraction).round() as usize).min(N_TOKENS);
+        if count == 0 {
+            return Vec::new();
+        }
+        let side = 8usize;
+        let w = ((count as f64).sqrt().ceil() as usize).clamp(1, side);
+        let h = count.div_ceil(w).clamp(1, side);
+        let r0 = self.rng.below(side - h + 1);
+        let c0 = self.rng.below(side - w + 1);
+        let mut toks = Vec::with_capacity(count);
+        'outer: for r in r0..r0 + h {
+            for c in c0..c0 + w {
+                toks.push(r * side + c);
+                if toks.len() == count {
+                    break 'outer;
+                }
+            }
+        }
+        toks
+    }
+
+    /// One image-generation request under a motion profile.
+    pub fn image_request(&mut self, steps: usize, profile: MotionProfile) -> GenRequest {
+        let id = self.next_id;
+        self.next_id += 1;
+        let seed = self.rng.next_u64();
+        let turb = if profile.motion_fraction > 0.0 && profile.amplitude > 0.0 {
+            Some(Turbulence {
+                tokens: self.motion_region(profile.motion_fraction),
+                amp: profile.amplitude,
+                seed: self.rng.next_u64(),
+            })
+        } else {
+            None
+        };
+        GenRequest {
+            id,
+            seed,
+            cond_seed: self.rng.next_u64(),
+            guidance: 7.5,
+            steps,
+            turbulence: turb,
+            init_latent: None,
+        }
+    }
+
+    /// A batch of image requests.
+    pub fn image_set(&mut self, count: usize, steps: usize, profile: MotionProfile) -> Vec<GenRequest> {
+        (0..count).map(|_| self.image_request(steps, profile)).collect()
+    }
+
+    /// A video clip: `frames` requests sharing a correlated initial latent
+    /// (common background + per-frame drift) and a shared motion region, so
+    /// consecutive frames differ mostly inside the moving blob.
+    pub fn video_clip(
+        &mut self,
+        frames: usize,
+        steps: usize,
+        profile: MotionProfile,
+    ) -> Vec<GenRequest> {
+        let base_seed = self.rng.next_u64();
+        let cond_seed = self.rng.next_u64();
+        let region = self.motion_region(profile.motion_fraction);
+        let mut base_rng = Rng::new(base_seed);
+        let base = Tensor::new(base_rng.normal_vec(N_TOKENS * crate::config::C_IN, 1.0),
+                               &[N_TOKENS, crate::config::C_IN]);
+        (0..frames)
+            .map(|f| {
+                let id = self.next_id;
+                self.next_id += 1;
+                // Frame init: background latent + motion-region drift.
+                let mut init = base.clone();
+                let mut fr = Rng::new(base_seed ^ (0xF00D + f as u64));
+                for &tok in &region {
+                    for v in init.row_mut(tok) {
+                        *v = 0.5 * *v + profile.amplitude * fr.normal();
+                    }
+                }
+                GenRequest {
+                    id,
+                    seed: base_seed ^ f as u64,
+                    cond_seed,
+                    guidance: 7.5,
+                    steps,
+                    turbulence: Some(Turbulence {
+                        tokens: region.clone(),
+                        amp: profile.amplitude,
+                        seed: base_seed ^ (0xBEEF + f as u64),
+                    }),
+                    init_latent: Some(init),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = WorkloadGen::new(1);
+        let mut b = WorkloadGen::new(1);
+        let ra = a.image_request(50, MotionProfile::MIXED);
+        let rb = b.image_request(50, MotionProfile::MIXED);
+        assert_eq!(ra.seed, rb.seed);
+        assert_eq!(
+            ra.turbulence.as_ref().unwrap().tokens,
+            rb.turbulence.as_ref().unwrap().tokens
+        );
+    }
+
+    #[test]
+    fn motion_region_size_tracks_fraction() {
+        let mut g = WorkloadGen::new(2);
+        let small = g.motion_region(0.1).len();
+        let large = g.motion_region(0.8).len();
+        assert!(small < large);
+        assert!((large as f64 - 0.8 * 64.0).abs() <= 8.0);
+    }
+
+    #[test]
+    fn region_tokens_valid_and_unique() {
+        let mut g = WorkloadGen::new(3);
+        for frac in [0.1, 0.5, 1.0] {
+            let r = g.motion_region(frac);
+            assert!(r.iter().all(|&t| t < N_TOKENS));
+            let mut s = r.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), r.len());
+        }
+    }
+
+    #[test]
+    fn video_frames_share_background() {
+        let mut g = WorkloadGen::new(4);
+        let clip = g.video_clip(4, 10, MotionProfile::CALM);
+        assert_eq!(clip.len(), 4);
+        let i0 = clip[0].init_latent.as_ref().unwrap();
+        let i1 = clip[1].init_latent.as_ref().unwrap();
+        // Background tokens identical, motion tokens differ.
+        let region = &clip[0].turbulence.as_ref().unwrap().tokens;
+        let mut bg_diff = 0.0f32;
+        let mut mo_diff = 0.0f32;
+        for t in 0..N_TOKENS {
+            let d: f32 = i0
+                .row(t)
+                .iter()
+                .zip(i1.row(t))
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            if region.contains(&t) {
+                mo_diff += d;
+            } else {
+                bg_diff += d;
+            }
+        }
+        assert_eq!(bg_diff, 0.0);
+        assert!(mo_diff > 0.0);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut g = WorkloadGen::new(5);
+        let set = g.image_set(10, 50, MotionProfile::MIXED);
+        let mut ids: Vec<u64> = set.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+    }
+}

