@@ -12,7 +12,9 @@
 //! Outputs are recorded in EXPERIMENTS.md.
 
 use fastcache_dit::config::{FastCacheConfig, PolicyKind, Variant, C_IN};
-use fastcache_dit::experiments::{baseline_policies, eval_policies, eval_video, EvalConfig};
+use fastcache_dit::experiments::{
+    baseline_policies, eval_policies, eval_serving, eval_video, EvalConfig,
+};
 use fastcache_dit::metrics::report::{f1, pct, Table};
 use fastcache_dit::model::DitModel;
 use fastcache_dit::scheduler::DenoiseEngine;
@@ -442,6 +444,53 @@ fn table15() {
     println!("{}", t.render());
 }
 
+/// Serving: continuous batching over the unified lane stepper. Shows that
+/// STR- and merge-enabled configs batch (occupancy > 1) — the old worker
+/// served exactly these configs request-at-a-time — and makes the padded
+/// B=4 slot overhead visible.
+fn serving() {
+    let full = std::env::var("BENCH_FULL").as_deref() == Ok("1");
+    let (requests, steps) = if full { (24, 20) } else { (12, 8) };
+    let mut no_str = fc(PolicyKind::FastCache);
+    no_str.enable_str = false;
+    let with_str = fc(PolicyKind::FastCache); // STR on by default
+    let mut with_merge = fc(PolicyKind::FastCache);
+    with_merge.enable_str = false;
+    with_merge.enable_merge = true;
+    with_merge.merge_target = 32;
+    let configs = vec![
+        ("No Cache".to_string(), fc(PolicyKind::NoCache)),
+        ("FastCache (no STR)".to_string(), no_str),
+        ("FastCache + STR".to_string(), with_str),
+        ("FastCache + merge".to_string(), with_merge),
+    ];
+    let rows = eval_serving(Variant::S, &configs, requests, steps, 4).unwrap();
+    let mut t = Table::new(
+        "Serving — continuous batching over the lane stepper",
+        &[
+            "Config",
+            "req/s↑",
+            "p50 (ms)↓",
+            "p95 (ms)↓",
+            "Occupancy↑",
+            "Adm p50 (ms)↓",
+            "Padded GFLOP↓",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.2}", r.rps),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p95_ms),
+            format!("{:.2}", r.occupancy),
+            format!("{:.1}", r.admission_p50_ms),
+            format!("{:.3}", r.padded_gflops),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
 /// Figure 1: derivative-magnitude heatmap, high- vs low-motion content.
 fn fig1() {
     let v = Variant::B;
@@ -596,6 +645,9 @@ fn main() {
     }
     if want("table15") {
         table15();
+    }
+    if want("serving") {
+        serving();
     }
     if want("fig1") {
         fig1();

@@ -1,8 +1,10 @@
 //! END-TO-END VALIDATION DRIVER (DESIGN.md / EXPERIMENTS.md §E2E): load a
 //! small real model through the full AOT path (JAX+Pallas → HLO text →
-//! PJRT), start the batching server, serve a batched request workload, and
-//! report latency/throughput with FastCache on vs off — proving all three
-//! layers compose on the serving hot path.
+//! PJRT), start the continuous-batching server, serve a request workload,
+//! and report latency/throughput/occupancy with FastCache on vs off —
+//! proving all three layers compose on the serving hot path. With the
+//! unified lane stepper, STR-enabled configs batch too (the third row
+//! used to fall back to single-request serving).
 //!
 //!   make artifacts && cargo run --release --example serve_batch
 //!   [--model s] [--requests 12] [--steps 20] [--policy fastcache|nocache]
@@ -22,9 +24,9 @@ fn main() -> Result<()> {
     let variant = Variant::parse(args.get_or("model", "l")).context("bad --model")?;
     let requests: usize = args.parse_num("requests", 8).map_err(anyhow::Error::msg)?;
     let steps: usize = args.parse_num("steps", 20).map_err(anyhow::Error::msg)?;
-    // (policy, enable STR). STR produces per-request bucket shapes that
-    // cannot share a batch, so the worker serves it request-at-a-time —
-    // the third row shows that trade-off.
+    // (policy, enable STR). STR buckets run per-lane inside the unified
+    // stepper while full-token Compute sites still batch through the B=4
+    // artifact — the third row shows STR batching, not a fallback.
     let policies: Vec<(PolicyKind, bool)> = match args.get("policy") {
         Some(p) => vec![(PolicyKind::parse(p).context("bad --policy")?, false)],
         None => vec![
@@ -59,19 +61,7 @@ fn main() -> Result<()> {
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = reqs
             .iter()
-            .map(|r| {
-                let mut req = r.clone();
-                loop {
-                    match server.submit(req) {
-                        Ok(rx) => return rx,
-                        Err(fastcache_dit::server::queue::SubmitError::QueueFull) => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                            req = r.clone();
-                        }
-                        Err(e) => panic!("{e}"),
-                    }
-                }
-            })
+            .map(|r| server.submit_blocking(r).expect("submit"))
             .collect();
         let mut skip_sum = 0.0;
         for rx in rxs {
@@ -82,13 +72,15 @@ fn main() -> Result<()> {
         let report = server.shutdown();
         println!(
             "policy {:<14} | wall {:>6.2}s | {:>5.2} req/s | p50 {:>7.0} ms | p95 {:>7.0} ms | \
-             mean batch {:>4.2} | mean skip {:>5.1}%",
+             occupancy {:>4.2} | adm p50 {:>5.1} ms | padded {:>6.3} GFLOP | mean skip {:>5.1}%",
             format!("{}{}", policy.name(), if str_on { "+STR" } else { "" }),
             wall,
             report.completed as f64 / wall,
             report.e2e.percentile(50.0),
             report.e2e.percentile(95.0),
-            report.mean_batch_size(),
+            report.occupancy(),
+            report.admission_wait.percentile(50.0),
+            report.padded_flops as f64 / 1e9,
             skip_sum / requests as f64 * 100.0,
         );
         summary.push((policy, wall));

@@ -5,6 +5,7 @@
 use crate::tensor::Tensor;
 
 use super::linear_fit::AffineFit;
+use super::BlockAction;
 
 #[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
 pub struct CacheCounters {
@@ -14,6 +15,16 @@ pub struct CacheCounters {
 }
 
 impl CacheCounters {
+    /// Tally one block-site decision (the lane stepper's canonical
+    /// per-request count; `GenResult` reads these back).
+    pub fn record(&mut self, action: BlockAction) {
+        match action {
+            BlockAction::Compute => self.computed += 1,
+            BlockAction::Approx => self.approximated += 1,
+            BlockAction::Reuse => self.reused += 1,
+        }
+    }
+
     pub fn total(&self) -> usize {
         self.computed + self.approximated + self.reused
     }
@@ -130,6 +141,14 @@ mod tests {
         c.approximated = 3;
         c.reused = 1;
         assert_eq!(c.total(), 10);
+        c.record(BlockAction::Compute);
+        c.record(BlockAction::Approx);
+        c.record(BlockAction::Reuse);
+        assert_eq!((c.computed, c.approximated, c.reused), (7, 4, 2));
+        c = CacheCounters::default();
+        c.computed = 6;
+        c.approximated = 3;
+        c.reused = 1;
         assert!((c.skip_ratio() - 0.4).abs() < 1e-12);
         assert_eq!(CacheCounters::default().skip_ratio(), 0.0);
     }

@@ -6,7 +6,11 @@ use super::model::Variant;
 pub struct ServerConfig {
     /// Model variant served by this worker.
     pub variant: Variant,
-    /// Maximum step-aligned batch (must be <= the compiled B=4 artifact).
+    /// Maximum number of concurrently active lanes in the worker (the
+    /// continuous-batching window). Full-token Compute sites are batched
+    /// through the compiled B=4 block artifact in chunks of 4, so this is
+    /// not capped at 4; multiples of 4 chunk with no padded slots when
+    /// the active set is full.
     pub max_batch: usize,
     /// Bounded request-queue depth; admission fails beyond this
     /// (backpressure to the client).
@@ -41,8 +45,11 @@ impl Default for ServerConfig {
 
 impl ServerConfig {
     pub fn validate(&self) -> Result<(), String> {
-        if self.max_batch == 0 || self.max_batch > 4 {
-            return Err(format!("max_batch must be 1..=4 (compiled artifacts), got {}", self.max_batch));
+        if self.max_batch == 0 || self.max_batch > 16 {
+            return Err(format!(
+                "max_batch must be 1..=16 (active lanes; compute chunks through the B=4 artifact), got {}",
+                self.max_batch
+            ));
         }
         if self.steps == 0 {
             return Err("steps must be >= 1".into());
@@ -69,7 +76,9 @@ mod tests {
     #[test]
     fn rejects_oversized_batch() {
         let mut c = ServerConfig::default();
-        c.max_batch = 8;
+        c.max_batch = 8; // > 4 lanes is fine now: compute chunks via B=4
+        assert!(c.validate().is_ok());
+        c.max_batch = 32;
         assert!(c.validate().is_err());
         c.max_batch = 0;
         assert!(c.validate().is_err());

@@ -5,12 +5,13 @@
 //! See DESIGN.md §6 for the experiment index mapping every paper table and
 //! figure to a bench target, and EXPERIMENTS.md for recorded outputs.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::config::{FastCacheConfig, ModelConfig, PolicyKind, Variant};
+use crate::config::{FastCacheConfig, ModelConfig, PolicyKind, ServerConfig, Variant};
 use crate::metrics::{clip_display, clip_proxy, FidAccumulator};
 use crate::model::DitModel;
 use crate::scheduler::{DenoiseEngine, GenRequest};
+use crate::server::Server;
 use crate::workload::{MotionProfile, WorkloadGen};
 
 /// One table row: a policy evaluated on a request set.
@@ -237,6 +238,73 @@ pub fn variant_cfgs() -> Vec<ModelConfig> {
     Variant::ALL.iter().map(|v| ModelConfig::of(*v)).collect()
 }
 
+/// One serving-mode row: a policy config driven through the
+/// continuous-batching server under a burst workload.
+#[derive(Clone, Debug)]
+pub struct ServeRow {
+    pub label: String,
+    pub completed: u64,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Mean active lanes per step call (continuous-batching occupancy).
+    pub occupancy: f64,
+    /// Median submit→admission latency.
+    pub admission_p50_ms: f64,
+    /// FLOPs burnt in padded B=4 batch slots, in GFLOPs.
+    pub padded_gflops: f64,
+}
+
+/// Run each labeled config through the continuous-batching server (native
+/// model on the worker thread) with a burst of `requests` jobs. Absolute
+/// numbers are substrate-bound; the signal is occupancy and the relative
+/// throughput/latency of the configs — including that STR/merge configs
+/// now batch instead of falling back to single-request serving.
+pub fn eval_serving(
+    variant: Variant,
+    configs: &[(String, FastCacheConfig)],
+    requests: usize,
+    steps: usize,
+    max_batch: usize,
+) -> Result<Vec<ServeRow>> {
+    let mut rows = Vec::with_capacity(configs.len());
+    for (label, fc) in configs {
+        let mut scfg = ServerConfig::default();
+        scfg.variant = variant;
+        scfg.steps = steps;
+        scfg.max_batch = max_batch;
+        scfg.queue_depth = requests.max(1);
+        let server = Server::start(scfg, fc.clone(), move || Ok(DitModel::native(variant, 0xD17)));
+
+        let mut wl = WorkloadGen::new(0x5E11);
+        let reqs = wl.image_set(requests, steps, MotionProfile::MIXED);
+        let mut rxs = Vec::with_capacity(reqs.len());
+        for req in &reqs {
+            let rx = server
+                .submit_blocking(req)
+                .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let _ = rx.recv().context("server dropped a response")?;
+        }
+        let report = server.shutdown();
+        rows.push(ServeRow {
+            label: label.clone(),
+            completed: report.completed,
+            wall_s: report.wall_s,
+            rps: report.throughput_rps(),
+            p50_ms: report.e2e.percentile(50.0),
+            p95_ms: report.e2e.percentile(95.0),
+            occupancy: report.occupancy(),
+            admission_p50_ms: report.admission_wait.percentile(50.0),
+            padded_gflops: report.padded_flops as f64 / 1e9,
+        });
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +332,27 @@ mod tests {
             rows[1].static_ratio,
             rows[1].skip_ratio
         );
+    }
+
+    #[test]
+    fn eval_serving_reports_occupancy() {
+        let configs = vec![
+            ("NoCache".to_string(), FastCacheConfig::with_policy(PolicyKind::NoCache)),
+            // FastCache default keeps STR on — must batch anyway.
+            ("FastCache+STR".to_string(), FastCacheConfig::with_policy(PolicyKind::FastCache)),
+        ];
+        let rows = eval_serving(Variant::S, &configs, 8, 4, 4).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.completed, 8, "{}", r.label);
+            assert!(r.rps > 0.0);
+            assert!(
+                r.occupancy > 1.0,
+                "{}: burst load should batch (occupancy {})",
+                r.label,
+                r.occupancy
+            );
+        }
     }
 
     #[test]

@@ -199,17 +199,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let reqs = wl.image_set(n_req, scfg.steps, profile);
     let mut pending = Vec::new();
     for req in reqs {
-        loop {
-            match server.submit(req.clone()) {
-                Ok(rx) => {
-                    pending.push(rx);
-                    break;
-                }
-                Err(fastcache_dit::server::queue::SubmitError::QueueFull) => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                }
-                Err(e) => bail!("submit failed: {e}"),
-            }
+        match server.submit_blocking(&req) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => bail!("submit failed: {e}"),
         }
     }
     for rx in pending {
@@ -224,7 +216,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let report = server.shutdown();
     println!(
-        "served {} requests in {:.2}s — {:.2} req/s, mean batch {:.2}, p50 {:.0} ms, p95 {:.0} ms",
+        "served {} requests in {:.2}s — {:.2} req/s, occupancy {:.2}, p50 {:.0} ms, p95 {:.0} ms",
         report.completed,
         report.wall_s,
         report.throughput_rps(),

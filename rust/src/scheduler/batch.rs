@@ -1,333 +1,142 @@
-//! Step-aligned dynamic batching: a group of requests advances through the
-//! denoise schedule in lockstep; at every block, the requests whose policy
-//! says Compute are batched into the B=4 block artifact (padded when the
-//! group is smaller), while Approx/Reuse requests take their cheap path
-//! individually. This is the vLLM-style static-shape batching adapted to
-//! diffusion serving: batching amortizes dispatch and weight traffic for
-//! the expensive sites without forcing cache decisions to agree.
+//! `BatchEngine` — lockstep batched generation over the unified lane
+//! stepper (`scheduler::lane`). One `Lane` per request, the whole set
+//! advanced together by [`LaneStepper::step`], which batches aligned
+//! full-token Compute sites through the B=4 block artifact and routes
+//! STR-bucketed, merged, FullMatrix-approximated, and Reuse sites through
+//! their per-lane paths. There is no separate batched step/layer loop
+//! anymore: batched and single-request execution share one code path, so
+//! every policy and token-reduction mode batches identically.
 //!
-//! The batched path serves full-token states (token reduction produces
-//! per-request bucket shapes that cannot share a batch; requests wanting
-//! STR run the single-request engine instead — see server::worker).
+//! This type is a convenience wrapper for step-aligned offline batches
+//! (evals, benches). The serving path (`server::worker`) drives the
+//! stepper directly with continuous batching and admits lanes at
+//! different step indices.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cache::{build_policy, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo};
-use crate::config::{ApproxMode, FastCacheConfig, C_IN};
-use crate::model::{native, DitModel};
-use crate::rng::Rng;
-use crate::tensor::Tensor;
+use crate::config::FastCacheConfig;
+use crate::model::DitModel;
 
-use super::ddim::DdimSchedule;
-use super::engine::{GenRequest, GenResult, StepRecord};
+use super::ddim::ScheduleCache;
+use super::lane::{GenRequest, GenResult, Lane, LaneStepper};
 
-struct Lane {
-    req: GenRequest,
-    cond: Vec<f32>,
-    x: Tensor,
-    cache: CacheState,
-    policy: Box<dyn CachePolicy>,
-    records: Vec<StepRecord>,
-    computed: usize,
-    approximated: usize,
-    reused: usize,
-    token_sites_computed: u64,
-    token_sites_total: u64,
-    flops_done: u64,
-    flops_full: u64,
-    cache_bytes_peak: usize,
-    turb_rng: Option<Rng>,
-}
-
-/// Batched lockstep generation over up to `max_batch` requests.
+/// Batched lockstep generation over `max_batch` requests. Compute sites
+/// are chunked through the B=4 artifact, so `max_batch` may exceed 4.
 pub struct BatchEngine<'m> {
-    model: &'m DitModel,
-    fc: FastCacheConfig,
+    stepper: LaneStepper<'m>,
     pub max_batch: usize,
+    schedules: ScheduleCache,
 }
 
 impl<'m> BatchEngine<'m> {
     pub fn new(model: &'m DitModel, fc: FastCacheConfig, max_batch: usize) -> BatchEngine<'m> {
-        assert!(max_batch >= 1 && max_batch <= 4);
-        BatchEngine { model, fc, max_batch }
+        assert!(max_batch >= 1);
+        BatchEngine {
+            stepper: LaneStepper::new(model, fc),
+            max_batch,
+            schedules: ScheduleCache::new(),
+        }
     }
 
     /// Generate a batch of requests in lockstep. All requests must share
-    /// the step count (the server's batcher groups by it).
-    pub fn generate(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+    /// the step count — this convenience API finishes every lane
+    /// together. (The server has no such restriction: it admits
+    /// mixed-step lanes and retires them independently.)
+    pub fn generate(&mut self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
         assert!(!reqs.is_empty() && reqs.len() <= self.max_batch);
         let steps = reqs[0].steps;
-        assert!(
-            reqs.iter().all(|r| r.steps == steps),
-            "batch must be step-aligned"
-        );
-        let cfg = self.model.cfg;
-        let (n, d, layers) = (cfg.n_tokens, cfg.d, cfg.layers);
-        let schedule = DdimSchedule::new(steps, 1000);
-
+        assert!(reqs.iter().all(|r| r.steps == steps), "batch must be step-aligned");
+        let schedule = self.schedules.get(steps);
         let mut lanes: Vec<Lane> = reqs
             .iter()
-            .map(|req| {
-                let eng = super::engine::DenoiseEngine::new(self.model, self.fc.clone());
-                let cond = eng.make_cond(req);
-                let x = match &req.init_latent {
-                    Some(t) => t.clone(),
-                    None => {
-                        let mut rng = Rng::new(req.seed);
-                        Tensor::new(rng.normal_vec(n * C_IN, 1.0), &[n, C_IN])
-                    }
-                };
-                Lane {
-                    cond,
-                    x,
-                    cache: CacheState::new(layers, d, self.fc.fit_decay),
-                    policy: build_policy(&self.fc, layers),
-                    records: Vec::new(),
-                    computed: 0,
-                    approximated: 0,
-                    reused: 0,
-                    token_sites_computed: 0,
-                    token_sites_total: 0,
-                    flops_done: 0,
-                    flops_full: 0,
-                    cache_bytes_peak: 0,
-                    turb_rng: req.turbulence.as_ref().map(|t| Rng::new(t.seed)),
-                    req: req.clone(),
-                }
-            })
+            .map(|r| self.stepper.make_lane(r, Arc::clone(&schedule)))
             .collect();
-
-        let t0 = std::time::Instant::now();
-        for step in 0..schedule.len() {
-            let tval = schedule.timesteps[step];
-
-            // Batched temb: one call at the lane count's artifact (1 or 4).
-            let nb = lanes.len();
-            let use_b4 = nb > 1;
-            let bsz = if use_b4 { 4 } else { 1 };
-            let mut ts = vec![tval; bsz];
-            ts.truncate(bsz);
-            let temb = self.model.temb(&ts)?; // [bsz, D]
-
-            // Per-lane conditioning + embed + step begin.
-            let mut hs: Vec<Tensor> = Vec::with_capacity(nb);
-            let mut conds: Vec<Tensor> = Vec::with_capacity(nb);
-            for (li, lane) in lanes.iter_mut().enumerate() {
-                let _ = li;
-                let mut c = Tensor::new(temb.data()[..d].to_vec(), &[1, d]);
-                for (cv, cd) in c.data_mut().iter_mut().zip(&lane.cond) {
-                    *cv += cd;
-                }
-                let xb = lane.x.clone().reshape(&[1, n, C_IN]);
-                let h0 = self.model.embed(&xb)?.reshape(&[n, d]);
-                let temb_delta = lane
-                    .cache
-                    .prev_temb
-                    .as_ref()
-                    .map(|p| native::delta_rel(&c, p))
-                    .unwrap_or(f64::INFINITY);
-                let input_delta = lane
-                    .cache
-                    .prev_embed
-                    .as_ref()
-                    .map(|p| native::delta_rel(&h0, p))
-                    .unwrap_or(f64::INFINITY);
-                lane.policy.begin_step(&StepInfo {
-                    step,
-                    num_steps: schedule.len(),
-                    temb_delta,
-                    input_delta,
-                });
-                lane.cache.store_temb(c.clone());
-                lane.cache.store_embed(h0.clone());
-                lane.records.push(StepRecord {
-                    step,
-                    n_tokens: n,
-                    motion_tokens: n,
-                    ..Default::default()
-                });
-                hs.push(h0);
-                conds.push(c);
-            }
-
-            for l in 0..layers {
-                // Collect decisions.
-                let mut actions = Vec::with_capacity(nb);
-                for (lane, h) in lanes.iter_mut().zip(&hs) {
-                    let delta = lane
-                        .cache
-                        .prev_input(l)
-                        .filter(|p| p.shape() == h.shape())
-                        .map(|p| native::delta_rel(h, p));
-                    let a = lane.policy.decide(&BlockCtx {
-                        layer: l,
-                        num_layers: layers,
-                        step,
-                        delta,
-                        nd: n * d,
-                    });
-                    actions.push(a);
-                    lane.flops_full += cfg.block_flops(n);
-                    lane.token_sites_total += n as u64;
-                }
-
-                let compute_lanes: Vec<usize> = (0..nb)
-                    .filter(|&i| actions[i] == BlockAction::Compute)
-                    .collect();
-
-                // Batched compute through the B=4 artifact when >=2 lanes
-                // need this block; otherwise per-lane B=1.
-                let mut outs: Vec<Option<Tensor>> = vec![None; nb];
-                if compute_lanes.len() >= 2 {
-                    let mut hbatch = Vec::with_capacity(4 * n * d);
-                    let mut cbatch = Vec::with_capacity(4 * d);
-                    for slot in 0..4 {
-                        let li = compute_lanes
-                            .get(slot)
-                            .copied()
-                            .unwrap_or(compute_lanes[0]); // pad with lane 0
-                        hbatch.extend_from_slice(hs[li].data());
-                        cbatch.extend_from_slice(conds[li].data());
-                    }
-                    let hb = Tensor::new(hbatch, &[4, n, d]);
-                    let cb = Tensor::new(cbatch, &[4, d]);
-                    let out = self.model.block(l, &hb, &cb)?;
-                    for (slot, &li) in compute_lanes.iter().enumerate() {
-                        let sl = Tensor::new(
-                            out.data()[slot * n * d..(slot + 1) * n * d].to_vec(),
-                            &[n, d],
-                        );
-                        outs[li] = Some(sl);
-                    }
-                } else {
-                    for &li in &compute_lanes {
-                        let hb = hs[li].clone().reshape(&[1, n, d]);
-                        let out = self.model.block(l, &hb, &conds[li])?.reshape(&[n, d]);
-                        outs[li] = Some(out);
-                    }
-                }
-
-                // Apply per-lane results.
-                for li in 0..nb {
-                    let lane = &mut lanes[li];
-                    let h = &hs[li];
-                    let h_next = match actions[li] {
-                        BlockAction::Compute => {
-                            lane.computed += 1;
-                            lane.records.last_mut().unwrap().computed += 1;
-                            lane.flops_done += cfg.block_flops(n);
-                            lane.token_sites_computed += n as u64;
-                            let out = outs[li].take().unwrap();
-                            lane.cache.fit_mut(l).update(h, &out);
-                            if let Some(prev_out) = lane.cache.prev_output(l) {
-                                if prev_out.shape() == out.shape() {
-                                    let dv = native::delta_rel(&out, prev_out);
-                                    lane.policy.observe_output(l, dv);
-                                }
-                            }
-                            out
-                        }
-                        BlockAction::Approx => {
-                            lane.approximated += 1;
-                            lane.records.last_mut().unwrap().approximated += 1;
-                            lane.flops_done +=
-                                cfg.approx_flops(n, self.fc.approx == ApproxMode::FullMatrix);
-                            let approx = lane.cache.fit(l).apply(h);
-                            match lane.cache.prev_output(l) {
-                                Some(p) if self.fc.enable_mb && p.shape() == approx.shape() => {
-                                    approx.lerp(p, self.fc.gamma, 1.0 - self.fc.gamma)
-                                }
-                                _ => approx,
-                            }
-                        }
-                        BlockAction::Reuse => {
-                            lane.reused += 1;
-                            lane.records.last_mut().unwrap().reused += 1;
-                            match lane.cache.prev_output(l) {
-                                Some(p) if p.shape() == h.shape() => p.clone(),
-                                _ => h.clone(),
-                            }
-                        }
-                    };
-                    lane.cache.store_input(l, h.clone());
-                    lane.cache.store_output(l, h_next.clone());
-                    hs[li] = h_next;
-                }
-            }
-
-            // Final layer + DDIM per lane.
-            for (li, lane) in lanes.iter_mut().enumerate() {
-                let hb = hs[li].clone().reshape(&[1, n, d]);
-                let eps = self.model.final_layer(&hb, &conds[li])?.reshape(&[n, C_IN]);
-                schedule.update(step, lane.x.data_mut(), eps.data());
-                if let (Some(t), Some(rng)) = (&lane.req.turbulence, &mut lane.turb_rng) {
-                    for &i in &t.tokens {
-                        for v in lane.x.row_mut(i) {
-                            *v += t.amp * rng.normal();
-                        }
-                    }
-                }
-                lane.cache_bytes_peak = lane.cache_bytes_peak.max(lane.cache.size_bytes());
-            }
+        for _ in 0..steps {
+            self.stepper.step(&mut lanes)?;
         }
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        Ok(lanes
-            .into_iter()
-            .map(|lane| GenResult {
-                id: lane.req.id,
-                latent: lane.x,
-                cond: lane.cond,
-                records: lane.records,
-                wall_ms,
-                computed: lane.computed,
-                approximated: lane.approximated,
-                reused: lane.reused,
-                token_sites_computed: lane.token_sites_computed,
-                token_sites_total: lane.token_sites_total,
-                flops_done: lane.flops_done,
-                flops_full: lane.flops_full,
-                cache_bytes_peak: lane.cache_bytes_peak,
-            })
-            .collect())
+        Ok(lanes.into_iter().map(Lane::into_result).collect())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{PolicyKind, Variant};
+    use crate::config::{ApproxMode, PolicyKind, Variant};
     use crate::model::DitModel;
     use crate::scheduler::engine::DenoiseEngine;
 
+    /// Batched results must match per-request single runs bit-for-bit (the
+    /// native substrate loops per example, so 1e-4 is generous).
+    fn assert_parity(model: &DitModel, fc: &FastCacheConfig, reqs: &[GenRequest]) {
+        let mut be = BatchEngine::new(model, fc.clone(), reqs.len().max(1));
+        let batched = be.generate(reqs).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            let mut eng = DenoiseEngine::new(model, fc.clone());
+            let single = eng.generate(req).unwrap();
+            let md = batched[i].latent.max_abs_diff(&single.latent);
+            assert!(md < 1e-4, "req {i}: max diff {md}");
+            assert_eq!(batched[i].computed, single.computed, "req {i}: site counts drifted");
+            assert_eq!(batched[i].approximated, single.approximated, "req {i}");
+            assert_eq!(batched[i].reused, single.reused, "req {i}");
+        }
+    }
+
     #[test]
     fn batched_matches_single_request_nocache() {
-        // Lockstep batching must not change any request's numerics.
         let model = DitModel::native(Variant::S, 3);
         let mut fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
         fc.enable_str = false;
         let reqs: Vec<GenRequest> =
             (0..3).map(|i| GenRequest::simple(i, 40 + i, 4)).collect();
+        assert_parity(&model, &fc, &reqs);
+    }
 
-        let be = BatchEngine::new(&model, fc.clone(), 4);
-        let batched = be.generate(&reqs).unwrap();
+    #[test]
+    fn batched_matches_single_request_str() {
+        // STR used to force the server onto the slow single-request path;
+        // the unified stepper batches the full-token Compute sites and
+        // runs bucketed sites per-lane — numerics must not change.
+        let model = DitModel::native(Variant::S, 3);
+        let fc = FastCacheConfig::with_policy(PolicyKind::FastCache); // STR on
+        assert!(fc.enable_str);
+        let reqs: Vec<GenRequest> =
+            (0..3).map(|i| GenRequest::simple(i, 60 + i, 6)).collect();
+        assert_parity(&model, &fc, &reqs);
+    }
 
-        for (i, req) in reqs.iter().enumerate() {
-            let mut eng = DenoiseEngine::new(&model, fc.clone());
-            let single = eng.generate(req).unwrap();
-            let md = batched[i].latent.max_abs_diff(&single.latent);
-            assert!(md < 1e-4, "req {i}: max diff {md}");
-        }
+    #[test]
+    fn batched_matches_single_request_merge() {
+        let model = DitModel::native(Variant::B, 3);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        fc.enable_merge = true;
+        fc.merge_target = 32;
+        let reqs: Vec<GenRequest> =
+            (0..3).map(|i| GenRequest::simple(i, 70 + i, 4)).collect();
+        assert_parity(&model, &fc, &reqs);
+    }
+
+    #[test]
+    fn batched_matches_single_request_fullmatrix() {
+        let model = DitModel::native(Variant::S, 3);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        fc.approx = ApproxMode::FullMatrix;
+        let reqs: Vec<GenRequest> =
+            (0..3).map(|i| GenRequest::simple(i, 80 + i, 6)).collect();
+        assert_parity(&model, &fc, &reqs);
     }
 
     #[test]
     fn batched_fastcache_runs_and_skips() {
         let model = DitModel::native(Variant::S, 3);
         let mut fc = FastCacheConfig::default();
-        fc.enable_str = false; // batched path is full-token
+        fc.enable_str = false;
         let reqs: Vec<GenRequest> =
             (0..4).map(|i| GenRequest::simple(i, 7 + i, 8)).collect();
-        let be = BatchEngine::new(&model, fc, 4);
+        let mut be = BatchEngine::new(&model, fc, 4);
         let out = be.generate(&reqs).unwrap();
         assert_eq!(out.len(), 4);
         for r in &out {
@@ -338,11 +147,33 @@ mod tests {
     }
 
     #[test]
+    fn per_lane_wall_time_is_individual() {
+        // Lanes in one batch no longer all report the group's wall clock:
+        // per-lane active times are individually positive and their sum is
+        // on the order of (not 4x) the group's end-to-end time.
+        let model = DitModel::native(Variant::S, 3);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
+        fc.enable_str = false;
+        let reqs: Vec<GenRequest> =
+            (0..4).map(|i| GenRequest::simple(i, 90 + i, 4)).collect();
+        let mut be = BatchEngine::new(&model, fc, 4);
+        let t0 = std::time::Instant::now();
+        let out = be.generate(&reqs).unwrap();
+        let group_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let sum_ms: f64 = out.iter().map(|r| r.wall_ms).sum();
+        for r in &out {
+            assert!(r.wall_ms > 0.0);
+            assert!(r.wall_ms <= group_ms, "lane {} reported more than the group", r.id);
+        }
+        assert!(sum_ms <= group_ms * 1.05, "active times overstate: {sum_ms} vs {group_ms}");
+    }
+
+    #[test]
     #[should_panic]
     fn misaligned_steps_rejected() {
         let model = DitModel::native(Variant::S, 3);
         let fc = FastCacheConfig::default();
-        let be = BatchEngine::new(&model, fc, 4);
+        let mut be = BatchEngine::new(&model, fc, 4);
         let mut r1 = GenRequest::simple(0, 1, 4);
         let r2 = GenRequest::simple(1, 2, 8);
         r1.steps = 4;

@@ -1,5 +1,8 @@
 //! DDIM sampling schedule (deterministic, η = 0) with a cosine ᾱ schedule —
-//! the 50-step default inference setting of the paper (§5.2).
+//! the 50-step default inference setting of the paper (§5.2), plus the
+//! shared [`ScheduleCache`] lanes borrow their schedule from.
+
+use std::sync::Arc;
 
 /// Cosine cumulative signal level ᾱ(u), u ∈ [0, 1] (Nichol & Dhariwal).
 fn alpha_bar(u: f64) -> f64 {
@@ -65,9 +68,49 @@ impl DdimSchedule {
     }
 }
 
+/// Memoized, `Arc`-shared schedules. Engines and the serving worker hand
+/// lanes an `Arc<DdimSchedule>` instead of cloning the whole table per
+/// request (the old per-engine cache cloned on every hit).
+#[derive(Default)]
+pub struct ScheduleCache {
+    cached: Vec<(usize, Arc<DdimSchedule>)>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache::default()
+    }
+
+    /// Get (or build) the `steps`-step schedule at the 1000-step training
+    /// discretization every engine uses.
+    pub fn get(&mut self, steps: usize) -> Arc<DdimSchedule> {
+        if let Some((_, s)) = self.cached.iter().find(|(n, _)| *n == steps) {
+            return Arc::clone(s);
+        }
+        let s = Arc::new(DdimSchedule::new(steps, 1000));
+        self.cached.push((steps, Arc::clone(&s)));
+        // Bound the cache for long-lived servers with diverse step counts.
+        if self.cached.len() > 16 {
+            self.cached.remove(0);
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn schedule_cache_shares_one_instance() {
+        let mut c = ScheduleCache::new();
+        let a = c.get(20);
+        let b = c.get(20);
+        assert!(Arc::ptr_eq(&a, &b), "same steps must share one schedule");
+        let other = c.get(10);
+        assert!(!Arc::ptr_eq(&a, &other));
+        assert_eq!(other.len(), 10);
+    }
 
     #[test]
     fn schedule_is_descending_in_time_ascending_in_alpha() {

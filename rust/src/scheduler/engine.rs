@@ -1,425 +1,89 @@
-//! The denoise engine — Algorithm 1 (and the Algorithm 2 token-merge
-//! extension) of the paper, driven from Rust between HLO block executions.
-//!
-//! Per step: embed the latent, partition tokens (STR), then walk the block
-//! stack; per block the cache policy decides Compute / Approx / Reuse from
-//! the relative hidden-state change (SC, the χ² rule for FastCache), with
-//! the learnable linear approximation and motion-aware blending (MB)
-//! realizing skipped blocks. The engine owns ALL bookkeeping the paper's
-//! tables report: block-site counters, token-site ratios, FLOPs, cache
-//! bytes, wall time.
+//! `DenoiseEngine` — the single-request driver over the unified lane
+//! stepper (`scheduler::lane`): one request becomes one [`Lane`] and the
+//! batch-of-one case of [`LaneStepper::step`]. Algorithm 1 (and the
+//! Algorithm 2 token-merge extension) live in the stepper; this type only
+//! owns request-level conveniences (schedule cache, policy override for
+//! calibration flows).
 
 use anyhow::Result;
 
-use crate::cache::{build_policy, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo};
-use crate::config::{ApproxMode, FastCacheConfig, C_IN};
-use crate::model::{native, DitModel};
-use crate::rng::Rng;
-use crate::tensor::Tensor;
-use crate::tokens::{self, partition};
+use crate::cache::CachePolicy;
+use crate::config::FastCacheConfig;
+use crate::model::DitModel;
 
-use super::ddim::DdimSchedule;
+use super::ddim::ScheduleCache;
+use super::lane::{self, LaneStepper};
 
-/// Turbulence: per-step re-noising of selected token rows — the synthetic
-/// stand-in for high-motion content regions (DESIGN.md §2): those tokens
-/// keep changing between steps, so a content-aware cache must recompute
-/// them while the rest of the latent settles.
-#[derive(Clone, Debug)]
-pub struct Turbulence {
-    pub tokens: Vec<usize>,
-    pub amp: f32,
-    pub seed: u64,
-}
+// Re-exported for path stability: these types historically lived here.
+pub use super::lane::{GenRequest, GenResult, StepRecord, Turbulence};
 
-/// One generation request.
-#[derive(Clone, Debug)]
-pub struct GenRequest {
-    pub id: u64,
-    pub seed: u64,
-    /// Conditioning seed (the "prompt"); drives the CLIP-proxy metric.
-    pub cond_seed: u64,
-    pub guidance: f32,
-    pub steps: usize,
-    pub turbulence: Option<Turbulence>,
-    /// Optional initial latent (video frames share correlated inits).
-    pub init_latent: Option<Tensor>,
-}
-
-impl GenRequest {
-    pub fn simple(id: u64, seed: u64, steps: usize) -> GenRequest {
-        GenRequest {
-            id,
-            seed,
-            cond_seed: seed ^ 0xC04D,
-            guidance: 7.5,
-            steps,
-            turbulence: None,
-            init_latent: None,
-        }
-    }
-}
-
-/// Per-step execution record (drives Fig. 1/3 style analyses).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct StepRecord {
-    pub step: usize,
-    pub computed: usize,
-    pub approximated: usize,
-    pub reused: usize,
-    pub motion_tokens: usize,
-    pub n_tokens: usize,
-    pub mean_delta: f64,
-}
-
-/// Result of one full generation.
-#[derive(Debug)]
-pub struct GenResult {
-    pub id: u64,
-    /// Final denoised latent [N, C].
-    pub latent: Tensor,
-    /// Conditioning vector used (for the CLIP-proxy metric).
-    pub cond: Vec<f32>,
-    pub records: Vec<StepRecord>,
-    pub wall_ms: f64,
-    /// Block-site actions over the whole generation.
-    pub computed: usize,
-    pub approximated: usize,
-    pub reused: usize,
-    /// Token-site accounting: computed token-sites vs total token-sites
-    /// (Tab. 5's static/dynamic ratios are derived from these).
-    pub token_sites_computed: u64,
-    pub token_sites_total: u64,
-    /// FLOPs actually executed vs the NoCache-equivalent total.
-    pub flops_done: u64,
-    pub flops_full: u64,
-    /// Peak cache-state bytes held for this request.
-    pub cache_bytes_peak: usize,
-}
-
-impl GenResult {
-    pub fn skip_ratio(&self) -> f64 {
-        let total = self.computed + self.approximated + self.reused;
-        if total == 0 {
-            0.0
-        } else {
-            (self.approximated + self.reused) as f64 / total as f64
-        }
-    }
-
-    /// Fraction of token-sites NOT computed (the paper's "static ratio").
-    pub fn static_ratio(&self) -> f64 {
-        if self.token_sites_total == 0 {
-            0.0
-        } else {
-            1.0 - self.token_sites_computed as f64 / self.token_sites_total as f64
-        }
-    }
-
-    pub fn flops_ratio(&self) -> f64 {
-        if self.flops_full == 0 {
-            1.0
-        } else {
-            self.flops_done as f64 / self.flops_full as f64
-        }
-    }
-}
-
-/// The engine: one model + one policy + per-request cache state.
+/// The engine: one model + one policy + per-request cache state, executed
+/// as a batch-of-one through the shared lane stepper.
 pub struct DenoiseEngine<'m> {
-    model: &'m DitModel,
-    pub fc: FastCacheConfig,
-    policy: Box<dyn CachePolicy>,
-    schedule_cache: Option<(usize, DdimSchedule)>,
+    stepper: LaneStepper<'m>,
+    /// Caller-installed policy (L2C calibration flows); reused across
+    /// generates, reset per request.
+    policy_override: Option<Box<dyn CachePolicy>>,
+    schedules: ScheduleCache,
 }
 
 impl<'m> DenoiseEngine<'m> {
     pub fn new(model: &'m DitModel, fc: FastCacheConfig) -> DenoiseEngine<'m> {
-        let policy = build_policy(&fc, model.cfg.layers);
-        DenoiseEngine { model, fc, policy, schedule_cache: None }
+        DenoiseEngine {
+            stepper: LaneStepper::new(model, fc),
+            policy_override: None,
+            schedules: ScheduleCache::new(),
+        }
+    }
+
+    pub fn fc(&self) -> &FastCacheConfig {
+        self.stepper.fc()
     }
 
     /// Replace the policy (used by L2C calibration flows).
     pub fn set_policy(&mut self, policy: Box<dyn CachePolicy>) {
-        self.policy = policy;
-    }
-
-    fn schedule(&mut self, steps: usize) -> DdimSchedule {
-        if let Some((s, sched)) = &self.schedule_cache {
-            if *s == steps {
-                return sched.clone();
-            }
-        }
-        let sched = DdimSchedule::new(steps, 1000);
-        self.schedule_cache = Some((steps, sched.clone()));
-        sched
+        self.policy_override = Some(policy);
     }
 
     /// Build the conditioning vector for a request: unit-normalized random
     /// direction scaled by guidance/7.5 (substitution for CFG text
     /// conditioning — see DESIGN.md §2).
     pub fn make_cond(&self, req: &GenRequest) -> Vec<f32> {
-        let d = self.model.cfg.d;
-        let mut rng = Rng::new(req.cond_seed);
-        let mut c = rng.normal_vec(d, 1.0);
-        let norm = c.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
-        let scale = (req.guidance / 7.5) * 0.5 / norm * (d as f32).sqrt();
-        for v in c.iter_mut() {
-            *v *= scale;
-        }
-        c
+        lane::make_cond(self.stepper.model().cfg.d, req)
     }
 
     /// Run one full generation.
     pub fn generate(&mut self, req: &GenRequest) -> Result<GenResult> {
-        let cfg = self.model.cfg;
-        let (n, d, layers) = (cfg.n_tokens, cfg.d, cfg.layers);
-        let schedule = self.schedule(req.steps);
-        let cond = self.make_cond(req);
-
-        let mut cache = CacheState::new(layers, d, self.fc.fit_decay);
-        self.policy.reset();
-
-        // Initial latent: pure noise (or the provided frame init).
-        let mut x = match &req.init_latent {
-            Some(t) => {
-                assert_eq!(t.shape(), &[n, C_IN]);
-                t.clone()
-            }
-            None => {
-                let mut rng = Rng::new(req.seed);
-                Tensor::new(rng.normal_vec(n * C_IN, 1.0), &[n, C_IN])
-            }
+        let schedule = self.schedules.get(req.steps);
+        let had_override = self.policy_override.is_some();
+        let mut lane = match self.policy_override.take() {
+            Some(p) => self.stepper.lane_with_policy(req, schedule, p),
+            None => self.stepper.make_lane(req, schedule),
         };
-        let mut turb_rng = req.turbulence.as_ref().map(|t| Rng::new(t.seed));
-
-        let mut records = Vec::with_capacity(req.steps);
-        let mut computed = 0usize;
-        let mut approximated = 0usize;
-        let mut reused = 0usize;
-        let mut token_sites_computed = 0u64;
-        let mut token_sites_total = 0u64;
-        let mut flops_done = 0u64;
-        let mut flops_full = 0u64;
-        let mut cache_bytes_peak = 0usize;
-
-        let t0 = std::time::Instant::now();
-        for step in 0..schedule.len() {
-            let tval = schedule.timesteps[step];
-
-            // Conditioning embedding c = temb(t) + cond.
-            let mut c = self.model.temb(&[tval])?; // [1, D]
-            for (cv, cd) in c.data_mut().iter_mut().zip(&cond) {
-                *cv += cd;
+        let mut err = None;
+        while !lane.is_done() {
+            if let Err(e) = self.stepper.step(std::slice::from_mut(&mut lane)) {
+                err = Some(e);
+                break;
             }
-
-            // Embed latent -> hidden [N, D].
-            let xb = x.clone().reshape(&[1, n, C_IN]);
-            let h0 = self.model.embed(&xb)?.reshape(&[n, d]);
-
-            // Step-level deltas for the step-granular policies.
-            let temb_delta = cache
-                .prev_temb
-                .as_ref()
-                .map(|p| native::delta_rel(&c, p))
-                .unwrap_or(f64::INFINITY);
-            let input_delta = cache
-                .prev_embed
-                .as_ref()
-                .map(|p| native::delta_rel(&h0, p))
-                .unwrap_or(f64::INFINITY);
-            self.policy.begin_step(&StepInfo {
-                step,
-                num_steps: schedule.len(),
-                temb_delta,
-                input_delta,
-            });
-
-            // STR: motion/static partition on the embedded state.
-            let part = if self.fc.enable_str {
-                cache.prev_embed.as_ref().map(|p| partition(&h0, p, self.fc.tau_s))
-            } else {
-                None
-            };
-            let motion_idx: Option<Vec<usize>> = part.as_ref().map(tokens::pad_to_bucket);
-            let motion_tokens = part.as_ref().map(|p| p.motion.len()).unwrap_or(n);
-
-            cache.store_temb(c.clone());
-            cache.store_embed(h0.clone());
-
-            let mut h = h0;
-            let mut delta_sum = 0.0f64;
-            let mut delta_cnt = 0usize;
-            let mut rec = StepRecord { step, n_tokens: n, motion_tokens, ..Default::default() };
-
-            // Token-merge extension (Algorithm 2, S=2 stages): merge at the
-            // midpoint, run the rest at the merged bucket, unpool at the end.
-            let merge_at = if self.fc.enable_merge { layers / 2 } else { usize::MAX };
-            let mut merge_ctx: Option<(tokens::MergeMap, Tensor)> = None;
-
-            for l in 0..layers {
-                if l == merge_at && l > 0 {
-                    // Importance = spatial kNN density x temporal saliency.
-                    let rho_sp = tokens::knn_density(&h, self.fc.knn_k.min(h.shape()[0] - 1));
-                    let rho_tm: Vec<f32> = match cache.prev_input(l) {
-                        Some(p) if p.shape() == h.shape() => tokens::temporal_saliency(&h, p),
-                        _ => vec![0.0; h.shape()[0]],
-                    };
-                    let scores = tokens::importance(&rho_sp, &rho_tm, self.fc.merge_lambda);
-                    let (merged, map) = tokens::local_ctm(&h, &scores, self.fc.merge_target);
-                    merge_ctx = Some((map, h.clone())); // keep Z for fusion
-                    h = merged;
-                }
-
-                let cur_n = h.shape()[0];
-                let nd = cur_n * d;
-                let delta = cache
-                    .prev_input(l)
-                    .filter(|p| p.shape() == h.shape())
-                    .map(|p| native::delta_rel(&h, p));
-                if let Some(dv) = delta {
-                    delta_sum += dv;
-                    delta_cnt += 1;
-                }
-                let action = self.policy.decide(&BlockCtx {
-                    layer: l,
-                    num_layers: layers,
-                    step,
-                    delta,
-                    nd,
-                });
-
-                let full_block_flops = cfg.block_flops(cur_n);
-                flops_full += full_block_flops;
-                token_sites_total += cur_n as u64;
-
-                let prev_h = h.clone();
-                let h_next = match action {
-                    BlockAction::Compute => {
-                        rec.computed += 1;
-                        computed += 1;
-                        let out = match &motion_idx {
-                            Some(idx) if idx.len() < cur_n && !idx.is_empty() && merge_ctx.is_none() => {
-                                // Bucketed motion-token compute; static rows
-                                // bypass through the learnable affine map.
-                                let nb = idx.len();
-                                let sub = h.gather_rows(idx);
-                                let sub_b = sub.clone().reshape(&[1, nb, d]);
-                                let out_sub =
-                                    self.model.block(l, &sub_b, &c)?.reshape(&[nb, d]);
-                                cache.fit_mut(l).update(&sub, &out_sub);
-                                let mut out_full = cache.fit(l).apply(&h);
-                                out_full.scatter_rows(idx, &out_sub);
-                                flops_done += cfg.block_flops(nb)
-                                    + cfg.approx_flops(cur_n - nb, false);
-                                token_sites_computed += nb as u64;
-                                out_full
-                            }
-                            _ => {
-                                let hb = h.clone().reshape(&[1, cur_n, d]);
-                                let out =
-                                    self.model.block(l, &hb, &c)?.reshape(&[cur_n, d]);
-                                cache.fit_mut(l).update(&h, &out);
-                                flops_done += full_block_flops;
-                                token_sites_computed += cur_n as u64;
-                                out
-                            }
-                        };
-                        if let Some(prev_out) = cache.prev_output(l) {
-                            if prev_out.shape() == out.shape() {
-                                self.policy.observe_output(l, native::delta_rel(&out, prev_out));
-                            }
-                        }
-                        out
-                    }
-                    BlockAction::Approx => {
-                        rec.approximated += 1;
-                        approximated += 1;
-                        flops_done += cfg.approx_flops(
-                            cur_n,
-                            self.fc.approx == ApproxMode::FullMatrix,
-                        );
-                        let approx = match self.fc.approx {
-                            ApproxMode::FullMatrix => {
-                                let (w, b) = cache.fit(l).to_full_matrix();
-                                let hb = h.clone().reshape(&[1, cur_n, d]);
-                                self.model
-                                    .linear_approx_full(&hb, &w, &b)?
-                                    .reshape(&[cur_n, d])
-                            }
-                            _ => cache.fit(l).apply(&h),
-                        };
-                        match cache.prev_output(l) {
-                            Some(prev_out)
-                                if self.fc.enable_mb && prev_out.shape() == approx.shape() =>
-                            {
-                                approx.lerp(prev_out, self.fc.gamma, 1.0 - self.fc.gamma)
-                            }
-                            _ => approx,
-                        }
-                    }
-                    BlockAction::Reuse => {
-                        rec.reused += 1;
-                        reused += 1;
-                        match cache.prev_output(l) {
-                            Some(prev_out) if prev_out.shape() == h.shape() => prev_out.clone(),
-                            _ => h.clone(),
-                        }
-                    }
-                };
-                cache.store_input(l, prev_h);
-                cache.store_output(l, h_next.clone());
-                h = h_next;
-            }
-
-            // Unpool + residual fusion if merged (Algorithm 2's MTA phase).
-            if let Some((map, z)) = merge_ctx {
-                let restored = tokens::unpool(&h, &map);
-                h = restored.lerp(&z, 1.0, 1.0); // Unpool(H) + Z
-            }
-
-            rec.mean_delta = if delta_cnt > 0 { delta_sum / delta_cnt as f64 } else { 0.0 };
-            records.push(rec);
-
-            // Final projection + DDIM update.
-            let hb = h.reshape(&[1, n, d]);
-            let eps = self.model.final_layer(&hb, &c)?.reshape(&[n, C_IN]);
-            schedule.update(step, x.data_mut(), eps.data());
-
-            // Synthetic motion: re-noise the turbulent token rows.
-            if let (Some(t), Some(rng)) = (&req.turbulence, &mut turb_rng) {
-                for &i in &t.tokens {
-                    for v in x.row_mut(i) {
-                        *v += t.amp * rng.normal();
-                    }
-                }
-            }
-
-            cache_bytes_peak = cache_bytes_peak.max(cache.size_bytes());
         }
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        Ok(GenResult {
-            id: req.id,
-            latent: x,
-            cond,
-            records,
-            wall_ms,
-            computed,
-            approximated,
-            reused,
-            token_sites_computed,
-            token_sites_total,
-            flops_done,
-            flops_full,
-            cache_bytes_peak,
-        })
+        // Recover the policy even on a failed run, so an installed
+        // override survives a retried generate().
+        let (result, policy) = lane.finish();
+        if had_override {
+            self.policy_override = Some(policy);
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(result),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{PolicyKind, Variant};
+    use crate::config::{PolicyKind, Variant, C_IN};
     use crate::model::DitModel;
 
     fn run(policy: PolicyKind, steps: usize) -> GenResult {

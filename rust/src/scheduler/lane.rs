@@ -1,0 +1,745 @@
+//! The unified lane-based stepper — ONE denoise step loop shared by every
+//! execution mode (single request, lockstep batch, continuous-batching
+//! server).
+//!
+//! A [`Lane`] is the complete per-request denoise state: latent,
+//! conditioning, `CacheState`, cache policy, turbulence RNG, and all the
+//! bookkeeping the paper's tables report (block-site counters, token-site
+//! ratios, FLOPs, cache bytes, per-lane active wall time). The
+//! [`LaneStepper`] advances a *vector* of lanes by one denoise step: per
+//! (step, layer) it collects each lane's `BlockAction`, batches the
+//! full-token Compute lanes through the compiled B=4 block artifact
+//! (chunked, padded when a group is smaller than 4), and routes
+//! STR-bucketed, merged, Approx, and Reuse lanes through their per-lane
+//! paths. Lanes at *different* step indices coexist in one call — that is
+//! what makes continuous batching in `server::worker` possible.
+//!
+//! `DenoiseEngine` is the batch-of-one driver over this stepper and
+//! `BatchEngine` the lockstep driver; neither owns a step/layer loop of
+//! its own anymore, so Algorithm 1 (and the Algorithm 2 token-merge
+//! extension) exist in exactly one place.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cache::{build_policy, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo};
+use crate::config::{ApproxMode, FastCacheConfig, C_IN};
+use crate::model::{native, DitModel};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::tokens::{self, partition};
+
+use super::ddim::DdimSchedule;
+
+/// Turbulence: per-step re-noising of selected token rows — the synthetic
+/// stand-in for high-motion content regions (DESIGN.md §2): those tokens
+/// keep changing between steps, so a content-aware cache must recompute
+/// them while the rest of the latent settles.
+#[derive(Clone, Debug)]
+pub struct Turbulence {
+    pub tokens: Vec<usize>,
+    pub amp: f32,
+    pub seed: u64,
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub seed: u64,
+    /// Conditioning seed (the "prompt"); drives the CLIP-proxy metric.
+    pub cond_seed: u64,
+    pub guidance: f32,
+    pub steps: usize,
+    pub turbulence: Option<Turbulence>,
+    /// Optional initial latent (video frames share correlated inits).
+    pub init_latent: Option<Tensor>,
+}
+
+impl GenRequest {
+    pub fn simple(id: u64, seed: u64, steps: usize) -> GenRequest {
+        GenRequest {
+            id,
+            seed,
+            cond_seed: seed ^ 0xC04D,
+            guidance: 7.5,
+            steps,
+            turbulence: None,
+            init_latent: None,
+        }
+    }
+}
+
+/// Per-step execution record (drives Fig. 1/3 style analyses).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub computed: usize,
+    pub approximated: usize,
+    pub reused: usize,
+    pub motion_tokens: usize,
+    pub n_tokens: usize,
+    pub mean_delta: f64,
+}
+
+/// Result of one full generation.
+#[derive(Debug)]
+pub struct GenResult {
+    pub id: u64,
+    /// Final denoised latent [N, C].
+    pub latent: Tensor,
+    /// Conditioning vector used (for the CLIP-proxy metric).
+    pub cond: Vec<f32>,
+    pub records: Vec<StepRecord>,
+    /// Per-lane ACTIVE wall time: the time this request actually occupied
+    /// the worker, with batched block calls split evenly across the lanes
+    /// sharing them. Lanes in a batch no longer all report the whole
+    /// group's wall clock.
+    pub wall_ms: f64,
+    /// Block-site actions over the whole generation.
+    pub computed: usize,
+    pub approximated: usize,
+    pub reused: usize,
+    /// Token-site accounting: computed token-sites vs total token-sites
+    /// (Tab. 5's static/dynamic ratios are derived from these).
+    pub token_sites_computed: u64,
+    pub token_sites_total: u64,
+    /// FLOPs actually executed vs the NoCache-equivalent total.
+    pub flops_done: u64,
+    pub flops_full: u64,
+    /// FLOPs burnt in padded B=4 batch slots on this lane's behalf
+    /// (serving overhead; NOT included in `flops_done`).
+    pub flops_padded: u64,
+    /// Peak cache-state bytes held for this request.
+    pub cache_bytes_peak: usize,
+}
+
+impl GenResult {
+    pub fn skip_ratio(&self) -> f64 {
+        let total = self.computed + self.approximated + self.reused;
+        if total == 0 {
+            0.0
+        } else {
+            (self.approximated + self.reused) as f64 / total as f64
+        }
+    }
+
+    /// Fraction of token-sites NOT computed (the paper's "static ratio").
+    pub fn static_ratio(&self) -> f64 {
+        if self.token_sites_total == 0 {
+            0.0
+        } else {
+            1.0 - self.token_sites_computed as f64 / self.token_sites_total as f64
+        }
+    }
+
+    pub fn flops_ratio(&self) -> f64 {
+        if self.flops_full == 0 {
+            1.0
+        } else {
+            self.flops_done as f64 / self.flops_full as f64
+        }
+    }
+}
+
+/// Build the conditioning vector for a request: unit-normalized random
+/// direction scaled by guidance/7.5 (substitution for CFG text
+/// conditioning — see DESIGN.md §2).
+pub fn make_cond(d: usize, req: &GenRequest) -> Vec<f32> {
+    let mut rng = Rng::new(req.cond_seed);
+    let mut c = rng.normal_vec(d, 1.0);
+    let norm = c.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+    let scale = (req.guidance / 7.5) * 0.5 / norm * (d as f32).sqrt();
+    for v in c.iter_mut() {
+        *v *= scale;
+    }
+    c
+}
+
+/// All per-request denoise state, advanced one step at a time by the
+/// [`LaneStepper`]. Block-site counters live in `cache.counters`
+/// (`CacheCounters`), the canonical per-request tally.
+pub struct Lane {
+    req: GenRequest,
+    cond: Vec<f32>,
+    x: Tensor,
+    schedule: Arc<DdimSchedule>,
+    cache: CacheState,
+    policy: Box<dyn CachePolicy>,
+    turb_rng: Option<Rng>,
+    step: usize,
+    records: Vec<StepRecord>,
+    token_sites_computed: u64,
+    token_sites_total: u64,
+    flops_done: u64,
+    flops_full: u64,
+    flops_padded: u64,
+    cache_bytes_peak: usize,
+    active: Duration,
+}
+
+impl Lane {
+    pub fn id(&self) -> u64 {
+        self.req.id
+    }
+
+    /// The next step this lane will execute (0-based).
+    pub fn step_index(&self) -> usize {
+        self.step
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.schedule.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.step >= self.schedule.len()
+    }
+
+    pub fn into_result(self) -> GenResult {
+        self.finish().0
+    }
+
+    /// Consume the lane, returning the result AND the policy (so a caller
+    /// that installed a custom policy can keep it across requests).
+    pub fn finish(self) -> (GenResult, Box<dyn CachePolicy>) {
+        let Lane {
+            req,
+            cond,
+            x,
+            cache,
+            policy,
+            records,
+            token_sites_computed,
+            token_sites_total,
+            flops_done,
+            flops_full,
+            flops_padded,
+            cache_bytes_peak,
+            active,
+            ..
+        } = self;
+        let counters = cache.counters;
+        (
+            GenResult {
+                id: req.id,
+                latent: x,
+                cond,
+                records,
+                wall_ms: active.as_secs_f64() * 1e3,
+                computed: counters.computed,
+                approximated: counters.approximated,
+                reused: counters.reused,
+                token_sites_computed,
+                token_sites_total,
+                flops_done,
+                flops_full,
+                flops_padded,
+                cache_bytes_peak,
+            },
+            policy,
+        )
+    }
+}
+
+/// Per-lane transient state of the step currently being executed.
+struct StepCtx {
+    /// Current hidden state [cur_n, D] (cur_n shrinks when merged).
+    h: Tensor,
+    /// Conditioning embedding [1, D].
+    c: Tensor,
+    /// STR bucket index set (None without STR / before the first step).
+    motion_idx: Option<Vec<usize>>,
+    /// Token-merge context: (merge map, pre-merge Z for residual fusion).
+    merge: Option<(tokens::MergeMap, Tensor)>,
+    rec: StepRecord,
+    delta_sum: f64,
+    delta_cnt: usize,
+}
+
+/// The unified stepper: one model + one config, advancing any set of lanes
+/// (possibly at different step indices) by one denoise step per call.
+pub struct LaneStepper<'m> {
+    model: &'m DitModel,
+    fc: FastCacheConfig,
+}
+
+impl<'m> LaneStepper<'m> {
+    pub fn new(model: &'m DitModel, fc: FastCacheConfig) -> LaneStepper<'m> {
+        LaneStepper { model, fc }
+    }
+
+    pub fn model(&self) -> &'m DitModel {
+        self.model
+    }
+
+    pub fn fc(&self) -> &FastCacheConfig {
+        &self.fc
+    }
+
+    /// Build a lane with the config's policy.
+    pub fn make_lane(&self, req: &GenRequest, schedule: Arc<DdimSchedule>) -> Lane {
+        let policy = build_policy(&self.fc, self.model.cfg.layers);
+        self.lane_with_policy(req, schedule, policy)
+    }
+
+    /// Build a lane around a caller-supplied policy (L2C calibration
+    /// flows). The policy is reset before first use.
+    pub fn lane_with_policy(
+        &self,
+        req: &GenRequest,
+        schedule: Arc<DdimSchedule>,
+        mut policy: Box<dyn CachePolicy>,
+    ) -> Lane {
+        let cfg = self.model.cfg;
+        policy.reset();
+        let cond = make_cond(cfg.d, req);
+        let x = match &req.init_latent {
+            Some(t) => {
+                assert_eq!(t.shape(), &[cfg.n_tokens, C_IN]);
+                t.clone()
+            }
+            None => {
+                let mut rng = Rng::new(req.seed);
+                Tensor::new(rng.normal_vec(cfg.n_tokens * C_IN, 1.0), &[cfg.n_tokens, C_IN])
+            }
+        };
+        Lane {
+            turb_rng: req.turbulence.as_ref().map(|t| Rng::new(t.seed)),
+            cache: CacheState::new(cfg.layers, cfg.d, self.fc.fit_decay),
+            policy,
+            cond,
+            x,
+            schedule,
+            req: req.clone(),
+            step: 0,
+            records: Vec::new(),
+            token_sites_computed: 0,
+            token_sites_total: 0,
+            flops_done: 0,
+            flops_full: 0,
+            flops_padded: 0,
+            cache_bytes_peak: 0,
+            active: Duration::ZERO,
+        }
+    }
+
+    /// Advance every lane by ONE denoise step (its own step index). Per
+    /// layer, full-token Compute lanes are batched through the B=4 block
+    /// artifact in chunks; everything else runs its per-lane path exactly
+    /// as the single-request loop always did.
+    pub fn step(&self, lanes: &mut [Lane]) -> Result<()> {
+        let cfg = self.model.cfg;
+        let (n, d, layers) = (cfg.n_tokens, cfg.d, cfg.layers);
+        let nl = lanes.len();
+        if nl == 0 {
+            return Ok(());
+        }
+        assert!(
+            lanes.iter().all(|l| !l.is_done()),
+            "stepping a finished lane — retire lanes before calling step()"
+        );
+
+        // ---- Step prologue, per lane: temb + embed + policy + STR. ----
+        // Step-aligned lanes share one temb evaluation (in HLO mode each
+        // temb is a device dispatch — don't repeat it per lane).
+        let mut temb_memo: Vec<(u32, Tensor)> = Vec::new();
+        let mut ctxs: Vec<StepCtx> = Vec::with_capacity(nl);
+        for lane in lanes.iter_mut() {
+            let t0 = Instant::now();
+            let step = lane.step;
+            let tval = lane.schedule.timesteps[step];
+
+            // Conditioning embedding c = temb(t) + cond.
+            let memo_hit = temb_memo.iter().position(|(k, _)| *k == tval.to_bits());
+            let mut c = match memo_hit {
+                Some(i) => temb_memo[i].1.clone(),
+                None => {
+                    let t = self.model.temb(&[tval])?; // [1, D]
+                    temb_memo.push((tval.to_bits(), t.clone()));
+                    t
+                }
+            };
+            for (cv, cd) in c.data_mut().iter_mut().zip(&lane.cond) {
+                *cv += cd;
+            }
+
+            // Embed latent -> hidden [N, D].
+            let xb = lane.x.clone().reshape(&[1, n, C_IN]);
+            let h0 = self.model.embed(&xb)?.reshape(&[n, d]);
+
+            // Step-level deltas for the step-granular policies.
+            let temb_delta = lane
+                .cache
+                .prev_temb
+                .as_ref()
+                .map(|p| native::delta_rel(&c, p))
+                .unwrap_or(f64::INFINITY);
+            let input_delta = lane
+                .cache
+                .prev_embed
+                .as_ref()
+                .map(|p| native::delta_rel(&h0, p))
+                .unwrap_or(f64::INFINITY);
+            lane.policy.begin_step(&StepInfo {
+                step,
+                num_steps: lane.schedule.len(),
+                temb_delta,
+                input_delta,
+            });
+
+            // STR: motion/static partition on the embedded state.
+            let part = if self.fc.enable_str {
+                lane.cache.prev_embed.as_ref().map(|p| partition(&h0, p, self.fc.tau_s))
+            } else {
+                None
+            };
+            let motion_idx: Option<Vec<usize>> = part.as_ref().map(tokens::pad_to_bucket);
+            let motion_tokens = part.as_ref().map(|p| p.motion.len()).unwrap_or(n);
+
+            lane.cache.store_temb(c.clone());
+            lane.cache.store_embed(h0.clone());
+            lane.active += t0.elapsed();
+
+            ctxs.push(StepCtx {
+                h: h0,
+                c,
+                motion_idx,
+                merge: None,
+                rec: StepRecord { step, n_tokens: n, motion_tokens, ..Default::default() },
+                delta_sum: 0.0,
+                delta_cnt: 0,
+            });
+        }
+
+        // Token-merge extension (Algorithm 2, S=2 stages): merge at the
+        // midpoint, run the rest at the merged bucket, unpool at the end.
+        let merge_at = if self.fc.enable_merge { layers / 2 } else { usize::MAX };
+
+        // ---- The block stack, one layer at a time across all lanes. ----
+        for l in 0..layers {
+            // Per-lane: midpoint merge, delta, and the policy decision.
+            let mut actions = Vec::with_capacity(nl);
+            for (lane, ctx) in lanes.iter_mut().zip(ctxs.iter_mut()) {
+                let t0 = Instant::now();
+                if l == merge_at && l > 0 {
+                    // Importance = spatial kNN density x temporal saliency.
+                    let rho_sp =
+                        tokens::knn_density(&ctx.h, self.fc.knn_k.min(ctx.h.shape()[0] - 1));
+                    let rho_tm: Vec<f32> = match lane.cache.prev_input(l) {
+                        Some(p) if p.shape() == ctx.h.shape() => {
+                            tokens::temporal_saliency(&ctx.h, p)
+                        }
+                        _ => vec![0.0; ctx.h.shape()[0]],
+                    };
+                    let scores = tokens::importance(&rho_sp, &rho_tm, self.fc.merge_lambda);
+                    let (merged, map) = tokens::local_ctm(&ctx.h, &scores, self.fc.merge_target);
+                    let z = std::mem::replace(&mut ctx.h, merged); // keep Z for fusion
+                    ctx.merge = Some((map, z));
+                }
+
+                let cur_n = ctx.h.shape()[0];
+                let delta = lane
+                    .cache
+                    .prev_input(l)
+                    .filter(|p| p.shape() == ctx.h.shape())
+                    .map(|p| native::delta_rel(&ctx.h, p));
+                if let Some(dv) = delta {
+                    ctx.delta_sum += dv;
+                    ctx.delta_cnt += 1;
+                }
+                let action = lane.policy.decide(&BlockCtx {
+                    layer: l,
+                    num_layers: layers,
+                    step: ctx.rec.step,
+                    delta,
+                    nd: cur_n * d,
+                });
+                lane.flops_full += cfg.block_flops(cur_n);
+                lane.token_sites_total += cur_n as u64;
+                lane.active += t0.elapsed();
+                actions.push(action);
+            }
+
+            // Which Compute lanes can share the B=4 block artifact:
+            // full-token hidden, not merged, not on the STR bucketed path.
+            let batchable: Vec<usize> = (0..nl)
+                .filter(|&i| {
+                    actions[i] == BlockAction::Compute
+                        && ctxs[i].merge.is_none()
+                        && ctxs[i].h.shape()[0] == n
+                        && !matches!(&ctxs[i].motion_idx,
+                                     Some(idx) if idx.len() < n && !idx.is_empty())
+                })
+                .collect();
+
+            // Batched dispatch when >=2 lanes align; lone lanes fall back
+            // to the per-lane B=1 path below.
+            let mut outs: Vec<Option<Tensor>> = vec![None; nl];
+            if batchable.len() >= 2 {
+                const B: usize = 4;
+                for group in batchable.chunks(B) {
+                    if group.len() == 1 {
+                        // Leftover lane of an odd chunking: let the apply
+                        // loop's lone-compute path handle it at B=1 (one
+                        // code path for all solo computes).
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    let mut hbatch = Vec::with_capacity(B * n * d);
+                    let mut cbatch = Vec::with_capacity(B * d);
+                    for slot in 0..B {
+                        let li = group.get(slot).copied().unwrap_or(group[0]);
+                        hbatch.extend_from_slice(ctxs[li].h.data());
+                        cbatch.extend_from_slice(ctxs[li].c.data());
+                    }
+                    let hb = Tensor::new(hbatch, &[B, n, d]);
+                    let cb = Tensor::new(cbatch, &[B, d]);
+                    let out = self.model.block(l, &hb, &cb)?;
+                    for (slot, &li) in group.iter().enumerate() {
+                        outs[li] = Some(Tensor::new(
+                            out.data()[slot * n * d..(slot + 1) * n * d].to_vec(),
+                            &[n, d],
+                        ));
+                    }
+                    // Padded slots re-ran group[0]'s rows: real FLOPs with
+                    // no owner — bill them evenly across the group, and
+                    // split the group's wall time the same way.
+                    let pad_flops = (B - group.len()) as u64 * cfg.block_flops(n);
+                    let share = pad_flops / group.len() as u64;
+                    let mut rem = pad_flops % group.len() as u64;
+                    let dt = t0.elapsed() / group.len() as u32;
+                    for &li in group {
+                        let extra = if rem > 0 {
+                            rem -= 1;
+                            1
+                        } else {
+                            0
+                        };
+                        lanes[li].flops_padded += share + extra;
+                        lanes[li].active += dt;
+                    }
+                }
+            }
+
+            // Apply per-lane results: batched outputs, bucketed STR
+            // compute, lone compute, Approx, Reuse.
+            for li in 0..nl {
+                let lane = &mut lanes[li];
+                let ctx = &mut ctxs[li];
+                let t0 = Instant::now();
+                let cur_n = ctx.h.shape()[0];
+                lane.cache.counters.record(actions[li]);
+                let h_next = match actions[li] {
+                    BlockAction::Compute => {
+                        ctx.rec.computed += 1;
+                        let out = if let Some(o) = outs[li].take() {
+                            // Batched full-token compute.
+                            lane.cache.fit_mut(l).update(&ctx.h, &o);
+                            lane.flops_done += cfg.block_flops(cur_n);
+                            lane.token_sites_computed += cur_n as u64;
+                            o
+                        } else {
+                            match &ctx.motion_idx {
+                                Some(idx)
+                                    if idx.len() < cur_n
+                                        && !idx.is_empty()
+                                        && ctx.merge.is_none() =>
+                                {
+                                    // Bucketed motion-token compute; static
+                                    // rows bypass through the affine map.
+                                    let nb = idx.len();
+                                    let sub = ctx.h.gather_rows(idx);
+                                    let sub_b = sub.clone().reshape(&[1, nb, d]);
+                                    let out_sub =
+                                        self.model.block(l, &sub_b, &ctx.c)?.reshape(&[nb, d]);
+                                    lane.cache.fit_mut(l).update(&sub, &out_sub);
+                                    let mut out_full = lane.cache.fit(l).apply(&ctx.h);
+                                    out_full.scatter_rows(idx, &out_sub);
+                                    lane.flops_done += cfg.block_flops(nb)
+                                        + cfg.approx_flops(cur_n - nb, false);
+                                    lane.token_sites_computed += nb as u64;
+                                    out_full
+                                }
+                                _ => {
+                                    // Lone full-token (or merged-size) compute.
+                                    let hb = ctx.h.clone().reshape(&[1, cur_n, d]);
+                                    let out =
+                                        self.model.block(l, &hb, &ctx.c)?.reshape(&[cur_n, d]);
+                                    lane.cache.fit_mut(l).update(&ctx.h, &out);
+                                    lane.flops_done += cfg.block_flops(cur_n);
+                                    lane.token_sites_computed += cur_n as u64;
+                                    out
+                                }
+                            }
+                        };
+                        let dv = match lane.cache.prev_output(l) {
+                            Some(prev_out) if prev_out.shape() == out.shape() => {
+                                Some(native::delta_rel(&out, prev_out))
+                            }
+                            _ => None,
+                        };
+                        if let Some(dv) = dv {
+                            lane.policy.observe_output(l, dv);
+                        }
+                        out
+                    }
+                    BlockAction::Approx => {
+                        ctx.rec.approximated += 1;
+                        lane.flops_done +=
+                            cfg.approx_flops(cur_n, self.fc.approx == ApproxMode::FullMatrix);
+                        let approx = match self.fc.approx {
+                            ApproxMode::FullMatrix => {
+                                let (w, b) = lane.cache.fit(l).to_full_matrix();
+                                let hb = ctx.h.clone().reshape(&[1, cur_n, d]);
+                                self.model
+                                    .linear_approx_full(&hb, &w, &b)?
+                                    .reshape(&[cur_n, d])
+                            }
+                            _ => lane.cache.fit(l).apply(&ctx.h),
+                        };
+                        match lane.cache.prev_output(l) {
+                            Some(prev_out)
+                                if self.fc.enable_mb && prev_out.shape() == approx.shape() =>
+                            {
+                                approx.lerp(prev_out, self.fc.gamma, 1.0 - self.fc.gamma)
+                            }
+                            _ => approx,
+                        }
+                    }
+                    BlockAction::Reuse => {
+                        ctx.rec.reused += 1;
+                        match lane.cache.prev_output(l) {
+                            Some(prev_out) if prev_out.shape() == ctx.h.shape() => {
+                                prev_out.clone()
+                            }
+                            _ => ctx.h.clone(),
+                        }
+                    }
+                };
+                // One clone per site instead of two: the pre-block hidden
+                // moves into the cache, only the output copy remains.
+                let prev = std::mem::replace(&mut ctx.h, h_next);
+                lane.cache.store_input(l, prev);
+                lane.cache.store_output(l, ctx.h.clone());
+                lane.active += t0.elapsed();
+            }
+        }
+
+        // ---- Step epilogue, per lane: unpool, final layer, DDIM. ----
+        for (lane, ctx) in lanes.iter_mut().zip(ctxs.into_iter()) {
+            let t0 = Instant::now();
+            let StepCtx { mut h, c, merge, mut rec, delta_sum, delta_cnt, .. } = ctx;
+
+            // Unpool + residual fusion if merged (Algorithm 2's MTA phase).
+            if let Some((map, z)) = merge {
+                let restored = tokens::unpool(&h, &map);
+                h = restored.lerp(&z, 1.0, 1.0); // Unpool(H) + Z
+            }
+
+            rec.mean_delta = if delta_cnt > 0 { delta_sum / delta_cnt as f64 } else { 0.0 };
+
+            // Final projection + DDIM update.
+            let hb = h.reshape(&[1, n, d]);
+            let eps = self.model.final_layer(&hb, &c)?.reshape(&[n, C_IN]);
+            let sched = Arc::clone(&lane.schedule);
+            sched.update(lane.step, lane.x.data_mut(), eps.data());
+
+            // Synthetic motion: re-noise the turbulent token rows.
+            if let (Some(t), Some(rng)) = (&lane.req.turbulence, &mut lane.turb_rng) {
+                for &i in &t.tokens {
+                    for v in lane.x.row_mut(i) {
+                        *v += t.amp * rng.normal();
+                    }
+                }
+            }
+
+            lane.records.push(rec);
+            lane.cache_bytes_peak = lane.cache_bytes_peak.max(lane.cache.size_bytes());
+            lane.step += 1;
+            lane.active += t0.elapsed();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyKind, Variant};
+    use crate::scheduler::ddim::ScheduleCache;
+
+    #[test]
+    fn lane_steps_to_completion() {
+        let model = DitModel::native(Variant::S, 7);
+        let stepper = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut schedules = ScheduleCache::new();
+        let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 5), schedules.get(5));
+        assert_eq!(lane.total_steps(), 5);
+        while !lane.is_done() {
+            let before = lane.step_index();
+            stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+            assert_eq!(lane.step_index(), before + 1);
+        }
+        let r = lane.into_result();
+        assert_eq!(r.computed, 5 * model.cfg.layers);
+        assert_eq!(r.flops_padded, 0, "single lane never pads");
+        assert!(r.wall_ms > 0.0);
+        assert!(r.latent.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lanes_at_different_steps_coexist() {
+        // Continuous batching's core property: one lane mid-flight, a new
+        // lane admitted later, both stepped together, both finish clean.
+        let model = DitModel::native(Variant::S, 7);
+        let fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
+        let stepper = LaneStepper::new(&model, fc.clone());
+        let mut schedules = ScheduleCache::new();
+
+        let mut lanes =
+            vec![stepper.make_lane(&GenRequest::simple(0, 21, 6), schedules.get(6))];
+        stepper.step(&mut lanes).unwrap();
+        stepper.step(&mut lanes).unwrap();
+        lanes.push(stepper.make_lane(&GenRequest::simple(1, 22, 4), schedules.get(4)));
+        for _ in 0..4 {
+            stepper.step(&mut lanes).unwrap();
+        }
+        assert!(lanes.iter().all(|l| l.is_done()));
+
+        // The mid-flight-joined lane matches a solo run exactly.
+        let solo = {
+            let mut l = stepper.make_lane(&GenRequest::simple(1, 22, 4), schedules.get(4));
+            while !l.is_done() {
+                stepper.step(std::slice::from_mut(&mut l)).unwrap();
+            }
+            l.into_result()
+        };
+        let joined = lanes.pop().unwrap().into_result();
+        let md = joined.latent.max_abs_diff(&solo.latent);
+        assert!(md < 1e-4, "joined-lane drift: {md}");
+    }
+
+    #[test]
+    fn padded_slots_are_billed() {
+        // 3 NoCache lanes => every (step, layer) site batches 3 lanes into
+        // the B=4 artifact with one padded slot.
+        let model = DitModel::native(Variant::S, 7);
+        let stepper = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut schedules = ScheduleCache::new();
+        let steps = 3;
+        let mut lanes: Vec<Lane> = (0..3)
+            .map(|i| stepper.make_lane(&GenRequest::simple(i, 50 + i, steps), schedules.get(steps)))
+            .collect();
+        for _ in 0..steps {
+            stepper.step(&mut lanes).unwrap();
+        }
+        let total_padded: u64 =
+            lanes.into_iter().map(|l| l.into_result().flops_padded).sum();
+        let expected =
+            (steps * model.cfg.layers) as u64 * model.cfg.block_flops(model.cfg.n_tokens);
+        assert_eq!(total_padded, expected, "one padded slot per site");
+    }
+}

@@ -1,11 +1,15 @@
-//! Denoise scheduling: the DDIM schedule, the single-request engine
-//! (Algorithm 1 + the Algorithm 2 token-merge extension), and the
-//! step-aligned batched engine.
+//! Denoise scheduling: the DDIM schedule, the unified lane-based stepper
+//! (Algorithm 1 + the Algorithm 2 token-merge extension, executed once
+//! for every serving mode), and its two drivers — `DenoiseEngine`
+//! (batch-of-one) and `BatchEngine` (lockstep batch). The serving worker
+//! drives the stepper directly with continuous batching.
 
 pub mod batch;
 pub mod ddim;
 pub mod engine;
+pub mod lane;
 
 pub use batch::BatchEngine;
-pub use ddim::DdimSchedule;
-pub use engine::{DenoiseEngine, GenRequest, GenResult, StepRecord, Turbulence};
+pub use ddim::{DdimSchedule, ScheduleCache};
+pub use engine::DenoiseEngine;
+pub use lane::{GenRequest, GenResult, Lane, LaneStepper, StepRecord, Turbulence};

@@ -1,5 +1,7 @@
-//! Serving layer: bounded request queue with backpressure, a worker loop
-//! that forms step-aligned batches, and per-server metrics.
+//! Serving layer: bounded request queue with backpressure, a
+//! continuous-batching worker over the unified lane stepper (lanes at
+//! different steps coexist; admission happens at step boundaries), and
+//! per-server metrics including occupancy and admission latency.
 //!
 //! Threading note: tokio is not vendored in the offline registry, so the
 //! server uses std threads + channels. On the single-core CPU testbed this

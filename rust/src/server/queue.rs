@@ -10,7 +10,8 @@ use crate::scheduler::{GenRequest, GenResult};
 #[derive(Debug)]
 pub struct GenResponse {
     pub result: GenResult,
-    /// Time spent queued before a worker picked the request up (ms).
+    /// Admission latency: submit → lane admitted into the worker's
+    /// active set (ms).
     pub queued_ms: f64,
     /// End-to-end latency: submit -> response (ms).
     pub e2e_ms: f64,
@@ -21,6 +22,13 @@ pub struct Job {
     pub req: GenRequest,
     pub resp: mpsc::Sender<GenResponse>,
     pub submitted: Instant,
+}
+
+impl Job {
+    /// Milliseconds since the request was submitted.
+    pub fn waited_ms(&self) -> f64 {
+        self.submitted.elapsed().as_secs_f64() * 1e3
+    }
 }
 
 /// Submission failure modes.

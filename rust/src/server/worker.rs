@@ -1,9 +1,15 @@
-//! The serving worker: drains the bounded queue, forms step-aligned
-//! batches, and runs them through the batch engine (full-token mode) or
-//! the single-request engine (token-reduction mode, whose bucketed shapes
-//! cannot share a batch).
+//! The serving worker: continuous batching over the unified lane stepper.
+//!
+//! The old design drained the queue into step-aligned lockstep groups and
+//! fell back to slow single-request mode whenever STR or token merge was
+//! enabled (`can_batch`). That gate is gone: every config runs through
+//! `LaneStepper::step`, which batches whatever aligns (full-token Compute
+//! sites through the B=4 artifact) and runs the rest per-lane. Lanes at
+//! different step indices coexist in one active set; finished lanes
+//! retire and queued jobs are admitted at step boundaries, so the worker
+//! never drains before taking new work.
 
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -12,7 +18,7 @@ use anyhow::Result;
 use crate::config::{FastCacheConfig, ServerConfig};
 use crate::metrics::LatencyHistogram;
 use crate::model::DitModel;
-use crate::scheduler::{BatchEngine, DenoiseEngine, GenRequest};
+use crate::scheduler::{GenRequest, Lane, LaneStepper, ScheduleCache};
 
 use super::queue::{GenResponse, Job, SubmitError};
 
@@ -21,13 +27,32 @@ use super::queue::{GenResponse, Job, SubmitError};
 pub struct ServerReport {
     pub completed: u64,
     pub e2e: LatencyHistogram,
-    pub queue_wait: LatencyHistogram,
+    /// Admission latency: submit → lane admitted into the active set (ms).
+    pub admission_wait: LatencyHistogram,
     pub wall_s: f64,
-    pub batches: u64,
-    pub batched_requests: u64,
+    /// Unified-stepper invocations; each advances every active lane by
+    /// one denoise step.
+    pub step_calls: u64,
+    /// Occupancy integral: Σ over step calls of the active-lane count.
+    pub lane_steps: u64,
+    /// FLOPs burnt in padded B=4 batch slots across all completed lanes
+    /// (batch-shape overhead that used to be invisible).
+    pub padded_flops: u64,
 }
 
 impl ServerReport {
+    fn new() -> ServerReport {
+        ServerReport {
+            completed: 0,
+            e2e: LatencyHistogram::new(),
+            admission_wait: LatencyHistogram::new(),
+            wall_s: 0.0,
+            step_calls: 0,
+            lane_steps: 0,
+            padded_flops: 0,
+        }
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         if self.wall_s <= 0.0 {
             0.0
@@ -36,12 +61,19 @@ impl ServerReport {
         }
     }
 
+    /// Mean number of lanes advancing together per step call — the
+    /// continuous-batching occupancy. > 1 means batching happened.
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batches == 0 {
+        if self.step_calls == 0 {
             0.0
         } else {
-            self.batched_requests as f64 / self.batches as f64
+            self.lane_steps as f64 / self.step_calls as f64
         }
+    }
+
+    /// Alias with the serving-literature name.
+    pub fn occupancy(&self) -> f64 {
+        self.mean_batch_size()
     }
 }
 
@@ -74,11 +106,34 @@ impl Server {
         }
     }
 
+    /// Submit, sleeping through backpressure until the queue accepts the
+    /// request. Only fails when the server is shutting down.
+    pub fn submit_blocking(
+        &self,
+        req: &GenRequest,
+    ) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
+        loop {
+            match self.submit(req.clone()) {
+                Ok(rx) => return Ok(rx),
+                Err(SubmitError::QueueFull) => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
     /// Close the queue and wait for the worker to drain.
     pub fn shutdown(mut self) -> ServerReport {
         drop(self.tx.take());
         self.handle.take().expect("not yet joined").join().expect("worker panicked")
     }
+}
+
+/// A lane's serving-side envelope, parallel to the lane vector.
+struct Inflight {
+    job: Job,
+    admitted: Instant,
 }
 
 fn worker_loop<F>(
@@ -91,94 +146,84 @@ where
     F: FnOnce() -> Result<DitModel>,
 {
     let model = model_factory().expect("model load failed");
-    let mut report = ServerReport {
-        completed: 0,
-        e2e: LatencyHistogram::new(),
-        queue_wait: LatencyHistogram::new(),
-        wall_s: 0.0,
-        batches: 0,
-        batched_requests: 0,
-    };
+    let stepper = LaneStepper::new(&model, fc);
+    let mut schedules = ScheduleCache::new();
+    let mut report = ServerReport::new();
+    // Guard against unvalidated configs: max_batch = 0 must degrade to
+    // solo serving, not livelock the admission loop.
+    let max_batch = scfg.max_batch.max(1);
     let t0 = Instant::now();
 
-    // STR produces per-request bucket shapes; batching needs uniform
-    // full-token shapes.
-    let can_batch = !fc.enable_str && !fc.enable_merge && scfg.max_batch > 1;
+    let mut lanes: Vec<Lane> = Vec::new();
+    let mut inflight: Vec<Inflight> = Vec::new();
+    let mut closed = false;
 
     loop {
-        // Blocking wait for the first job; drain compatible ones behind it.
-        let first = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => break, // queue closed and empty
-        };
-        let mut group = vec![first];
-        if can_batch {
-            while group.len() < scfg.max_batch {
-                match rx.try_recv() {
-                    Ok(j) if j.req.steps == group[0].req.steps => group.push(j),
-                    Ok(j) => {
-                        // Step-misaligned: serve it solo right after.
-                        process_group(&model, &fc, vec![j], &mut report, false);
-                        continue;
+        // Admission, at the step boundary: fill free lane slots. Block
+        // only when idle; otherwise take whatever is already queued.
+        while !closed && lanes.len() < max_batch {
+            let job = if lanes.is_empty() {
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => {
+                        closed = true;
+                        break;
                     }
-                    Err(_) => break,
                 }
-            }
+            } else {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            };
+            // One admission instant, used for both the report histogram
+            // and the per-response queued_ms — they must agree.
+            let admitted = Instant::now();
+            report
+                .admission_wait
+                .record(admitted.duration_since(job.submitted).as_secs_f64() * 1e3);
+            lanes.push(stepper.make_lane(&job.req, schedules.get(job.req.steps)));
+            inflight.push(Inflight { job, admitted });
         }
-        let batched = can_batch && group.len() > 1;
-        process_group(&model, &fc, group, &mut report, batched);
+        if lanes.is_empty() {
+            if closed {
+                break;
+            }
+            continue;
+        }
+
+        // One denoise step across the whole active set (lanes may sit at
+        // different step indices — the stepper handles that).
+        report.step_calls += 1;
+        report.lane_steps += lanes.len() as u64;
+        stepper.step(&mut lanes).expect("denoise step failed");
+
+        // Retire finished lanes; their slots free up for the next
+        // admission round.
+        let mut i = 0;
+        while i < lanes.len() {
+            if !lanes[i].is_done() {
+                i += 1;
+                continue;
+            }
+            let lane = lanes.swap_remove(i);
+            let fl = inflight.swap_remove(i);
+            let result = lane.into_result();
+            report.padded_flops += result.flops_padded;
+            let e2e = fl.job.submitted.elapsed().as_secs_f64() * 1e3;
+            let queued_ms = fl.admitted.duration_since(fl.job.submitted).as_secs_f64() * 1e3;
+            report.e2e.record(e2e);
+            report.completed += 1;
+            let _ = fl.job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e });
+        }
     }
 
     report.wall_s = t0.elapsed().as_secs_f64();
     report
-}
-
-fn process_group(
-    model: &DitModel,
-    fc: &FastCacheConfig,
-    group: Vec<Job>,
-    report: &mut ServerReport,
-    batched: bool,
-) {
-    let picked = Instant::now();
-    for j in &group {
-        report
-            .queue_wait
-            .record(picked.duration_since(j.submitted).as_secs_f64() * 1e3);
-    }
-    report.batches += 1;
-    report.batched_requests += group.len() as u64;
-
-    if batched {
-        let reqs: Vec<GenRequest> = group.iter().map(|j| j.req.clone()).collect();
-        let be = BatchEngine::new(model, fc.clone(), group.len().max(1));
-        match be.generate(&reqs) {
-            Ok(results) => {
-                for (job, result) in group.into_iter().zip(results) {
-                    let e2e = job.submitted.elapsed().as_secs_f64() * 1e3;
-                    report.e2e.record(e2e);
-                    report.completed += 1;
-                    let queued_ms = picked.duration_since(job.submitted).as_secs_f64() * 1e3;
-                    let _ = job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e });
-                }
-            }
-            Err(e) => panic!("batch generation failed: {e:#}"),
-        }
-    } else {
-        for job in group {
-            let mut eng = DenoiseEngine::new(model, fc.clone());
-            match eng.generate(&job.req) {
-                Ok(result) => {
-                    let e2e = job.submitted.elapsed().as_secs_f64() * 1e3;
-                    report.e2e.record(e2e);
-                    report.completed += 1;
-                    let queued_ms = picked.duration_since(job.submitted).as_secs_f64() * 1e3;
-                    let _ = job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e });
-                }
-                Err(e) => panic!("generation failed: {e:#}"),
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -211,6 +256,7 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.completed, 6);
         assert!(report.throughput_rps() > 0.0);
+        assert_eq!(report.admission_wait.count(), 6);
     }
 
     #[test]
@@ -263,5 +309,51 @@ mod tests {
             "no batching happened: {}",
             report.mean_batch_size()
         );
+    }
+
+    #[test]
+    fn str_enabled_configs_batch() {
+        // The whole point of the unified stepper: STR (and every other
+        // token-reduction mode) no longer forces single-request serving.
+        let mut scfg = ServerConfig::default();
+        scfg.max_batch = 4;
+        scfg.queue_depth = 32;
+        let fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        assert!(fc.enable_str, "FastCache default must enable STR");
+        let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            rxs.push(server.submit(GenRequest::simple(i, 31 + i, 6)).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 12);
+        assert!(
+            report.mean_batch_size() > 1.0,
+            "STR config did not batch: occupancy {}",
+            report.mean_batch_size()
+        );
+    }
+
+    #[test]
+    fn mixed_step_requests_coexist() {
+        // Continuous batching admits lanes with different step counts into
+        // one active set — no step-alignment grouping anymore.
+        let server = test_server(PolicyKind::FastCache, 4, 32);
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            rxs.push((4usize, server.submit(GenRequest::simple(i, 11 + i, 4)).unwrap()));
+            rxs.push((8usize, server.submit(GenRequest::simple(10 + i, 17 + i, 8)).unwrap()));
+        }
+        for (steps, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.result.records.len(), steps);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 8);
+        assert!(report.mean_batch_size() > 1.0);
     }
 }

@@ -266,7 +266,7 @@ fn prop_batch_engine_matches_single_nocache() {
                 .enumerate()
                 .map(|(i, &s)| GenRequest::simple(i as u64, s, *steps))
                 .collect();
-            let be = BatchEngine::new(&model, fc.clone(), 4);
+            let mut be = BatchEngine::new(&model, fc.clone(), 4);
             let batched = be.generate(&reqs).map_err(|e| e.to_string())?;
             for (i, req) in reqs.iter().enumerate() {
                 let single = DenoiseEngine::new(&model, fc.clone())

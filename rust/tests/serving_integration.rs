@@ -1,6 +1,6 @@
-//! Serving-layer integration: queue → batcher → engine → response, over
-//! the native execution path (fast) plus one HLO-backed smoke test when
-//! artifacts are present.
+//! Serving-layer integration: queue → continuous-batching worker → lane
+//! stepper → response, over the native execution path (fast) plus one
+//! HLO-backed smoke test when artifacts are present.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -49,6 +49,41 @@ fn throughput_improves_with_caching() {
         "fastcache serving ({:.3}s) not faster than nocache ({:.3}s)",
         walls[1],
         walls[0]
+    );
+}
+
+#[test]
+fn str_enabled_serving_batches_and_matches_single_request() {
+    // The config the paper actually evaluates (FastCache with STR on) used
+    // to be gated out of batching entirely. It must now batch AND return
+    // the same numerics as a solo engine run.
+    let mut scfg = ServerConfig::default();
+    scfg.max_batch = 4;
+    scfg.queue_depth = 64;
+    let fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+    assert!(fc.enable_str);
+    let server = Server::start(scfg, fc.clone(), || Ok(DitModel::native(Variant::S, 5)));
+
+    let mut wl = WorkloadGen::new(8);
+    let reqs = wl.image_set(8, 6, MotionProfile::MIXED);
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|r| (r.clone(), server.submit(r.clone()).expect("submit")))
+        .collect();
+    let model = DitModel::native(Variant::S, 5);
+    for (req, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        let mut eng = DenoiseEngine::new(&model, fc.clone());
+        let solo = eng.generate(&req).expect("solo generate");
+        let md = resp.result.latent.max_abs_diff(&solo.latent);
+        assert!(md < 1e-4, "req {}: served vs solo diff {md}", req.id);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.completed, 8);
+    assert!(
+        report.mean_batch_size() > 1.0,
+        "STR serving did not batch: occupancy {}",
+        report.mean_batch_size()
     );
 }
 

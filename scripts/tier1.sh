@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ROADMAP.md): release build + test suite + formatting.
+# Run from anywhere; it cd's to the repo root. CI runs exactly this.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH — install a Rust toolchain (rustup) first" >&2
+    exit 1
+fi
+
+cargo build --release
+cargo test -q
+cargo fmt --check
+echo "tier1: OK"
