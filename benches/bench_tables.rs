@@ -5,6 +5,10 @@
 //!   cargo bench --bench bench_tables            # all tables + figures
 //!   cargo bench --bench bench_tables -- table1  # one experiment
 //!   BENCH_FULL=1 cargo bench ...                # paper-faithful sizes
+//!   BENCH_SMOKE=1 cargo bench -- serving sharding  # CI smoke sizes
+//!
+//! The serving and sharding tables also land as bench_out/BENCH_*.json
+//! (uploaded as a CI artifact by scripts/bench_smoke.sh).
 //!
 //! Absolute numbers differ from the paper (CPU PJRT substrate, latent
 //! FID proxies — see DESIGN.md §2); the reproduced signal is each table's
@@ -13,7 +17,8 @@
 
 use fastcache_dit::config::{FastCacheConfig, PolicyKind, Variant, C_IN};
 use fastcache_dit::experiments::{
-    baseline_policies, eval_policies, eval_serving, eval_video, EvalConfig,
+    baseline_policies, eval_policies, eval_serving, eval_sharding, eval_video, EvalConfig,
+    ShardingEval,
 };
 use fastcache_dit::metrics::report::{f1, pct, Table};
 use fastcache_dit::model::DitModel;
@@ -35,6 +40,23 @@ fn quick(v: Variant) -> EvalConfig {
 
 fn fc(policy: PolicyKind) -> FastCacheConfig {
     FastCacheConfig::with_policy(policy)
+}
+
+/// CI smoke mode (scripts/bench_smoke.sh): tiny sizes, same tables.
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").as_deref() == Ok("1")
+}
+
+/// Persist a table's rows as `bench_out/BENCH_<name>.json` so CI can
+/// upload them and the perf trajectory accumulates per-PR.
+fn write_json(name: &str, rows_json: Vec<String>) {
+    std::fs::create_dir_all("bench_out").ok();
+    let path = format!("bench_out/BENCH_{name}.json");
+    let body = format!("{{\"table\":\"{name}\",\"rows\":[{}]}}\n", rows_json.join(","));
+    match std::fs::write(&path, body) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn std_headers() -> Vec<&'static str> {
@@ -450,7 +472,13 @@ fn table15() {
 /// B=4 slot overhead visible.
 fn serving() {
     let full = std::env::var("BENCH_FULL").as_deref() == Ok("1");
-    let (requests, steps) = if full { (24, 20) } else { (12, 8) };
+    let (requests, steps) = if smoke() {
+        (6, 4)
+    } else if full {
+        (24, 20)
+    } else {
+        (12, 8)
+    };
     let mut no_str = fc(PolicyKind::FastCache);
     no_str.enable_str = false;
     let with_str = fc(PolicyKind::FastCache); // STR on by default
@@ -489,6 +517,83 @@ fn serving() {
         ]);
     }
     println!("{}", t.render());
+    write_json(
+        "serving",
+        rows.iter()
+            .map(|r| {
+                format!(
+                    "{{\"label\":\"{}\",\"rps\":{:.4},\"p50_ms\":{:.2},\"p95_ms\":{:.2},\
+                     \"occupancy\":{:.3},\"admission_p50_ms\":{:.2},\"padded_gflops\":{:.4}}}",
+                    r.label, r.rps, r.p50_ms, r.p95_ms, r.occupancy, r.admission_p50_ms,
+                    r.padded_gflops
+                )
+            })
+            .collect(),
+    );
+}
+
+/// Sharding: the same synthetic burst (with a deadline-tagged SLA slice)
+/// served at workers ∈ {1, 2, 4}. The signal is aggregate throughput vs
+/// worker count (non-decreasing on multi-core hosts), the deadline-hit
+/// rate, and how least-predicted-load routing spread the burst.
+fn sharding() {
+    let mut e = ShardingEval::quick(Variant::S);
+    if smoke() {
+        e.requests = 8;
+        e.steps = 4;
+    }
+    let fc = fc(PolicyKind::FastCache);
+    let rows = eval_sharding(&fc, &e).unwrap();
+    let mut t = Table::new(
+        "Sharding — multi-worker serving, SLA-aware admission",
+        &[
+            "Workers",
+            "req/s↑",
+            "p50 (ms)↓",
+            "p95 (ms)↓",
+            "Occupancy↑",
+            "Deadline hit↑",
+            "Padded GFLOP↓",
+            "Per-shard completed",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            format!("{}", r.workers),
+            format!("{:.2}", r.rps),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p95_ms),
+            format!("{:.2}", r.occupancy),
+            r.deadline_hit_rate.map(pct).unwrap_or_else(|| "n/a".to_string()),
+            format!("{:.3}", r.padded_gflops),
+            format!("{:?}", r.shard_completed),
+        ]);
+    }
+    println!("{}", t.render());
+    write_json(
+        "sharding",
+        rows.iter()
+            .map(|r| {
+                format!(
+                    "{{\"workers\":{},\"completed\":{},\"wall_s\":{:.4},\"rps\":{:.4},\
+                     \"p50_ms\":{:.2},\"p95_ms\":{:.2},\"occupancy\":{:.3},\
+                     \"deadline_hit_rate\":{},\"padded_gflops\":{:.4},\"shard_completed\":{:?}}}",
+                    r.workers,
+                    r.completed,
+                    r.wall_s,
+                    r.rps,
+                    r.p50_ms,
+                    r.p95_ms,
+                    r.occupancy,
+                    r.deadline_hit_rate
+                        .map(|v| format!("{v:.4}"))
+                        .unwrap_or_else(|| "null".to_string()),
+                    r.padded_gflops,
+                    r.shard_completed
+                )
+            })
+            .collect(),
+    );
 }
 
 /// Figure 1: derivative-magnitude heatmap, high- vs low-motion content.
@@ -648,6 +753,9 @@ fn main() {
     }
     if want("serving") {
         serving();
+    }
+    if want("sharding") {
+        sharding();
     }
     if want("fig1") {
         fig1();

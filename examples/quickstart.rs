@@ -2,17 +2,23 @@
 //! DiT-S model, and generate one image latent with FastCache on — the
 //! minimal end-to-end tour of the public API.
 //!
+//! Without artifacts (or with --native) it falls back to the
+//! numerically-equivalent native execution path, so CI can smoke-run the
+//! example before the Python toolchain has produced any artifacts.
+//!
 //!   make artifacts && cargo run --release --example quickstart
 
 use std::sync::Arc;
 
 use anyhow::Result;
-use fastcache_dit::config::{FastCacheConfig, Variant};
+use fastcache_dit::config::{Args, FastCacheConfig, Variant};
 use fastcache_dit::model::DitModel;
 use fastcache_dit::runtime::{ArtifactStore, Client};
 use fastcache_dit::scheduler::{DenoiseEngine, GenRequest};
 
-fn main() -> Result<()> {
+/// The HLO path: PJRT CPU client + compiled artifact store + device
+/// weight upload. Fails when the runtime or artifacts are unavailable.
+fn load_hlo_model() -> Result<DitModel> {
     // 1. PJRT CPU client + compiled artifact store (HLO text -> executable).
     let client = Arc::new(Client::cpu()?);
     println!("PJRT platform: {}", client.platform());
@@ -20,7 +26,23 @@ fn main() -> Result<()> {
     println!("artifacts loaded: {} programs available", store.names().count());
 
     // 2. A servable model: weights generated (seeded) and uploaded once.
-    let model = DitModel::load(client.clone(), store, Variant::S, 0xD17)?;
+    DitModel::load(client, store, Variant::S, 0xD17)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let model = if args.flag("native") {
+        println!("--native: using the pure-Rust execution path");
+        DitModel::native(Variant::S, 0xD17)
+    } else {
+        match load_hlo_model() {
+            Ok(m) => m,
+            Err(e) => {
+                println!("HLO path unavailable ({e:#}); falling back to native execution");
+                DitModel::native(Variant::S, 0xD17)
+            }
+        }
+    };
     println!(
         "model {} — {} layers, d={}, {:.1}M params",
         model.cfg.variant.paper_name(),
@@ -51,10 +73,12 @@ fn main() -> Result<()> {
         out.skip_ratio() * 100.0,
         out.flops_ratio() * 100.0
     );
-    println!(
-        "device memory: live {:.1} MiB, peak {:.1} MiB",
-        client.meter.live_bytes() as f64 / (1 << 20) as f64,
-        client.meter.peak_bytes() as f64 / (1 << 20) as f64
-    );
+    if let Some(meter) = model.meter() {
+        println!(
+            "device memory: live {:.1} MiB, peak {:.1} MiB",
+            meter.live_bytes() as f64 / (1 << 20) as f64,
+            meter.peak_bytes() as f64 / (1 << 20) as f64
+        );
+    }
     Ok(())
 }

@@ -1,13 +1,18 @@
 //! END-TO-END VALIDATION DRIVER (DESIGN.md / EXPERIMENTS.md §E2E): load a
 //! small real model through the full AOT path (JAX+Pallas → HLO text →
-//! PJRT), start the continuous-batching server, serve a request workload,
-//! and report latency/throughput/occupancy with FastCache on vs off —
-//! proving all three layers compose on the serving hot path. With the
-//! unified lane stepper, STR-enabled configs batch too (the third row
+//! PJRT), start the sharded continuous-batching server, serve a request
+//! workload, and report latency/throughput/occupancy with FastCache on vs
+//! off — proving all three layers compose on the serving hot path. With
+//! the unified lane stepper, STR-enabled configs batch too (the third row
 //! used to fall back to single-request serving).
 //!
+//! When the AOT artifacts are absent (or with --native), the driver falls
+//! back to the numerically-equivalent native execution path so CI can
+//! smoke-run it without the Python toolchain.
+//!
 //!   make artifacts && cargo run --release --example serve_batch
-//!   [--model s] [--requests 12] [--steps 20] [--policy fastcache|nocache]
+//!   [--model s] [--requests 12] [--steps 20] [--workers 2]
+//!   [--policy fastcache|nocache] [--native]
 
 use std::path::Path;
 use std::sync::Arc;
@@ -24,6 +29,8 @@ fn main() -> Result<()> {
     let variant = Variant::parse(args.get_or("model", "l")).context("bad --model")?;
     let requests: usize = args.parse_num("requests", 8).map_err(anyhow::Error::msg)?;
     let steps: usize = args.parse_num("steps", 20).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.parse_num("workers", 1).map_err(anyhow::Error::msg)?;
+    let native = args.flag("native") || !Path::new("artifacts/manifest.txt").exists();
     // (policy, enable STR). STR buckets run per-lane inside the unified
     // stepper while full-token Compute sites still batch through the B=4
     // artifact — the third row shows STR batching, not a fallback.
@@ -37,19 +44,30 @@ fn main() -> Result<()> {
     };
 
     println!("=== serve_batch: end-to-end driver over the AOT/PJRT path ===");
-    println!("model {} | {requests} requests x {steps} steps | batched serving\n",
-             variant.paper_name());
+    println!(
+        "model {} | {requests} requests x {steps} steps | {workers} worker shard(s) | {} path",
+        variant.paper_name(),
+        if native { "native (no artifacts)" } else { "HLO/PJRT" }
+    );
+    println!();
 
     let mut summary = Vec::new();
     for (policy, str_on) in policies {
-        let mut scfg = ServerConfig::default();
-        scfg.variant = variant;
-        scfg.steps = steps;
-        scfg.max_batch = 4;
+        let scfg = ServerConfig {
+            variant,
+            steps,
+            max_batch: 4,
+            workers,
+            ..ServerConfig::default()
+        };
+        scfg.validate().map_err(anyhow::Error::msg)?;
         let mut fc = FastCacheConfig::with_policy(policy);
         fc.enable_str = str_on;
 
         let server = Server::start(scfg, fc, move || {
+            if native {
+                return Ok(DitModel::native(variant, 0xD17));
+            }
             let client = Arc::new(Client::cpu()?);
             let store = Arc::new(ArtifactStore::open(Path::new("artifacts"))?);
             let model = DitModel::load(client, store, variant, 0xD17)?;
@@ -84,10 +102,10 @@ fn main() -> Result<()> {
             skip_sum / requests as f64 * 100.0,
         );
         summary.push((policy, wall));
-        let _ = str_on;
     }
     if summary.len() >= 2 {
-        let speedup = summary[0].1 / summary.iter().skip(1).map(|s| s.1).fold(f64::INFINITY, f64::min);
+        let best = summary.iter().skip(1).map(|s| s.1).fold(f64::INFINITY, f64::min);
+        let speedup = summary[0].1 / best;
         println!(
             "\nFastCache end-to-end serving speedup vs NoCache: {speedup:.2}x \
              (paper DiT-XL/2: 1.74x; shape reproduced — caching wins on wall-clock \

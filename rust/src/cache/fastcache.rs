@@ -80,16 +80,14 @@ mod tests {
 
     #[test]
     fn sc_disabled_always_computes() {
-        let mut cfg = FastCacheConfig::default();
-        cfg.enable_sc = false;
+        let cfg = FastCacheConfig { enable_sc: false, ..FastCacheConfig::default() };
         let mut p = FastCachePolicy::new(&cfg);
         assert_eq!(p.decide(&ctx(Some(0.0), 6144)), BlockAction::Compute);
     }
 
     #[test]
     fn reuse_mode_reuses() {
-        let mut cfg = FastCacheConfig::default();
-        cfg.approx = ApproxMode::Reuse;
+        let cfg = FastCacheConfig { approx: ApproxMode::Reuse, ..FastCacheConfig::default() };
         let mut p = FastCachePolicy::new(&cfg);
         assert_eq!(p.decide(&ctx(Some(0.01), 6144)), BlockAction::Reuse);
     }
@@ -98,10 +96,8 @@ mod tests {
     fn alpha_sweep_changes_skip_region() {
         // delta chosen between the two thresholds.
         let nd = 64 * 288;
-        let mut loose = FastCacheConfig::default();
-        loose.alpha = 0.01;
-        let mut strict = FastCacheConfig::default();
-        strict.alpha = 0.30;
+        let loose = FastCacheConfig { alpha: 0.01, ..FastCacheConfig::default() };
+        let strict = FastCacheConfig { alpha: 0.30, ..FastCacheConfig::default() };
         let mut pl = FastCachePolicy::new(&loose);
         let mut ps = FastCachePolicy::new(&strict);
         let tl = Chi2Rule::new(0.01, 0.15).threshold_sq(nd).sqrt();

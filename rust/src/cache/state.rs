@@ -136,19 +136,13 @@ mod tests {
 
     #[test]
     fn counters_ratio() {
-        let mut c = CacheCounters::default();
-        c.computed = 6;
-        c.approximated = 3;
-        c.reused = 1;
+        let mut c = CacheCounters { computed: 6, approximated: 3, reused: 1 };
         assert_eq!(c.total(), 10);
         c.record(BlockAction::Compute);
         c.record(BlockAction::Approx);
         c.record(BlockAction::Reuse);
         assert_eq!((c.computed, c.approximated, c.reused), (7, 4, 2));
-        c = CacheCounters::default();
-        c.computed = 6;
-        c.approximated = 3;
-        c.reused = 1;
+        let c = CacheCounters { computed: 6, approximated: 3, reused: 1 };
         assert!((c.skip_ratio() - 0.4).abs() < 1e-12);
         assert_eq!(CacheCounters::default().skip_ratio(), 0.0);
     }

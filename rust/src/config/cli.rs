@@ -18,7 +18,7 @@ const VALUE_OPTS: &[&str] = &[
     "requests", "max-batch", "queue-depth", "artifacts", "seed", "workers",
     "knn-k", "merge-target", "motion", "frames", "approx", "fb-rdt",
     "tea-threshold", "l2c-threshold", "static-period", "out", "table",
-    "warmup", "iters", "quant",
+    "warmup", "iters", "quant", "deadline-every", "deadline-ms",
 ];
 
 impl Args {

@@ -219,14 +219,11 @@ mod tests {
 
     #[test]
     fn validation_rejects_bad_values() {
-        let mut c = FastCacheConfig::default();
-        c.alpha = 0.0;
+        let c = FastCacheConfig { alpha: 0.0, ..FastCacheConfig::default() };
         assert!(c.validate().is_err());
-        c = FastCacheConfig::default();
-        c.gamma = 1.5;
+        let c = FastCacheConfig { gamma: 1.5, ..FastCacheConfig::default() };
         assert!(c.validate().is_err());
-        c = FastCacheConfig::default();
-        c.knn_k = 0;
+        let c = FastCacheConfig { knn_k: 0, ..FastCacheConfig::default() };
         assert!(c.validate().is_err());
     }
 

@@ -112,6 +112,16 @@ impl ModelConfig {
         qkv + attn + proj + mlp + moddot
     }
 
+    /// FLOPs of one full-compute denoise step at full tokens (all layers,
+    /// no caching) — the unit the serving dispatcher quotes predicted
+    /// load in. Single source of truth for both queued-job pricing
+    /// (`server::dispatch`) and active-lane extrapolation
+    /// (`Lane::remaining_flops_estimate`); the two are summed, so they
+    /// must stay unit-consistent.
+    pub fn full_step_flops(&self) -> u64 {
+        self.layers as u64 * self.block_flops(self.n_tokens)
+    }
+
     /// FLOPs of the linear approximation at `n` tokens (diag-affine native
     /// path is O(nd); the full-matrix HLO path is 2·n·d²).
     pub fn approx_flops(&self, n: usize, full_matrix: bool) -> u64 {

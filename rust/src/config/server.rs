@@ -1,26 +1,36 @@
-//! Serving-side configuration: batcher, queue, scheduler knobs.
+//! Serving-side configuration: batcher, queue, scheduler, and shard knobs.
 
 use super::model::Variant;
+
+/// Upper bound on worker shards. Each shard owns a full model instance
+/// (and, in HLO mode, its own device weight uploads), so the useful range
+/// is bounded by physical cores and memory — far below this cap.
+pub const MAX_WORKERS: usize = 8;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Model variant served by this worker.
     pub variant: Variant,
-    /// Maximum number of concurrently active lanes in the worker (the
-    /// continuous-batching window). Full-token Compute sites are batched
+    /// Maximum number of concurrently active lanes PER SHARD (each worker
+    /// thread owns its own active set, so total in-flight concurrency is
+    /// `workers × max_batch`). Full-token Compute sites are batched
     /// through the compiled B=4 block artifact in chunks of 4, so this is
     /// not capped at 4; multiples of 4 chunk with no padded slots when
     /// the active set is full.
     pub max_batch: usize,
-    /// Bounded request-queue depth; admission fails beyond this
-    /// (backpressure to the client).
+    /// Bounded request-queue depth ACROSS the server; admission fails
+    /// beyond this (backpressure to the client). Split evenly over the
+    /// shards (`max(1, queue_depth / workers)` slots each).
     pub queue_depth: usize,
     /// Denoising steps per request (paper default 50).
     pub steps: usize,
     /// Classifier-free-guidance scale (paper default 7.5).
     pub guidance: f32,
-    /// Number of worker threads (1-core CPU default 1; kept configurable
-    /// for multi-core hosts).
+    /// Worker shards. Each spawns a thread owning its own `LaneStepper`
+    /// and active lane set; the dispatcher routes jobs to the shard with
+    /// the least predicted remaining FLOPs. Throughput scales with
+    /// physical cores — on a single-core host extra shards only add
+    /// scheduling overhead and shrink per-shard batches.
     pub workers: usize,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
@@ -30,6 +40,8 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        // `workers: 1` is the conservative default for any host — sharding
+        // is opt-in via `--workers`/`server.workers` where cores exist.
         ServerConfig {
             variant: Variant::S,
             max_batch: 4,
@@ -47,7 +59,7 @@ impl ServerConfig {
     pub fn validate(&self) -> Result<(), String> {
         if self.max_batch == 0 || self.max_batch > 16 {
             return Err(format!(
-                "max_batch must be 1..=16 (active lanes; compute chunks through the B=4 artifact), got {}",
+                "max_batch must be 1..=16 (active lanes PER SHARD; compute chunks through the B=4 artifact), got {}",
                 self.max_batch
             ));
         }
@@ -57,8 +69,17 @@ impl ServerConfig {
         if self.queue_depth == 0 {
             return Err("queue_depth must be >= 1".into());
         }
-        if self.workers == 0 {
-            return Err("workers must be >= 1".into());
+        if self.workers == 0 || self.workers > MAX_WORKERS {
+            return Err(format!(
+                "workers must be 1..={MAX_WORKERS} (each shard owns a model copy and an active set of max_batch lanes), got {}",
+                self.workers
+            ));
+        }
+        if self.queue_depth < self.workers {
+            return Err(format!(
+                "queue_depth {} < workers {} — each shard needs at least one queue slot (queue_depth is split across shards)",
+                self.queue_depth, self.workers
+            ));
         }
         Ok(())
     }
@@ -75,12 +96,31 @@ mod tests {
 
     #[test]
     fn rejects_oversized_batch() {
-        let mut c = ServerConfig::default();
-        c.max_batch = 8; // > 4 lanes is fine now: compute chunks via B=4
+        let mut c = ServerConfig { max_batch: 8, ..ServerConfig::default() };
+        // > 4 lanes is fine now: compute chunks via B=4.
         assert!(c.validate().is_ok());
         c.max_batch = 32;
         assert!(c.validate().is_err());
         c.max_batch = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_nonsense_worker_counts() {
+        let mut c = ServerConfig { workers: MAX_WORKERS, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        c.workers = MAX_WORKERS + 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_queue_shallower_than_shard_count() {
+        let c = ServerConfig { workers: 4, queue_depth: 3, ..ServerConfig::default() };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("queue slot"), "unexpected message: {err}");
+        let ok = ServerConfig { workers: 4, queue_depth: 4, ..ServerConfig::default() };
+        assert!(ok.validate().is_ok());
     }
 }

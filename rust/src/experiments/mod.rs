@@ -80,13 +80,16 @@ fn mem_mib(model: &DitModel, cache_peak: usize) -> f64 {
     (model.weight_bytes() + cache_peak + act) as f64 / (1 << 20) as f64
 }
 
+/// (row-sans-fid, latents, conditioning vectors) of one policy run.
+type PolicyRun = (EvalRow, Vec<crate::tensor::Tensor>, Vec<Vec<f32>>);
+
 /// Run one policy over a request set; returns (row-sans-fid, latents).
 fn run_policy(
     model: &DitModel,
     label: &str,
     fc: &FastCacheConfig,
     reqs: &[GenRequest],
-) -> Result<(EvalRow, Vec<crate::tensor::Tensor>, Vec<Vec<f32>>)> {
+) -> Result<PolicyRun> {
     let mut eng = DenoiseEngine::new(model, fc.clone());
     let mut latents = Vec::with_capacity(reqs.len());
     let mut conds = Vec::with_capacity(reqs.len());
@@ -270,11 +273,13 @@ pub fn eval_serving(
 ) -> Result<Vec<ServeRow>> {
     let mut rows = Vec::with_capacity(configs.len());
     for (label, fc) in configs {
-        let mut scfg = ServerConfig::default();
-        scfg.variant = variant;
-        scfg.steps = steps;
-        scfg.max_batch = max_batch;
-        scfg.queue_depth = requests.max(1);
+        let scfg = ServerConfig {
+            variant,
+            steps,
+            max_batch,
+            queue_depth: requests.max(1),
+            ..ServerConfig::default()
+        };
         let server = Server::start(scfg, fc.clone(), move || Ok(DitModel::native(variant, 0xD17)));
 
         let mut wl = WorkloadGen::new(0x5E11);
@@ -300,6 +305,123 @@ pub fn eval_serving(
             occupancy: report.occupancy(),
             admission_p50_ms: report.admission_wait.percentile(50.0),
             padded_gflops: report.padded_flops as f64 / 1e9,
+        });
+    }
+    Ok(rows)
+}
+
+/// Knobs of the sharding experiment (one synthetic burst, replayed per
+/// worker count so the rows are directly comparable).
+#[derive(Clone, Debug)]
+pub struct ShardingEval {
+    pub variant: Variant,
+    pub requests: usize,
+    pub steps: usize,
+    /// Active-lane cap PER SHARD.
+    pub max_batch: usize,
+    /// Worker counts to sweep (one row each).
+    pub workers_grid: Vec<usize>,
+    /// Every k-th request is deadline-tagged (0 = no SLA traffic).
+    pub deadline_every: usize,
+    /// Deadline budget for tagged requests, ms from submission.
+    pub deadline_ms: f64,
+}
+
+impl ShardingEval {
+    pub fn quick(variant: Variant) -> ShardingEval {
+        let full = std::env::var("BENCH_FULL").as_deref() == Ok("1");
+        let (requests, steps) = if full { (32, 20) } else { (12, 6) };
+        ShardingEval {
+            variant,
+            requests,
+            steps,
+            max_batch: 4,
+            workers_grid: vec![1, 2, 4],
+            deadline_every: 3,
+            deadline_ms: 120_000.0,
+        }
+    }
+}
+
+/// One sharding-sweep row: the same burst served at a given worker count.
+#[derive(Clone, Debug)]
+pub struct ShardingRow {
+    pub workers: usize,
+    pub completed: u64,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Mean active lanes per step call (lane-steps / step-calls,
+    /// aggregated over all shards).
+    pub occupancy: f64,
+    /// Fraction of deadline-tagged jobs served within budget (`None`
+    /// when the burst carried no SLA traffic).
+    pub deadline_hit_rate: Option<f64>,
+    pub padded_gflops: f64,
+    /// Jobs completed per shard — shows what least-predicted-load
+    /// routing actually did with the burst.
+    pub shard_completed: Vec<u64>,
+}
+
+/// Sharding sweep: replay one synthetic burst (with a slice of
+/// deadline-tagged SLA traffic) against the server at each worker count
+/// in the grid. On multi-core hosts aggregate throughput should be
+/// monotonically non-decreasing from 1 → 4 workers; per-shard batches
+/// shrink as workers grow, so padded-slot FLOPs rise — both effects are
+/// reported rather than hidden.
+pub fn eval_sharding(fc: &FastCacheConfig, e: &ShardingEval) -> Result<Vec<ShardingRow>> {
+    let mut rows = Vec::with_capacity(e.workers_grid.len());
+    for &workers in &e.workers_grid {
+        let scfg = ServerConfig {
+            variant: e.variant,
+            steps: e.steps,
+            max_batch: e.max_batch,
+            queue_depth: e.requests.max(workers),
+            workers,
+            ..ServerConfig::default()
+        };
+        scfg.validate().map_err(anyhow::Error::msg)?;
+        let variant = e.variant;
+        let server = Server::start(scfg, fc.clone(), move || Ok(DitModel::native(variant, 0xD17)));
+
+        // The SAME burst for every worker count: workload seeds are fixed
+        // and deadline tags land on the same request ids.
+        let mut wl = WorkloadGen::new(0x5AAD);
+        let reqs: Vec<GenRequest> = wl
+            .image_set(e.requests, e.steps, MotionProfile::MIXED)
+            .into_iter()
+            .enumerate()
+            .map(|(i, req)| {
+                if e.deadline_every > 0 && i % e.deadline_every == 0 {
+                    req.with_deadline(e.deadline_ms)
+                } else {
+                    req
+                }
+            })
+            .collect();
+        let mut rxs = Vec::with_capacity(reqs.len());
+        for req in &reqs {
+            let rx = server
+                .submit_blocking(req)
+                .map_err(|err| anyhow::anyhow!("submit failed: {err}"))?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let _ = rx.recv().context("server dropped a response")?;
+        }
+        let report = server.shutdown();
+        rows.push(ShardingRow {
+            workers,
+            completed: report.completed,
+            wall_s: report.wall_s,
+            rps: report.throughput_rps(),
+            p50_ms: report.e2e.percentile(50.0),
+            p95_ms: report.e2e.percentile(95.0),
+            occupancy: report.occupancy(),
+            deadline_hit_rate: report.deadline_hit_rate(),
+            padded_gflops: report.padded_flops as f64 / 1e9,
+            shard_completed: report.shards.iter().map(|s| s.completed).collect(),
         });
     }
     Ok(rows)
@@ -352,6 +474,30 @@ mod tests {
                 r.label,
                 r.occupancy
             );
+        }
+    }
+
+    #[test]
+    fn eval_sharding_sweeps_worker_counts() {
+        let fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        let e = ShardingEval {
+            variant: Variant::S,
+            requests: 6,
+            steps: 3,
+            max_batch: 2,
+            workers_grid: vec![1, 2],
+            deadline_every: 2,
+            deadline_ms: 120_000.0,
+        };
+        let rows = eval_sharding(&fc, &e).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.completed, 6, "workers={}", r.workers);
+            assert_eq!(r.shard_completed.len(), r.workers);
+            assert_eq!(r.shard_completed.iter().sum::<u64>(), 6);
+            assert!(r.rps > 0.0);
+            // 120s budget on a 6-request burst: every tagged job hits.
+            assert_eq!(r.deadline_hit_rate, Some(1.0), "workers={}", r.workers);
         }
     }
 

@@ -9,7 +9,12 @@
 //!
 //! Common options: --model s|b|l|xl  --policy fastcache|fbcache|...
 //!   --steps N --requests N --alpha A --tau-s T --gamma G --max-batch B
-//!   --artifacts DIR --seed S --motion calm|mixed|stormy --native
+//!   --workers W --queue-depth Q --artifacts DIR --seed S
+//!   --motion calm|mixed|stormy --native
+//!
+//! Serve-only: --deadline-every K --deadline-ms D tag every K-th request
+//! with an SLA deadline of D ms; the sharded server admits tagged jobs
+//! ahead of best-effort ones and reports the deadline-hit rate.
 
 use std::sync::Arc;
 
@@ -67,6 +72,7 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     scfg.max_batch = args.parse_num("max-batch", scfg.max_batch).map_err(anyhow::Error::msg)?;
     scfg.queue_depth =
         args.parse_num("queue-depth", scfg.queue_depth).map_err(anyhow::Error::msg)?;
+    scfg.workers = args.parse_num("workers", scfg.workers).map_err(anyhow::Error::msg)?;
     scfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     scfg.weight_seed = args.parse_num("seed", scfg.weight_seed).map_err(anyhow::Error::msg)?;
     scfg.validate().map_err(anyhow::Error::msg)?;
@@ -182,11 +188,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (variant, fc, scfg) = parse_common(args)?;
     let n_req: usize = args.parse_num("requests", 16).map_err(anyhow::Error::msg)?;
     let profile = motion_profile(args.get_or("motion", "mixed"))?;
+    let deadline_every: usize =
+        args.parse_num("deadline-every", 0).map_err(anyhow::Error::msg)?;
+    let deadline_ms: f64 =
+        args.parse_num("deadline-ms", 60_000.0).map_err(anyhow::Error::msg)?;
     let native = args.flag("native");
     println!(
-        "serving {} with policy {} (max_batch={}, queue_depth={}, steps={})",
+        "serving {} with policy {} (workers={}, max_batch={}/shard, queue_depth={}, steps={})",
         variant.paper_name(),
         fc.policy,
+        scfg.workers,
         scfg.max_batch,
         scfg.queue_depth,
         scfg.steps
@@ -198,7 +209,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut wl = WorkloadGen::new(scfg.weight_seed ^ 0x5EED);
     let reqs = wl.image_set(n_req, scfg.steps, profile);
     let mut pending = Vec::new();
-    for req in reqs {
+    for (i, req) in reqs.into_iter().enumerate() {
+        let req = if deadline_every > 0 && i % deadline_every == 0 {
+            req.with_deadline(deadline_ms)
+        } else {
+            req
+        };
         match server.submit_blocking(&req) {
             Ok(rx) => pending.push(rx),
             Err(e) => bail!("submit failed: {e}"),
@@ -206,8 +222,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     for rx in pending {
         let resp = rx.recv().context("response channel closed")?;
+        let sla = match resp.deadline_met {
+            Some(true) => "  [SLA hit]",
+            Some(false) => "  [SLA MISS]",
+            None => "",
+        };
         println!(
-            "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%",
+            "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}",
             resp.result.id,
             resp.e2e_ms,
             resp.queued_ms,
@@ -224,6 +245,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.e2e.percentile(50.0),
         report.e2e.percentile(95.0)
     );
+    if let Some(rate) = report.deadline_hit_rate() {
+        println!(
+            "SLA: {}/{} deadline-tagged jobs within budget ({:.1}%), {} best-effort",
+            report.deadline_hits,
+            report.deadline_jobs,
+            rate * 100.0,
+            report.best_effort_jobs
+        );
+    }
+    if report.shards.len() > 1 {
+        for s in &report.shards {
+            println!(
+                "  shard {}: {} completed, occupancy {:.2}, padded {:.3} GFLOP",
+                s.shard,
+                s.completed,
+                if s.step_calls == 0 { 0.0 } else { s.lane_steps as f64 / s.step_calls as f64 },
+                s.padded_flops as f64 / 1e9
+            );
+        }
+    }
     Ok(())
 }
 

@@ -132,8 +132,7 @@ mod tests {
     #[test]
     fn batched_fastcache_runs_and_skips() {
         let model = DitModel::native(Variant::S, 3);
-        let mut fc = FastCacheConfig::default();
-        fc.enable_str = false;
+        let fc = FastCacheConfig { enable_str: false, ..FastCacheConfig::default() };
         let reqs: Vec<GenRequest> =
             (0..4).map(|i| GenRequest::simple(i, 7 + i, 8)).collect();
         let mut be = BatchEngine::new(&model, fc, 4);

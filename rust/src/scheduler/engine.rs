@@ -167,10 +167,12 @@ mod tests {
     #[test]
     fn merge_path_runs_and_restores_resolution() {
         let model = DitModel::native(Variant::B, 7);
-        let mut fc = FastCacheConfig::default();
-        fc.enable_merge = true;
-        fc.merge_target = 32;
-        fc.enable_str = false;
+        let fc = FastCacheConfig {
+            enable_merge: true,
+            merge_target: 32,
+            enable_str: false,
+            ..FastCacheConfig::default()
+        };
         let mut eng = DenoiseEngine::new(&model, fc);
         let r = eng.generate(&GenRequest::simple(3, 11, 4)).unwrap();
         assert_eq!(r.latent.shape(), &[64, C_IN]);

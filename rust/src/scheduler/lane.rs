@@ -56,6 +56,10 @@ pub struct GenRequest {
     pub turbulence: Option<Turbulence>,
     /// Optional initial latent (video frames share correlated inits).
     pub init_latent: Option<Tensor>,
+    /// Optional SLA deadline in ms from submission. `None` = best-effort.
+    /// The sharded server admits deadline-tagged jobs ahead of best-effort
+    /// ones at step boundaries and reports per-class deadline-hit rates.
+    pub deadline_ms: Option<f64>,
 }
 
 impl GenRequest {
@@ -68,7 +72,14 @@ impl GenRequest {
             steps,
             turbulence: None,
             init_latent: None,
+            deadline_ms: None,
         }
+    }
+
+    /// Tag the request with an SLA deadline (ms from submission).
+    pub fn with_deadline(mut self, ms: f64) -> GenRequest {
+        self.deadline_ms = Some(ms);
+        self
     }
 }
 
@@ -178,11 +189,37 @@ pub struct Lane {
     flops_padded: u64,
     cache_bytes_peak: usize,
     active: Duration,
+    /// Full-compute cost of one denoise step at full tokens (layers ×
+    /// block FLOPs) — the unit of the remaining-work prediction below.
+    full_step_flops: u64,
 }
 
 impl Lane {
     pub fn id(&self) -> u64 {
         self.req.id
+    }
+
+    /// The lane's SLA deadline budget (ms from submission), if tagged.
+    pub fn deadline_ms(&self) -> Option<f64> {
+        self.req.deadline_ms
+    }
+
+    /// Predicted FLOPs still ahead of this lane: remaining steps × the
+    /// FLOPs this lane has actually *executed* per completed step (full
+    /// per-step cost before any step has run). Using executed FLOPs —
+    /// not a skip ratio against `flops_full` — captures every source of
+    /// per-request compute shift: cache skips (Learning-to-Cache /
+    /// SmoothCache-style schedules) AND token reduction (STR buckets,
+    /// token merge), where both numerator and denominator of a ratio
+    /// would shrink together and cancel the saving. The sharded
+    /// dispatcher balances on this estimate, not lane counts.
+    pub fn remaining_flops_estimate(&self) -> u64 {
+        let rem = self.schedule.len().saturating_sub(self.step) as u64;
+        if self.step == 0 {
+            return rem * self.full_step_flops;
+        }
+        let per_step = self.flops_done / self.step as u64;
+        rem * per_step.min(self.full_step_flops)
     }
 
     /// The next step this lane will execute (0-based).
@@ -323,6 +360,7 @@ impl<'m> LaneStepper<'m> {
             flops_padded: 0,
             cache_bytes_peak: 0,
             active: Duration::ZERO,
+            full_step_flops: cfg.full_step_flops(),
         }
     }
 
@@ -720,6 +758,42 @@ mod tests {
         let joined = lanes.pop().unwrap().into_result();
         let md = joined.latent.max_abs_diff(&solo.latent);
         assert!(md < 1e-4, "joined-lane drift: {md}");
+    }
+
+    #[test]
+    fn remaining_flops_estimate_shrinks_with_progress_and_caching() {
+        let model = DitModel::native(Variant::S, 7);
+        let mut schedules = ScheduleCache::new();
+
+        // NoCache: before any step the estimate is the full budget; it
+        // drains linearly and hits zero at completion.
+        let stepper = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut lane = stepper.make_lane(&GenRequest::simple(0, 3, 4), schedules.get(4));
+        let full = lane.remaining_flops_estimate();
+        assert_eq!(full, 4 * model.cfg.full_step_flops());
+        stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+        assert_eq!(lane.remaining_flops_estimate(), full / 4 * 3);
+        while !lane.is_done() {
+            stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+        }
+        assert_eq!(lane.remaining_flops_estimate(), 0);
+
+        // A caching policy that skips work predicts LESS remaining work
+        // than NoCache at the same step index.
+        let cached =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::StaticCache));
+        let mut cl = cached.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
+        let mut nl = stepper.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
+        for _ in 0..4 {
+            cached.step(std::slice::from_mut(&mut cl)).unwrap();
+            stepper.step(std::slice::from_mut(&mut nl)).unwrap();
+        }
+        assert!(
+            cl.remaining_flops_estimate() < nl.remaining_flops_estimate(),
+            "cache policy should lower the predicted remaining work: {} vs {}",
+            cl.remaining_flops_estimate(),
+            nl.remaining_flops_estimate()
+        );
     }
 
     #[test]

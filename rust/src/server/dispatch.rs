@@ -1,0 +1,157 @@
+//! Sharded dispatch: `ServerConfig.workers` shard threads, each owning
+//! its own `LaneStepper` and active lane set, fed by per-shard bounded
+//! [`JobQueue`]s. The dispatcher routes each submitted job to the shard
+//! with the least *predicted* remaining work — estimated FLOPs of queued
+//! plus active lanes, where the active estimate extrapolates the FLOPs
+//! each lane has actually executed per completed step (see
+//! `Lane::remaining_flops_estimate`) — falling back to lane counts only
+//! as a tie-break. Cache schedules and token reduction shift the compute
+//! profile per request, so balancing raw lane counts would systematically
+//! overload shards whose lanes happen to be cache-heavy.
+//!
+//! Sharing: the `ScheduleCache` is `Arc<Mutex<_>>`-shared across shards;
+//! the model factory is `Arc`-shared and invoked once per shard ON the
+//! shard's thread, because PJRT clients (and their device buffers) must
+//! not cross threads — weight generation is seed-deterministic, so every
+//! shard serves identical weights. In native mode this costs one
+//! host-side `WeightBank` copy per shard; in HLO mode per-shard device
+//! uploads are required anyway.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{FastCacheConfig, ModelConfig, ServerConfig};
+use crate::model::DitModel;
+use crate::scheduler::ScheduleCache;
+
+use super::queue::{Job, JobQueue, Push, SubmitError};
+use super::worker::{shard_loop, ServerReport, ShardReport};
+
+/// Live load signals one shard publishes for the router.
+#[derive(Default)]
+pub struct ShardLoad {
+    /// Predicted FLOPs of jobs routed to this shard but not yet admitted.
+    pub queued_flops: AtomicU64,
+    /// Predicted remaining FLOPs across the shard's active lanes.
+    pub active_flops: AtomicU64,
+    /// Active lane count (tie-break when FLOP predictions are equal).
+    pub active_lanes: AtomicUsize,
+}
+
+impl ShardLoad {
+    /// Total predicted outstanding work on this shard.
+    pub fn predicted_flops(&self) -> u64 {
+        self.queued_flops
+            .load(Ordering::Relaxed)
+            .saturating_add(self.active_flops.load(Ordering::Relaxed))
+    }
+}
+
+struct Shard {
+    queue: Arc<JobQueue>,
+    load: Arc<ShardLoad>,
+    handle: JoinHandle<ShardReport>,
+}
+
+/// The sharded serving core behind `server::Server`.
+pub struct Dispatcher {
+    shards: Vec<Shard>,
+    /// Full-compute FLOPs of one denoise step (layers × block at full
+    /// tokens) — the unit queued-job costs are quoted in.
+    step_flops: u64,
+    started: Instant,
+}
+
+impl Dispatcher {
+    /// Spawn the shard threads. The factory runs once per shard, on that
+    /// shard's thread (PJRT clients are not shared across threads).
+    pub fn start<F>(scfg: &ServerConfig, fc: &FastCacheConfig, model_factory: F) -> Dispatcher
+    where
+        F: Fn() -> Result<DitModel> + Send + Sync + 'static,
+    {
+        // Guards against unvalidated configs: at least one shard, and at
+        // least one queue slot per shard.
+        let workers = scfg.workers.max(1);
+        let cap = (scfg.queue_depth / workers).max(1);
+        let factory = Arc::new(model_factory);
+        let schedules = Arc::new(Mutex::new(ScheduleCache::new()));
+        let step_flops = ModelConfig::of(scfg.variant).full_step_flops();
+
+        let shards = (0..workers)
+            .map(|id| {
+                let queue = Arc::new(JobQueue::new(cap));
+                let load = Arc::new(ShardLoad::default());
+                let (q, l) = (Arc::clone(&queue), Arc::clone(&load));
+                let (f, s) = (Arc::clone(&factory), Arc::clone(&schedules));
+                let (sc, fcc) = (scfg.clone(), fc.clone());
+                let handle = std::thread::Builder::new()
+                    .name(format!("fastcache-shard-{id}"))
+                    .spawn(move || shard_loop(id, sc, fcc, f.as_ref(), &q, &l, &s))
+                    .expect("spawning shard thread");
+                Shard { queue, load, handle }
+            })
+            .collect();
+
+        Dispatcher { shards, step_flops, started: Instant::now() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Route a job to the least-predicted-load shard, falling back
+    /// through heavier shards when queues are full. `QueueFull` only when
+    /// every shard pushed back; `Closed` only when every shard is gone.
+    pub fn submit(&self, mut job: Job) -> Result<(), SubmitError> {
+        job.cost = job.req.steps as u64 * self.step_flops;
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&i| {
+            let s = &self.shards[i];
+            (s.load.predicted_flops(), s.load.active_lanes.load(Ordering::Relaxed), i)
+        });
+
+        let mut saw_full = false;
+        for &i in &order {
+            let shard = &self.shards[i];
+            // Account the queued cost BEFORE the push so a concurrent
+            // submitter routing in parallel sees this job; roll back on
+            // rejection.
+            shard.load.queued_flops.fetch_add(job.cost, Ordering::Relaxed);
+            match shard.queue.push(job) {
+                Push::Accepted => return Ok(()),
+                Push::Full(j) => {
+                    shard.load.queued_flops.fetch_sub(j.cost, Ordering::Relaxed);
+                    saw_full = true;
+                    job = *j;
+                }
+                Push::Closed(j) => {
+                    shard.load.queued_flops.fetch_sub(j.cost, Ordering::Relaxed);
+                    job = *j;
+                }
+            }
+        }
+        if saw_full {
+            Err(SubmitError::QueueFull)
+        } else {
+            Err(SubmitError::Closed)
+        }
+    }
+
+    /// Close every shard queue, wait for the shards to drain, and merge
+    /// their reports into one aggregate with a per-shard breakdown.
+    pub fn shutdown(self) -> ServerReport {
+        for shard in &self.shards {
+            shard.queue.close();
+        }
+        let reports: Vec<ShardReport> = self
+            .shards
+            .into_iter()
+            .map(|s| s.handle.join().expect("shard panicked"))
+            .collect();
+        ServerReport::merge(reports, self.started.elapsed().as_secs_f64())
+    }
+}

@@ -1,16 +1,27 @@
-//! Serving layer: bounded request queue with backpressure, a
-//! continuous-batching worker over the unified lane stepper (lanes at
-//! different steps coexist; admission happens at step boundaries), and
-//! per-server metrics including occupancy and admission latency.
+//! Serving layer: sharded dispatch over bounded SLA-aware request queues,
+//! with one continuous-batching worker (the unified lane stepper) per
+//! shard and per-server metrics merged across shards.
+//!
+//! Layout:
+//! - `queue`    — job envelope, bounded per-shard [`queue::JobQueue`]
+//!   (backpressure + deadline-first pop order), response types.
+//! - `worker`   — the shard serve loop (continuous batching, SLA-aware
+//!   admission at step boundaries), `ShardReport`/`ServerReport`, and the
+//!   public [`Server`] façade.
+//! - `dispatch` — spawns `ServerConfig.workers` shard threads and routes
+//!   each job to the shard with the least *predicted* remaining FLOPs
+//!   (cache-policy-aware, see `Lane::remaining_flops_estimate`).
 //!
 //! Threading note: tokio is not vendored in the offline registry, so the
-//! server uses std threads + channels. On the single-core CPU testbed this
-//! is also the faithful design — one PJRT worker saturates the core; the
-//! queue provides admission control and batching the way an async runtime
-//! would.
+//! server uses std threads + mutex/condvar queues. Each shard owns its
+//! own model instance (PJRT clients are not shared across threads; the
+//! `Arc`-shared factory is seed-deterministic so all shards serve
+//! identical weights), while the `ScheduleCache` is shared across shards.
 
+pub mod dispatch;
 pub mod queue;
 pub mod worker;
 
-pub use queue::{GenResponse, Job};
-pub use worker::{Server, ServerReport};
+pub use dispatch::{Dispatcher, ShardLoad};
+pub use queue::{GenResponse, Job, JobQueue, SubmitError};
+pub use worker::{Server, ServerReport, ShardReport};

@@ -1,8 +1,13 @@
-//! Request/response plumbing: job envelope, response type, and submission
-//! errors (bounded-queue backpressure).
+//! Request/response plumbing for the sharded server: job envelope,
+//! response type, submission errors, and the bounded per-shard
+//! [`JobQueue`] with SLA-aware ordering — deadline-tagged jobs pop ahead
+//! of best-effort ones (earliest absolute deadline first), best-effort
+//! jobs pop FIFO.
 
+use std::cmp::Ordering;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::scheduler::{GenRequest, GenResult};
 
@@ -10,11 +15,14 @@ use crate::scheduler::{GenRequest, GenResult};
 #[derive(Debug)]
 pub struct GenResponse {
     pub result: GenResult,
-    /// Admission latency: submit → lane admitted into the worker's
+    /// Admission latency: submit → lane admitted into the shard's
     /// active set (ms).
     pub queued_ms: f64,
     /// End-to-end latency: submit -> response (ms).
     pub e2e_ms: f64,
+    /// For deadline-tagged requests: whether e2e met the deadline.
+    /// `None` for best-effort requests.
+    pub deadline_met: Option<bool>,
 }
 
 /// Internal job envelope.
@@ -22,12 +30,34 @@ pub struct Job {
     pub req: GenRequest,
     pub resp: mpsc::Sender<GenResponse>,
     pub submitted: Instant,
+    /// Predicted full-compute FLOPs of this job, stamped by the
+    /// dispatcher at routing time; the shard subtracts exactly this when
+    /// it admits the job, so queued-load accounting cannot drift.
+    pub cost: u64,
 }
 
 impl Job {
     /// Milliseconds since the request was submitted.
     pub fn waited_ms(&self) -> f64 {
         self.submitted.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Absolute deadline, if the request carries one. Budgets are
+    /// clamped to [0, ~31 years]: a non-finite or absurd `deadline_ms`
+    /// must not panic `Duration` construction inside the queue lock
+    /// (NaN/negative → already expired, +inf → effectively unbounded).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.req.deadline_ms.map(|ms| {
+            const MAX_MS: f64 = 1e12;
+            let ms = if ms.is_finite() {
+                ms.clamp(0.0, MAX_MS)
+            } else if ms > 0.0 {
+                MAX_MS
+            } else {
+                0.0
+            };
+            self.submitted + Duration::from_secs_f64(ms / 1e3)
+        })
     }
 }
 
@@ -50,3 +80,206 @@ impl std::fmt::Display for SubmitError {
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Outcome of a [`JobQueue::push`]. Rejections hand the job back (boxed —
+/// rejection is the rare path) so the dispatcher can retry it on another
+/// shard before surfacing backpressure to the caller.
+pub enum Push {
+    Accepted,
+    /// Queue at capacity; the job is returned for rerouting.
+    Full(Box<Job>),
+    /// Queue closed (shutdown); the job is returned.
+    Closed(Box<Job>),
+}
+
+struct QueueInner {
+    /// (fifo sequence, job) — small per-shard sets, so priority pop is a
+    /// linear scan instead of a heap.
+    jobs: Vec<(u64, Job)>,
+    seq: u64,
+    closed: bool,
+}
+
+/// Bounded, SLA-aware job queue: one per shard. `push` applies
+/// backpressure at `cap`; `pop` returns the highest-priority job —
+/// deadline-tagged before best-effort, earliest absolute deadline first,
+/// FIFO within a class. After `close`, pushes are rejected but pops drain
+/// the remainder (graceful shutdown).
+pub struct JobQueue {
+    cap: usize,
+    inner: Mutex<QueueInner>,
+    avail: Condvar,
+}
+
+/// Priority order between two queued entries (Less = pops first).
+fn priority(a: &(u64, Job), b: &(u64, Job)) -> Ordering {
+    match (a.1.deadline(), b.1.deadline()) {
+        (Some(da), Some(db)) => da.cmp(&db).then(a.0.cmp(&b.0)),
+        (Some(_), None) => Ordering::Less,
+        (None, Some(_)) => Ordering::Greater,
+        (None, None) => a.0.cmp(&b.0),
+    }
+}
+
+fn best_index(jobs: &[(u64, Job)]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, cand) in jobs.iter().enumerate() {
+        best = match best {
+            Some(b) if priority(cand, &jobs[b]) != Ordering::Less => Some(b),
+            _ => Some(i),
+        };
+    }
+    best
+}
+
+impl JobQueue {
+    pub fn new(cap: usize) -> JobQueue {
+        JobQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(QueueInner { jobs: Vec::new(), seq: 0, closed: false }),
+            avail: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue with backpressure; rejected jobs are handed back.
+    pub fn push(&self, job: Job) -> Push {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if inner.closed {
+            return Push::Closed(Box::new(job));
+        }
+        if inner.jobs.len() >= self.cap {
+            return Push::Full(Box::new(job));
+        }
+        let seq = inner.seq;
+        inner.seq += 1;
+        inner.jobs.push((seq, job));
+        drop(inner);
+        self.avail.notify_one();
+        Push::Accepted
+    }
+
+    /// Close the queue: subsequent pushes fail, pops drain what remains.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.avail.notify_all();
+    }
+
+    /// Highest-priority job, blocking while the queue is open and empty.
+    /// `None` means closed-and-drained — the shard should exit.
+    pub fn pop_blocking(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(i) = best_index(&inner.jobs) {
+                return Some(inner.jobs.remove(i).1);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.avail.wait(inner).expect("queue poisoned");
+        }
+    }
+
+    /// Highest-priority job if one is queued right now (step-boundary
+    /// admission while lanes are active must never block).
+    pub fn try_pop(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        best_index(&inner.jobs).map(|i| inner.jobs.remove(i).1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, deadline_ms: Option<f64>) -> (Job, mpsc::Receiver<GenResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let mut req = GenRequest::simple(id, id, 2);
+        req.deadline_ms = deadline_ms;
+        (Job { req, resp: tx, submitted: Instant::now(), cost: 1 }, rx)
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let q = JobQueue::new(2);
+        let (j0, _r0) = job(0, None);
+        let (j1, _r1) = job(1, None);
+        let (j2, _r2) = job(2, None);
+        assert!(matches!(q.push(j0), Push::Accepted));
+        assert!(matches!(q.push(j1), Push::Accepted));
+        // Third push bounces AND hands the job back intact.
+        match q.push(j2) {
+            Push::Full(j) => assert_eq!(j.req.id, 2),
+            _ => panic!("expected Full"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_but_drains_pops() {
+        let q = JobQueue::new(4);
+        let (j0, _r0) = job(0, None);
+        assert!(matches!(q.push(j0), Push::Accepted));
+        q.close();
+        let (j1, _r1) = job(1, None);
+        assert!(matches!(q.push(j1), Push::Closed(_)));
+        // The queued job still drains; then the queue reports done.
+        assert_eq!(q.pop_blocking().expect("drain").req.id, 0);
+        assert!(q.pop_blocking().is_none());
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn deadline_jobs_pop_before_best_effort() {
+        let q = JobQueue::new(8);
+        let (be0, _a) = job(0, None);
+        let (be1, _b) = job(1, None);
+        let (late, _c) = job(2, Some(5_000.0));
+        let (soon, _d) = job(3, Some(100.0));
+        q.push(be0);
+        q.push(be1);
+        q.push(late);
+        q.push(soon);
+        // Deadline class first (earliest absolute deadline), then FIFO.
+        assert_eq!(q.pop_blocking().unwrap().req.id, 3);
+        assert_eq!(q.pop_blocking().unwrap().req.id, 2);
+        assert_eq!(q.pop_blocking().unwrap().req.id, 0);
+        assert_eq!(q.pop_blocking().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn non_finite_deadlines_clamp_instead_of_panicking() {
+        let q = JobQueue::new(4);
+        let (inf_j, _a) = job(0, Some(f64::INFINITY));
+        let (nan_j, _b) = job(1, Some(f64::NAN));
+        let (soon, _c) = job(2, Some(10.0));
+        q.push(inf_j);
+        q.push(nan_j);
+        q.push(soon);
+        // NaN clamps to already-expired (earliest deadline, pops first);
+        // +inf clamps to the far future (pops last of the tagged class).
+        assert_eq!(q.pop_blocking().unwrap().req.id, 1);
+        assert_eq!(q.pop_blocking().unwrap().req.id, 2);
+        assert_eq!(q.pop_blocking().unwrap().req.id, 0);
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = JobQueue::new(1);
+        assert!(q.try_pop().is_none());
+        let (j, _r) = job(7, None);
+        q.push(j);
+        assert_eq!(q.try_pop().unwrap().req.id, 7);
+    }
+}

@@ -1,16 +1,19 @@
-//! The serving worker: continuous batching over the unified lane stepper.
+//! The shard worker: continuous batching over the unified lane stepper,
+//! one instance per dispatcher shard.
 //!
-//! The old design drained the queue into step-aligned lockstep groups and
-//! fell back to slow single-request mode whenever STR or token merge was
-//! enabled (`can_batch`). That gate is gone: every config runs through
-//! `LaneStepper::step`, which batches whatever aligns (full-token Compute
-//! sites through the B=4 artifact) and runs the rest per-lane. Lanes at
-//! different step indices coexist in one active set; finished lanes
-//! retire and queued jobs are admitted at step boundaries, so the worker
-//! never drains before taking new work.
+//! Every config runs through `LaneStepper::step`, which batches whatever
+//! aligns (full-token Compute sites through the B=4 artifact) and runs
+//! the rest per-lane. Lanes at different step indices coexist in one
+//! active set; finished lanes retire and queued jobs are admitted at step
+//! boundaries, so the shard never drains before taking new work.
+//! Admission is SLA-aware: the shard's `JobQueue` pops deadline-tagged
+//! jobs (earliest absolute deadline first) ahead of best-effort ones, and
+//! the shard records per-class deadline-hit rates. After each step the
+//! shard publishes its predicted remaining FLOPs so the dispatcher can
+//! route by least predicted load.
 
-use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
-use std::thread::JoinHandle;
+use std::sync::mpsc;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -20,29 +23,37 @@ use crate::metrics::LatencyHistogram;
 use crate::model::DitModel;
 use crate::scheduler::{GenRequest, Lane, LaneStepper, ScheduleCache};
 
-use super::queue::{GenResponse, Job, SubmitError};
+use super::dispatch::{Dispatcher, ShardLoad};
+use super::queue::{GenResponse, Job, JobQueue, SubmitError};
 
-/// Final report when the server shuts down.
+/// One shard's slice of the final report.
 #[derive(Debug)]
-pub struct ServerReport {
+pub struct ShardReport {
+    pub shard: usize,
     pub completed: u64,
     pub e2e: LatencyHistogram,
     /// Admission latency: submit → lane admitted into the active set (ms).
     pub admission_wait: LatencyHistogram,
+    /// This shard thread's lifetime (spawn → drain), seconds.
     pub wall_s: f64,
     /// Unified-stepper invocations; each advances every active lane by
     /// one denoise step.
     pub step_calls: u64,
     /// Occupancy integral: Σ over step calls of the active-lane count.
     pub lane_steps: u64,
-    /// FLOPs burnt in padded B=4 batch slots across all completed lanes
-    /// (batch-shape overhead that used to be invisible).
+    /// FLOPs burnt in padded B=4 batch slots across completed lanes.
     pub padded_flops: u64,
+    /// SLA accounting: deadline-tagged jobs served / of those, how many
+    /// finished within their deadline / best-effort jobs served.
+    pub deadline_jobs: u64,
+    pub deadline_hits: u64,
+    pub best_effort_jobs: u64,
 }
 
-impl ServerReport {
-    fn new() -> ServerReport {
-        ServerReport {
+impl ShardReport {
+    fn new(shard: usize) -> ShardReport {
+        ShardReport {
+            shard,
             completed: 0,
             e2e: LatencyHistogram::new(),
             admission_wait: LatencyHistogram::new(),
@@ -50,7 +61,69 @@ impl ServerReport {
             step_calls: 0,
             lane_steps: 0,
             padded_flops: 0,
+            deadline_jobs: 0,
+            deadline_hits: 0,
+            best_effort_jobs: 0,
         }
+    }
+
+    pub fn deadline_hit_rate(&self) -> Option<f64> {
+        if self.deadline_jobs == 0 {
+            None
+        } else {
+            Some(self.deadline_hits as f64 / self.deadline_jobs as f64)
+        }
+    }
+}
+
+/// Aggregate report when the server shuts down: the merge of every
+/// shard's report, with the per-shard breakdown preserved.
+#[derive(Debug)]
+pub struct ServerReport {
+    pub completed: u64,
+    pub e2e: LatencyHistogram,
+    /// Admission latency: submit → lane admitted into a shard (ms).
+    pub admission_wait: LatencyHistogram,
+    /// Server lifetime (start → shutdown join), seconds.
+    pub wall_s: f64,
+    pub step_calls: u64,
+    pub lane_steps: u64,
+    pub padded_flops: u64,
+    pub deadline_jobs: u64,
+    pub deadline_hits: u64,
+    pub best_effort_jobs: u64,
+    /// Per-shard breakdown (one entry per worker thread).
+    pub shards: Vec<ShardReport>,
+}
+
+impl ServerReport {
+    pub(crate) fn merge(shards: Vec<ShardReport>, wall_s: f64) -> ServerReport {
+        let mut r = ServerReport {
+            completed: 0,
+            e2e: LatencyHistogram::new(),
+            admission_wait: LatencyHistogram::new(),
+            wall_s,
+            step_calls: 0,
+            lane_steps: 0,
+            padded_flops: 0,
+            deadline_jobs: 0,
+            deadline_hits: 0,
+            best_effort_jobs: 0,
+            shards: Vec::new(),
+        };
+        for s in &shards {
+            r.completed += s.completed;
+            r.e2e.merge(&s.e2e);
+            r.admission_wait.merge(&s.admission_wait);
+            r.step_calls += s.step_calls;
+            r.lane_steps += s.lane_steps;
+            r.padded_flops += s.padded_flops;
+            r.deadline_jobs += s.deadline_jobs;
+            r.deadline_hits += s.deadline_hits;
+            r.best_effort_jobs += s.best_effort_jobs;
+        }
+        r.shards = shards;
+        r
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -75,38 +148,50 @@ impl ServerReport {
     pub fn occupancy(&self) -> f64 {
         self.mean_batch_size()
     }
+
+    /// Fraction of deadline-tagged jobs that finished within their
+    /// deadline. `None` when the workload had no deadline-tagged jobs.
+    pub fn deadline_hit_rate(&self) -> Option<f64> {
+        if self.deadline_jobs == 0 {
+            None
+        } else {
+            Some(self.deadline_hits as f64 / self.deadline_jobs as f64)
+        }
+    }
 }
 
-/// A running server instance.
+/// A running server instance: a dispatcher over `ServerConfig.workers`
+/// shard threads.
 pub struct Server {
-    tx: Option<SyncSender<Job>>,
-    handle: Option<JoinHandle<ServerReport>>,
+    dispatcher: Dispatcher,
 }
 
 impl Server {
-    /// Start the worker. `model_factory` runs ON the worker thread (PJRT
-    /// clients are not shared across threads).
+    /// Start the shards. `model_factory` runs once per shard, ON the
+    /// shard's thread (PJRT clients are not shared across threads);
+    /// weight generation is seed-deterministic, so every shard serves
+    /// identical weights.
     pub fn start<F>(scfg: ServerConfig, fc: FastCacheConfig, model_factory: F) -> Server
     where
-        F: FnOnce() -> Result<DitModel> + Send + 'static,
+        F: Fn() -> Result<DitModel> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel::<Job>(scfg.queue_depth);
-        let handle = std::thread::spawn(move || worker_loop(scfg, fc, model_factory, rx));
-        Server { tx: Some(tx), handle: Some(handle) }
+        Server { dispatcher: Dispatcher::start(&scfg, &fc, model_factory) }
+    }
+
+    /// Number of worker shards serving this instance.
+    pub fn workers(&self) -> usize {
+        self.dispatcher.workers()
     }
 
     /// Submit a request; returns the response channel or backpressure.
     pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
         let (rtx, rrx) = mpsc::channel();
-        let job = Job { req, resp: rtx, submitted: Instant::now() };
-        match self.tx.as_ref().ok_or(SubmitError::Closed)?.try_send(job) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
-        }
+        let job = Job { req, resp: rtx, submitted: Instant::now(), cost: 0 };
+        self.dispatcher.submit(job)?;
+        Ok(rrx)
     }
 
-    /// Submit, sleeping through backpressure until the queue accepts the
+    /// Submit, sleeping through backpressure until a shard accepts the
     /// request. Only fails when the server is shutting down.
     pub fn submit_blocking(
         &self,
@@ -123,10 +208,9 @@ impl Server {
         }
     }
 
-    /// Close the queue and wait for the worker to drain.
-    pub fn shutdown(mut self) -> ServerReport {
-        drop(self.tx.take());
-        self.handle.take().expect("not yet joined").join().expect("worker panicked")
+    /// Close every shard queue and wait for the shards to drain.
+    pub fn shutdown(self) -> ServerReport {
+        self.dispatcher.shutdown()
     }
 }
 
@@ -136,19 +220,47 @@ struct Inflight {
     admitted: Instant,
 }
 
-fn worker_loop<F>(
+/// Publish this shard's predicted load for the dispatcher's router.
+fn publish_load(load: &ShardLoad, lanes: &[Lane]) {
+    use std::sync::atomic::Ordering;
+    let remaining: u64 = lanes.iter().map(Lane::remaining_flops_estimate).sum();
+    load.active_flops.store(remaining, Ordering::Relaxed);
+    load.active_lanes.store(lanes.len(), Ordering::Relaxed);
+}
+
+/// One shard's serve loop: continuous batching with SLA-aware admission.
+pub(crate) fn shard_loop<F>(
+    shard_id: usize,
     scfg: ServerConfig,
     fc: FastCacheConfig,
-    model_factory: F,
-    rx: Receiver<Job>,
-) -> ServerReport
+    model_factory: &F,
+    queue: &JobQueue,
+    load: &ShardLoad,
+    schedules: &Mutex<ScheduleCache>,
+) -> ShardReport
 where
-    F: FnOnce() -> Result<DitModel>,
+    F: Fn() -> Result<DitModel>,
 {
+    use std::sync::atomic::Ordering;
+
+    // If this shard dies (model-load failure, panicked step), close and
+    // drain its queue on the way out so submitters observe Closed /
+    // disconnected responses instead of hanging forever — the old
+    // single-worker mpsc design gave that for free when the worker's
+    // Receiver dropped. Runs on normal exit too, where it is a no-op
+    // (queue already closed and drained).
+    struct DrainOnExit<'q>(&'q JobQueue);
+    impl Drop for DrainOnExit<'_> {
+        fn drop(&mut self) {
+            self.0.close();
+            while self.0.try_pop().is_some() {}
+        }
+    }
+    let _drain_guard = DrainOnExit(queue);
+
     let model = model_factory().expect("model load failed");
     let stepper = LaneStepper::new(&model, fc);
-    let mut schedules = ScheduleCache::new();
-    let mut report = ServerReport::new();
+    let mut report = ShardReport::new(shard_id);
     // Guard against unvalidated configs: max_batch = 0 must degrade to
     // solo serving, not livelock the admission loop.
     let max_batch = scfg.max_batch.max(1);
@@ -159,25 +271,23 @@ where
     let mut closed = false;
 
     loop {
-        // Admission, at the step boundary: fill free lane slots. Block
-        // only when idle; otherwise take whatever is already queued.
+        // Admission, at the step boundary: fill free lane slots. The
+        // queue pops deadline-tagged jobs first, so SLA traffic jumps
+        // ahead of best-effort exactly here. Block only when idle;
+        // otherwise take whatever is already queued.
         while !closed && lanes.len() < max_batch {
             let job = if lanes.is_empty() {
-                match rx.recv() {
-                    Ok(j) => j,
-                    Err(_) => {
+                match queue.pop_blocking() {
+                    Some(j) => j,
+                    None => {
                         closed = true;
                         break;
                     }
                 }
             } else {
-                match rx.try_recv() {
-                    Ok(j) => j,
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        closed = true;
-                        break;
-                    }
+                match queue.try_pop() {
+                    Some(j) => j,
+                    None => break,
                 }
             };
             // One admission instant, used for both the report histogram
@@ -186,9 +296,16 @@ where
             report
                 .admission_wait
                 .record(admitted.duration_since(job.submitted).as_secs_f64() * 1e3);
-            lanes.push(stepper.make_lane(&job.req, schedules.get(job.req.steps)));
+            load.queued_flops.fetch_sub(job.cost, Ordering::Relaxed);
+            let schedule = schedules.lock().expect("schedule cache poisoned").get(job.req.steps);
+            lanes.push(stepper.make_lane(&job.req, schedule));
             inflight.push(Inflight { job, admitted });
         }
+        // Publish BEFORE the (long) denoise step: admitted jobs left
+        // queued_flops at admission and must show up in active_flops
+        // immediately, or the router sees this shard as idle for the
+        // whole step and piles new work onto the busiest shard.
+        publish_load(load, &lanes);
         if lanes.is_empty() {
             if closed {
                 break;
@@ -216,10 +333,23 @@ where
             report.padded_flops += result.flops_padded;
             let e2e = fl.job.submitted.elapsed().as_secs_f64() * 1e3;
             let queued_ms = fl.admitted.duration_since(fl.job.submitted).as_secs_f64() * 1e3;
+            let deadline_met = fl.job.req.deadline_ms.map(|budget| e2e <= budget);
+            match deadline_met {
+                Some(met) => {
+                    report.deadline_jobs += 1;
+                    if met {
+                        report.deadline_hits += 1;
+                    }
+                }
+                None => report.best_effort_jobs += 1,
+            }
             report.e2e.record(e2e);
             report.completed += 1;
-            let _ = fl.job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e });
+            let _ = fl.job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e, deadline_met });
         }
+
+        // Refresh the router's view of this shard after admit+retire.
+        publish_load(load, &lanes);
     }
 
     report.wall_s = t0.elapsed().as_secs_f64();
@@ -233,9 +363,16 @@ mod tests {
     use crate::scheduler::GenRequest;
 
     fn test_server(policy: PolicyKind, max_batch: usize, queue_depth: usize) -> Server {
-        let mut scfg = ServerConfig::default();
-        scfg.max_batch = max_batch;
-        scfg.queue_depth = queue_depth;
+        test_server_sharded(policy, max_batch, queue_depth, 1)
+    }
+
+    fn test_server_sharded(
+        policy: PolicyKind,
+        max_batch: usize,
+        queue_depth: usize,
+        workers: usize,
+    ) -> Server {
+        let scfg = ServerConfig { max_batch, queue_depth, workers, ..ServerConfig::default() };
         let mut fc = FastCacheConfig::with_policy(policy);
         fc.enable_str = false;
         Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)))
@@ -252,11 +389,16 @@ mod tests {
             let resp = rx.recv().unwrap();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
             assert!(resp.e2e_ms >= resp.queued_ms);
+            assert_eq!(resp.deadline_met, None, "best-effort jobs carry no deadline verdict");
         }
         let report = server.shutdown();
         assert_eq!(report.completed, 6);
+        assert_eq!(report.best_effort_jobs, 6);
+        assert_eq!(report.deadline_hit_rate(), None);
         assert!(report.throughput_rps() > 0.0);
         assert_eq!(report.admission_wait.count(), 6);
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].completed, 6);
     }
 
     #[test]
@@ -315,9 +457,7 @@ mod tests {
     fn str_enabled_configs_batch() {
         // The whole point of the unified stepper: STR (and every other
         // token-reduction mode) no longer forces single-request serving.
-        let mut scfg = ServerConfig::default();
-        scfg.max_batch = 4;
-        scfg.queue_depth = 32;
+        let scfg = ServerConfig { max_batch: 4, queue_depth: 32, ..ServerConfig::default() };
         let fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
         assert!(fc.enable_str, "FastCache default must enable STR");
         let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
@@ -355,5 +495,63 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.completed, 8);
         assert!(report.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn sharded_server_completes_everything_and_merges_reports() {
+        let server = test_server_sharded(PolicyKind::FastCache, 2, 32, 3);
+        assert_eq!(server.workers(), 3);
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            rxs.push(server.submit_blocking(&GenRequest::simple(i, 40 + i, 4)).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
+        }
+        let report = server.shutdown();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.shards.len(), 3);
+        let shard_sum: u64 = report.shards.iter().map(|s| s.completed).sum();
+        assert_eq!(shard_sum, 12, "per-shard reports must sum to the aggregate");
+        // Least-load routing must actually spread a 12-job burst over 3
+        // shards rather than piling everything on shard 0.
+        let busy = report.shards.iter().filter(|s| s.completed > 0).count();
+        assert!(busy >= 2, "burst load never left shard 0");
+    }
+
+    #[test]
+    fn deadline_jobs_are_admitted_ahead_of_best_effort() {
+        // One serial shard: the first job occupies the lane; the next
+        // four queue up. The deadline-tagged job is submitted LAST but
+        // must be admitted (and so complete) before the queued
+        // best-effort jobs.
+        let server = test_server(PolicyKind::NoCache, 1, 8);
+        let head = server.submit(GenRequest::simple(0, 1, 10)).unwrap();
+        let mut best_effort = Vec::new();
+        for i in 1..4u64 {
+            best_effort.push(server.submit(GenRequest::simple(i, 1 + i, 4)).unwrap());
+        }
+        let tagged = server
+            .submit(GenRequest::simple(9, 9, 4).with_deadline(120_000.0))
+            .unwrap();
+        let _ = head.recv().unwrap();
+        let tagged_resp = tagged.recv().unwrap();
+        let be_e2e: Vec<f64> =
+            best_effort.into_iter().map(|rx| rx.recv().unwrap().e2e_ms).collect();
+        assert_eq!(tagged_resp.deadline_met, Some(true));
+        let max_be = be_e2e.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            tagged_resp.e2e_ms < max_be,
+            "deadline job (submitted last, e2e {:.1} ms) should jump the best-effort \
+             queue (max e2e {:.1} ms)",
+            tagged_resp.e2e_ms,
+            max_be
+        );
+        let report = server.shutdown();
+        assert_eq!(report.deadline_jobs, 1);
+        assert_eq!(report.deadline_hits, 1);
+        assert_eq!(report.best_effort_jobs, 4);
+        assert_eq!(report.deadline_hit_rate(), Some(1.0));
     }
 }

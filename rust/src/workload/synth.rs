@@ -83,6 +83,7 @@ impl WorkloadGen {
             steps,
             turbulence: turb,
             init_latent: None,
+            deadline_ms: None,
         }
     }
 
@@ -130,6 +131,7 @@ impl WorkloadGen {
                         seed: base_seed ^ (0xBEEF + f as u64),
                     }),
                     init_latent: Some(init),
+                    deadline_ms: None,
                 }
             })
             .collect()

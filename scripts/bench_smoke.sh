@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Bench smoke (CI): run the serving + sharding tables of bench_tables at
+# tiny sizes and leave the rendered tables plus machine-readable
+# bench_out/BENCH_*.json behind for the workflow-artifact upload, so the
+# perf trajectory accumulates per-PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench_smoke: cargo not found on PATH" >&2
+    exit 1
+fi
+
+mkdir -p bench_out
+BENCH_SMOKE=1 cargo bench --bench bench_tables -- serving sharding \
+    | tee bench_out/BENCH_smoke_tables.txt
+
+echo "bench_smoke: emitted artifacts:"
+ls -l bench_out/BENCH_*

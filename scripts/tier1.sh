@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 gate (ROADMAP.md): release build + test suite + formatting.
+# Tier-1 gate (ROADMAP.md): release build + lint + test suite + formatting.
 # Run from anywhere; it cd's to the repo root. CI runs exactly this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -10,6 +10,17 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 cargo build --release
+
+# Lint gate: every target (lib, bins, tests, benches, examples), warnings
+# are errors. Skipped only where the clippy component itself is absent
+# (some minimal toolchains); CI always installs it, so the gate is real
+# there.
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "tier1: WARNING — clippy not installed, lint gate skipped (rustup component add clippy)" >&2
+fi
+
 cargo test -q
 cargo fmt --check
 echo "tier1: OK"
