@@ -5,10 +5,11 @@
 //!   cargo bench --bench bench_tables            # all tables + figures
 //!   cargo bench --bench bench_tables -- table1  # one experiment
 //!   BENCH_FULL=1 cargo bench ...                # paper-faithful sizes
-//!   BENCH_SMOKE=1 cargo bench -- serving sharding  # CI smoke sizes
+//!   BENCH_SMOKE=1 cargo bench -- serving sharding warmstart  # CI smoke
 //!
-//! The serving and sharding tables also land as bench_out/BENCH_*.json
-//! (uploaded as a CI artifact by scripts/bench_smoke.sh).
+//! The serving, sharding, and warmstart tables also land as
+//! bench_out/BENCH_*.json (uploaded as a CI artifact by
+//! scripts/bench_smoke.sh).
 //!
 //! Absolute numbers differ from the paper (CPU PJRT substrate, latent
 //! FID proxies — see DESIGN.md §2); the reproduced signal is each table's
@@ -17,8 +18,8 @@
 
 use fastcache_dit::config::{FastCacheConfig, PolicyKind, Variant, C_IN};
 use fastcache_dit::experiments::{
-    baseline_policies, eval_policies, eval_serving, eval_sharding, eval_video, EvalConfig,
-    ShardingEval,
+    baseline_policies, eval_policies, eval_serving, eval_sharding, eval_video, eval_warmstart,
+    EvalConfig, ShardingEval, WarmstartEval,
 };
 use fastcache_dit::metrics::report::{f1, pct, Table};
 use fastcache_dit::model::DitModel;
@@ -596,6 +597,82 @@ fn sharding() {
     );
 }
 
+/// Warm start: the same fixed-seed burst served cold (empty store) vs
+/// warm (store populated by the first burst) for the headline policy and
+/// the calibration-hungry L2C baseline. The signal: warm lanes execute
+/// fewer FLOPs per step at χ²-bounded fidelity, with store hit/miss/
+/// eviction counts and stored-bytes ≤ budget reported per phase.
+fn warmstart() {
+    let mut e = WarmstartEval::quick(Variant::S);
+    if smoke() {
+        e.requests = 4;
+        e.steps = 8;
+    }
+    let mut t = Table::new(
+        "Warm start — cross-request store, cold vs warm bursts",
+        &[
+            "Policy",
+            "Phase",
+            "GFLOP/step↓",
+            "FLOPs ratio↓",
+            "Skip↑",
+            "FID↓",
+            "Warm lanes",
+            "Hit rate↑",
+            "Evict",
+            "Store KiB (≤ budget)",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for policy in [PolicyKind::FastCache, PolicyKind::L2C] {
+        let rows = eval_warmstart(&fc(policy), &e).unwrap();
+        for r in &rows {
+            assert!(
+                r.store.used_bytes <= r.store.budget_bytes,
+                "store exceeded its byte budget"
+            );
+            t.row(&[
+                policy.name().to_string(),
+                r.phase.clone(),
+                format!("{:.3}", r.flops_per_step_g),
+                pct(r.flops_ratio),
+                pct(r.skip_ratio),
+                format!("{:.3}", r.fid),
+                format!("{}", r.warm_admissions),
+                pct(r.store.hit_rate()),
+                format!("{}", r.store.evictions),
+                format!(
+                    "{:.1} / {:.0}",
+                    r.store.used_bytes as f64 / 1024.0,
+                    r.store.budget_bytes as f64 / 1024.0
+                ),
+            ]);
+            json_rows.push(format!(
+                "{{\"policy\":\"{}\",\"phase\":\"{}\",\"gflop_per_step\":{:.5},\
+                 \"flops_ratio\":{:.4},\"skip_ratio\":{:.4},\"fid\":{:.4},\
+                 \"warm_admissions\":{},\"warm_layers\":{},\"hits\":{},\"misses\":{},\
+                 \"inserts\":{},\"evictions\":{},\"used_bytes\":{},\"budget_bytes\":{}}}",
+                policy.name(),
+                r.phase,
+                r.flops_per_step_g,
+                r.flops_ratio,
+                r.skip_ratio,
+                r.fid,
+                r.warm_admissions,
+                r.warm_layers,
+                r.store.hits,
+                r.store.misses,
+                r.store.inserts,
+                r.store.evictions,
+                r.store.used_bytes,
+                r.store.budget_bytes
+            ));
+        }
+    }
+    println!("{}", t.render());
+    write_json("warmstart", json_rows);
+}
+
 /// Figure 1: derivative-magnitude heatmap, high- vs low-motion content.
 fn fig1() {
     let v = Variant::B;
@@ -756,6 +833,9 @@ fn main() {
     }
     if want("sharding") {
         sharding();
+    }
+    if want("warmstart") {
+        warmstart();
     }
     if want("fig1") {
         fig1();

@@ -17,6 +17,12 @@
 use crate::stats::PairStats;
 use crate::tensor::Tensor;
 
+/// Cap on the pooled per-channel row count after a fleet-store merge:
+/// bounds the inertia of a warm-started fit so fresh per-request evidence
+/// (which decays old rows at `fit_decay` per update anyway) can still move
+/// the coefficients within a few steps.
+const MERGE_ROW_CAP: u64 = 16_384;
+
 #[derive(Clone, Debug)]
 pub struct AffineFit {
     d: usize,
@@ -77,6 +83,43 @@ impl AffineFit {
             }
         }
         out
+    }
+
+    /// Replace this fit's statistics with `source`'s (same D), keeping the
+    /// OWN decay factor: a lane warm-starting from the fleet store adopts
+    /// the stored evidence but keeps tracking drift at its configured rate.
+    /// The source is a snapshot — later store mutations don't reach us.
+    pub fn adopt(&mut self, source: &AffineFit) {
+        assert_eq!(
+            self.d, source.d,
+            "warm-start fit dimension mismatch: {} vs {}",
+            self.d, source.d
+        );
+        self.chan = source.chan.clone();
+        self.updates = source.updates;
+    }
+
+    /// Pool another fit's evidence into this one (channel-wise sufficient-
+    /// statistic merge), capping the pooled row count so the merged fit
+    /// stays responsive. This is the store's publish path: every retiring
+    /// lane folds its converged fit into the fleet entry.
+    pub fn merge_from(&mut self, other: &AffineFit) {
+        assert_eq!(self.d, other.d, "fit merge dimension mismatch");
+        for (c, o) in self.chan.iter_mut().zip(&other.chan) {
+            c.merge(o);
+            let n = c.count();
+            if n > MERGE_ROW_CAP {
+                c.decay(MERGE_ROW_CAP as f64 / n as f64);
+            }
+        }
+        self.updates = self.updates.saturating_add(other.updates);
+    }
+
+    /// Heap footprint of this fit's state (per-channel sufficient
+    /// statistics) — what the byte-budgeted warm-start store accounts per
+    /// entry.
+    pub fn size_bytes(&self) -> usize {
+        self.d * std::mem::size_of::<PairStats>() + std::mem::size_of::<AffineFit>()
     }
 
     /// Lift the diagonal fit to a full [D, D] matrix + bias (inputs to the
@@ -156,6 +199,64 @@ mod tests {
             err_fit < 0.5 * err_reuse,
             "fit err {err_fit} should beat reuse err {err_reuse}"
         );
+    }
+
+    #[test]
+    fn adopt_transfers_coefficients_and_keeps_decay() {
+        let d = 8;
+        let mut teacher = AffineFit::new(d, 1.0);
+        let x = rnd(9, &[64, d]);
+        let mut y = x.clone();
+        for v in y.data_mut().iter_mut() {
+            *v = 0.8 * *v + 0.2;
+        }
+        teacher.update(&x, &y);
+
+        let mut student = AffineFit::new(d, 0.9);
+        student.adopt(&teacher);
+        assert_eq!(student.updates(), teacher.updates());
+        let x2 = rnd(10, &[16, d]);
+        assert!(student.apply(&x2).max_abs_diff(&teacher.apply(&x2)) < 1e-7);
+        // The student still forgets at its own rate: a regime change must
+        // win within a few updates despite the adopted evidence.
+        for step in 0..40 {
+            let xs = rnd(50 + step, &[64, d]);
+            let mut ys = xs.clone();
+            for v in ys.data_mut().iter_mut() {
+                *v *= -0.5;
+            }
+            student.update(&xs, &ys);
+        }
+        let (a, _) = student.coeffs();
+        assert!((a[0] + 0.5).abs() < 0.1, "a={}", a[0]);
+    }
+
+    #[test]
+    fn merge_pools_evidence_from_both_fits() {
+        let d = 4;
+        // Two fits each see half the sample of y = 2x + 1; the merge must
+        // recover the same line as one fit over everything.
+        let xa = rnd(11, &[32, d]);
+        let xb = rnd(12, &[32, d]);
+        let f_of = |x: &Tensor| {
+            let mut y = x.clone();
+            for v in y.data_mut().iter_mut() {
+                *v = 2.0 * *v + 1.0;
+            }
+            y
+        };
+        let mut fa = AffineFit::new(d, 1.0);
+        fa.update(&xa, &f_of(&xa));
+        let mut fb = AffineFit::new(d, 1.0);
+        fb.update(&xb, &f_of(&xb));
+        fa.merge_from(&fb);
+        assert_eq!(fa.updates(), 2);
+        let (a, b) = fa.coeffs();
+        for j in 0..d {
+            assert!((a[j] - 2.0).abs() < 1e-4, "a[{j}]={}", a[j]);
+            assert!((b[j] - 1.0).abs() < 1e-4, "b[{j}]={}", b[j]);
+        }
+        assert!(fa.size_bytes() > 0);
     }
 
     #[test]

@@ -48,8 +48,14 @@ pub struct CacheState {
     pub prev_temb: Option<Tensor>,
     /// Previous step's post-embed hidden (STR saliency base).
     pub prev_embed: Option<Tensor>,
-    /// Online learnable approximations, one per layer.
+    /// Online learnable approximations, one per layer. May be seeded
+    /// from the cross-request store (warm start).
     fits: Vec<AffineFit>,
+    /// THIS request's own evidence only — allocated in warm-start mode,
+    /// never seeded from the store. Publishing these (instead of `fits`)
+    /// keeps a warm lane from echoing the store's own statistics back
+    /// into it at retirement.
+    fresh_fits: Option<Vec<AffineFit>>,
     pub counters: CacheCounters,
     /// Cache-state bytes currently held (for the memory accounting the
     /// paper reports).
@@ -64,9 +70,17 @@ impl CacheState {
             prev_temb: None,
             prev_embed: None,
             fits: (0..num_layers).map(|_| AffineFit::new(d, fit_decay)).collect(),
+            fresh_fits: None,
             counters: CacheCounters::default(),
             bytes: 0,
         }
+    }
+
+    /// Enable the per-request fresh-evidence accumulators (warm-start
+    /// mode). Must be called before any block runs.
+    pub fn enable_fresh_fits(&mut self, d: usize, fit_decay: f64) {
+        let layers = self.fits.len();
+        self.fresh_fits = Some((0..layers).map(|_| AffineFit::new(d, fit_decay)).collect());
     }
 
     pub fn num_layers(&self) -> usize {
@@ -87,6 +101,29 @@ impl CacheState {
 
     pub fn fit_mut(&mut self, layer: usize) -> &mut AffineFit {
         &mut self.fits[layer]
+    }
+
+    /// All per-layer serving fits (possibly warm-started).
+    pub fn fits(&self) -> &[AffineFit] {
+        &self.fits
+    }
+
+    /// Feed a computed (input, output) pair into layer `layer`'s fit —
+    /// and, in warm-start mode, into its fresh-evidence twin. All fit
+    /// updates must go through here so the two stay in lockstep.
+    pub fn observe_fit(&mut self, layer: usize, input: &Tensor, output: &Tensor) {
+        self.fits[layer].update(input, output);
+        if let Some(fresh) = &mut self.fresh_fits {
+            fresh[layer].update(input, output);
+        }
+    }
+
+    /// What a retiring lane should publish to the cross-request store:
+    /// this request's own evidence (`fresh_fits`) when warm-start mode
+    /// recorded it, else the serving fits (which are then purely local —
+    /// nothing was adopted). Keeps the store free of evidence echo.
+    pub fn publishable_fits(&self) -> &[AffineFit] {
+        self.fresh_fits.as_deref().unwrap_or(&self.fits)
     }
 
     fn track_replace(bytes: &mut usize, slot: &mut Option<Tensor>, t: Tensor) {
@@ -113,10 +150,14 @@ impl CacheState {
         Self::track_replace(&mut self.bytes, &mut self.prev_embed, t);
     }
 
-    /// Cache-state footprint in bytes (hidden copies; fits are O(D) and
-    /// counted at 3 floats per channel).
+    /// Cache-state footprint in bytes (hidden copies; fits — and their
+    /// fresh-evidence twins in warm-start mode — are O(D) and counted at
+    /// 3 floats per channel).
     pub fn size_bytes(&self) -> usize {
-        self.bytes + self.fits.iter().map(|f| f.d() * 3 * 8).sum::<usize>()
+        let fit_bytes = |fits: &[AffineFit]| fits.iter().map(|f| f.d() * 3 * 8).sum::<usize>();
+        self.bytes
+            + fit_bytes(&self.fits)
+            + self.fresh_fits.as_deref().map(fit_bytes).unwrap_or(0)
     }
 
     pub fn clear(&mut self) {
@@ -160,5 +201,74 @@ mod tests {
         s.clear();
         assert_eq!(s.size_bytes(), 2 * 4 * 3 * 8);
         assert!(s.prev_input(0).is_none());
+    }
+
+    #[test]
+    fn fresh_fits_accumulate_only_local_evidence() {
+        // Warm-start mode: the serving fit carries adopted + local rows,
+        // the publishable (fresh) fit carries ONLY this request's — so a
+        // retiring warm lane cannot echo the store's statistics back.
+        let d = 4;
+        let mut s = CacheState::new(1, d, 1.0);
+        s.enable_fresh_fits(d, 1.0);
+
+        let mut adopted = super::AffineFit::new(d, 1.0);
+        let x0 = Tensor::zeros(&[2, d]);
+        let mut y0 = x0.clone();
+        for v in y0.data_mut().iter_mut() {
+            *v += 1.0;
+        }
+        adopted.update(&x0, &y0);
+        s.fit_mut(0).adopt(&adopted);
+        assert_eq!(s.fit(0).updates(), 1);
+        assert_eq!(s.publishable_fits()[0].updates(), 0, "adoption must not taint fresh");
+
+        s.observe_fit(0, &x0, &y0);
+        assert_eq!(s.fit(0).updates(), 2);
+        assert_eq!(s.publishable_fits()[0].updates(), 1);
+
+        // Without fresh fits, publishable == serving fits (purely local).
+        let mut cold = CacheState::new(1, d, 1.0);
+        cold.observe_fit(0, &x0, &y0);
+        assert_eq!(cold.publishable_fits()[0].updates(), 1);
+    }
+
+    #[test]
+    fn bytes_track_actual_tensor_allocation() {
+        // `bytes` must equal the sum of size_bytes() over every resident
+        // tensor at all times — including replacements that GROW or
+        // SHRINK a slot (merged hidden states shrink mid-stack; unpooled
+        // ones grow back), which simple high-water accounting would miss.
+        let fits_overhead = 3 * 4 * 3 * 8;
+        let mut s = CacheState::new(3, 4, 0.98);
+        let mut expect = 0usize;
+        let sz = |n: usize| n * 4 * std::mem::size_of::<f32>();
+
+        s.store_input(0, Tensor::zeros(&[16, 4]));
+        expect += sz(16);
+        s.store_output(0, Tensor::zeros(&[16, 4]));
+        expect += sz(16);
+        s.store_temb(Tensor::zeros(&[1, 4]));
+        expect += sz(1);
+        s.store_embed(Tensor::zeros(&[16, 4]));
+        expect += sz(16);
+        assert_eq!(s.size_bytes(), expect + fits_overhead);
+
+        // Shrink layer 0's slots (a merged-resolution step)...
+        s.store_input(0, Tensor::zeros(&[4, 4]));
+        s.store_output(0, Tensor::zeros(&[4, 4]));
+        expect = expect - 2 * sz(16) + 2 * sz(4);
+        assert_eq!(s.size_bytes(), expect + fits_overhead);
+
+        // ...then grow them back past the original size.
+        s.store_input(0, Tensor::zeros(&[32, 4]));
+        expect = expect - sz(4) + sz(32);
+        assert_eq!(s.size_bytes(), expect + fits_overhead);
+
+        // Untouched layers contribute nothing until written.
+        assert!(s.prev_input(2).is_none());
+        s.store_output(2, Tensor::zeros(&[8, 4]));
+        expect += sz(8);
+        assert_eq!(s.size_bytes(), expect + fits_overhead);
     }
 }

@@ -5,8 +5,8 @@ use std::fmt;
 
 /// Which cache policy the engine runs. Each maps to a `CachePolicy` impl in
 /// `crate::cache` and, for the baselines, to the corresponding row label of
-/// the paper's tables.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+/// the paper's tables. (`Hash`: policies key warm-start store entries.)
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum PolicyKind {
     /// Full computation, no reuse — the paper's "No Cache" row.
     NoCache,
@@ -133,6 +133,23 @@ pub struct FastCacheConfig {
     pub l2c_threshold: f64,
     /// StaticCache recompute period (PAB broadcast frequency).
     pub static_period: usize,
+    /// Cross-request warm start: lanes adopt converged affine fits (and
+    /// threshold policies adopt delta profiles) from the fleet-level
+    /// `store::WarmStore` at admission, and publish theirs back on
+    /// retirement. OFF by default — fixed-seed parity tests and the
+    /// default serving path are bit-for-bit unchanged.
+    pub warm_start: bool,
+    /// Fit-confidence gate: an `Approx` decision is downgraded to
+    /// `Compute` until the layer's affine fit has seen this many updates.
+    /// 0 (default) disables the gate — legacy behavior where even an
+    /// identity fit is substituted. Warm-start deployments set this > 0:
+    /// cold lanes then pay compute until their fits converge, while
+    /// warm-started lanes (whose adopted fits already carry ≥ this many
+    /// updates) approximate from the first skippable site — that gap is
+    /// the warm-start FLOPs win `eval_warmstart` measures. Doubles as the
+    /// publish threshold: only fits with ≥ max(this, 1) updates are
+    /// published to the store.
+    pub fit_min_updates: u64,
 }
 
 impl Default for FastCacheConfig {
@@ -157,6 +174,8 @@ impl Default for FastCacheConfig {
             ada_knee: 0.30,
             l2c_threshold: 0.10,
             static_period: 2,
+            warm_start: false,
+            fit_min_updates: 0,
         }
     }
 }
@@ -225,6 +244,18 @@ mod tests {
         assert!(c.validate().is_err());
         let c = FastCacheConfig { knn_k: 0, ..FastCacheConfig::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn warm_start_is_off_by_default() {
+        // The fixed-seed parity suite relies on the default path being
+        // byte-identical to the pre-warm-start behavior.
+        let c = FastCacheConfig::default();
+        assert!(!c.warm_start);
+        assert_eq!(c.fit_min_updates, 0);
+        for p in PolicyKind::ALL {
+            assert!(!FastCacheConfig::with_policy(p).warm_start);
+        }
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct ServerConfig {
     pub artifacts_dir: String,
     /// Base seed for weight generation (fixed => reproducible serving).
     pub weight_seed: u64,
+    /// Byte budget of the cross-request warm-start store (split across
+    /// its shards; LRU-evicted beyond it). Only consulted when
+    /// `FastCacheConfig::warm_start` is on — the store is not built
+    /// otherwise.
+    pub warm_budget_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -51,6 +56,7 @@ impl Default for ServerConfig {
             workers: 1,
             artifacts_dir: "artifacts".to_string(),
             weight_seed: 0xD17,
+            warm_budget_bytes: 8 << 20,
         }
     }
 }
@@ -79,6 +85,12 @@ impl ServerConfig {
             return Err(format!(
                 "queue_depth {} < workers {} — each shard needs at least one queue slot (queue_depth is split across shards)",
                 self.queue_depth, self.workers
+            ));
+        }
+        if self.warm_budget_bytes < 1024 {
+            return Err(format!(
+                "warm_budget_bytes must be >= 1 KiB (one store entry is a per-layer fit of several KiB), got {}",
+                self.warm_budget_bytes
             ));
         }
         Ok(())
@@ -113,6 +125,14 @@ mod tests {
         assert!(c.validate().is_err());
         c.workers = MAX_WORKERS + 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_warm_budget() {
+        let c = ServerConfig { warm_budget_bytes: 100, ..ServerConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ServerConfig { warm_budget_bytes: 1024, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -200,6 +200,11 @@ pub fn apply(
     f64_key!("cache.ada_knee", fc.ada_knee);
     f64_key!("cache.l2c_threshold", fc.l2c_threshold);
     usize_key!("cache.static_period", fc.static_period);
+    bool_key!("cache.warm_start", fc.warm_start);
+    if let Some(v) = doc.get("cache.fit_min_updates") {
+        fc.fit_min_updates =
+            v.as_usize().ok_or("cache.fit_min_updates must be an integer")? as u64;
+    }
     usize_key!("server.steps", scfg.steps);
     usize_key!("server.max_batch", scfg.max_batch);
     usize_key!("server.queue_depth", scfg.queue_depth);
@@ -212,6 +217,10 @@ pub fn apply(
     }
     if let Some(v) = doc.get("server.weight_seed") {
         scfg.weight_seed = v.as_usize().ok_or("server.weight_seed must be an integer")? as u64;
+    }
+    if let Some(v) = doc.get("server.warm_budget_mib") {
+        scfg.warm_budget_bytes =
+            v.as_usize().ok_or("server.warm_budget_mib must be an integer")? << 20;
     }
     fc.validate()?;
     scfg.validate()?;
@@ -234,11 +243,14 @@ alpha = 0.01
 gamma = 0.7
 enable_str = false
 knn_k = 7
+warm_start = true
+fit_min_updates = 6
 
 [server]
 steps = 25
 max_batch = 2
 artifacts_dir = "artifacts"
+warm_budget_mib = 4
 "#;
 
     #[test]
@@ -262,8 +274,11 @@ artifacts_dir = "artifacts"
         assert_eq!(fc.alpha, 0.01);
         assert!((fc.gamma - 0.7).abs() < 1e-6);
         assert!(!fc.enable_str);
+        assert!(fc.warm_start);
+        assert_eq!(fc.fit_min_updates, 6);
         assert_eq!(scfg.steps, 25);
         assert_eq!(scfg.max_batch, 2);
+        assert_eq!(scfg.warm_budget_bytes, 4 << 20);
     }
 
     #[test]

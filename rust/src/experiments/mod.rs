@@ -5,6 +5,8 @@
 //! See DESIGN.md §6 for the experiment index mapping every paper table and
 //! figure to a bench target, and EXPERIMENTS.md for recorded outputs.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use crate::config::{FastCacheConfig, ModelConfig, PolicyKind, ServerConfig, Variant};
@@ -12,6 +14,7 @@ use crate::metrics::{clip_display, clip_proxy, FidAccumulator};
 use crate::model::DitModel;
 use crate::scheduler::{DenoiseEngine, GenRequest};
 use crate::server::Server;
+use crate::store::{StoreStats, WarmStore};
 use crate::workload::{MotionProfile, WorkloadGen};
 
 /// One table row: a policy evaluated on a request set.
@@ -355,9 +358,12 @@ pub struct ShardingRow {
     /// Mean active lanes per step call (lane-steps / step-calls,
     /// aggregated over all shards).
     pub occupancy: f64,
-    /// Fraction of deadline-tagged jobs served within budget (`None`
-    /// when the burst carried no SLA traffic).
+    /// Fraction of deadline-class jobs served within budget — sheds
+    /// count as misses (`None` when the burst carried no SLA traffic).
     pub deadline_hit_rate: Option<f64>,
+    /// Deadline-tagged jobs dropped unserved (deadline expired while
+    /// queued) — kept visible so a high hit rate can't hide drops.
+    pub deadline_sheds: u64,
     pub padded_gflops: f64,
     /// Jobs completed per shard — shows what least-predicted-load
     /// routing actually did with the burst.
@@ -420,9 +426,155 @@ pub fn eval_sharding(fc: &FastCacheConfig, e: &ShardingEval) -> Result<Vec<Shard
             p95_ms: report.e2e.percentile(95.0),
             occupancy: report.occupancy(),
             deadline_hit_rate: report.deadline_hit_rate(),
+            deadline_sheds: report.deadline_sheds,
             padded_gflops: report.padded_flops as f64 / 1e9,
             shard_completed: report.shards.iter().map(|s| s.completed).collect(),
         });
+    }
+    Ok(rows)
+}
+
+/// Knobs of the warm-start experiment: the SAME fixed-seed burst served
+/// twice against one long-lived `WarmStore` — first cold (empty store),
+/// then warm (the store holds what the first burst's lanes published).
+#[derive(Clone, Debug)]
+pub struct WarmstartEval {
+    pub variant: Variant,
+    pub requests: usize,
+    pub steps: usize,
+    /// Active-lane cap; ≥ `requests` keeps the first burst fully cold
+    /// (every lane admitted before any lane retires and publishes).
+    pub max_batch: usize,
+    /// Store byte budget (the rows report used bytes against it).
+    pub budget_bytes: usize,
+    /// Fit-confidence gate (see `FastCacheConfig::fit_min_updates`): the
+    /// cold burst pays compute until its fits converge; the warm burst
+    /// adopts converged fits and approximates from the first skippable
+    /// site.
+    pub fit_min_updates: u64,
+    /// Permissive χ² noise floor so the χ² test fires from the first
+    /// cached step and the confidence gate is the binding constraint —
+    /// isolating the warm-start effect. Both phases run the same value,
+    /// so per-skip error stays bounded by the same ε = δ₀·√(χ²/ND) in
+    /// both rows (the fid column reports the realized cost).
+    pub tau_delta0: f64,
+}
+
+impl WarmstartEval {
+    pub fn quick(variant: Variant) -> WarmstartEval {
+        let full = std::env::var("BENCH_FULL").as_deref() == Ok("1");
+        let (requests, steps) = if full { (16, 20) } else { (8, 12) };
+        WarmstartEval {
+            variant,
+            requests,
+            steps,
+            max_batch: 16,
+            budget_bytes: 4 << 20,
+            fit_min_updates: 6,
+            tau_delta0: 1.0,
+        }
+    }
+}
+
+/// One warm-start row: a burst phase against the shared store.
+#[derive(Clone, Debug)]
+pub struct WarmstartRow {
+    pub phase: String,
+    pub completed: u64,
+    /// Mean executed GFLOPs per lane-step — the cold-vs-warm axis.
+    pub flops_per_step_g: f64,
+    pub flops_ratio: f64,
+    pub skip_ratio: f64,
+    /// FID-proxy vs the full-compute (NoCache) rendering of the burst.
+    pub fid: f64,
+    pub warm_admissions: u64,
+    pub warm_layers: u64,
+    /// Store counter deltas for this phase + absolute occupancy.
+    pub store: StoreStats,
+}
+
+/// Serve one fixed-seed burst twice through warm-start-enabled servers
+/// sharing one store. The cold phase runs against an empty store (all
+/// misses, publishes on retirement); the warm phase warm-starts from it.
+/// The headline signal: warm lanes execute fewer FLOPs per step at the
+/// same χ²-bounded fidelity, with every store counter reported and
+/// `used_bytes ≤ budget` by construction.
+pub fn eval_warmstart(fc: &FastCacheConfig, e: &WarmstartEval) -> Result<Vec<WarmstartRow>> {
+    let mut fc = fc.clone();
+    fc.warm_start = true;
+    fc.fit_min_updates = e.fit_min_updates;
+    fc.tau_delta0 = e.tau_delta0;
+    fc.enable_str = false; // isolate the fit/profile effect from token reduction
+
+    let mut wl = WorkloadGen::new(0x3A9A);
+    let reqs = wl.image_set(e.requests, e.steps, MotionProfile::MIXED);
+
+    // Full-compute reference for the fidelity column.
+    let variant = e.variant;
+    let model = DitModel::native(variant, ServerConfig::default().weight_seed);
+    let mut ref_fid = FidAccumulator::new();
+    {
+        let mut eng = DenoiseEngine::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        for r in &reqs {
+            ref_fid.push_latent(&eng.generate(r)?.latent);
+        }
+    }
+
+    let store = Arc::new(WarmStore::new(e.budget_bytes, 1));
+    let mut rows = Vec::with_capacity(2);
+    let mut base_stats = StoreStats::default();
+    for phase in ["cold", "warm"] {
+        let scfg = ServerConfig {
+            variant,
+            steps: e.steps,
+            max_batch: e.max_batch.min(16),
+            queue_depth: e.requests.max(1),
+            warm_budget_bytes: e.budget_bytes,
+            ..ServerConfig::default()
+        };
+        scfg.validate().map_err(anyhow::Error::msg)?;
+        let server = Server::start_with_store(
+            scfg,
+            fc.clone(),
+            Some(Arc::clone(&store)),
+            move || Ok(DitModel::native(variant, ServerConfig::default().weight_seed)),
+        );
+        let mut rxs = Vec::with_capacity(reqs.len());
+        for req in &reqs {
+            let rx = server
+                .submit_blocking(req)
+                .map_err(|err| anyhow::anyhow!("submit failed: {err}"))?;
+            rxs.push(rx);
+        }
+        let mut flops_done = 0u64;
+        let mut flops_full = 0u64;
+        let mut steps_run = 0usize;
+        let mut skip_num = 0usize;
+        let mut skip_den = 0usize;
+        let mut fid = FidAccumulator::new();
+        for rx in rxs {
+            let resp = rx.recv().context("server dropped a response")?.completed();
+            flops_done += resp.result.flops_done;
+            flops_full += resp.result.flops_full;
+            steps_run += resp.result.records.len();
+            skip_num += resp.result.approximated + resp.result.reused;
+            skip_den += resp.result.computed + resp.result.approximated + resp.result.reused;
+            fid.push_latent(&resp.result.latent);
+        }
+        let report = server.shutdown();
+        let now = store.stats();
+        rows.push(WarmstartRow {
+            phase: phase.to_string(),
+            completed: report.completed,
+            flops_per_step_g: flops_done as f64 / steps_run.max(1) as f64 / 1e9,
+            flops_ratio: flops_done as f64 / flops_full.max(1) as f64,
+            skip_ratio: skip_num as f64 / skip_den.max(1) as f64,
+            fid: fid.distance_to(&ref_fid),
+            warm_admissions: report.warm_admissions,
+            warm_layers: report.warm_layers,
+            store: now.since(&base_stats),
+        });
+        base_stats = now;
     }
     Ok(rows)
 }
@@ -496,9 +648,49 @@ mod tests {
             assert_eq!(r.shard_completed.len(), r.workers);
             assert_eq!(r.shard_completed.iter().sum::<u64>(), 6);
             assert!(r.rps > 0.0);
-            // 120s budget on a 6-request burst: every tagged job hits.
+            // 120s budget on a 6-request burst: every tagged job hits,
+            // nothing is shed.
             assert_eq!(r.deadline_hit_rate, Some(1.0), "workers={}", r.workers);
+            assert_eq!(r.deadline_sheds, 0, "workers={}", r.workers);
         }
+    }
+
+    #[test]
+    fn eval_warmstart_shows_fewer_flops_warm_within_budget() {
+        let e = WarmstartEval {
+            variant: Variant::S,
+            requests: 4,
+            steps: 10,
+            max_batch: 8,
+            budget_bytes: 1 << 20,
+            fit_min_updates: 5,
+            tau_delta0: 1.0,
+        };
+        let fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        let rows = eval_warmstart(&fc, &e).unwrap();
+        assert_eq!(rows.len(), 2);
+        let (cold, warm) = (&rows[0], &rows[1]);
+        assert_eq!(cold.completed, 4);
+        assert_eq!(warm.completed, 4);
+        // The acceptance criterion: warm lanes execute fewer FLOPs/step.
+        assert!(
+            warm.flops_per_step_g < cold.flops_per_step_g,
+            "warm {} vs cold {} GFLOP/step",
+            warm.flops_per_step_g,
+            cold.flops_per_step_g
+        );
+        assert!(warm.flops_ratio < cold.flops_ratio);
+        // Cold phase: empty store — only misses and publishes.
+        assert_eq!(cold.warm_admissions, 0);
+        assert_eq!(cold.store.hits, 0);
+        assert!(cold.store.misses > 0);
+        assert!(cold.store.inserts > 0);
+        // Warm phase: every lane warm-starts; the store stays in budget.
+        assert_eq!(warm.warm_admissions, 4);
+        assert!(warm.store.hits > 0);
+        assert!(warm.store.used_bytes <= warm.store.budget_bytes);
+        // Fidelity stays χ²-bounded (finite, same order) in both phases.
+        assert!(cold.fid.is_finite() && warm.fid.is_finite());
     }
 
     #[test]

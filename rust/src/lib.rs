@@ -30,6 +30,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod stats;
+pub mod store;
 pub mod tensor;
 pub mod testutil;
 pub mod tokens;

@@ -14,7 +14,13 @@
 //!
 //! Serve-only: --deadline-every K --deadline-ms D tag every K-th request
 //! with an SLA deadline of D ms; the sharded server admits tagged jobs
-//! ahead of best-effort ones and reports the deadline-hit rate.
+//! ahead of best-effort ones, sheds jobs whose deadline expired while
+//! queued, and reports the deadline-hit rate.
+//!
+//! Warm start: --warm-start enables the cross-request store (lanes adopt
+//! converged affine fits / calibration profiles from previously served
+//! traffic and publish theirs back), --warm-budget-mib N bounds it, and
+//! --fit-min-updates K gates Approx on fit convergence.
 
 use std::sync::Arc;
 
@@ -63,6 +69,11 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     if args.flag("merge") {
         fc.enable_merge = true;
     }
+    if args.flag("warm-start") {
+        fc.warm_start = true;
+    }
+    fc.fit_min_updates =
+        args.parse_num("fit-min-updates", fc.fit_min_updates).map_err(anyhow::Error::msg)?;
     fc.validate().map_err(anyhow::Error::msg)?;
 
     let mut scfg = file_scfg;
@@ -75,6 +86,10 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     scfg.workers = args.parse_num("workers", scfg.workers).map_err(anyhow::Error::msg)?;
     scfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     scfg.weight_seed = args.parse_num("seed", scfg.weight_seed).map_err(anyhow::Error::msg)?;
+    let warm_mib: usize = args
+        .parse_num("warm-budget-mib", scfg.warm_budget_bytes >> 20)
+        .map_err(anyhow::Error::msg)?;
+    scfg.warm_budget_bytes = warm_mib << 20;
     scfg.validate().map_err(anyhow::Error::msg)?;
     Ok((variant, fc, scfg))
 }
@@ -221,19 +236,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     for rx in pending {
-        let resp = rx.recv().context("response channel closed")?;
-        let sla = match resp.deadline_met {
-            Some(true) => "  [SLA hit]",
-            Some(false) => "  [SLA MISS]",
-            None => "",
-        };
-        println!(
-            "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}",
-            resp.result.id,
-            resp.e2e_ms,
-            resp.queued_ms,
-            resp.result.skip_ratio() * 100.0
-        );
+        match rx.recv().context("response channel closed")? {
+            fastcache_dit::server::GenOutcome::Completed(resp) => {
+                let sla = match resp.deadline_met {
+                    Some(true) => "  [SLA hit]",
+                    Some(false) => "  [SLA MISS]",
+                    None => "",
+                };
+                let warm = if resp.result.warm_layers > 0 { "  [warm]" } else { "" };
+                println!(
+                    "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}{warm}",
+                    resp.result.id,
+                    resp.e2e_ms,
+                    resp.queued_ms,
+                    resp.result.skip_ratio() * 100.0
+                );
+            }
+            fastcache_dit::server::GenOutcome::Shed(n) => {
+                println!(
+                    "  req {:>3}: SHED after {:>7.1} ms queued (deadline {:.0} ms already passed)",
+                    n.id, n.waited_ms, n.deadline_ms
+                );
+            }
+        }
     }
     let report = server.shutdown();
     println!(
@@ -247,11 +272,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if let Some(rate) = report.deadline_hit_rate() {
         println!(
-            "SLA: {}/{} deadline-tagged jobs within budget ({:.1}%), {} best-effort",
+            "SLA: {}/{} deadline-tagged jobs within budget ({:.1}%), {} best-effort, {} shed",
             report.deadline_hits,
             report.deadline_jobs,
             rate * 100.0,
-            report.best_effort_jobs
+            report.best_effort_jobs,
+            report.deadline_sheds
+        );
+    } else if report.deadline_sheds > 0 {
+        println!(
+            "SLA: {} deadline-tagged jobs shed (expired while queued)",
+            report.deadline_sheds
+        );
+    }
+    if let Some(s) = &report.store {
+        println!(
+            "warm store: {} warm admissions ({} layers) | {} hits / {} misses ({:.1}% hit) | \
+             {} inserts, {} evictions | {:.1} KiB / {:.1} KiB budget",
+            report.warm_admissions,
+            report.warm_layers,
+            s.hits,
+            s.misses,
+            s.hit_rate() * 100.0,
+            s.inserts,
+            s.evictions,
+            s.used_bytes as f64 / 1024.0,
+            s.budget_bytes as f64 / 1024.0
         );
     }
     if report.shards.len() > 1 {

@@ -4,6 +4,8 @@
 
 use std::sync::Arc;
 
+use crate::store::lru::{ByteSized, LruBytes, LruCounters};
+
 /// Cosine cumulative signal level ᾱ(u), u ∈ [0, 1] (Nichol & Dhariwal).
 fn alpha_bar(u: f64) -> f64 {
     let s = 0.008;
@@ -68,32 +70,75 @@ impl DdimSchedule {
     }
 }
 
+impl ByteSized for DdimSchedule {
+    fn size_bytes(&self) -> usize {
+        self.timesteps.len() * std::mem::size_of::<f32>()
+            + (self.alphas.len() + self.alphas_prev.len()) * std::mem::size_of::<f64>()
+    }
+}
+
 /// Memoized, `Arc`-shared schedules. Engines and the serving worker hand
 /// lanes an `Arc<DdimSchedule>` instead of cloning the whole table per
-/// request (the old per-engine cache cloned on every hit).
-#[derive(Default)]
+/// request. Bounded: long-lived servers see arbitrarily diverse step
+/// counts, so the memo is a byte-budgeted LRU (`store::lru::LruBytes` —
+/// the same accounting/eviction primitive the warm-start store shards
+/// use) instead of an unbounded map.
 pub struct ScheduleCache {
-    cached: Vec<(usize, Arc<DdimSchedule>)>,
+    lru: LruBytes<usize, Arc<DdimSchedule>>,
+}
+
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        ScheduleCache::new()
+    }
 }
 
 impl ScheduleCache {
+    /// Default byte budget: comfortably holds ~50 distinct 100-step
+    /// schedules — beyond that, rarely-used step counts are rebuilt on
+    /// demand (cheap) instead of held forever.
+    pub const DEFAULT_BUDGET_BYTES: usize = 128 * 1024;
+
     pub fn new() -> ScheduleCache {
-        ScheduleCache::default()
+        ScheduleCache::with_budget(Self::DEFAULT_BUDGET_BYTES)
+    }
+
+    pub fn with_budget(budget_bytes: usize) -> ScheduleCache {
+        ScheduleCache { lru: LruBytes::new(budget_bytes) }
     }
 
     /// Get (or build) the `steps`-step schedule at the 1000-step training
-    /// discretization every engine uses.
+    /// discretization every engine uses. A schedule too large for the
+    /// whole budget is still returned — just not retained.
     pub fn get(&mut self, steps: usize) -> Arc<DdimSchedule> {
-        if let Some((_, s)) = self.cached.iter().find(|(n, _)| *n == steps) {
+        if let Some(s) = self.lru.get(&steps) {
             return Arc::clone(s);
         }
         let s = Arc::new(DdimSchedule::new(steps, 1000));
-        self.cached.push((steps, Arc::clone(&s)));
-        // Bound the cache for long-lived servers with diverse step counts.
-        if self.cached.len() > 16 {
-            self.cached.remove(0);
-        }
+        self.lru.insert(steps, Arc::clone(&s));
         s
+    }
+
+    /// Bytes currently retained (always ≤ the budget).
+    pub fn used_bytes(&self) -> usize {
+        self.lru.used_bytes()
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.lru.budget()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lru.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lru.is_empty()
+    }
+
+    /// Hit/miss/eviction counters (same shape as the warm store's).
+    pub fn counters(&self) -> LruCounters {
+        self.lru.counters()
     }
 }
 
@@ -110,6 +155,36 @@ mod tests {
         let other = c.get(10);
         assert!(!Arc::ptr_eq(&a, &other));
         assert_eq!(other.len(), 10);
+        assert_eq!(c.counters().hits, 1);
+        assert_eq!(c.counters().misses, 2);
+    }
+
+    #[test]
+    fn schedule_cache_is_byte_bounded_with_lru_drop() {
+        // A budget sized for roughly three 50-step schedules: flooding
+        // with distinct step counts must stay within budget and keep the
+        // recently-used entry alive while dropping cold ones.
+        let one = DdimSchedule::new(50, 1000).size_bytes() + crate::store::lru::ENTRY_OVERHEAD;
+        let mut c = ScheduleCache::with_budget(3 * one);
+        let hot = c.get(50);
+        for steps in 51..80 {
+            let s = c.get(steps);
+            assert_eq!(s.len(), steps);
+            // Touch the hot schedule between inserts so it never becomes
+            // the LRU victim.
+            let again = c.get(50);
+            assert!(Arc::ptr_eq(&hot, &again), "hot schedule evicted at steps={steps}");
+            assert!(c.used_bytes() <= c.budget_bytes());
+        }
+        assert!(c.counters().evictions > 0, "flooding never evicted anything");
+        assert!(c.len() <= 3);
+        // An entry larger than the whole budget is served but not
+        // retained — and never breaks the byte bound.
+        let mut tiny = ScheduleCache::with_budget(64);
+        let big = tiny.get(500);
+        assert_eq!(big.len(), 500);
+        assert_eq!(tiny.len(), 0);
+        assert_eq!(tiny.used_bytes(), 0);
     }
 
     #[test]

@@ -24,8 +24,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::cache::{build_policy, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo};
-use crate::config::{ApproxMode, FastCacheConfig, C_IN};
+use crate::cache::{
+    build_policy, AffineFit, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo,
+};
+use crate::config::{ApproxMode, FastCacheConfig, PolicyKind, C_IN};
 use crate::model::{native, DitModel};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -125,6 +127,9 @@ pub struct GenResult {
     pub flops_padded: u64,
     /// Peak cache-state bytes held for this request.
     pub cache_bytes_peak: usize,
+    /// Layers whose affine fit was warm-started from the cross-request
+    /// store at admission (0 on the cold path / with warm-start off).
+    pub warm_layers: usize,
 }
 
 impl GenResult {
@@ -153,6 +158,7 @@ impl GenResult {
             self.flops_done as f64 / self.flops_full as f64
         }
     }
+
 }
 
 /// Build the conditioning vector for a request: unit-normalized random
@@ -192,6 +198,12 @@ pub struct Lane {
     /// Full-compute cost of one denoise step at full tokens (layers ×
     /// block FLOPs) — the unit of the remaining-work prediction below.
     full_step_flops: u64,
+    /// Layers warm-started from the cross-request store at admission.
+    warm_layers: usize,
+    /// Observed per-(step, layer) relative deltas (+∞ = no evidence at
+    /// that site), recorded only when warm-start is on; retiring lanes
+    /// publish this into the fleet profile.
+    delta_log: Option<Vec<Vec<f64>>>,
 }
 
 impl Lane {
@@ -235,6 +247,49 @@ impl Lane {
         self.step >= self.schedule.len()
     }
 
+    /// Adopt warm fits from the cross-request store, one slot per layer
+    /// (`None` = store miss, layer stays cold). Only legal at admission —
+    /// the imported fits are a snapshot, so an in-flight lane never
+    /// observes store mutations. A fit whose dimension does not match
+    /// this lane's model is skipped (stale store entry from a
+    /// mis-fingerprinted server must degrade to a cold layer, not panic
+    /// the shard). Returns the number of layers warmed.
+    pub fn warm_start_fits(&mut self, warm: &[Option<AffineFit>]) -> usize {
+        assert_eq!(self.step, 0, "warm-start is admission-only (snapshot semantics)");
+        assert_eq!(warm.len(), self.cache.num_layers(), "one warm slot per layer");
+        let mut n = 0;
+        for (l, w) in warm.iter().enumerate() {
+            if let Some(f) = w {
+                if f.d() != self.cache.fit(l).d() {
+                    continue;
+                }
+                self.cache.fit_mut(l).adopt(f);
+                n += 1;
+            }
+        }
+        self.warm_layers = n;
+        n
+    }
+
+    /// Per-layer fits that saw at least `min_updates` updates — what a
+    /// retiring lane publishes back to the store. In warm-start mode
+    /// these are the lane's FRESH accumulators (its own evidence only),
+    /// so an adopted fleet fit is never echoed back into the store.
+    pub fn converged_fits(&self, min_updates: u64) -> Vec<(usize, &AffineFit)> {
+        self.cache
+            .publishable_fits()
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.updates() >= min_updates)
+            .collect()
+    }
+
+    /// The observed per-(step, layer) delta log (`None` unless warm-start
+    /// recording was on). Complete only once the lane is done.
+    pub fn delta_log(&self) -> Option<&[Vec<f64>]> {
+        self.delta_log.as_deref()
+    }
+
     pub fn into_result(self) -> GenResult {
         self.finish().0
     }
@@ -256,6 +311,7 @@ impl Lane {
             flops_padded,
             cache_bytes_peak,
             active,
+            warm_layers,
             ..
         } = self;
         let counters = cache.counters;
@@ -275,6 +331,7 @@ impl Lane {
                 flops_full,
                 flops_padded,
                 cache_bytes_peak,
+                warm_layers,
             },
             policy,
         )
@@ -343,9 +400,27 @@ impl<'m> LaneStepper<'m> {
                 Tensor::new(rng.normal_vec(cfg.n_tokens * C_IN, 1.0), &[cfg.n_tokens, C_IN])
             }
         };
+        // Delta recording feeds the fleet profile. Only the calibration-
+        // hungry schedule policies (L2C) ever READ profiles, so only
+        // their lanes pay for recording — a FastCache fleet would
+        // otherwise fill the store's byte budget with profile entries no
+        // admission path looks up, evicting the fits that are the actual
+        // warm-start win. Fresh-evidence fit accumulators are the
+        // warm-publish side: a lane publishes its own rows only, never
+        // the adopted fleet statistics.
+        let records_profile = self.fc.warm_start && self.fc.policy == PolicyKind::L2C;
+        let delta_log = if records_profile {
+            Some(vec![vec![f64::INFINITY; cfg.layers]; schedule.len()])
+        } else {
+            None
+        };
+        let mut cache = CacheState::new(cfg.layers, cfg.d, self.fc.fit_decay);
+        if self.fc.warm_start {
+            cache.enable_fresh_fits(cfg.d, self.fc.fit_decay);
+        }
         Lane {
             turb_rng: req.turbulence.as_ref().map(|t| Rng::new(t.seed)),
-            cache: CacheState::new(cfg.layers, cfg.d, self.fc.fit_decay),
+            cache,
             policy,
             cond,
             x,
@@ -361,6 +436,8 @@ impl<'m> LaneStepper<'m> {
             cache_bytes_peak: 0,
             active: Duration::ZERO,
             full_step_flops: cfg.full_step_flops(),
+            warm_layers: 0,
+            delta_log,
         }
     }
 
@@ -488,13 +565,29 @@ impl<'m> LaneStepper<'m> {
                     ctx.delta_sum += dv;
                     ctx.delta_cnt += 1;
                 }
-                let action = lane.policy.decide(&BlockCtx {
+                if let Some(log) = &mut lane.delta_log {
+                    log[ctx.rec.step][l] = delta.unwrap_or(f64::INFINITY);
+                }
+                let mut action = lane.policy.decide(&BlockCtx {
                     layer: l,
                     num_layers: layers,
                     step: ctx.rec.step,
                     delta,
                     nd: cur_n * d,
                 });
+                // Fit-confidence gate: substituting an unconverged (near-
+                // identity) fit is the cold-start quality leak warm-start
+                // exists to close — with the gate on, a lane computes
+                // until its fit has real evidence, so a warm-started lane
+                // (whose adopted fits arrive converged) approximates
+                // earlier and executes measurably fewer FLOPs. 0 = legacy
+                // behavior, bit-identical to pre-gate serving.
+                if action == BlockAction::Approx
+                    && self.fc.fit_min_updates > 0
+                    && lane.cache.fit(l).updates() < self.fc.fit_min_updates
+                {
+                    action = BlockAction::Compute;
+                }
                 lane.flops_full += cfg.block_flops(cur_n);
                 lane.token_sites_total += cur_n as u64;
                 lane.active += t0.elapsed();
@@ -575,7 +668,7 @@ impl<'m> LaneStepper<'m> {
                         ctx.rec.computed += 1;
                         let out = if let Some(o) = outs[li].take() {
                             // Batched full-token compute.
-                            lane.cache.fit_mut(l).update(&ctx.h, &o);
+                            lane.cache.observe_fit(l, &ctx.h, &o);
                             lane.flops_done += cfg.block_flops(cur_n);
                             lane.token_sites_computed += cur_n as u64;
                             o
@@ -593,7 +686,7 @@ impl<'m> LaneStepper<'m> {
                                     let sub_b = sub.clone().reshape(&[1, nb, d]);
                                     let out_sub =
                                         self.model.block(l, &sub_b, &ctx.c)?.reshape(&[nb, d]);
-                                    lane.cache.fit_mut(l).update(&sub, &out_sub);
+                                    lane.cache.observe_fit(l, &sub, &out_sub);
                                     let mut out_full = lane.cache.fit(l).apply(&ctx.h);
                                     out_full.scatter_rows(idx, &out_sub);
                                     lane.flops_done += cfg.block_flops(nb)
@@ -606,7 +699,7 @@ impl<'m> LaneStepper<'m> {
                                     let hb = ctx.h.clone().reshape(&[1, cur_n, d]);
                                     let out =
                                         self.model.block(l, &hb, &ctx.c)?.reshape(&[cur_n, d]);
-                                    lane.cache.fit_mut(l).update(&ctx.h, &out);
+                                    lane.cache.observe_fit(l, &ctx.h, &out);
                                     lane.flops_done += cfg.block_flops(cur_n);
                                     lane.token_sites_computed += cur_n as u64;
                                     out
@@ -794,6 +887,109 @@ mod tests {
             cl.remaining_flops_estimate(),
             nl.remaining_flops_estimate()
         );
+    }
+
+    #[test]
+    fn cache_bytes_peak_matches_allocated_state() {
+        // Across Compute/Approx/Reuse transitions the resident cache state
+        // is the same set of tensors: per layer the previous step's input
+        // and output [n, d], plus temb [1, d], embed [n, d], and the fit
+        // statistics. `cache_bytes_peak` must equal exactly that — byte
+        // accounting is what the store's budget math stands on.
+        let model = DitModel::native(Variant::S, 7);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        let stepper = LaneStepper::new(&model, fc);
+        let mut schedules = ScheduleCache::new();
+        let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 12), schedules.get(12));
+        while !lane.is_done() {
+            stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+        }
+        let r = lane.into_result();
+        assert!(r.computed > 0 && r.approximated > 0, "need action transitions");
+        let (n, d, layers) = (model.cfg.n_tokens, model.cfg.d, model.cfg.layers);
+        let f32s = std::mem::size_of::<f32>();
+        let hidden_copies = 2 * layers * n * d * f32s; // prev_input + prev_output per layer
+        let temb = d * f32s; // prev_temb [1, d]
+        let embed = n * d * f32s; // prev_embed [n, d]
+        let fit_stats = layers * d * 3 * 8;
+        assert_eq!(r.cache_bytes_peak, hidden_copies + temb + embed + fit_stats);
+    }
+
+    #[test]
+    fn warm_started_fits_cut_flops_under_confidence_gate() {
+        // The tentpole's core mechanism at lane level: with the fit-
+        // confidence gate on, a cold lane computes until each layer's fit
+        // has seen `fit_min_updates` updates; a lane warm-started from a
+        // retired lane's converged fits approximates from the first
+        // skippable site and executes strictly fewer FLOPs.
+        let model = DitModel::native(Variant::S, 7);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        fc.warm_start = true;
+        fc.fit_min_updates = 6;
+        fc.tau_delta0 = 1.0; // permissive χ²: the gate is the binding constraint
+        let stepper = LaneStepper::new(&model, fc);
+        let mut schedules = ScheduleCache::new();
+        let steps = 12;
+
+        let mut cold = stepper.make_lane(&GenRequest::simple(0, 9, steps), schedules.get(steps));
+        while !cold.is_done() {
+            stepper.step(std::slice::from_mut(&mut cold)).unwrap();
+        }
+        // Retirement: every layer computed ≥ 6 sites under the gate, so
+        // every fit is publishable.
+        let converged = cold.converged_fits(6);
+        assert_eq!(converged.len(), model.cfg.layers);
+        let mut warm_fits: Vec<Option<AffineFit>> = vec![None; model.cfg.layers];
+        for (l, f) in converged {
+            warm_fits[l] = Some(f.clone());
+        }
+        // FastCache lanes don't pay for profile recording (no policy
+        // that reads profiles is running).
+        assert!(cold.delta_log().is_none());
+        let cold_r = cold.into_result();
+        assert_eq!(cold_r.warm_layers, 0);
+
+        let mut warm = stepper.make_lane(&GenRequest::simple(1, 9, steps), schedules.get(steps));
+        assert_eq!(warm.warm_start_fits(&warm_fits), model.cfg.layers);
+        while !warm.is_done() {
+            stepper.step(std::slice::from_mut(&mut warm)).unwrap();
+        }
+        let warm_r = warm.into_result();
+        assert_eq!(warm_r.warm_layers, model.cfg.layers);
+        assert!(
+            warm_r.flops_done < cold_r.flops_done,
+            "warm lane must execute fewer FLOPs: {} vs {}",
+            warm_r.flops_done,
+            cold_r.flops_done
+        );
+        assert!(warm_r.approximated > cold_r.approximated);
+    }
+
+    #[test]
+    fn delta_log_records_only_for_profile_consumers() {
+        // L2C is the policy that calibrates from fleet profiles, so only
+        // its warm-start lanes record the per-(step, layer) delta log:
+        // step 0 is cold (∞), later steps carry finite evidence.
+        let model = DitModel::native(Variant::S, 7);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::L2C);
+        fc.warm_start = true;
+        let stepper = LaneStepper::new(&model, fc);
+        let mut schedules = ScheduleCache::new();
+        let steps = 5;
+        let mut lane = stepper.make_lane(&GenRequest::simple(0, 11, steps), schedules.get(steps));
+        while !lane.is_done() {
+            stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+        }
+        let log = lane.delta_log().expect("L2C warm lanes record deltas");
+        assert_eq!(log.len(), steps);
+        assert!(log[0].iter().all(|d| d.is_infinite()));
+        assert!(log[1].iter().all(|d| d.is_finite()));
+        // Warm-start off: nobody records, L2C or not.
+        let off = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::L2C));
+        let lane = off.make_lane(&GenRequest::simple(1, 11, steps), schedules.get(steps));
+        assert!(lane.delta_log().is_none());
     }
 
     #[test]

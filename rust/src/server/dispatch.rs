@@ -27,6 +27,7 @@ use anyhow::Result;
 use crate::config::{FastCacheConfig, ModelConfig, ServerConfig};
 use crate::model::DitModel;
 use crate::scheduler::ScheduleCache;
+use crate::store::WarmStore;
 
 use super::queue::{Job, JobQueue, Push, SubmitError};
 use super::worker::{shard_loop, ServerReport, ShardReport};
@@ -63,13 +64,24 @@ pub struct Dispatcher {
     /// Full-compute FLOPs of one denoise step (layers × block at full
     /// tokens) — the unit queued-job costs are quoted in.
     step_flops: u64,
+    /// The cross-request warm-start store shared by every shard (`None`
+    /// when warm-start is off). May be caller-owned and outlive this
+    /// dispatcher (fleet semantics).
+    store: Option<Arc<WarmStore>>,
     started: Instant,
 }
 
 impl Dispatcher {
     /// Spawn the shard threads. The factory runs once per shard, on that
-    /// shard's thread (PJRT clients are not shared across threads).
-    pub fn start<F>(scfg: &ServerConfig, fc: &FastCacheConfig, model_factory: F) -> Dispatcher
+    /// shard's thread (PJRT clients are not shared across threads). The
+    /// warm-start store — when present — is `Arc`-shared across shards:
+    /// lanes consult it at admission and publish back on retirement.
+    pub fn start<F>(
+        scfg: &ServerConfig,
+        fc: &FastCacheConfig,
+        store: Option<Arc<WarmStore>>,
+        model_factory: F,
+    ) -> Dispatcher
     where
         F: Fn() -> Result<DitModel> + Send + Sync + 'static,
     {
@@ -85,18 +97,25 @@ impl Dispatcher {
             .map(|id| {
                 let queue = Arc::new(JobQueue::new(cap));
                 let load = Arc::new(ShardLoad::default());
-                let (q, l) = (Arc::clone(&queue), Arc::clone(&load));
-                let (f, s) = (Arc::clone(&factory), Arc::clone(&schedules));
-                let (sc, fcc) = (scfg.clone(), fc.clone());
+                let ctx = super::worker::ShardCtx {
+                    id,
+                    scfg: scfg.clone(),
+                    fc: fc.clone(),
+                    queue: Arc::clone(&queue),
+                    load: Arc::clone(&load),
+                    schedules: Arc::clone(&schedules),
+                    warm_store: store.clone(),
+                };
+                let f = Arc::clone(&factory);
                 let handle = std::thread::Builder::new()
                     .name(format!("fastcache-shard-{id}"))
-                    .spawn(move || shard_loop(id, sc, fcc, f.as_ref(), &q, &l, &s))
+                    .spawn(move || shard_loop(ctx, f.as_ref()))
                     .expect("spawning shard thread");
                 Shard { queue, load, handle }
             })
             .collect();
 
-        Dispatcher { shards, step_flops, started: Instant::now() }
+        Dispatcher { shards, step_flops, store, started: Instant::now() }
     }
 
     pub fn workers(&self) -> usize {
@@ -142,7 +161,8 @@ impl Dispatcher {
     }
 
     /// Close every shard queue, wait for the shards to drain, and merge
-    /// their reports into one aggregate with a per-shard breakdown.
+    /// their reports into one aggregate with a per-shard breakdown (plus
+    /// the warm store's counters, when one was attached).
     pub fn shutdown(self) -> ServerReport {
         for shard in &self.shards {
             shard.queue.close();
@@ -152,6 +172,7 @@ impl Dispatcher {
             .into_iter()
             .map(|s| s.handle.join().expect("shard panicked"))
             .collect();
-        ServerReport::merge(reports, self.started.elapsed().as_secs_f64())
+        let store_stats = self.store.as_ref().map(|s| s.stats());
+        ServerReport::merge(reports, self.started.elapsed().as_secs_f64(), store_stats)
     }
 }

@@ -4,13 +4,16 @@
 //!
 //! Layout:
 //! - `queue`    — job envelope, bounded per-shard [`queue::JobQueue`]
-//!   (backpressure + deadline-first pop order), response types.
+//!   (backpressure + deadline-first pop order), outcome types
+//!   ([`GenOutcome`]: completed vs shed-on-expired-deadline).
 //! - `worker`   — the shard serve loop (continuous batching, SLA-aware
-//!   admission at step boundaries), `ShardReport`/`ServerReport`, and the
-//!   public [`Server`] façade.
-//! - `dispatch` — spawns `ServerConfig.workers` shard threads and routes
+//!   admission at step boundaries, expired-deadline shedding, warm-start
+//!   adopt/publish hooks), `ShardReport`/`ServerReport`, and the public
+//!   [`Server`] façade.
+//! - `dispatch` — spawns `ServerConfig.workers` shard threads, routes
 //!   each job to the shard with the least *predicted* remaining FLOPs
-//!   (cache-policy-aware, see `Lane::remaining_flops_estimate`).
+//!   (cache-policy-aware, see `Lane::remaining_flops_estimate`), and
+//!   threads the shared `store::WarmStore` to every shard.
 //!
 //! Threading note: tokio is not vendored in the offline registry, so the
 //! server uses std threads + mutex/condvar queues. Each shard owns its
@@ -23,5 +26,5 @@ pub mod queue;
 pub mod worker;
 
 pub use dispatch::{Dispatcher, ShardLoad};
-pub use queue::{GenResponse, Job, JobQueue, SubmitError};
+pub use queue::{GenOutcome, GenResponse, Job, JobQueue, ShedNotice, SubmitError};
 pub use worker::{Server, ServerReport, ShardReport};

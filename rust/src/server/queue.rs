@@ -1,5 +1,7 @@
 //! Request/response plumbing for the sharded server: job envelope,
-//! response type, submission errors, and the bounded per-shard
+//! per-request outcome types ([`GenOutcome`]: completed vs shed — the
+//! shard sheds a queued job whose absolute deadline already expired,
+//! see [`Job::expired`]), submission errors, and the bounded per-shard
 //! [`JobQueue`] with SLA-aware ordering — deadline-tagged jobs pop ahead
 //! of best-effort ones (earliest absolute deadline first), best-effort
 //! jobs pop FIFO.
@@ -25,10 +27,56 @@ pub struct GenResponse {
     pub deadline_met: Option<bool>,
 }
 
+/// A shed notice: the job was dropped unserved because its absolute
+/// deadline had already passed when the shard went to admit it — running
+/// it could only burn compute on a guaranteed SLA miss.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedNotice {
+    pub id: u64,
+    /// How long the job sat queued before being shed (ms).
+    pub waited_ms: f64,
+    /// The deadline budget it could no longer meet (ms from submission).
+    pub deadline_ms: f64,
+}
+
+/// Per-request outcome delivered on the response channel: served, or shed
+/// at the admission boundary. Best-effort jobs (no deadline) are never
+/// shed.
+#[derive(Debug)]
+pub enum GenOutcome {
+    Completed(GenResponse),
+    Shed(ShedNotice),
+}
+
+impl GenOutcome {
+    /// The completed response; panics on a shed job (tests and drivers
+    /// that know their deadlines are generous).
+    pub fn completed(self) -> GenResponse {
+        match self {
+            GenOutcome::Completed(r) => r,
+            GenOutcome::Shed(n) => panic!(
+                "request {} was shed after {:.1} ms (deadline {:.1} ms)",
+                n.id, n.waited_ms, n.deadline_ms
+            ),
+        }
+    }
+
+    pub fn as_completed(&self) -> Option<&GenResponse> {
+        match self {
+            GenOutcome::Completed(r) => Some(r),
+            GenOutcome::Shed(_) => None,
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, GenOutcome::Shed(_))
+    }
+}
+
 /// Internal job envelope.
 pub struct Job {
     pub req: GenRequest,
-    pub resp: mpsc::Sender<GenResponse>,
+    pub resp: mpsc::Sender<GenOutcome>,
     pub submitted: Instant,
     /// Predicted full-compute FLOPs of this job, stamped by the
     /// dispatcher at routing time; the shard subtracts exactly this when
@@ -58,6 +106,23 @@ impl Job {
             };
             self.submitted + Duration::from_secs_f64(ms / 1e3)
         })
+    }
+
+    /// Whether the job's absolute deadline has already passed — it can no
+    /// longer meet its SLA, so the shard sheds it at pop time instead of
+    /// serving a guaranteed miss. Best-effort jobs never expire.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline().is_some_and(|d| d <= now)
+    }
+
+    /// Send the shed outcome for this job (consumes it).
+    pub fn shed(self) {
+        let notice = ShedNotice {
+            id: self.req.id,
+            waited_ms: self.waited_ms(),
+            deadline_ms: self.req.deadline_ms.unwrap_or(0.0),
+        };
+        let _ = self.resp.send(GenOutcome::Shed(notice));
     }
 }
 
@@ -203,7 +268,7 @@ impl JobQueue {
 mod tests {
     use super::*;
 
-    fn job(id: u64, deadline_ms: Option<f64>) -> (Job, mpsc::Receiver<GenResponse>) {
+    fn job(id: u64, deadline_ms: Option<f64>) -> (Job, mpsc::Receiver<GenOutcome>) {
         let (tx, rx) = mpsc::channel();
         let mut req = GenRequest::simple(id, id, 2);
         req.deadline_ms = deadline_ms;
@@ -281,5 +346,33 @@ mod tests {
         let (j, _r) = job(7, None);
         q.push(j);
         assert_eq!(q.try_pop().unwrap().req.id, 7);
+    }
+
+    #[test]
+    fn expiry_predicate_and_shed_notice() {
+        let now = Instant::now();
+        // Already-expired budget (0 ms), live budget, best-effort.
+        let (dead, rx) = job(1, Some(0.0));
+        let (live, _a) = job(2, Some(60_000.0));
+        let (be, _b) = job(3, None);
+        assert!(dead.expired(now + Duration::from_millis(1)));
+        assert!(!live.expired(now));
+        assert!(!be.expired(now + Duration::from_secs(3600)), "best-effort never expires");
+        dead.shed();
+        match rx.recv().unwrap() {
+            GenOutcome::Shed(n) => {
+                assert_eq!(n.id, 1);
+                assert_eq!(n.deadline_ms, 0.0);
+                assert!(n.waited_ms >= 0.0);
+            }
+            GenOutcome::Completed(_) => panic!("expected a shed outcome"),
+        }
+    }
+
+    #[test]
+    fn outcome_accessors_distinguish_shed() {
+        let shed = GenOutcome::Shed(ShedNotice { id: 9, waited_ms: 1.0, deadline_ms: 2.0 });
+        assert!(shed.is_shed());
+        assert!(shed.as_completed().is_none());
     }
 }

@@ -7,24 +7,34 @@
 //! active set; finished lanes retire and queued jobs are admitted at step
 //! boundaries, so the shard never drains before taking new work.
 //! Admission is SLA-aware: the shard's `JobQueue` pops deadline-tagged
-//! jobs (earliest absolute deadline first) ahead of best-effort ones, and
-//! the shard records per-class deadline-hit rates. After each step the
-//! shard publishes its predicted remaining FLOPs so the dispatcher can
-//! route by least predicted load.
+//! jobs (earliest absolute deadline first) ahead of best-effort ones,
+//! jobs whose absolute deadline already expired are SHED at pop time
+//! (distinct `GenOutcome::Shed`, counted per class), and the shard
+//! records per-class deadline-hit rates. After each step the shard
+//! publishes its predicted remaining FLOPs so the dispatcher can route by
+//! least predicted load.
+//!
+//! Warm start (when a `WarmStore` is threaded in): at admission a lane
+//! adopts converged affine fits — and an L2C policy a calibrated delta
+//! profile — recorded by previously served traffic; at retirement it
+//! publishes its own back. Lookups are snapshots, so in-flight lanes
+//! never observe store mutations.
 
 use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{FastCacheConfig, ServerConfig};
+use crate::cache::calibrate::calibrated_l2c;
+use crate::config::{FastCacheConfig, PolicyKind, ServerConfig};
 use crate::metrics::LatencyHistogram;
 use crate::model::DitModel;
 use crate::scheduler::{GenRequest, Lane, LaneStepper, ScheduleCache};
+use crate::store::{ModelFingerprint, StoreStats, WarmStore};
 
 use super::dispatch::{Dispatcher, ShardLoad};
-use super::queue::{GenResponse, Job, JobQueue, SubmitError};
+use super::queue::{GenOutcome, GenResponse, Job, JobQueue, SubmitError};
 
 /// One shard's slice of the final report.
 #[derive(Debug)]
@@ -48,6 +58,15 @@ pub struct ShardReport {
     pub deadline_jobs: u64,
     pub deadline_hits: u64,
     pub best_effort_jobs: u64,
+    /// Deadline-class jobs dropped unserved at pop time because their
+    /// absolute deadline had already passed (best-effort jobs carry no
+    /// deadline and are structurally never shed). Shed jobs are counted
+    /// here ONLY — not in `completed`/`deadline_jobs`.
+    pub deadline_sheds: u64,
+    /// Lanes that warm-started from the cross-request store (≥ 1 warm
+    /// layer or a calibrated policy) / total layers warm-started.
+    pub warm_admissions: u64,
+    pub warm_layers: u64,
 }
 
 impl ShardReport {
@@ -64,14 +83,22 @@ impl ShardReport {
             deadline_jobs: 0,
             deadline_hits: 0,
             best_effort_jobs: 0,
+            deadline_sheds: 0,
+            warm_admissions: 0,
+            warm_layers: 0,
         }
     }
 
+    /// Fraction of deadline-class jobs that met their budget. Shed jobs
+    /// count in the denominator — dropping an expired job is an SLA
+    /// failure, and excluding it would let a shedding server report a
+    /// perfect hit rate. `None` when no deadline-class traffic arrived.
     pub fn deadline_hit_rate(&self) -> Option<f64> {
-        if self.deadline_jobs == 0 {
+        let attempted = self.deadline_jobs + self.deadline_sheds;
+        if attempted == 0 {
             None
         } else {
-            Some(self.deadline_hits as f64 / self.deadline_jobs as f64)
+            Some(self.deadline_hits as f64 / attempted as f64)
         }
     }
 }
@@ -92,12 +119,25 @@ pub struct ServerReport {
     pub deadline_jobs: u64,
     pub deadline_hits: u64,
     pub best_effort_jobs: u64,
+    /// Deadline-class jobs shed unserved (expired before admission),
+    /// summed over shards.
+    pub deadline_sheds: u64,
+    /// Warm-start accounting, summed over shards.
+    pub warm_admissions: u64,
+    pub warm_layers: u64,
+    /// Warm-start store counters/occupancy at shutdown (`None` when the
+    /// server ran without a store).
+    pub store: Option<StoreStats>,
     /// Per-shard breakdown (one entry per worker thread).
     pub shards: Vec<ShardReport>,
 }
 
 impl ServerReport {
-    pub(crate) fn merge(shards: Vec<ShardReport>, wall_s: f64) -> ServerReport {
+    pub(crate) fn merge(
+        shards: Vec<ShardReport>,
+        wall_s: f64,
+        store: Option<StoreStats>,
+    ) -> ServerReport {
         let mut r = ServerReport {
             completed: 0,
             e2e: LatencyHistogram::new(),
@@ -109,6 +149,10 @@ impl ServerReport {
             deadline_jobs: 0,
             deadline_hits: 0,
             best_effort_jobs: 0,
+            deadline_sheds: 0,
+            warm_admissions: 0,
+            warm_layers: 0,
+            store,
             shards: Vec::new(),
         };
         for s in &shards {
@@ -121,6 +165,9 @@ impl ServerReport {
             r.deadline_jobs += s.deadline_jobs;
             r.deadline_hits += s.deadline_hits;
             r.best_effort_jobs += s.best_effort_jobs;
+            r.deadline_sheds += s.deadline_sheds;
+            r.warm_admissions += s.warm_admissions;
+            r.warm_layers += s.warm_layers;
         }
         r.shards = shards;
         r
@@ -149,13 +196,16 @@ impl ServerReport {
         self.mean_batch_size()
     }
 
-    /// Fraction of deadline-tagged jobs that finished within their
-    /// deadline. `None` when the workload had no deadline-tagged jobs.
+    /// Fraction of deadline-class jobs that finished within their
+    /// deadline. Shed jobs count as misses (they were dropped unserved),
+    /// so the rate cannot be inflated by shedding. `None` when the
+    /// workload had no deadline-class jobs.
     pub fn deadline_hit_rate(&self) -> Option<f64> {
-        if self.deadline_jobs == 0 {
+        let attempted = self.deadline_jobs + self.deadline_sheds;
+        if attempted == 0 {
             None
         } else {
-            Some(self.deadline_hits as f64 / self.deadline_jobs as f64)
+            Some(self.deadline_hits as f64 / attempted as f64)
         }
     }
 }
@@ -170,12 +220,36 @@ impl Server {
     /// Start the shards. `model_factory` runs once per shard, ON the
     /// shard's thread (PJRT clients are not shared across threads);
     /// weight generation is seed-deterministic, so every shard serves
-    /// identical weights.
+    /// identical weights. When `fc.warm_start` is on, a fresh warm-start
+    /// store (budgeted by `scfg.warm_budget_bytes`) is built and shared
+    /// by every shard.
     pub fn start<F>(scfg: ServerConfig, fc: FastCacheConfig, model_factory: F) -> Server
     where
         F: Fn() -> Result<DitModel> + Send + Sync + 'static,
     {
-        Server { dispatcher: Dispatcher::start(&scfg, &fc, model_factory) }
+        let store = if fc.warm_start {
+            Some(Arc::new(WarmStore::new(scfg.warm_budget_bytes, scfg.workers.max(1))))
+        } else {
+            None
+        };
+        Server::start_with_store(scfg, fc, store, model_factory)
+    }
+
+    /// Start the shards against a caller-owned warm-start store — the
+    /// fleet pattern: the store outlives any one server instance, so a
+    /// restarted (or blue/green-swapped) process starts warm from the
+    /// traffic its predecessor served. `None` disables warm-start
+    /// regardless of `fc.warm_start`.
+    pub fn start_with_store<F>(
+        scfg: ServerConfig,
+        fc: FastCacheConfig,
+        store: Option<Arc<WarmStore>>,
+        model_factory: F,
+    ) -> Server
+    where
+        F: Fn() -> Result<DitModel> + Send + Sync + 'static,
+    {
+        Server { dispatcher: Dispatcher::start(&scfg, &fc, store, model_factory) }
     }
 
     /// Number of worker shards serving this instance.
@@ -183,8 +257,11 @@ impl Server {
         self.dispatcher.workers()
     }
 
-    /// Submit a request; returns the response channel or backpressure.
-    pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
+    /// Submit a request; returns the outcome channel or backpressure.
+    /// The channel yields `GenOutcome::Completed` for served requests and
+    /// `GenOutcome::Shed` for deadline-tagged requests dropped because
+    /// their deadline expired while queued.
+    pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenOutcome>, SubmitError> {
         let (rtx, rrx) = mpsc::channel();
         let job = Job { req, resp: rtx, submitted: Instant::now(), cost: 0 };
         self.dispatcher.submit(job)?;
@@ -196,7 +273,7 @@ impl Server {
     pub fn submit_blocking(
         &self,
         req: &GenRequest,
-    ) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
+    ) -> Result<mpsc::Receiver<GenOutcome>, SubmitError> {
         loop {
             match self.submit(req.clone()) {
                 Ok(rx) => return Ok(rx),
@@ -228,20 +305,30 @@ fn publish_load(load: &ShardLoad, lanes: &[Lane]) {
     load.active_lanes.store(lanes.len(), Ordering::Relaxed);
 }
 
-/// One shard's serve loop: continuous batching with SLA-aware admission.
-pub(crate) fn shard_loop<F>(
-    shard_id: usize,
-    scfg: ServerConfig,
-    fc: FastCacheConfig,
-    model_factory: &F,
-    queue: &JobQueue,
-    load: &ShardLoad,
-    schedules: &Mutex<ScheduleCache>,
-) -> ShardReport
+/// Everything one shard thread needs from the dispatcher: its identity,
+/// configs, queue/load plumbing, and the (optional) shared warm store.
+pub(crate) struct ShardCtx {
+    pub id: usize,
+    pub scfg: ServerConfig,
+    pub fc: FastCacheConfig,
+    pub queue: Arc<JobQueue>,
+    pub load: Arc<ShardLoad>,
+    pub schedules: Arc<Mutex<ScheduleCache>>,
+    pub warm_store: Option<Arc<WarmStore>>,
+}
+
+/// One shard's serve loop: continuous batching with SLA-aware admission,
+/// expired-deadline shedding at pop time, and (when a store is threaded
+/// in) warm-start at admission / publish at retirement.
+pub(crate) fn shard_loop<F>(ctx: ShardCtx, model_factory: &F) -> ShardReport
 where
     F: Fn() -> Result<DitModel>,
 {
     use std::sync::atomic::Ordering;
+
+    let ShardCtx { id: shard_id, scfg, fc, queue, load, schedules, warm_store } = ctx;
+    let (queue, load, schedules) = (queue.as_ref(), load.as_ref(), schedules.as_ref());
+    let warm_store = warm_store.as_deref();
 
     // If this shard dies (model-load failure, panicked step), close and
     // drain its queue on the way out so submitters observe Closed /
@@ -264,6 +351,18 @@ where
     // Guard against unvalidated configs: max_batch = 0 must degrade to
     // solo serving, not livelock the admission loop.
     let max_batch = scfg.max_batch.max(1);
+    // Warm-start keys: same variant + weight seed ⇒ transferable fits.
+    let fp = ModelFingerprint { variant: scfg.variant, weight_seed: scfg.weight_seed };
+    let (pol_kind, l2c_thr, publish_min, fits_used) = {
+        let f = stepper.fc();
+        // Affine fits only influence execution through the FastCache
+        // policy's Approx action or the STR static-row bypass — for any
+        // other config, adopting/publishing them would burn store budget
+        // and lookups on entries no decision can ever read.
+        let fits_used = f.policy == PolicyKind::FastCache || f.enable_str;
+        (f.policy, f.l2c_threshold, f.fit_min_updates.max(1), fits_used)
+    };
+    let layers = model.cfg.layers;
     let t0 = Instant::now();
 
     let mut lanes: Vec<Lane> = Vec::new();
@@ -293,12 +392,52 @@ where
             // One admission instant, used for both the report histogram
             // and the per-response queued_ms — they must agree.
             let admitted = Instant::now();
+            // Expired-deadline shedding at pop time: a job whose absolute
+            // deadline already passed can only be served as a guaranteed
+            // SLA miss, so drop it with a distinct outcome and spend the
+            // lane slot on a job that can still hit. (The SLA-aware queue
+            // pops earliest-deadline first, so expired jobs surface
+            // immediately rather than lingering behind live ones.)
+            if job.expired(admitted) {
+                load.queued_flops.fetch_sub(job.cost, Ordering::Relaxed);
+                report.deadline_sheds += 1;
+                job.shed();
+                continue;
+            }
             report
                 .admission_wait
                 .record(admitted.duration_since(job.submitted).as_secs_f64() * 1e3);
             load.queued_flops.fetch_sub(job.cost, Ordering::Relaxed);
             let schedule = schedules.lock().expect("schedule cache poisoned").get(job.req.steps);
-            lanes.push(stepper.make_lane(&job.req, schedule));
+            // Warm start at admission: threshold policies calibrate from
+            // the fleet delta profile (L2C — real site selection instead
+            // of its structural prior); every policy's lanes adopt
+            // converged affine fits. Both lookups clone — snapshot
+            // semantics keep the in-flight lane deterministic.
+            let mut calibrated = false;
+            let mut lane = match warm_store {
+                Some(store) if pol_kind == PolicyKind::L2C => {
+                    match store.warm_profile(fp, job.req.steps) {
+                        Some(profile) => {
+                            calibrated = true;
+                            let policy = Box::new(calibrated_l2c(&profile, l2c_thr, layers));
+                            stepper.lane_with_policy(&job.req, schedule, policy)
+                        }
+                        None => stepper.make_lane(&job.req, schedule),
+                    }
+                }
+                _ => stepper.make_lane(&job.req, schedule),
+            };
+            let mut warmed_layers = 0;
+            if let (Some(store), true) = (warm_store, fits_used) {
+                let warm = store.warm_fits(fp, pol_kind, job.req.steps, layers);
+                warmed_layers = lane.warm_start_fits(&warm);
+            }
+            if calibrated || warmed_layers > 0 {
+                report.warm_admissions += 1;
+                report.warm_layers += warmed_layers as u64;
+            }
+            lanes.push(lane);
             inflight.push(Inflight { job, admitted });
         }
         // Publish BEFORE the (long) denoise step: admitted jobs left
@@ -329,6 +468,20 @@ where
             }
             let lane = lanes.swap_remove(i);
             let fl = inflight.swap_remove(i);
+            // Publish at retirement: converged fits pool into the fleet
+            // store; the lane's observed deltas fold into the profile.
+            // Future admissions warm-start from what this lane learned.
+            if let Some(store) = warm_store {
+                let steps_total = lane.total_steps();
+                if fits_used {
+                    for (l, fit) in lane.converged_fits(publish_min) {
+                        store.publish_fit(fp, pol_kind, steps_total, l, fit);
+                    }
+                }
+                if let Some(deltas) = lane.delta_log() {
+                    store.publish_profile(fp, steps_total, deltas);
+                }
+            }
             let result = lane.into_result();
             report.padded_flops += result.flops_padded;
             let e2e = fl.job.submitted.elapsed().as_secs_f64() * 1e3;
@@ -345,7 +498,12 @@ where
             }
             report.e2e.record(e2e);
             report.completed += 1;
-            let _ = fl.job.resp.send(GenResponse { result, queued_ms, e2e_ms: e2e, deadline_met });
+            let _ = fl.job.resp.send(GenOutcome::Completed(GenResponse {
+                result,
+                queued_ms,
+                e2e_ms: e2e,
+                deadline_met,
+            }));
         }
 
         // Refresh the router's view of this shard after admit+retire.
@@ -386,7 +544,7 @@ mod tests {
             rxs.push(server.submit(GenRequest::simple(i, 100 + i, 4)).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().completed();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
             assert!(resp.e2e_ms >= resp.queued_ms);
             assert_eq!(resp.deadline_met, None, "best-effort jobs carry no deadline verdict");
@@ -395,6 +553,8 @@ mod tests {
         assert_eq!(report.completed, 6);
         assert_eq!(report.best_effort_jobs, 6);
         assert_eq!(report.deadline_hit_rate(), None);
+        assert_eq!(report.deadline_sheds, 0);
+        assert_eq!(report.store, None, "warm-start off: no store attached");
         assert!(report.throughput_rps() > 0.0);
         assert_eq!(report.admission_wait.count(), 6);
         assert_eq!(report.shards.len(), 1);
@@ -466,7 +626,7 @@ mod tests {
             rxs.push(server.submit(GenRequest::simple(i, 31 + i, 6)).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().completed();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
         }
         let report = server.shutdown();
@@ -489,7 +649,7 @@ mod tests {
             rxs.push((8usize, server.submit(GenRequest::simple(10 + i, 17 + i, 8)).unwrap()));
         }
         for (steps, rx) in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().completed();
             assert_eq!(resp.result.records.len(), steps);
         }
         let report = server.shutdown();
@@ -506,7 +666,7 @@ mod tests {
             rxs.push(server.submit_blocking(&GenRequest::simple(i, 40 + i, 4)).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().completed();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
         }
         let report = server.shutdown();
@@ -536,9 +696,9 @@ mod tests {
             .submit(GenRequest::simple(9, 9, 4).with_deadline(120_000.0))
             .unwrap();
         let _ = head.recv().unwrap();
-        let tagged_resp = tagged.recv().unwrap();
+        let tagged_resp = tagged.recv().unwrap().completed();
         let be_e2e: Vec<f64> =
-            best_effort.into_iter().map(|rx| rx.recv().unwrap().e2e_ms).collect();
+            best_effort.into_iter().map(|rx| rx.recv().unwrap().completed().e2e_ms).collect();
         assert_eq!(tagged_resp.deadline_met, Some(true));
         let max_be = be_e2e.iter().cloned().fold(0.0, f64::max);
         assert!(
@@ -553,5 +713,100 @@ mod tests {
         assert_eq!(report.deadline_hits, 1);
         assert_eq!(report.best_effort_jobs, 4);
         assert_eq!(report.deadline_hit_rate(), Some(1.0));
+    }
+
+    #[test]
+    fn expired_deadline_jobs_are_shed_at_pop_time() {
+        // One serial shard busy with a long head job; a deadline-tagged
+        // job with an already-expired budget (0 ms) queues behind it. At
+        // the next admission boundary the shard must shed it — distinct
+        // outcome, counted, never served — while best-effort jobs and the
+        // head complete normally.
+        let server = test_server(PolicyKind::NoCache, 1, 8);
+        let head = server.submit(GenRequest::simple(0, 1, 10)).unwrap();
+        let doomed = server
+            .submit(GenRequest::simple(1, 2, 4).with_deadline(0.0))
+            .unwrap();
+        let tail = server.submit(GenRequest::simple(2, 3, 4)).unwrap();
+
+        match doomed.recv().unwrap() {
+            GenOutcome::Shed(n) => {
+                assert_eq!(n.id, 1);
+                assert_eq!(n.deadline_ms, 0.0);
+                assert!(n.waited_ms >= 0.0);
+            }
+            GenOutcome::Completed(_) => panic!("expired job must be shed, not served"),
+        }
+        let _ = head.recv().unwrap().completed();
+        let _ = tail.recv().unwrap().completed();
+        let report = server.shutdown();
+        assert_eq!(report.completed, 2, "shed jobs are not completions");
+        assert_eq!(report.deadline_sheds, 1);
+        assert_eq!(report.deadline_jobs, 0, "shed jobs are not served deadline jobs");
+        assert_eq!(
+            report.deadline_hit_rate(),
+            Some(0.0),
+            "a shed deadline job is an SLA miss, not a vanished denominator"
+        );
+        assert_eq!(report.best_effort_jobs, 2);
+    }
+
+    #[test]
+    fn warm_serving_reuses_fits_across_bursts_and_reports_store_stats() {
+        // A caller-owned store shared by two server instances: the first
+        // burst publishes (all misses), the second warm-starts from it
+        // and must execute fewer FLOPs per step under the confidence
+        // gate. This is the tentpole's end-to-end loop at test scale.
+        let scfg =
+            ServerConfig { max_batch: 4, queue_depth: 16, ..ServerConfig::default() };
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        fc.warm_start = true;
+        fc.fit_min_updates = 5;
+        fc.tau_delta0 = 1.0;
+        let store = std::sync::Arc::new(crate::store::WarmStore::new(
+            scfg.warm_budget_bytes,
+            scfg.workers,
+        ));
+
+        let phase = |expect_warm: bool| -> (f64, u64) {
+            // Honor the fingerprint contract: the factory builds with the
+            // seed the ServerConfig declares.
+            let seed = scfg.weight_seed;
+            let server = Server::start_with_store(
+                scfg.clone(),
+                fc.clone(),
+                Some(std::sync::Arc::clone(&store)),
+                move || Ok(DitModel::native(Variant::S, seed)),
+            );
+            let mut rxs = Vec::new();
+            for i in 0..4 {
+                rxs.push(server.submit(GenRequest::simple(i, 60 + i, 10)).unwrap());
+            }
+            let mut flops = 0u64;
+            let mut steps = 0usize;
+            for rx in rxs {
+                let resp = rx.recv().unwrap().completed();
+                flops += resp.result.flops_done;
+                steps += resp.result.records.len();
+                assert_eq!(resp.result.warm_layers > 0, expect_warm, "warm_layers mismatch");
+            }
+            let report = server.shutdown();
+            let stats = report.store.expect("warm server must report store stats");
+            assert!(stats.used_bytes <= stats.budget_bytes);
+            if expect_warm {
+                assert!(report.warm_admissions > 0);
+                assert!(stats.hits > 0, "second burst must hit the store: {stats:?}");
+            }
+            (flops as f64 / steps as f64, report.warm_admissions)
+        };
+
+        let (cold_fps, cold_warm) = phase(false);
+        assert_eq!(cold_warm, 0, "empty store cannot warm-start anything");
+        let (warm_fps, _) = phase(true);
+        assert!(
+            warm_fps < cold_fps,
+            "warm-started burst must execute fewer FLOPs/step: {warm_fps} vs {cold_fps}"
+        );
     }
 }

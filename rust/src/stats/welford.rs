@@ -112,6 +112,29 @@ impl PairStats {
         let b = self.mean_y - a * self.mean_x;
         (a as f32, b as f32)
     }
+
+    /// Pool two accumulators (pairwise Welford merge of the sufficient
+    /// statistics) — pooled regression over both samples. The fleet-level
+    /// warm-start store merges fits published by independent lanes with
+    /// this.
+    pub fn merge(&mut self, other: &PairStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (n1, n2) = (self.n as f64, other.n as f64);
+        let n = n1 + n2;
+        let dx = other.mean_x - self.mean_x;
+        let dy = other.mean_y - self.mean_y;
+        self.mean_x += dx * n2 / n;
+        self.mean_y += dy * n2 / n;
+        self.m2_x += other.m2_x + dx * dx * n1 * n2 / n;
+        self.c_xy += other.c_xy + dx * dy * n1 * n2 / n;
+        self.n += other.n;
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +193,36 @@ mod tests {
         let mut p2 = PairStats::new();
         p2.push(3.0, 5.0);
         assert_eq!(p2.fit(), (1.0, 0.0)); // single point: underdetermined
+    }
+
+    #[test]
+    fn pair_merge_equals_sequential() {
+        let xs: Vec<(f64, f64)> =
+            (0..80).map(|i| ((i as f64).cos() * 2.0, (i as f64).sin() - 0.3)).collect();
+        let mut all = PairStats::new();
+        for &(x, y) in &xs {
+            all.push(x, y);
+        }
+        let mut a = PairStats::new();
+        let mut b = PairStats::new();
+        for &(x, y) in &xs[..29] {
+            a.push(x, y);
+        }
+        for &(x, y) in &xs[29..] {
+            b.push(x, y);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        let (fa, fb) = a.fit();
+        let (ga, gb) = all.fit();
+        assert!((fa - ga).abs() < 1e-6 && (fb - gb).abs() < 1e-6, "{fa},{fb} vs {ga},{gb}");
+        // Merging into an empty accumulator is a copy; merging an empty one
+        // is a no-op.
+        let mut e = PairStats::new();
+        e.merge(&all);
+        assert_eq!(e.fit(), all.fit());
+        all.merge(&PairStats::new());
+        assert_eq!(e.fit(), all.fit());
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Byte-budgeted LRU map — the one eviction/accounting primitive behind
+//! every fleet-level cache in this crate (the warm-start store's shards
+//! and the bounded `ScheduleCache`).
+//!
+//! Semantics:
+//! - An explicit byte budget. `used_bytes() <= budget()` is an invariant
+//!   after every operation (property-tested in `store::warm`).
+//! - Entries are sized by [`ByteSized`] plus a fixed per-entry overhead.
+//! - Inserting past the budget evicts least-recently-used entries until
+//!   the newcomer fits; a value larger than the whole budget is rejected
+//!   (counted, not stored) rather than flushing everything for nothing.
+//! - `get` refreshes recency; `peek` doesn't (diagnostics/tests).
+//! - Hit/miss/insert/eviction/rejection counters are kept inline so every
+//!   user of the primitive reports cache behavior the same way.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Heap footprint of a cached value, in bytes. Implementations should
+/// count owned allocations (the fixed per-entry overhead is added by the
+/// map itself).
+pub trait ByteSized {
+    fn size_bytes(&self) -> usize;
+}
+
+impl<T: ByteSized> ByteSized for std::sync::Arc<T> {
+    fn size_bytes(&self) -> usize {
+        T::size_bytes(self)
+    }
+}
+
+/// Bookkeeping + key storage cost charged per entry on top of the value's
+/// own bytes.
+pub const ENTRY_OVERHEAD: usize = 96;
+
+/// Cache-behavior counters, aggregated across shards by the callers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LruCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Values bigger than the whole budget (refused outright).
+    pub rejected: u64,
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// A byte-budgeted LRU map. Not thread-safe by itself — shard it behind
+/// mutexes (see `store::warm::WarmStore`) or own it single-threaded (see
+/// `scheduler::ddim::ScheduleCache`).
+pub struct LruBytes<K, V> {
+    budget: usize,
+    used: usize,
+    seq: u64,
+    map: HashMap<K, Entry<V>>,
+    counters: LruCounters,
+}
+
+impl<K: Eq + Hash + Clone, V: ByteSized> LruBytes<K, V> {
+    pub fn new(budget: usize) -> LruBytes<K, V> {
+        LruBytes { budget, used: 0, seq: 0, map: HashMap::new(), counters: LruCounters::default() }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn counters(&self) -> LruCounters {
+        self.counters
+    }
+
+    fn entry_bytes(v: &V) -> usize {
+        v.size_bytes() + ENTRY_OVERHEAD
+    }
+
+    /// Look up and refresh recency. Counts a hit or a miss.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.seq += 1;
+        let seq = self.seq;
+        match self.map.get_mut(k) {
+            Some(e) => {
+                e.last_used = seq;
+                self.counters.hits += 1;
+                Some(&e.value)
+            }
+            None => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look up without touching recency or counters.
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|e| &e.value)
+    }
+
+    /// The key that would be evicted next (least recently used).
+    pub fn lru_key(&self) -> Option<K> {
+        self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+    }
+
+    /// Insert (or replace) under the budget, evicting LRU entries as
+    /// needed. Returns false when the value alone exceeds the budget.
+    pub fn insert(&mut self, k: K, v: V) -> bool {
+        let bytes = Self::entry_bytes(&v);
+        if bytes > self.budget {
+            self.counters.rejected += 1;
+            // A replacement that no longer fits must not leave the old
+            // value behind as a stale hit.
+            if let Some(old) = self.map.remove(&k) {
+                self.used -= old.bytes;
+            }
+            return false;
+        }
+        if let Some(old) = self.map.remove(&k) {
+            self.used -= old.bytes; // replacement, not an eviction
+        }
+        self.evict_down_to(self.budget - bytes);
+        self.seq += 1;
+        self.used += bytes;
+        self.counters.inserts += 1;
+        self.map.insert(k, Entry { value: v, bytes, last_used: self.seq });
+        true
+    }
+
+    /// Mutate a resident value in place (refreshing recency), re-measuring
+    /// its bytes afterwards and evicting others if it grew past the
+    /// budget. Returns `None` when the key is absent. This is the WRITE
+    /// path (publish/merge): it does not touch the hit/miss counters,
+    /// which track read lookups only — a publisher merging into a
+    /// resident entry must not inflate the reported warm-hit rate.
+    pub fn with_mut<R>(&mut self, k: &K, f: impl FnOnce(&mut V) -> R) -> Option<R> {
+        self.seq += 1;
+        let seq = self.seq;
+        let e = self.map.get_mut(k)?;
+        e.last_used = seq;
+        let r = f(&mut e.value);
+        let new_bytes = Self::entry_bytes(&e.value);
+        self.used = self.used - e.bytes + new_bytes;
+        e.bytes = new_bytes;
+        if new_bytes > self.budget {
+            // The entry outgrew the whole budget: drop it (the invariant
+            // outranks the entry).
+            self.used -= new_bytes;
+            self.map.remove(k);
+            self.counters.evictions += 1;
+        } else if self.used > self.budget {
+            // The touched entry is the most recent, so it survives this.
+            self.evict_down_to(self.budget);
+        }
+        Some(r)
+    }
+
+    fn evict_down_to(&mut self, target: usize) {
+        while self.used > target {
+            let Some(victim) = self.lru_key() else { return };
+            if let Some(e) = self.map.remove(&victim) {
+                self.used -= e.bytes;
+                self.counters.evictions += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Blob(usize);
+    impl ByteSized for Blob {
+        fn size_bytes(&self) -> usize {
+            self.0
+        }
+    }
+
+    fn entry(bytes: usize) -> usize {
+        bytes + ENTRY_OVERHEAD
+    }
+
+    #[test]
+    fn eviction_frees_the_least_recently_used_entry() {
+        let mut c: LruBytes<&str, Blob> = LruBytes::new(entry(100) * 3);
+        assert!(c.insert("a", Blob(100)));
+        assert!(c.insert("b", Blob(100)));
+        assert!(c.insert("c", Blob(100)));
+        // Touch "a": "b" becomes the LRU entry.
+        assert!(c.get(&"a").is_some());
+        assert_eq!(c.lru_key(), Some("b"));
+        assert!(c.insert("d", Blob(100)));
+        assert!(c.peek(&"b").is_none(), "LRU entry must be the one evicted");
+        assert!(c.peek(&"a").is_some() && c.peek(&"c").is_some() && c.peek(&"d").is_some());
+        let ct = c.counters();
+        assert_eq!((ct.hits, ct.misses, ct.inserts, ct.evictions), (1, 0, 4, 1));
+        assert!(c.used_bytes() <= c.budget());
+    }
+
+    #[test]
+    fn oversized_values_are_rejected_not_thrashed() {
+        let mut c: LruBytes<u32, Blob> = LruBytes::new(entry(64) * 2);
+        assert!(c.insert(1, Blob(64)));
+        assert!(!c.insert(2, Blob(10_000)));
+        assert_eq!(c.counters().rejected, 1);
+        assert!(c.peek(&1).is_some(), "rejection must not evict residents");
+        // Replacing a resident with an oversized value drops the resident
+        // (no stale hits) but stores nothing.
+        assert!(!c.insert(1, Blob(10_000)));
+        assert!(c.peek(&1).is_none());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn replacement_reaccounts_bytes() {
+        let mut c: LruBytes<u32, Blob> = LruBytes::new(4096);
+        c.insert(7, Blob(100));
+        assert_eq!(c.used_bytes(), entry(100));
+        c.insert(7, Blob(300));
+        assert_eq!(c.used_bytes(), entry(300));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.counters().evictions, 0, "replacement is not an eviction");
+    }
+
+    #[test]
+    fn with_mut_reaccounts_growth_and_keeps_invariant() {
+        let mut c: LruBytes<u32, Blob> = LruBytes::new(entry(100) * 2);
+        c.insert(1, Blob(50));
+        c.insert(2, Blob(50));
+        // Grow 2 in place: still fits, 1 gets evicted to make room.
+        let got = c.with_mut(&2, |b| {
+            b.0 = 150;
+            b.0
+        });
+        assert_eq!(got, Some(150));
+        assert!(c.used_bytes() <= c.budget());
+        assert!(c.peek(&2).is_some());
+        // Grow past the whole budget: the entry itself is dropped.
+        c.with_mut(&2, |b| b.0 = 10_000);
+        assert!(c.peek(&2).is_none());
+        assert_eq!(c.used_bytes(), 0);
+        assert_eq!(c.with_mut(&99, |_| ()), None);
+    }
+
+    #[test]
+    fn budget_invariant_under_random_operations() {
+        use crate::testutil::prop::PropRunner;
+        PropRunner::new(60).forall(
+            |rng| {
+                let budget = 512 + rng.below(4096);
+                let ops: Vec<(u8, u32, usize)> = (0..rng.below(60) + 10)
+                    .map(|_| (rng.below(3) as u8, rng.below(12) as u32, rng.below(700)))
+                    .collect();
+                (budget, ops)
+            },
+            |(budget, ops)| {
+                let mut c: LruBytes<u32, Blob> = LruBytes::new(*budget);
+                for &(op, key, sz) in ops {
+                    match op {
+                        0 => {
+                            c.insert(key, Blob(sz));
+                        }
+                        1 => {
+                            c.get(&key);
+                        }
+                        _ => {
+                            c.with_mut(&key, |b| b.0 = sz);
+                        }
+                    }
+                    if c.used_bytes() > c.budget() {
+                        return Err(format!(
+                            "used {} exceeds budget {} after op {op} key {key} sz {sz}",
+                            c.used_bytes(),
+                            c.budget()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

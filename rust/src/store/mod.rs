@@ -1,0 +1,38 @@
+//! Cross-request warm-start store — fleet-level memory for learned
+//! serving artifacts, with real cache semantics (byte budget, LRU
+//! eviction, hit/miss/eviction accounting).
+//!
+//! FastCache's learnable linear approximation and the threshold policies'
+//! calibration evidence are properties of the *(model, schedule, policy)*,
+//! not of one request (the Learning-to-Cache / SmoothCache observation) —
+//! so this module persists them across requests instead of relearning
+//! them inside every lane:
+//!
+//! ```text
+//!                     ┌────────────── WarmStore ──────────────┐
+//!  admission ───────▶ │ shard(hash(key)) ─▶ LruBytes (budget/N)│
+//!   warm_fits(fp,…)   │   Fit{fp,policy,steps,layer} → AffineFit│
+//!   warm_profile(fp,…)│   Profile{fp,steps}  → mean Δ[step][l] │
+//!  retirement ──────▶ │ publish_fit: MERGE sufficient stats    │
+//!   publish_*(…)      │ publish_profile: fold running mean     │
+//!                     └────────────────────────────────────────┘
+//! ```
+//!
+//! Layout:
+//! - [`lru`]  — the byte-budgeted LRU primitive (`LruBytes`), shared with
+//!   the scheduler's bounded `ScheduleCache` so every cache in the crate
+//!   routes through one accounting/eviction implementation.
+//! - [`warm`] — the sharded [`WarmStore`] itself, its keys (model
+//!   fingerprint = variant + weight seed), and [`StoreStats`].
+//!
+//! Determinism: lookups clone (snapshot-at-admission), so in-flight lanes
+//! never observe store mutations; warm-start is off by default
+//! (`FastCacheConfig::warm_start`), so fixed-seed parity holds unchanged
+//! in the default configuration. With warm-start ON, latents depend on
+//! what earlier traffic published — that is the point.
+
+pub mod lru;
+pub mod warm;
+
+pub use lru::{ByteSized, LruBytes, LruCounters, ENTRY_OVERHEAD};
+pub use warm::{ModelFingerprint, StoreStats, WarmStore};

@@ -1,0 +1,427 @@
+//! The cross-request warm-start store: a sharded, byte-budgeted, evicting
+//! cache of learned serving artifacts shared by every dispatcher shard.
+//!
+//! Two artifact families live here:
+//!
+//! - **Converged [`AffineFit`]s**, keyed by `(model fingerprint, policy,
+//!   steps, layer)`. Retiring lanes publish fits that saw enough updates;
+//!   new lanes adopt them at admission, so the learnable linear
+//!   approximation (the paper's Eq. 6) stops being relearned from scratch
+//!   inside every request. Publishes MERGE sufficient statistics (pooled
+//!   regression across lanes) rather than last-writer-wins.
+//! - **Delta profiles**, keyed by `(model fingerprint, steps)`. Every
+//!   warm-start lane records the per-(step, layer) relative hidden-state
+//!   deltas it observed; retiring lanes fold them into a running mean —
+//!   the SmoothCache/L2C lesson that the skip structure is a property of
+//!   the (model, schedule), not of one request. Threshold policies (L2C)
+//!   calibrate from the profile at admission instead of falling back to a
+//!   structural prior.
+//!
+//! Lookups clone the stored value (snapshot-at-admission): once a lane is
+//! admitted, later store mutations cannot reach it, so in-flight lanes
+//! stay deterministic. Keys hash to one of N mutex-guarded shards, each a
+//! [`LruBytes`] with `budget / N` bytes, so the whole store provably never
+//! holds more than its configured budget.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+use crate::cache::calibrate::DeltaProfile;
+use crate::cache::AffineFit;
+use crate::config::{PolicyKind, Variant};
+
+use super::lru::{ByteSized, LruBytes};
+
+/// What makes two serving processes interchangeable for warm-start
+/// purposes: same variant + same weight seed ⇒ bit-identical weights
+/// (weight generation is seed-deterministic), hence transferable fits.
+///
+/// Contract: the server stamps this from `ServerConfig` (`variant`,
+/// `weight_seed`), so a model factory that ignores those fields (e.g. a
+/// test harness with a hard-coded seed) MUST NOT share a store across
+/// differently-weighted servers — the store would transfer fits between
+/// models it believes identical. Dimension mismatches are skipped
+/// defensively at adoption (`Lane::warm_start_fits`), but same-shape
+/// different-weight transfer is undetectable here.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ModelFingerprint {
+    pub variant: Variant,
+    pub weight_seed: u64,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+enum StoreKey {
+    Fit { fp: ModelFingerprint, policy: PolicyKind, steps: usize, layer: usize },
+    Profile { fp: ModelFingerprint, steps: usize },
+}
+
+/// Running mean of observed per-(step, layer) deltas; `cnt == 0` cells
+/// (e.g. the whole first step) surface as +∞ — never skippable.
+struct ProfileStat {
+    sum: Vec<Vec<f64>>,
+    cnt: Vec<Vec<u32>>,
+}
+
+impl ProfileStat {
+    fn new(steps: usize, layers: usize) -> ProfileStat {
+        ProfileStat { sum: vec![vec![0.0; layers]; steps], cnt: vec![vec![0; layers]; steps] }
+    }
+
+    fn fold(&mut self, deltas: &[Vec<f64>]) {
+        assert_eq!(deltas.len(), self.sum.len(), "profile step-count mismatch");
+        for (s, row) in deltas.iter().enumerate() {
+            assert_eq!(row.len(), self.sum[s].len(), "profile layer-count mismatch");
+            for (l, &d) in row.iter().enumerate() {
+                if d.is_finite() {
+                    self.sum[s][l] += d;
+                    self.cnt[s][l] += 1;
+                }
+            }
+        }
+    }
+
+    fn mean(&self) -> DeltaProfile {
+        let deltas = self
+            .sum
+            .iter()
+            .zip(&self.cnt)
+            .map(|(srow, crow)| {
+                srow.iter()
+                    .zip(crow)
+                    .map(|(&s, &c)| if c > 0 { s / c as f64 } else { f64::INFINITY })
+                    .collect()
+            })
+            .collect();
+        DeltaProfile { deltas }
+    }
+}
+
+enum StoreValue {
+    Fit(AffineFit),
+    Profile(ProfileStat),
+}
+
+impl ByteSized for StoreValue {
+    fn size_bytes(&self) -> usize {
+        match self {
+            StoreValue::Fit(f) => f.size_bytes(),
+            StoreValue::Profile(p) => {
+                let cells: usize = p.sum.iter().map(Vec::len).sum();
+                cells * (8 + 4) + 2 * std::mem::size_of::<Vec<f64>>() * p.sum.len()
+            }
+        }
+    }
+}
+
+/// Aggregate store counters + occupancy, surfaced through `ServerReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub rejected: u64,
+    pub entries: usize,
+    pub used_bytes: usize,
+    pub budget_bytes: usize,
+}
+
+impl StoreStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counter deltas since `base` (occupancy fields stay absolute) — for
+    /// per-phase reporting against one long-lived store.
+    pub fn since(&self, base: &StoreStats) -> StoreStats {
+        StoreStats {
+            hits: self.hits - base.hits,
+            misses: self.misses - base.misses,
+            inserts: self.inserts - base.inserts,
+            evictions: self.evictions - base.evictions,
+            rejected: self.rejected - base.rejected,
+            entries: self.entries,
+            used_bytes: self.used_bytes,
+            budget_bytes: self.budget_bytes,
+        }
+    }
+}
+
+/// The fleet cache. Cheap to share: `Arc<WarmStore>` across dispatcher
+/// shards (and across server restarts in the experiments).
+pub struct WarmStore {
+    shards: Vec<Mutex<LruBytes<StoreKey, StoreValue>>>,
+    budget: usize,
+}
+
+impl WarmStore {
+    /// `budget_bytes` is split evenly over `shards` mutex-guarded LRU
+    /// maps (keys hash to a shard), so lock contention scales with the
+    /// worker count while the aggregate byte bound still holds.
+    pub fn new(budget_bytes: usize, shards: usize) -> WarmStore {
+        let n = shards.max(1);
+        let per = (budget_bytes / n).max(1);
+        WarmStore {
+            shards: (0..n).map(|_| Mutex::new(LruBytes::new(per))).collect(),
+            budget: per * n,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    fn shard(&self, key: &StoreKey) -> &Mutex<LruBytes<StoreKey, StoreValue>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// A warm fit for one layer, cloned (snapshot-at-admission).
+    pub fn warm_fit(
+        &self,
+        fp: ModelFingerprint,
+        policy: PolicyKind,
+        steps: usize,
+        layer: usize,
+    ) -> Option<AffineFit> {
+        let key = StoreKey::Fit { fp, policy, steps, layer };
+        let mut shard = self.shard(&key).lock().expect("warm store poisoned");
+        match shard.get(&key) {
+            Some(StoreValue::Fit(f)) => Some(f.clone()),
+            _ => None,
+        }
+    }
+
+    /// Warm fits for every layer of a stack (each lookup counts its own
+    /// hit/miss — partial warmth is normal while traffic ramps).
+    pub fn warm_fits(
+        &self,
+        fp: ModelFingerprint,
+        policy: PolicyKind,
+        steps: usize,
+        layers: usize,
+    ) -> Vec<Option<AffineFit>> {
+        (0..layers).map(|l| self.warm_fit(fp, policy, steps, l)).collect()
+    }
+
+    /// Publish one layer's converged fit: merged into the resident entry
+    /// (pooled regression) or inserted fresh under the byte budget.
+    pub fn publish_fit(
+        &self,
+        fp: ModelFingerprint,
+        policy: PolicyKind,
+        steps: usize,
+        layer: usize,
+        fit: &AffineFit,
+    ) {
+        let key = StoreKey::Fit { fp, policy, steps, layer };
+        let mut shard = self.shard(&key).lock().expect("warm store poisoned");
+        let merged = shard
+            .with_mut(&key, |v| {
+                if let StoreValue::Fit(resident) = v {
+                    resident.merge_from(fit);
+                }
+            })
+            .is_some();
+        if !merged {
+            shard.insert(key, StoreValue::Fit(fit.clone()));
+        }
+    }
+
+    /// The mean delta profile for `(model, schedule)`, if any lane
+    /// published one.
+    pub fn warm_profile(&self, fp: ModelFingerprint, steps: usize) -> Option<DeltaProfile> {
+        let key = StoreKey::Profile { fp, steps };
+        let mut shard = self.shard(&key).lock().expect("warm store poisoned");
+        match shard.get(&key) {
+            Some(StoreValue::Profile(p)) => Some(p.mean()),
+            _ => None,
+        }
+    }
+
+    /// Fold one retiring lane's observed deltas (`deltas[step][layer]`,
+    /// +∞ = no evidence at that site) into the fleet profile.
+    pub fn publish_profile(&self, fp: ModelFingerprint, steps: usize, deltas: &[Vec<f64>]) {
+        assert_eq!(deltas.len(), steps, "profile must cover the schedule");
+        let key = StoreKey::Profile { fp, steps };
+        let layers = deltas.first().map(Vec::len).unwrap_or(0);
+        let mut shard = self.shard(&key).lock().expect("warm store poisoned");
+        let folded = shard
+            .with_mut(&key, |v| {
+                if let StoreValue::Profile(p) = v {
+                    p.fold(deltas);
+                }
+            })
+            .is_some();
+        if !folded {
+            let mut p = ProfileStat::new(steps, layers);
+            p.fold(deltas);
+            shard.insert(key, StoreValue::Profile(p));
+        }
+    }
+
+    /// Aggregate counters + occupancy over all shards.
+    pub fn stats(&self) -> StoreStats {
+        let mut s = StoreStats { budget_bytes: self.budget, ..StoreStats::default() };
+        for shard in &self.shards {
+            let shard = shard.lock().expect("warm store poisoned");
+            let c = shard.counters();
+            s.hits += c.hits;
+            s.misses += c.misses;
+            s.inserts += c.inserts;
+            s.evictions += c.evictions;
+            s.rejected += c.rejected;
+            s.entries += shard.len();
+            s.used_bytes += shard.used_bytes();
+        }
+        s
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("warm store poisoned").used_bytes())
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().expect("warm store poisoned").len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn fp() -> ModelFingerprint {
+        ModelFingerprint { variant: Variant::S, weight_seed: 0xD17 }
+    }
+
+    fn trained_fit(d: usize, a: f32, b: f32, seed: u64) -> AffineFit {
+        let mut f = AffineFit::new(d, 1.0);
+        let mut rng = crate::rng::Rng::new(seed);
+        let x = Tensor::new(rng.normal_vec(32 * d, 1.0), &[32, d]);
+        let mut y = x.clone();
+        for v in y.data_mut().iter_mut() {
+            *v = a * *v + b;
+        }
+        f.update(&x, &y);
+        f
+    }
+
+    #[test]
+    fn fit_roundtrip_and_hit_miss_accounting() {
+        let store = WarmStore::new(1 << 20, 2);
+        let miss = store.warm_fit(fp(), PolicyKind::FastCache, 20, 0);
+        assert!(miss.is_none());
+        let f = trained_fit(8, 1.5, -0.25, 1);
+        store.publish_fit(fp(), PolicyKind::FastCache, 20, 0, &f);
+        let got = store.warm_fit(fp(), PolicyKind::FastCache, 20, 0).expect("hit");
+        assert_eq!(got.coeffs(), f.coeffs());
+        // Different policy / steps / layer are distinct keys.
+        assert!(store.warm_fit(fp(), PolicyKind::L2C, 20, 0).is_none());
+        assert!(store.warm_fit(fp(), PolicyKind::FastCache, 10, 0).is_none());
+        assert!(store.warm_fit(fp(), PolicyKind::FastCache, 20, 1).is_none());
+        let s = store.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 4);
+        assert_eq!(s.inserts, 1);
+        assert!(s.used_bytes <= s.budget_bytes);
+        assert!(s.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn publish_merges_instead_of_overwriting() {
+        let store = WarmStore::new(1 << 20, 1);
+        let a = trained_fit(4, 2.0, 0.0, 2);
+        let b = trained_fit(4, 2.0, 0.0, 3);
+        store.publish_fit(fp(), PolicyKind::FastCache, 8, 0, &a);
+        store.publish_fit(fp(), PolicyKind::FastCache, 8, 0, &b);
+        let got = store.warm_fit(fp(), PolicyKind::FastCache, 8, 0).unwrap();
+        assert_eq!(got.updates(), a.updates() + b.updates(), "evidence must pool");
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn profile_mean_and_cold_sites() {
+        let store = WarmStore::new(1 << 20, 1);
+        assert!(store.warm_profile(fp(), 3).is_none());
+        let lane1 = vec![vec![f64::INFINITY, f64::INFINITY], vec![0.2, 0.4], vec![0.1, 0.3]];
+        let lane2 = vec![vec![f64::INFINITY, f64::INFINITY], vec![0.4, 0.2], vec![0.3, 0.1]];
+        store.publish_profile(fp(), 3, &lane1);
+        store.publish_profile(fp(), 3, &lane2);
+        let p = store.warm_profile(fp(), 3).expect("profile");
+        assert!(p.deltas[0].iter().all(|d| d.is_infinite()), "step 0 is never skippable");
+        assert!((p.deltas[1][0] - 0.3).abs() < 1e-12);
+        assert!((p.deltas[2][1] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_never_exceed_budget_and_lru_entry_is_evicted() {
+        // A budget that holds only a few fit entries: flooding layers must
+        // evict the least-recently-used ones, never exceed the budget.
+        let one = trained_fit(64, 1.0, 0.0, 4);
+        let per_entry = one.size_bytes() + super::super::lru::ENTRY_OVERHEAD;
+        let store = WarmStore::new(per_entry * 3, 1);
+        for layer in 0..8 {
+            store.publish_fit(fp(), PolicyKind::FastCache, 20, layer, &one);
+            assert!(store.used_bytes() <= store.budget_bytes());
+        }
+        let s = store.stats();
+        assert!(s.evictions >= 5, "flooding must evict: {s:?}");
+        assert!(s.entries <= 3);
+        // Early layers were least recently used: layer 0 must be gone.
+        assert!(store.warm_fit(fp(), PolicyKind::FastCache, 20, 0).is_none());
+        // The most recently published layer survives.
+        assert!(store.warm_fit(fp(), PolicyKind::FastCache, 20, 7).is_some());
+    }
+
+    #[test]
+    fn budget_invariant_under_randomized_publish_get_sequences() {
+        use crate::testutil::prop::PropRunner;
+        let template = trained_fit(16, 0.9, 0.1, 5);
+        PropRunner::new(40).forall(
+            |rng| {
+                let budget = 512 + rng.below(8192);
+                let ops: Vec<(u8, usize, usize)> = (0..rng.below(50) + 5)
+                    .map(|_| (rng.below(3) as u8, rng.below(6), rng.below(10)))
+                    .collect();
+                (budget, ops)
+            },
+            |(budget, ops)| {
+                let store = WarmStore::new(*budget, 2);
+                for &(op, steps, layer) in ops {
+                    match op {
+                        0 => {
+                            store.publish_fit(fp(), PolicyKind::FastCache, steps, layer, &template)
+                        }
+                        1 => {
+                            store.warm_fit(fp(), PolicyKind::FastCache, steps, layer);
+                        }
+                        _ => store.publish_profile(fp(), steps, &vec![vec![0.25; 4]; steps]),
+                    }
+                    let used = store.used_bytes();
+                    if used > store.budget_bytes() {
+                        return Err(format!(
+                            "stored {used} B exceeds budget {} B",
+                            store.budget_bytes()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

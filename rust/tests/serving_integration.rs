@@ -43,7 +43,7 @@ fn throughput_improves_with_caching() {
             .map(|r| server.submit(r.clone()).expect("submit"))
             .collect();
         for rx in rxs {
-            rx.recv().expect("response");
+            rx.recv().expect("response").completed();
         }
         walls.push(t0.elapsed().as_secs_f64());
         let report = server.shutdown();
@@ -75,7 +75,7 @@ fn str_enabled_serving_batches_and_matches_single_request() {
         .collect();
     let model = DitModel::native(Variant::S, 5);
     for (req, rx) in rxs {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").completed();
         let mut eng = DenoiseEngine::new(&model, fc.clone());
         let solo = eng.generate(&req).expect("solo generate");
         let md = resp.result.latent.max_abs_diff(&solo.latent);
@@ -100,7 +100,7 @@ fn responses_match_request_ids_under_batching() {
         .map(|r| (r.id, server.submit(r.clone()).unwrap()))
         .collect();
     for (id, rx) in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().completed();
         assert_eq!(resp.result.id, id, "response routed to wrong request");
     }
     server.shutdown();
@@ -116,7 +116,7 @@ fn serve_burst(workers: usize, reqs: &[GenRequest]) -> BTreeMap<u64, Tensor> {
         .collect();
     let mut out = BTreeMap::new();
     for (id, rx) in rxs {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").completed();
         assert_eq!(resp.result.id, id);
         out.insert(id, resp.result.latent);
     }
@@ -166,7 +166,7 @@ fn sharded_deadline_traffic_is_tracked_per_class() {
         .map(|r| (r.deadline_ms.is_some(), server.submit_blocking(r).unwrap()))
         .collect();
     for (tagged, rx) in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().completed();
         assert_eq!(resp.deadline_met.is_some(), tagged);
     }
     let report = server.shutdown();
@@ -200,7 +200,7 @@ fn backpressure_and_shutdown_error_paths() {
     }
     assert!(saw_full, "bounded queue never reported QueueFull");
     for rx in accepted {
-        rx.recv().expect("accepted requests must still complete");
+        rx.recv().expect("accepted requests must still complete").completed();
     }
     // ...and once the server is shut down, the queues report Closed (the
     // owning handle is consumed by shutdown, so exercise the shard queue
@@ -218,6 +218,107 @@ fn backpressure_and_shutdown_error_paths() {
     match q.push(job) {
         fastcache_dit::server::queue::Push::Closed(_) => {}
         _ => panic!("closed queue must reject submissions with Closed"),
+    }
+}
+
+#[test]
+fn warm_start_flag_with_empty_store_matches_warm_start_off_exactly() {
+    // The warm-start subsystem's determinism contract: enabling the flag
+    // changes NOTHING until the store actually holds data. One request
+    // per server (so nothing retires-and-publishes before admission): the
+    // warm server consults an empty store (all misses) and must produce a
+    // bit-identical latent to the cold server.
+    let req = GenRequest::simple(0, 1234, 8);
+    let run = |warm: bool| -> Tensor {
+        let scfg = ServerConfig { max_batch: 2, queue_depth: 8, ..ServerConfig::default() };
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.warm_start = warm;
+        fc.fit_min_updates = 4; // same gate both sides — it is store-independent
+        let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 5)));
+        let rx = server.submit(req.clone()).expect("submit");
+        let latent = rx.recv().expect("response").completed().result.latent;
+        let report = server.shutdown();
+        if warm {
+            let stats = report.store.expect("warm server reports its store");
+            assert_eq!(stats.hits, 0, "empty store cannot hit");
+            assert_eq!(report.warm_admissions, 0);
+        } else {
+            assert!(report.store.is_none());
+        }
+        latent
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(
+        off.data(),
+        on.data(),
+        "warm-start on (empty store) vs off diverged: max diff {}",
+        off.max_abs_diff(&on)
+    );
+}
+
+#[test]
+fn warm_started_second_burst_is_cheaper_at_bounded_quality() {
+    // Fleet behavior across server restarts: burst 1 populates a caller-
+    // owned store; burst 2 (a NEW server sharing the store) warm-starts,
+    // executes fewer FLOPs, and stays within the quality envelope of the
+    // same χ² bound.
+    use fastcache_dit::store::WarmStore;
+    let scfg = ServerConfig { max_batch: 8, queue_depth: 16, ..ServerConfig::default() };
+    let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+    fc.enable_str = false;
+    fc.warm_start = true;
+    fc.fit_min_updates = 5;
+    fc.tau_delta0 = 1.0;
+    let store = Arc::new(WarmStore::new(scfg.warm_budget_bytes, 1));
+
+    let mut wl = WorkloadGen::new(31);
+    let reqs = wl.image_set(4, 10, MotionProfile::MIXED);
+    let burst = |expect_warm: bool| -> (u64, Vec<Tensor>) {
+        let store = Some(Arc::clone(&store));
+        // Fingerprint contract: factory seed == scfg.weight_seed.
+        let seed = scfg.weight_seed;
+        let server = Server::start_with_store(scfg.clone(), fc.clone(), store, move || {
+            Ok(DitModel::native(Variant::S, seed))
+        });
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone()).unwrap()).collect();
+        let mut flops = 0;
+        let mut latents = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().completed();
+            assert_eq!(resp.result.warm_layers > 0, expect_warm);
+            flops += resp.result.flops_done;
+            latents.push(resp.result.latent);
+        }
+        let report = server.shutdown();
+        let stats = report.store.expect("store stats");
+        assert!(stats.used_bytes <= stats.budget_bytes, "budget invariant broke");
+        (flops, latents)
+    };
+    let (cold_flops, cold_latents) = burst(false);
+    let (warm_flops, warm_latents) = burst(true);
+    assert!(
+        warm_flops < cold_flops,
+        "warm burst must be cheaper: {warm_flops} vs {cold_flops}"
+    );
+    // Quality envelope: warm latents stay close to the cold rendering of
+    // the same seeds (both are χ²-bounded approximations of the same
+    // trajectory).
+    for (c, w) in cold_latents.iter().zip(&warm_latents) {
+        assert!(w.data().iter().all(|v| v.is_finite()));
+        let rel = {
+            let diff: f64 = c
+                .data()
+                .iter()
+                .zip(w.data())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let base: f64 =
+                c.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            diff / base.max(1e-9)
+        };
+        assert!(rel < 0.5, "warm latent drifted {rel} from cold rendering");
     }
 }
 
@@ -290,7 +391,7 @@ fn hlo_server_smoke() {
     let reqs = wl.image_set(3, 4, MotionProfile::MIXED);
     let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone()).unwrap()).collect();
     for rx in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().completed();
         assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
     }
     let report = server.shutdown();

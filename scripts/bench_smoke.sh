@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Bench smoke (CI): run the serving + sharding tables of bench_tables at
-# tiny sizes and leave the rendered tables plus machine-readable
-# bench_out/BENCH_*.json behind for the workflow-artifact upload, so the
-# perf trajectory accumulates per-PR.
+# Bench smoke (CI): run the serving + sharding + warmstart tables of
+# bench_tables at tiny sizes and leave the rendered tables plus
+# machine-readable bench_out/BENCH_*.json behind for the workflow-artifact
+# upload, so the perf trajectory (including the cold-vs-warm FLOPs/step
+# win and store hit rate per PR) accumulates per-PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,7 +13,7 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 mkdir -p bench_out
-BENCH_SMOKE=1 cargo bench --bench bench_tables -- serving sharding \
+BENCH_SMOKE=1 cargo bench --bench bench_tables -- serving sharding warmstart \
     | tee bench_out/BENCH_smoke_tables.txt
 
 echo "bench_smoke: emitted artifacts:"
