@@ -16,15 +16,18 @@
 //! SHAPE: who wins, by roughly what factor, where crossovers fall.
 //! Outputs are recorded in EXPERIMENTS.md.
 
-use fastcache_dit::config::{FastCacheConfig, PolicyKind, Variant, C_IN};
+use fastcache_dit::config::{FastCacheConfig, ModelConfig, PolicyKind, Variant, C_IN};
 use fastcache_dit::experiments::{
     baseline_policies, eval_policies, eval_serving, eval_sharding, eval_video, eval_warmstart,
     EvalConfig, ShardingEval, WarmstartEval,
 };
 use fastcache_dit::metrics::report::{f1, pct, Table};
-use fastcache_dit::model::DitModel;
+use fastcache_dit::model::kernels::{attention_streaming, Act};
+use fastcache_dit::model::{native, DitModel, ScratchArena, WeightBank};
+use fastcache_dit::rng::Rng;
 use fastcache_dit::scheduler::DenoiseEngine;
 use fastcache_dit::tensor::Tensor;
+use fastcache_dit::testutil::{oracle, Bencher};
 use fastcache_dit::workload::{MotionProfile, WorkloadGen};
 
 fn model(v: Variant) -> DitModel {
@@ -352,6 +355,8 @@ fn table11() {
 }
 
 /// Round every weight to bf16 precision (simulated quantized deployment).
+/// Mutates the row-major bank in place, then repacks so the native
+/// kernels serve the quantized values (the packed layout is a snapshot).
 fn quantize_model(m: &mut DitModel) {
     let to_bf16 = |t: &mut Tensor| {
         for v in t.data_mut().iter_mut() {
@@ -375,6 +380,7 @@ fn quantize_model(m: &mut DitModel) {
     to_bf16(&mut m.bank.temb.w2);
     to_bf16(&mut m.bank.final_.wmod);
     to_bf16(&mut m.bank.final_.wout);
+    m.repack();
 }
 
 /// Table 13: speed-quality trade-off at matched operating points.
@@ -465,6 +471,100 @@ fn table15() {
         ]);
     }
     println!("{}", t.render());
+}
+
+/// Kernels: old-vs-new microbench of the native compute layer — the
+/// retained scalar oracle (`testutil::oracle`, the pre-PR-4 forward)
+/// against the packed/fused/streaming kernels, per variant, at the
+/// acceptance shape n = 256 (n = 64 in CI smoke). Wall-ns per call plus
+/// the speedup ratio; the block_forward row on DiT-S is the ≥3×
+/// acceptance criterion. Rows land in bench_out/BENCH_kernels.json so
+/// the trajectory accumulates per PR.
+fn kernels() {
+    let n = if smoke() { 64 } else { 256 };
+    let variants: &[Variant] =
+        if smoke() { &[Variant::S, Variant::Xl] } else { &Variant::ALL };
+    let b = Bencher::from_env();
+    let mut t = Table::new(
+        &format!("Kernels — scalar oracle vs packed/fused/streaming (n = {n})"),
+        &["Variant", "Op", "Old (ns)↓", "New (ns)↓", "Speedup↑"],
+    );
+    let mut json_rows = Vec::new();
+    for &v in variants {
+        let cfg = ModelConfig::of(v);
+        let bank = WeightBank::generate(cfg, 0xD17);
+        let d = cfg.d;
+        let mut rng = Rng::new(0xBE7C);
+        let h = Tensor::new(rng.normal_vec(n * d, 1.0), &[n, d]);
+        let c = rng.normal_vec(d, 1.0);
+        let x = rng.normal_vec(n * d, 1.0);
+        let mut arena = ScratchArena::new();
+        let mut out = vec![0.0f32; n * d];
+        let mut qkv_buf = vec![0.0f32; n * 3 * d];
+        let w = &bank.blocks[0];
+        let pw = &bank.packed.blocks[0];
+        // Warm the arena so the timed path is the steady state.
+        native::block_forward_slice(h.data(), n, &c, &cfg, pw, &mut arena, &mut out);
+
+        let mut row = |op: &str, old_ms: f64, new_ms: f64| {
+            let (old_ns, new_ns) = (old_ms * 1e6, new_ms * 1e6);
+            let ratio = old_ns / new_ns.max(1e-9);
+            t.row(&[
+                v.paper_name().to_string(),
+                op.to_string(),
+                format!("{old_ns:.0}"),
+                format!("{new_ns:.0}"),
+                format!("{ratio:.2}x"),
+            ]);
+            json_rows.push(format!(
+                "{{\"variant\":\"{}\",\"op\":\"{op}\",\"n\":{n},\"old_ns\":{old_ns:.1},\
+                 \"new_ns\":{new_ns:.1},\"speedup\":{ratio:.3}}}",
+                v.key()
+            ));
+        };
+
+        let old = b.bench(&format!("kernels/{v}/block_forward/oracle"), || {
+            std::hint::black_box(oracle::block_forward(&h, &c, &cfg, w));
+        });
+        let new = b.bench(&format!("kernels/{v}/block_forward/packed"), || {
+            native::block_forward_slice(h.data(), n, &c, &cfg, pw, &mut arena, &mut out);
+            std::hint::black_box(&out);
+        });
+        row("block_forward", old.mean_ms, new.mean_ms);
+
+        // Attention: oracle takes split q/k/v; the streaming kernel reads
+        // the fused buffer directly (that indexing IS part of the win).
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let vv = rng.normal_vec(n * d, 1.0);
+        for r in 0..n {
+            qkv_buf[r * 3 * d..r * 3 * d + d].copy_from_slice(&q[r * d..(r + 1) * d]);
+            qkv_buf[r * 3 * d + d..r * 3 * d + 2 * d].copy_from_slice(&k[r * d..(r + 1) * d]);
+            qkv_buf[r * 3 * d + 2 * d..r * 3 * d + 3 * d]
+                .copy_from_slice(&vv[r * d..(r + 1) * d]);
+        }
+        let old = b.bench(&format!("kernels/{v}/attention/oracle"), || {
+            std::hint::black_box(oracle::attention(&q, &k, &vv, n, cfg.heads, d));
+        });
+        let new = b.bench(&format!("kernels/{v}/attention/streaming"), || {
+            attention_streaming(&qkv_buf, n, cfg.heads, d, &mut out);
+            std::hint::black_box(&out);
+        });
+        row("attention", old.mean_ms, new.mean_ms);
+
+        // The mlp-up matmul [D, 4D] — the biggest single GEMM of a block.
+        let mut mm_out = vec![0.0f32; n * pw.w1.m()];
+        let old = b.bench(&format!("kernels/{v}/matmul/oracle"), || {
+            std::hint::black_box(oracle::matmul_bias(&x, &w.w1, Some(&w.b1), n));
+        });
+        let new = b.bench(&format!("kernels/{v}/matmul/packed"), || {
+            pw.w1.forward(&x, n, Act::None, &mut mm_out);
+            std::hint::black_box(&mm_out);
+        });
+        row("matmul", old.mean_ms, new.mean_ms);
+    }
+    println!("{}", t.render());
+    write_json("kernels", json_rows);
 }
 
 /// Serving: continuous batching over the unified lane stepper. Shows that
@@ -827,6 +927,9 @@ fn main() {
     }
     if want("table15") {
         table15();
+    }
+    if want("kernels") {
+        kernels();
     }
     if want("serving") {
         serving();

@@ -134,20 +134,51 @@ impl CacheState {
         *slot = Some(t);
     }
 
-    pub fn store_input(&mut self, layer: usize, t: Tensor) {
-        Self::track_replace(&mut self.bytes, &mut self.prev_input[layer], t);
+    /// Copy `src` into a slot, REUSING the resident allocation when the
+    /// shape matches (the steady-state case: every step replaces each
+    /// slot with an identically-shaped tensor). Byte accounting is
+    /// unchanged either way.
+    fn track_copy(bytes: &mut usize, slot: &mut Option<Tensor>, src: &Tensor) {
+        match slot {
+            Some(t) if t.shape() == src.shape() => {
+                t.data_mut().copy_from_slice(src.data());
+            }
+            _ => Self::track_replace(bytes, slot, src.clone()),
+        }
     }
 
-    pub fn store_output(&mut self, layer: usize, t: Tensor) {
-        Self::track_replace(&mut self.bytes, &mut self.prev_output[layer], t);
+    /// Move `t` into the layer's input slot and hand the evicted tensor
+    /// back for buffer recycling (an empty tensor when the slot was
+    /// cold). The zero-copy path of the lane stepper: the pre-block
+    /// hidden moves in, last step's buffer becomes the next scratch
+    /// output.
+    pub fn swap_input(&mut self, layer: usize, t: Tensor) -> Tensor {
+        let slot = &mut self.prev_input[layer];
+        let old = slot.take();
+        if let Some(o) = &old {
+            self.bytes -= o.size_bytes();
+        }
+        self.bytes += t.size_bytes();
+        *slot = Some(t);
+        old.unwrap_or_else(Tensor::empty)
     }
 
-    pub fn store_temb(&mut self, t: Tensor) {
-        Self::track_replace(&mut self.bytes, &mut self.prev_temb, t);
+    /// Copy `src` into the layer's output slot (allocation-free once the
+    /// slot holds a same-shape tensor).
+    pub fn store_output_from(&mut self, layer: usize, src: &Tensor) {
+        Self::track_copy(&mut self.bytes, &mut self.prev_output[layer], src);
     }
 
-    pub fn store_embed(&mut self, t: Tensor) {
-        Self::track_replace(&mut self.bytes, &mut self.prev_embed, t);
+    /// Copy `src` into the previous-temb slot (allocation-free once
+    /// resident).
+    pub fn store_temb_from(&mut self, src: &Tensor) {
+        Self::track_copy(&mut self.bytes, &mut self.prev_temb, src);
+    }
+
+    /// Copy `src` into the previous-embed slot (allocation-free once
+    /// resident).
+    pub fn store_embed_from(&mut self, src: &Tensor) {
+        Self::track_copy(&mut self.bytes, &mut self.prev_embed, src);
     }
 
     /// Cache-state footprint in bytes (hidden copies; fits — and their
@@ -192,11 +223,11 @@ mod tests {
     fn byte_accounting_replaces() {
         let mut s = CacheState::new(2, 4, 0.98);
         assert_eq!(s.size_bytes(), 2 * 4 * 3 * 8);
-        s.store_input(0, Tensor::zeros(&[8, 4]));
+        s.swap_input(0, Tensor::zeros(&[8, 4]));
         let base = s.size_bytes();
-        s.store_input(0, Tensor::zeros(&[8, 4])); // replace, same size
+        s.swap_input(0, Tensor::zeros(&[8, 4])); // replace, same size
         assert_eq!(s.size_bytes(), base);
-        s.store_output(1, Tensor::zeros(&[8, 4]));
+        s.store_output_from(1, &Tensor::zeros(&[8, 4]));
         assert!(s.size_bytes() > base);
         s.clear();
         assert_eq!(s.size_bytes(), 2 * 4 * 3 * 8);
@@ -234,6 +265,34 @@ mod tests {
     }
 
     #[test]
+    fn copy_in_stores_reuse_allocations_and_keep_accounting() {
+        // The zero-allocation serving path: same-shape replacement must
+        // reuse the resident buffer (no new allocation), shape changes
+        // must fall back to replace — bytes exact in both cases.
+        let mut s = CacheState::new(1, 4, 0.98);
+        let fits = 4 * 3 * 8;
+        s.store_output_from(0, &Tensor::full(&[8, 4], 1.0));
+        let ptr = s.prev_output(0).unwrap().data().as_ptr();
+        assert_eq!(s.size_bytes(), 8 * 4 * 4 + fits);
+        s.store_output_from(0, &Tensor::full(&[8, 4], 2.0));
+        let out = s.prev_output(0).unwrap();
+        assert_eq!(out.data().as_ptr(), ptr, "same-shape copy-in must reuse the buffer");
+        assert!(out.data().iter().all(|&v| v == 2.0));
+        assert_eq!(s.size_bytes(), 8 * 4 * 4 + fits);
+        // Shape change: replaced, bytes follow.
+        s.store_output_from(0, &Tensor::full(&[2, 4], 3.0));
+        assert_eq!(s.size_bytes(), 2 * 4 * 4 + fits);
+
+        // swap_input: move in, recycle out.
+        let evicted = s.swap_input(0, Tensor::full(&[8, 4], 4.0));
+        assert_eq!(evicted.len(), 0, "cold slot recycles an empty tensor");
+        assert_eq!(s.size_bytes(), 2 * 4 * 4 + 8 * 4 * 4 + fits);
+        let evicted = s.swap_input(0, Tensor::full(&[6, 4], 5.0));
+        assert_eq!(evicted.shape(), &[8, 4], "previous resident comes back for reuse");
+        assert_eq!(s.size_bytes(), 2 * 4 * 4 + 6 * 4 * 4 + fits);
+    }
+
+    #[test]
     fn bytes_track_actual_tensor_allocation() {
         // `bytes` must equal the sum of size_bytes() over every resident
         // tensor at all times — including replacements that GROW or
@@ -244,30 +303,30 @@ mod tests {
         let mut expect = 0usize;
         let sz = |n: usize| n * 4 * std::mem::size_of::<f32>();
 
-        s.store_input(0, Tensor::zeros(&[16, 4]));
+        s.swap_input(0, Tensor::zeros(&[16, 4]));
         expect += sz(16);
-        s.store_output(0, Tensor::zeros(&[16, 4]));
+        s.store_output_from(0, &Tensor::zeros(&[16, 4]));
         expect += sz(16);
-        s.store_temb(Tensor::zeros(&[1, 4]));
+        s.store_temb_from(&Tensor::zeros(&[1, 4]));
         expect += sz(1);
-        s.store_embed(Tensor::zeros(&[16, 4]));
+        s.store_embed_from(&Tensor::zeros(&[16, 4]));
         expect += sz(16);
         assert_eq!(s.size_bytes(), expect + fits_overhead);
 
         // Shrink layer 0's slots (a merged-resolution step)...
-        s.store_input(0, Tensor::zeros(&[4, 4]));
-        s.store_output(0, Tensor::zeros(&[4, 4]));
+        s.swap_input(0, Tensor::zeros(&[4, 4]));
+        s.store_output_from(0, &Tensor::zeros(&[4, 4]));
         expect = expect - 2 * sz(16) + 2 * sz(4);
         assert_eq!(s.size_bytes(), expect + fits_overhead);
 
         // ...then grow them back past the original size.
-        s.store_input(0, Tensor::zeros(&[32, 4]));
+        s.swap_input(0, Tensor::zeros(&[32, 4]));
         expect = expect - sz(4) + sz(32);
         assert_eq!(s.size_bytes(), expect + fits_overhead);
 
         // Untouched layers contribute nothing until written.
         assert!(s.prev_input(2).is_none());
-        s.store_output(2, Tensor::zeros(&[8, 4]));
+        s.store_output_from(2, &Tensor::zeros(&[8, 4]));
         expect += sz(8);
         assert_eq!(s.size_bytes(), expect + fits_overhead);
     }

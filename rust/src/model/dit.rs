@@ -14,6 +14,7 @@ use crate::config::{ModelConfig, Variant, C_IN, N_TOKENS};
 use crate::runtime::{run, ArtifactStore, Arg, Client, DeviceTensor, ProgramKey};
 use crate::tensor::Tensor;
 
+use super::kernels::ScratchArena;
 use super::native;
 use super::weights::WeightBank;
 
@@ -59,7 +60,7 @@ impl DitModel {
         if !store.has(&ProgramKey::block(variant, N_TOKENS, 1)) {
             bail!("artifacts for variant {variant} missing — run `make artifacts`");
         }
-        let bank = WeightBank::generate(cfg, seed);
+        let mut bank = WeightBank::generate(cfg, seed);
         let upload_all = |ts: &[&Tensor]| -> Result<Vec<DeviceTensor>> {
             ts.iter().map(|t| client.upload(t)).collect()
         };
@@ -74,6 +75,9 @@ impl DitModel {
             final_: upload_all(&bank.final_.ordered())?,
             embed: upload_all(&[&bank.embed.w, &bank.embed.b])?,
         };
+        // Device weights are resident and the HLO path never runs the
+        // native kernels — don't hold a second full host copy.
+        bank.release_packed();
         Ok(DitModel {
             cfg,
             mode: ExecMode::Hlo,
@@ -105,6 +109,19 @@ impl DitModel {
             .with_context(|| format!("executing {}", key.file_stem()))
     }
 
+    /// Whether forwards run the native kernel path (vs PJRT dispatch).
+    pub fn is_native(&self) -> bool {
+        self.mode == ExecMode::Native
+    }
+
+    /// Rebuild the packed native-kernel weights from the (possibly
+    /// mutated) row-major bank. Native mode only affects `bank.packed`;
+    /// HLO device weights are uploaded once at load and NOT re-uploaded
+    /// here.
+    pub fn repack(&mut self) {
+        self.bank.repack();
+    }
+
     /// Timestep conditioning: t (len B) -> [B, D].
     pub fn temb(&self, t: &[f32]) -> Result<Tensor> {
         let b = t.len();
@@ -113,7 +130,7 @@ impl DitModel {
                 let d = self.cfg.d;
                 let mut out = Vec::with_capacity(b * d);
                 for &tv in t {
-                    out.extend(native::temb_forward(tv, &self.bank.temb));
+                    out.extend(native::temb_forward(tv, &self.bank.packed.temb));
                 }
                 Ok(Tensor::new(out, &[b, d]))
             }
@@ -134,14 +151,9 @@ impl DitModel {
         match self.mode {
             ExecMode::Native => {
                 let d = self.cfg.d;
-                let mut out = Vec::with_capacity(b * n * d);
-                for bi in 0..b {
-                    let sl = Tensor::new(
-                        x.data()[bi * n * C_IN..(bi + 1) * n * C_IN].to_vec(),
-                        &[n, C_IN],
-                    );
-                    out.extend(native::embed_forward(&sl, &self.bank.embed).into_data());
-                }
+                // Row-wise linear: all B·N rows go through one call.
+                let mut out = vec![0.0f32; b * n * d];
+                native::embed_forward_slice(x.data(), b * n, &self.bank.packed.embed, &mut out);
                 Ok(Tensor::new(out, &[b, n, d]))
             }
             ExecMode::Hlo => {
@@ -158,23 +170,20 @@ impl DitModel {
     }
 
     /// One transformer block. h: [B, N, D], c: [B, D] -> [B, N, D].
-    /// (B, N) must match a compiled artifact shape in HLO mode.
+    /// (B, N) must match a compiled artifact shape in HLO mode. Native
+    /// mode builds a transient scratch arena; hot callers should hold
+    /// their own and use [`DitModel::block_with`] /
+    /// [`DitModel::block_native_into`].
     pub fn block(&self, layer: usize, h: &Tensor, c: &Tensor) -> Result<Tensor> {
-        let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
-        assert_eq!(d, self.cfg.d);
-        assert!(layer < self.cfg.layers, "layer {layer} out of range");
         match self.mode {
             ExecMode::Native => {
-                let w = &self.bank.blocks[layer];
-                let mut out = Vec::with_capacity(b * n * d);
-                for bi in 0..b {
-                    let hs = Tensor::new(h.data()[bi * n * d..(bi + 1) * n * d].to_vec(), &[n, d]);
-                    let cs = &c.data()[bi * d..(bi + 1) * d];
-                    out.extend(native::block_forward(&hs, cs, &self.cfg, w).into_data());
-                }
-                Ok(Tensor::new(out, &[b, n, d]))
+                let mut arena = ScratchArena::new();
+                self.block_with(layer, h, c, &mut arena)
             }
             ExecMode::Hlo => {
+                let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+                assert_eq!(d, self.cfg.d);
+                assert!(layer < self.cfg.layers, "layer {layer} out of range");
                 let key = ProgramKey::block(self.cfg.variant, n, b);
                 let dev = self.dev.as_ref().unwrap();
                 let mut args = vec![Arg::Host(h), Arg::Host(c)];
@@ -184,26 +193,110 @@ impl DitModel {
         }
     }
 
-    /// Final projection. h: [B, N, D], c: [B, D] -> [B, N, C].
-    pub fn final_layer(&self, h: &Tensor, c: &Tensor) -> Result<Tensor> {
-        let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+    /// [`DitModel::block`] with a caller-owned scratch arena (native
+    /// mode reuses its buffers; HLO mode ignores it).
+    pub fn block_with(
+        &self,
+        layer: usize,
+        h: &Tensor,
+        c: &Tensor,
+        arena: &mut ScratchArena,
+    ) -> Result<Tensor> {
         match self.mode {
             ExecMode::Native => {
-                let mut out = Vec::with_capacity(b * n * C_IN);
+                let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+                assert_eq!(d, self.cfg.d);
+                assert!(layer < self.cfg.layers, "layer {layer} out of range");
+                let w = &self.bank.packed.blocks[layer];
+                let mut out = vec![0.0f32; b * n * d];
                 for bi in 0..b {
-                    let hs = Tensor::new(h.data()[bi * n * d..(bi + 1) * n * d].to_vec(), &[n, d]);
-                    let cs = &c.data()[bi * d..(bi + 1) * d];
-                    out.extend(native::final_forward(&hs, cs, &self.bank.final_).into_data());
+                    native::block_forward_slice(
+                        &h.data()[bi * n * d..(bi + 1) * n * d],
+                        n,
+                        &c.data()[bi * d..(bi + 1) * d],
+                        &self.cfg,
+                        w,
+                        arena,
+                        &mut out[bi * n * d..(bi + 1) * n * d],
+                    );
                 }
-                Ok(Tensor::new(out, &[b, n, C_IN]))
+                Ok(Tensor::new(out, &[b, n, d]))
+            }
+            ExecMode::Hlo => self.block(layer, h, c),
+        }
+    }
+
+    /// Zero-allocation native block forward: one [N, D] example written
+    /// into a caller-recycled output tensor. The steady-state serving
+    /// path — errors in HLO mode (which has its own dispatch route).
+    pub fn block_native_into(
+        &self,
+        layer: usize,
+        h: &Tensor,
+        c: &[f32],
+        arena: &mut ScratchArena,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        anyhow::ensure!(self.is_native(), "block_native_into is native-mode only");
+        let (n, d) = (h.shape()[0], h.shape()[1]);
+        assert_eq!(d, self.cfg.d);
+        assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        out.ensure_shape(&[n, d]);
+        native::block_forward_slice(
+            h.data(),
+            n,
+            c,
+            &self.cfg,
+            &self.bank.packed.blocks[layer],
+            arena,
+            out.data_mut(),
+        );
+        Ok(())
+    }
+
+    /// Final projection. h: [B, N, D], c: [B, D] -> [B, N, C].
+    pub fn final_layer(&self, h: &Tensor, c: &Tensor) -> Result<Tensor> {
+        match self.mode {
+            ExecMode::Native => {
+                let mut arena = ScratchArena::new();
+                self.final_layer_with(h, c, &mut arena)
             }
             ExecMode::Hlo => {
+                let (b, n) = (h.shape()[0], h.shape()[1]);
                 let key = ProgramKey::final_(self.cfg.variant, n, b);
                 let dev = self.dev.as_ref().unwrap();
                 let mut args = vec![Arg::Host(h), Arg::Host(c)];
                 args.extend(dev.final_.iter().map(Arg::Device));
                 self.exec(&key, &args)
             }
+        }
+    }
+
+    /// [`DitModel::final_layer`] with a caller-owned scratch arena.
+    pub fn final_layer_with(
+        &self,
+        h: &Tensor,
+        c: &Tensor,
+        arena: &mut ScratchArena,
+    ) -> Result<Tensor> {
+        match self.mode {
+            ExecMode::Native => {
+                let (b, n, d) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+                assert_eq!(d, self.cfg.d);
+                let mut out = vec![0.0f32; b * n * C_IN];
+                for bi in 0..b {
+                    native::final_forward_slice(
+                        &h.data()[bi * n * d..(bi + 1) * n * d],
+                        n,
+                        &c.data()[bi * d..(bi + 1) * d],
+                        &self.bank.packed.final_,
+                        arena,
+                        &mut out[bi * n * C_IN..(bi + 1) * n * C_IN],
+                    );
+                }
+                Ok(Tensor::new(out, &[b, n, C_IN]))
+            }
+            ExecMode::Hlo => self.final_layer(h, c),
         }
     }
 
@@ -229,9 +322,13 @@ impl DitModel {
         }
     }
 
-    /// Weight memory footprint in bytes (host copy; device mirrors it).
+    /// Weight memory footprint in bytes: the row-major host copy plus
+    /// the packed kernel copy when one is resident (native mode; HLO
+    /// models release it at load, and the device mirrors the row-major
+    /// bank). This is what the paper-facing memory columns report, so
+    /// the packed duplication must not be invisible.
     pub fn weight_bytes(&self) -> usize {
-        self.bank.size_bytes()
+        self.bank.size_bytes() + self.bank.packed.size_bytes()
     }
 
     pub fn meter(&self) -> Option<&crate::runtime::MemoryMeter> {
@@ -293,6 +390,19 @@ mod tests {
         let h1 = m1.embed(&x).unwrap();
         let h2 = m2.embed(&x).unwrap();
         assert_eq!(h1.data(), h2.data());
+    }
+
+    #[test]
+    fn native_weight_bytes_bill_the_packed_copy() {
+        // The packed kernel layout is a real second weight copy: the
+        // memory the paper-facing tables report must include it in
+        // native mode, and a released bank must report zero.
+        let m = DitModel::native(Variant::S, 1);
+        assert!(m.bank.packed.size_bytes() > 0);
+        assert_eq!(m.weight_bytes(), m.bank.size_bytes() + m.bank.packed.size_bytes());
+        let mut bank = crate::model::WeightBank::generate(m.cfg, 1);
+        bank.release_packed();
+        assert_eq!(bank.packed.size_bytes(), 0, "released bank must hold no packed bytes");
     }
 
     #[test]

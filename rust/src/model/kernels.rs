@@ -1,0 +1,700 @@
+//! Zero-allocation, cache-blocked native kernels for the DiT forward
+//! path: packed linear layers, fused layer-norm + adaLN modulation,
+//! bias + activation / gated-residual matmul epilogues, and a
+//! streaming-softmax attention that reads q/k/v strided directly out of
+//! the fused qkv buffer.
+//!
+//! ## model.py parity contract
+//!
+//! Semantics MUST match python/compile/model.py exactly: same layer-norm
+//! epsilon (1e-6), tanh-approximate GELU (jax.nn.gelu's default), SiLU,
+//! and the q|k|v split convention (`jnp.split` on the last axis). The
+//! packed matmuls accumulate in the SAME k-ascending order as the
+//! retained scalar oracle (`testutil::oracle`), so they are bit-exact
+//! against it; only the attention softmax changes float-summation order
+//! (online max/denominator instead of a two-pass softmax), which is why
+//! block-level parity — and the HLO cross-check in
+//! rust/tests/runtime_roundtrip.rs — is a TOLERANCE contract, not a
+//! bitwise one. rust/tests/kernel_parity.rs pins both down per kernel.
+//!
+//! ## Layout
+//!
+//! A [`PackedLinear`] repacks a row-major `[K, M]` weight at
+//! `WeightBank` generate/load time into column tiles of width [`NR`]:
+//! tile `t` is a contiguous `[K, NR]` panel (k-major, zero-padded past
+//! `M`). The microkernel walks [`MR`] rows of `x` against one panel with
+//! an `MR×NR` register accumulator, so the inner loop is a unit-stride,
+//! branch-free FMA chain the autovectorizer can lift to SIMD — the
+//! data-dependent `x == 0.0` skip of the old scalar path is gone (a
+//! separate [`PackedLinear::forward_sparse`] entry point keeps the
+//! zero-row short-circuit for STR-style sparsified inputs). Panels fit
+//! L2 and are reused across row blocks; the accumulator tile stays in
+//! registers — that is the cache blocking.
+//!
+//! ## Scratch
+//!
+//! Every intermediate a block forward needs (qkv, normalized input,
+//! attention out, MLP hidden, modulation, silu(c)) lives in a
+//! [`ScratchArena`] owned by the caller (`LaneStepper`, one per engine /
+//! shard worker). Buffers only ever grow, so after the first step the
+//! steady-state path performs zero heap allocations per block call; the
+//! arena's high-water mark is reported through `ServerReport` and
+//! asserted stable in tests.
+
+use crate::tensor::Tensor;
+
+/// Column-tile width of the packed layout (one microkernel accumulator
+/// row; 16 f32 = two AVX2 / one AVX-512 vector per unrolled step).
+pub const NR: usize = 16;
+/// Row-block height of the microkernel (x rows advanced together, so one
+/// streamed panel is reused MR times from registers/L1).
+pub const MR: usize = 4;
+
+/// SiLU (x · σ(x)), matching jax.nn.silu.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// tanh-approximate GELU (jax.nn.gelu default).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Activation fused into the matmul writeback (applied after bias).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Act {
+    None,
+    Gelu,
+    Silu,
+}
+
+#[inline]
+fn apply_act(act: Act, v: f32) -> f32 {
+    match act {
+        Act::None => v,
+        Act::Gelu => gelu(v),
+        Act::Silu => silu(v),
+    }
+}
+
+/// How the microkernel's accumulator tile leaves the registers.
+#[derive(Clone, Copy)]
+enum WriteBack<'a> {
+    /// `out = act(acc)` (acc is bias-initialized).
+    Store(Act),
+    /// `out += gate[j] · acc` — the fused residual epilogue of the
+    /// attention-proj and MLP-down matmuls (adaLN-zero gating).
+    AddGated(&'a [f32]),
+}
+
+/// A linear layer repacked for the blocked microkernel: `[K, M]` weights
+/// as `ceil(M/NR)` contiguous `[K, NR]` panels plus the bias (zeros when
+/// the layer has none). Built once at weight-bank generate/load time;
+/// `forward` never touches the original row-major tensor.
+#[derive(Clone, Debug)]
+pub struct PackedLinear {
+    k: usize,
+    m: usize,
+    data: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Repack a row-major `[K, M]` weight (and optional `[M]` bias).
+    pub fn pack(w: &Tensor, b: Option<&Tensor>) -> PackedLinear {
+        assert_eq!(w.shape().len(), 2, "PackedLinear wants a [K, M] matrix");
+        let (k, m) = (w.shape()[0], w.shape()[1]);
+        let tiles = m.div_ceil(NR);
+        let mut data = vec![0.0f32; tiles * k * NR];
+        let wd = w.data();
+        for t in 0..tiles {
+            let jb = t * NR;
+            let jw = NR.min(m - jb);
+            let panel = &mut data[t * k * NR..(t + 1) * k * NR];
+            for kk in 0..k {
+                panel[kk * NR..kk * NR + jw].copy_from_slice(&wd[kk * m + jb..kk * m + jb + jw]);
+            }
+        }
+        let bias = match b {
+            Some(t) => {
+                assert_eq!(t.len(), m, "bias length mismatch");
+                t.data().to_vec()
+            }
+            None => vec![0.0; m],
+        };
+        PackedLinear { k, m, data, bias }
+    }
+
+    /// Zero-sized placeholder (a released packed copy).
+    fn placeholder() -> PackedLinear {
+        PackedLinear { k: 0, m: 0, data: Vec::new(), bias: Vec::new() }
+    }
+
+    /// Input features.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output features.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Heap bytes of the packed panels + bias.
+    pub fn size_bytes(&self) -> usize {
+        (self.data.len() + self.bias.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// `out = act(x @ W + b)`, x: `[n, K]`, out: `[n, M]` (overwritten).
+    pub fn forward(&self, x: &[f32], n: usize, act: Act, out: &mut [f32]) {
+        self.run(x, n, WriteBack::Store(act), out);
+    }
+
+    /// `out[r, j] += gate[j] · (x @ W + b)[r, j]` — residual accumulation
+    /// written in place, no intermediate buffer.
+    pub fn forward_add_gated(&self, x: &[f32], n: usize, gate: &[f32], out: &mut [f32]) {
+        assert_eq!(gate.len(), self.m, "gate length mismatch");
+        self.run(x, n, WriteBack::AddGated(gate), out);
+    }
+
+    /// Sparse-row entry point for STR-zeroed inputs: rows of `x` that are
+    /// entirely zero short-circuit to `act(bias)` without touching the
+    /// panels. Bit-identical to [`PackedLinear::forward`] on the same
+    /// input (a zero row contributes exactly `+0·w` per lane), so callers
+    /// may switch on sparsity freely. The serving STR path currently
+    /// GATHERS motion rows instead of zero-padding, so no production
+    /// call site exists yet — this is the contract-preserving
+    /// replacement for the dense kernel's removed `x == 0.0` skip,
+    /// pinned against dense-with-zeros in rust/tests/kernel_parity.rs
+    /// for any zero-padding caller.
+    pub fn forward_sparse(&self, x: &[f32], n: usize, act: Act, out: &mut [f32]) {
+        assert_eq!(x.len(), n * self.k);
+        assert_eq!(out.len(), n * self.m);
+        for (xr, orow) in x.chunks(self.k).zip(out.chunks_mut(self.m)) {
+            if xr.iter().all(|&v| v == 0.0) {
+                for (o, &b) in orow.iter_mut().zip(&self.bias) {
+                    *o = apply_act(act, b);
+                }
+            } else {
+                self.run(xr, 1, WriteBack::Store(act), orow);
+            }
+        }
+    }
+
+    fn run(&self, x: &[f32], n: usize, wb: WriteBack<'_>, out: &mut [f32]) {
+        let (k, m) = (self.k, self.m);
+        assert_eq!(x.len(), n * k, "x length mismatch");
+        assert_eq!(out.len(), n * m, "out length mismatch");
+        let tiles = m.div_ceil(NR);
+        let mut r = 0;
+        while r < n {
+            let mr = MR.min(n - r);
+            for t in 0..tiles {
+                let jb = t * NR;
+                let jw = NR.min(m - jb);
+                let panel = &self.data[t * k * NR..(t + 1) * k * NR];
+                // Bias-initialized accumulator tile: the sum order
+                // (bias, then k ascending) matches the scalar oracle
+                // bit-for-bit. Padded columns stay zero and are never
+                // written back.
+                let mut acc = [[0.0f32; NR]; MR];
+                for a in acc.iter_mut().take(mr) {
+                    a[..jw].copy_from_slice(&self.bias[jb..jb + jw]);
+                }
+                for (kk, prow) in panel.chunks_exact(NR).enumerate() {
+                    for (i, a) in acc.iter_mut().enumerate().take(mr) {
+                        let xv = x[(r + i) * k + kk];
+                        for (av, &wv) in a.iter_mut().zip(prow) {
+                            *av += xv * wv;
+                        }
+                    }
+                }
+                match wb {
+                    WriteBack::Store(act) => {
+                        for (i, a) in acc.iter().enumerate().take(mr) {
+                            let orow = &mut out[(r + i) * m + jb..(r + i) * m + jb + jw];
+                            match act {
+                                Act::None => orow.copy_from_slice(&a[..jw]),
+                                _ => {
+                                    for (o, &v) in orow.iter_mut().zip(a) {
+                                        *o = apply_act(act, v);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    WriteBack::AddGated(gate) => {
+                        for (i, a) in acc.iter().enumerate().take(mr) {
+                            let orow = &mut out[(r + i) * m + jb..(r + i) * m + jb + jw];
+                            let grow = &gate[jb..jb + jw];
+                            for ((o, &v), &g) in orow.iter_mut().zip(a).zip(grow) {
+                                *o += g * v;
+                            }
+                        }
+                    }
+                }
+            }
+            r += mr;
+        }
+    }
+}
+
+/// Unpacked branch-free matmul for RUNTIME weights (fit matrices that
+/// change per call, so repacking would cost as much as the product):
+/// `out = x @ W + b`, x `[n, K]` row-major, W `[K, M]`, out overwritten.
+/// Same accumulation order as the packed path and the scalar oracle.
+pub fn matmul_bias_into(x: &[f32], w: &Tensor, b: Option<&Tensor>, n: usize, out: &mut [f32]) {
+    let (k, m) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(x.len(), n * k);
+    assert_eq!(out.len(), n * m);
+    match b {
+        Some(b) => {
+            assert_eq!(b.len(), m);
+            for orow in out.chunks_mut(m) {
+                orow.copy_from_slice(b.data());
+            }
+        }
+        None => out.fill(0.0),
+    }
+    let wd = w.data();
+    for (xr, orow) in x.chunks(k).zip(out.chunks_mut(m)) {
+        for (&xv, wrow) in xr.iter().zip(wd.chunks(m)) {
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Fused parameter-free LayerNorm + adaLN scale/shift, one pass:
+/// `out[r, j] = norm(x)[r, j] · (1 + scale[j]) + shift[j]`
+/// (eps = 1e-6, identical arithmetic to the oracle's LN-then-modulate).
+pub fn layernorm_mod(x: &[f32], n: usize, d: usize, shift: &[f32], scale: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), n * d);
+    assert_eq!(out.len(), n * d);
+    assert_eq!(shift.len(), d);
+    assert_eq!(scale.len(), d);
+    let eps = 1e-6f32;
+    for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (((o, &v), &sc), &sh) in orow.iter_mut().zip(row).zip(scale).zip(shift) {
+            *o = (v - mean) * inv * (1.0 + sc) + sh;
+        }
+    }
+}
+
+/// Query-block size of the streaming attention (k/v rows are streamed
+/// once per block instead of once per query).
+const MQ: usize = 4;
+
+/// Multi-head attention with an online (streaming) softmax, reading
+/// q/k/v strided DIRECTLY out of the fused qkv projection buffer — rows
+/// of `[3D]` laid out `q | k | v` (the `jnp.split` convention) — so no
+/// q/k/v copies exist and per-row logits never materialize. Processing
+/// is per head (working set `[n, dh]`) with `MQ`-query blocking; the
+/// output head-slice doubles as the online accumulator, so the kernel
+/// needs no scratch at all. out: `[n, d]`, overwritten.
+pub fn attention_streaming(qkv: &[f32], n: usize, heads: usize, d: usize, out: &mut [f32]) {
+    let dh = d / heads;
+    assert_eq!(heads * dh, d, "d must split evenly into heads");
+    let stride = 3 * d;
+    assert_eq!(qkv.len(), n * stride);
+    assert_eq!(out.len(), n * d);
+    let scale = 1.0 / (dh as f32).sqrt();
+    for h in 0..heads {
+        let qo = h * dh;
+        let ko = d + h * dh;
+        let vo = 2 * d + h * dh;
+        let mut i0 = 0;
+        while i0 < n {
+            let bq = MQ.min(n - i0);
+            let mut mx = [f32::NEG_INFINITY; MQ];
+            let mut den = [0.0f32; MQ];
+            // The out slices are the accumulators: zero them explicitly
+            // (the buffer may be a reused arena allocation).
+            for i in i0..i0 + bq {
+                out[i * d + qo..i * d + qo + dh].fill(0.0);
+            }
+            for j in 0..n {
+                let kj = &qkv[j * stride + ko..j * stride + ko + dh];
+                let vj = &qkv[j * stride + vo..j * stride + vo + dh];
+                for i in 0..bq {
+                    let qrow = &qkv[(i0 + i) * stride + qo..(i0 + i) * stride + qo + dh];
+                    let mut dot = 0.0f32;
+                    for (&qv, &kv) in qrow.iter().zip(kj) {
+                        dot += qv * kv;
+                    }
+                    let logit = dot * scale;
+                    let oi = &mut out[(i0 + i) * d + qo..(i0 + i) * d + qo + dh];
+                    if logit > mx[i] {
+                        // Rescale the running sum to the new max
+                        // (exp(-inf) = 0 cleanly initializes the first
+                        // touch, wiping any stale accumulator content).
+                        let f = (mx[i] - logit).exp();
+                        den[i] *= f;
+                        for o in oi.iter_mut() {
+                            *o *= f;
+                        }
+                        mx[i] = logit;
+                    }
+                    let p = (logit - mx[i]).exp();
+                    den[i] += p;
+                    for (o, &vv) in oi.iter_mut().zip(vj) {
+                        *o += p * vv;
+                    }
+                }
+            }
+            for i in 0..bq {
+                let inv = 1.0 / den[i];
+                for o in out[(i0 + i) * d + qo..(i0 + i) * d + qo + dh].iter_mut() {
+                    *o *= inv;
+                }
+            }
+            i0 += bq;
+        }
+    }
+}
+
+/// Reused scratch buffers for the fused forward kernels. Owned by the
+/// step driver (`LaneStepper`; one per engine / shard worker) and
+/// threaded through every native forward, replacing all per-call `Vec`
+/// allocations. Buffers only grow, so the steady-state path allocates
+/// nothing; [`ScratchArena::high_water_bytes`] is the reporting hook.
+#[derive(Default)]
+pub struct ScratchArena {
+    csilu: Vec<f32>,
+    modv: Vec<f32>,
+    xnorm: Vec<f32>,
+    qkv: Vec<f32>,
+    attn: Vec<f32>,
+    hidden: Vec<f32>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Total bytes currently reserved across all scratch buffers — the
+    /// arena's high-water mark (capacities never shrink).
+    pub fn high_water_bytes(&self) -> usize {
+        (self.csilu.capacity()
+            + self.modv.capacity()
+            + self.xnorm.capacity()
+            + self.qkv.capacity()
+            + self.attn.capacity()
+            + self.hidden.capacity())
+            * std::mem::size_of::<f32>()
+    }
+}
+
+/// Grow-only scratch view: resizes the buffer when (and only when) the
+/// requested length exceeds what was ever needed before.
+pub(crate) fn grab(v: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+    &mut v[..len]
+}
+
+/// The six scratch views of one block forward:
+/// (silu(c), modulation, normalized input, qkv, attention out, hidden).
+pub(crate) type BlockScratch<'a> =
+    (&'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32]);
+
+/// Split the arena into the six named views a block forward needs.
+/// Free function (not a method) so the borrows stay disjoint.
+pub(crate) fn block_views(
+    a: &mut ScratchArena,
+    n: usize,
+    d: usize,
+    mod_len: usize,
+    hidden_len: usize,
+) -> BlockScratch<'_> {
+    (
+        grab(&mut a.csilu, d),
+        grab(&mut a.modv, mod_len),
+        grab(&mut a.xnorm, n * d),
+        grab(&mut a.qkv, n * 3 * d),
+        grab(&mut a.attn, n * d),
+        grab(&mut a.hidden, hidden_len),
+    )
+}
+
+/// The three views the final layer needs (silu(c), modulation,
+/// normalized input) — it must not size the qkv/attn/hidden buffers a
+/// block needs, or a final-only caller pays 4·n·d floats it never reads.
+pub(crate) fn final_views(
+    a: &mut ScratchArena,
+    n: usize,
+    d: usize,
+) -> (&mut [f32], &mut [f32], &mut [f32]) {
+    (grab(&mut a.csilu, d), grab(&mut a.modv, 2 * d), grab(&mut a.xnorm, n * d))
+}
+
+/// One DiT block's weights in packed form, calling-convention order
+/// preserved conceptually (qkv, proj, mlp up/down, adaLN modulation —
+/// biases folded into each [`PackedLinear`]).
+#[derive(Clone, Debug)]
+pub struct PackedBlock {
+    pub wqkv: PackedLinear,
+    pub wo: PackedLinear,
+    pub w1: PackedLinear,
+    pub w2: PackedLinear,
+    pub wmod: PackedLinear,
+}
+
+#[derive(Clone, Debug)]
+pub struct PackedTemb {
+    pub w1: PackedLinear,
+    pub w2: PackedLinear,
+}
+
+#[derive(Clone, Debug)]
+pub struct PackedFinal {
+    pub wmod: PackedLinear,
+    pub wout: PackedLinear,
+}
+
+/// The whole bank, packed. Rebuilt by `WeightBank::repack` whenever the
+/// row-major tensors are mutated in place (e.g. simulated quantization).
+#[derive(Clone, Debug)]
+pub struct PackedBank {
+    pub blocks: Vec<PackedBlock>,
+    pub temb: PackedTemb,
+    pub final_: PackedFinal,
+    pub embed: PackedLinear,
+}
+
+impl PackedBank {
+    /// A released (zero-byte) bank. HLO-mode models drop their packed
+    /// copy right after the device upload — every native kernel path is
+    /// gated on `ExecMode::Native`, so nothing ever reads it — instead
+    /// of holding a second full weight copy for the process lifetime.
+    pub fn released() -> PackedBank {
+        PackedBank {
+            blocks: Vec::new(),
+            temb: PackedTemb { w1: PackedLinear::placeholder(), w2: PackedLinear::placeholder() },
+            final_: PackedFinal {
+                wmod: PackedLinear::placeholder(),
+                wout: PackedLinear::placeholder(),
+            },
+            embed: PackedLinear::placeholder(),
+        }
+    }
+
+    /// Heap bytes held by the packed copies (reported separately from the
+    /// row-major bank the HLO path uploads).
+    pub fn size_bytes(&self) -> usize {
+        let block: usize = self
+            .blocks
+            .iter()
+            .map(|b| {
+                b.wqkv.size_bytes()
+                    + b.wo.size_bytes()
+                    + b.w1.size_bytes()
+                    + b.w2.size_bytes()
+                    + b.wmod.size_bytes()
+            })
+            .sum();
+        block
+            + self.temb.w1.size_bytes()
+            + self.temb.w2.size_bytes()
+            + self.final_.wmod.size_bytes()
+            + self.final_.wout.size_bytes()
+            + self.embed.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testutil::oracle;
+
+    fn rnd(seed: u64, len: usize) -> Vec<f32> {
+        Rng::new(seed).normal_vec(len, 1.0)
+    }
+
+    fn rnd_t(seed: u64, shape: &[usize]) -> Tensor {
+        Tensor::new(rnd(seed, shape.iter().product()), shape)
+    }
+
+    #[test]
+    fn packed_forward_matches_scalar_oracle() {
+        // Ragged shapes around the NR/MR boundaries, bias on and off.
+        for (n, k, m) in [(1, 3, 5), (4, 16, 16), (7, 33, 17), (10, 96, 50)] {
+            let w = rnd_t(1000 + n as u64, &[k, m]);
+            let b = rnd_t(2000 + n as u64, &[m]);
+            let x = rnd(3000 + n as u64, n * k);
+            let p = PackedLinear::pack(&w, Some(&b));
+            assert_eq!((p.k(), p.m()), (k, m));
+            let mut got = vec![0.0f32; n * m];
+            p.forward(&x, n, Act::None, &mut got);
+            let want = oracle::matmul_bias(&x, &w, Some(&b), n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+            }
+            let pn = PackedLinear::pack(&w, None);
+            let mut got2 = vec![0.0f32; n * m];
+            pn.forward(&x, n, Act::None, &mut got2);
+            let want2 = oracle::matmul_bias(&x, &w, None, n);
+            for (g, w) in got2.iter().zip(&want2) {
+                assert!((g - w).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_activation_epilogues_match_separate_pass() {
+        let (n, k, m) = (5, 24, 31);
+        let w = rnd_t(7, &[k, m]);
+        let b = rnd_t(8, &[m]);
+        let x = rnd(9, n * k);
+        let p = PackedLinear::pack(&w, Some(&b));
+        let plain = oracle::matmul_bias(&x, &w, Some(&b), n);
+        for act in [Act::Gelu, Act::Silu] {
+            let mut got = vec![0.0f32; n * m];
+            p.forward(&x, n, act, &mut got);
+            for (g, &v) in got.iter().zip(&plain) {
+                let want = apply_act(act, v);
+                assert!((g - want).abs() < 1e-6, "{act:?}: {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn gated_residual_epilogue_accumulates_in_place() {
+        let (n, k, m) = (6, 16, 20);
+        let w = rnd_t(11, &[k, m]);
+        let b = rnd_t(12, &[m]);
+        let x = rnd(13, n * k);
+        let gate = rnd(14, m);
+        let base = rnd(15, n * m);
+        let p = PackedLinear::pack(&w, Some(&b));
+        let mut got = base.clone();
+        p.forward_add_gated(&x, n, &gate, &mut got);
+        let prod = oracle::matmul_bias(&x, &w, Some(&b), n);
+        for r in 0..n {
+            for j in 0..m {
+                let want = base[r * m + j] + gate[j] * prod[r * m + j];
+                let g = got[r * m + j];
+                assert!((g - want).abs() < 1e-5, "{g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_entry_matches_dense_on_zeroed_rows() {
+        let (n, k, m) = (8, 32, 24);
+        let w = rnd_t(21, &[k, m]);
+        let b = rnd_t(22, &[m]);
+        let mut x = rnd(23, n * k);
+        // STR-style: zero out half the rows.
+        for r in [1usize, 3, 4, 7] {
+            x[r * k..(r + 1) * k].fill(0.0);
+        }
+        let p = PackedLinear::pack(&w, Some(&b));
+        let mut dense = vec![0.0f32; n * m];
+        p.forward(&x, n, Act::Gelu, &mut dense);
+        let mut sparse = vec![0.0f32; n * m];
+        p.forward_sparse(&x, n, Act::Gelu, &mut sparse);
+        assert_eq!(dense, sparse, "sparse-row entry must be bit-identical to dense");
+    }
+
+    #[test]
+    fn layernorm_mod_matches_ln_then_modulate() {
+        let (n, d) = (9, 40);
+        let x = rnd(31, n * d);
+        let shift = rnd(32, d);
+        let scale = rnd(33, d);
+        let mut fused = vec![0.0f32; n * d];
+        layernorm_mod(&x, n, d, &shift, &scale, &mut fused);
+        let mut seq = x.clone();
+        oracle::layer_norm(&mut seq, d);
+        for row in seq.chunks_mut(d) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = *v * (1.0 + scale[j]) + shift[j];
+            }
+        }
+        assert_eq!(fused, seq, "fused LN+adaLN must match the two-pass oracle bit-for-bit");
+    }
+
+    #[test]
+    fn streaming_attention_matches_two_pass_oracle() {
+        for (n, heads, d) in [(1, 2, 8), (7, 2, 16), (64, 3, 96)] {
+            let q = rnd(41, n * d);
+            let k = rnd(42, n * d);
+            let v = rnd(43, n * d);
+            // Interleave into the fused qkv layout the kernel reads.
+            let mut qkv = vec![0.0f32; n * 3 * d];
+            for r in 0..n {
+                qkv[r * 3 * d..r * 3 * d + d].copy_from_slice(&q[r * d..(r + 1) * d]);
+                qkv[r * 3 * d + d..r * 3 * d + 2 * d].copy_from_slice(&k[r * d..(r + 1) * d]);
+                qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d].copy_from_slice(&v[r * d..(r + 1) * d]);
+            }
+            let mut got = rnd(44, n * d); // stale garbage must be wiped
+            attention_streaming(&qkv, n, heads, d, &mut got);
+            let want = oracle::attention(&q, &k, &v, n, heads, d);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "n={n} heads={heads}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_attention_uniform_for_identical_keys() {
+        let (n, heads, d) = (4, 2, 8);
+        let q = rnd(51, n * d);
+        let v = rnd(52, n * d);
+        let mut qkv = vec![0.0f32; n * 3 * d];
+        for r in 0..n {
+            qkv[r * 3 * d..r * 3 * d + d].copy_from_slice(&q[r * d..(r + 1) * d]);
+            qkv[r * 3 * d + d..r * 3 * d + 2 * d].fill(0.5); // identical keys
+            qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d].copy_from_slice(&v[r * d..(r + 1) * d]);
+        }
+        let mut out = vec![0.0f32; n * d];
+        attention_streaming(&qkv, n, heads, d, &mut out);
+        for j in 0..d {
+            let want: f32 = (0..n).map(|r| v[r * d + j]).sum::<f32>() / n as f32;
+            for i in 0..n {
+                assert!((out[i * d + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bias_into_matches_oracle() {
+        let (n, k, m) = (5, 12, 9);
+        let w = rnd_t(61, &[k, m]);
+        let b = rnd_t(62, &[m]);
+        let mut x = rnd(63, n * k);
+        x[0] = 0.0; // the oracle's zero-skip must not change the result
+        x[k + 3] = 0.0;
+        let mut got = vec![0.0f32; n * m];
+        matmul_bias_into(&x, &w, Some(&b), n, &mut got);
+        let want = oracle::matmul_bias(&x, &w, Some(&b), n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn arena_high_water_grows_then_stabilizes() {
+        let mut a = ScratchArena::new();
+        assert_eq!(a.high_water_bytes(), 0);
+        let _ = block_views(&mut a, 16, 8, 48, 16 * 32);
+        let hw = a.high_water_bytes();
+        assert!(hw >= (8 + 48 + 16 * 8 + 16 * 24 + 16 * 8 + 16 * 32) * 4);
+        // Smaller and equal requests never grow the arena.
+        let _ = block_views(&mut a, 4, 8, 48, 4 * 32);
+        let _ = block_views(&mut a, 16, 8, 48, 16 * 32);
+        assert_eq!(a.high_water_bytes(), hw);
+        // A larger request grows it (and it sticks).
+        let _ = block_views(&mut a, 32, 8, 48, 32 * 32);
+        assert!(a.high_water_bytes() > hw);
+    }
+}

@@ -1,9 +1,12 @@
-//! Model layer: weight banks, the servable `DitModel` (HLO or native
-//! execution), and the native math reference.
+//! Model layer: weight banks (row-major + packed), the servable
+//! `DitModel` (HLO or native execution), the zero-allocation native
+//! kernels, and the native forward built on them.
 
 pub mod dit;
+pub mod kernels;
 pub mod native;
 pub mod weights;
 
 pub use dit::{DitModel, ExecMode};
+pub use kernels::{PackedBank, PackedBlock, PackedLinear, ScratchArena};
 pub use weights::{BlockWeights, EmbedWeights, FinalWeights, TembWeights, WeightBank};

@@ -1,70 +1,32 @@
-//! Native Rust reference implementation of the DiT forward pieces.
+//! Native Rust implementation of the DiT forward pieces, built on the
+//! packed/fused/streaming kernels in [`super::kernels`].
 //!
 //! Semantics MUST match python/compile/model.py exactly (same layer-norm
-//! epsilon, tanh-approximate GELU — jax.nn.gelu's default — and SiLU); the
-//! integration test rust/tests/runtime_roundtrip.rs executes the AOT HLO
-//! and this module on identical weights and asserts allclose.
+//! epsilon, tanh-approximate GELU — jax.nn.gelu's default — and SiLU);
+//! the integration test rust/tests/runtime_roundtrip.rs executes the AOT
+//! HLO and this module on identical weights and asserts allclose, and
+//! rust/tests/kernel_parity.rs checks every kernel against the retained
+//! scalar oracle (`testutil::oracle` — the pre-kernel implementation).
 //!
 //! Used for (a) cross-validating the artifacts, (b) the cheap non-matmul
 //! hot-path math (saliency, delta, affine application) where a PJRT
 //! dispatch would cost more than the arithmetic, and (c) running the full
 //! test suite without compiled artifacts present.
+//!
+//! All forwards here take a caller-owned [`ScratchArena`] and packed
+//! weights, and write into caller buffers — zero heap allocations on the
+//! steady-state path (the allocating `*_forward` wrappers exist for
+//! tests and one-shot callers).
 
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, MLP_RATIO};
 use crate::tensor::Tensor;
 
-use super::weights::{BlockWeights, EmbedWeights, FinalWeights, TembWeights};
+use super::kernels::{
+    self, attention_streaming, block_views, final_views, layernorm_mod, Act, PackedBlock,
+    PackedFinal, PackedTemb, ScratchArena,
+};
 
-pub fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-/// tanh-approximate GELU (jax.nn.gelu default).
-pub fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
-    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
-}
-
-/// y = x @ w + b, x: [n, k] row-major, w: [k, m], b: [m] or empty.
-pub fn matmul_bias(x: &[f32], w: &Tensor, b: Option<&Tensor>, n: usize) -> Vec<f32> {
-    let (k, m) = (w.shape()[0], w.shape()[1]);
-    assert_eq!(x.len(), n * k);
-    let mut y = vec![0.0f32; n * m];
-    if let Some(b) = b {
-        assert_eq!(b.len(), m);
-        for r in 0..n {
-            y[r * m..(r + 1) * m].copy_from_slice(b.data());
-        }
-    }
-    let wd = w.data();
-    for r in 0..n {
-        let xr = &x[r * k..(r + 1) * k];
-        let yr = &mut y[r * m..(r + 1) * m];
-        for (kk, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &wd[kk * m..(kk + 1) * m];
-            for j in 0..m {
-                yr[j] += xv * wrow[j];
-            }
-        }
-    }
-    y
-}
-
-/// Parameter-free LayerNorm over the last dim (eps = 1e-6, matches model.py).
-pub fn layer_norm(x: &mut [f32], d: usize) {
-    let eps = 1e-6f32;
-    for row in x.chunks_mut(d) {
-        let mean = row.iter().sum::<f32>() / d as f32;
-        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + eps).sqrt();
-        for v in row.iter_mut() {
-            *v = (*v - mean) * inv;
-        }
-    }
-}
+pub use super::kernels::{gelu, silu};
 
 /// Sinusoidal timestep embedding, matching model.timestep_embedding:
 /// freqs = exp(-ln(10000) * arange(half)/half); [cos(t·f), sin(t·f)].
@@ -80,150 +42,118 @@ pub fn timestep_embedding(t: f32, d: usize) -> Vec<f32> {
     e
 }
 
-/// Timestep -> conditioning embedding. Returns [D].
-pub fn temb_forward(t: f32, w: &TembWeights) -> Vec<f32> {
-    let d = w.w1.shape()[0];
+/// y = x @ w + b for RUNTIME weights (fit matrices built per call):
+/// branch-free blocked loop, same accumulation order as the oracle.
+pub fn matmul_bias(x: &[f32], w: &Tensor, b: Option<&Tensor>, n: usize) -> Vec<f32> {
+    let m = w.shape()[1];
+    let mut y = vec![0.0f32; n * m];
+    kernels::matmul_bias_into(x, w, b, n, &mut y);
+    y
+}
+
+/// Timestep -> conditioning embedding on packed weights. Returns [D].
+/// (Pure function of (t, variant, weight seed) — the serving stepper
+/// memoizes it in a `TembCache` so co-scheduled lanes share one eval.)
+pub fn temb_forward(t: f32, w: &PackedTemb) -> Vec<f32> {
+    let d = w.w1.k();
     let e = timestep_embedding(t, d);
-    let mut h = matmul_bias(&e, &w.w1, Some(&w.b1), 1);
-    for v in h.iter_mut() {
-        *v = silu(*v);
-    }
-    matmul_bias(&h, &w.w2, Some(&w.b2), 1)
-}
-
-/// Latent -> hidden embedding. x: [N, C] -> [N, D].
-pub fn embed_forward(x: &Tensor, w: &EmbedWeights) -> Tensor {
-    let n = x.shape()[0];
-    let d = w.w.shape()[1];
-    Tensor::new(matmul_bias(x.data(), &w.w, Some(&w.b), n), &[n, d])
-}
-
-/// Multi-head attention on already-projected q,k,v (each [N, D] with
-/// `heads` interleaved as D = heads * dh, token-major like model.py's
-/// reshape(n, heads, dh)).
-pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, heads: usize, d: usize) -> Vec<f32> {
-    let dh = d / heads;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0.0f32; n * d];
-    let mut logits = vec![0.0f32; n];
-    for h in 0..heads {
-        let off = h * dh;
-        for i in 0..n {
-            let qi = &q[i * d + off..i * d + off + dh];
-            let mut maxv = f32::NEG_INFINITY;
-            for j in 0..n {
-                let kj = &k[j * d + off..j * d + off + dh];
-                let mut dot = 0.0f32;
-                for c in 0..dh {
-                    dot += qi[c] * kj[c];
-                }
-                let l = dot * scale;
-                logits[j] = l;
-                if l > maxv {
-                    maxv = l;
-                }
-            }
-            let mut denom = 0.0f32;
-            for l in logits.iter_mut() {
-                *l = (*l - maxv).exp();
-                denom += *l;
-            }
-            let oi = &mut out[i * d + off..i * d + off + dh];
-            for j in 0..n {
-                let p = logits[j] / denom;
-                if p == 0.0 {
-                    continue;
-                }
-                let vj = &v[j * d + off..j * d + off + dh];
-                for c in 0..dh {
-                    oi[c] += p * vj[c];
-                }
-            }
-        }
-    }
+    let mut h = vec![0.0f32; w.w1.m()];
+    w.w1.forward(&e, 1, Act::Silu, &mut h); // bias + SiLU fused in the epilogue
+    let mut out = vec![0.0f32; w.w2.m()];
+    w.w2.forward(&h, 1, Act::None, &mut out);
     out
 }
 
-/// One adaLN-zero DiT block. h: [N, D], c: [D] -> [N, D].
-pub fn block_forward(h: &Tensor, c: &[f32], cfg: &ModelConfig, w: &BlockWeights) -> Tensor {
-    let (n, d) = (h.shape()[0], h.shape()[1]);
-    assert_eq!(d, cfg.d);
+/// Latent -> hidden embedding into a caller slice. x: [n·C] -> [n·D].
+pub fn embed_forward_slice(x: &[f32], n: usize, w: &kernels::PackedLinear, out: &mut [f32]) {
+    w.forward(x, n, Act::None, out);
+}
+
+/// One adaLN-zero DiT block on packed weights, fully fused:
+/// layer-norm + adaLN scale/shift in one pass, bias + GELU in the matmul
+/// epilogue, gated residuals accumulated in place, and streaming-softmax
+/// attention indexing strided into the qkv buffer. `out` is overwritten
+/// with the block output; `h` is the (read-only) input — together they
+/// are the single working copy the residual stream needs.
+pub fn block_forward_slice(
+    h: &[f32],
+    n: usize,
+    c: &[f32],
+    cfg: &ModelConfig,
+    w: &PackedBlock,
+    arena: &mut ScratchArena,
+    out: &mut [f32],
+) {
+    let d = cfg.d;
+    assert_eq!(h.len(), n * d);
+    assert_eq!(c.len(), d);
+    assert_eq!(out.len(), n * d);
+    let (csilu, modv, xnorm, qkv, attn, hidden) =
+        block_views(arena, n, d, 6 * d, n * MLP_RATIO * d);
 
     // Modulation: silu(c) @ wmod + bmod -> 6 chunks of D.
-    let cs: Vec<f32> = c.iter().map(|&x| silu(x)).collect();
-    let mod6 = matmul_bias(&cs, &w.wmod, Some(&w.bmod), 1);
-    let (sh1, rest) = mod6.split_at(d);
+    for (o, &v) in csilu.iter_mut().zip(c) {
+        *o = silu(v);
+    }
+    w.wmod.forward(csilu, 1, Act::None, modv);
+    let (sh1, rest) = modv.split_at(d);
     let (sc1, rest) = rest.split_at(d);
     let (g1, rest) = rest.split_at(d);
     let (sh2, rest) = rest.split_at(d);
     let (sc2, g2) = rest.split_at(d);
 
-    let mut out = h.clone();
+    // Residual base: the one full-tensor copy of the block.
+    out.copy_from_slice(h);
 
-    // Attention branch.
-    let mut x = h.data().to_vec();
-    layer_norm(&mut x, d);
-    for row in x.chunks_mut(d) {
-        for j in 0..d {
-            row[j] = row[j] * (1.0 + sc1[j]) + sh1[j];
-        }
-    }
-    let qkv = matmul_bias(&x, &w.wqkv, Some(&w.bqkv), n);
-    // qkv rows are [3D]: q | k | v contiguous (jnp.split on axis -1).
-    let mut q = vec![0.0f32; n * d];
-    let mut k = vec![0.0f32; n * d];
-    let mut v = vec![0.0f32; n * d];
-    for r in 0..n {
-        q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
-        k[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
-        v[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
-    }
-    let a = attention(&q, &k, &v, n, cfg.heads, d);
-    let proj = matmul_bias(&a, &w.wo, Some(&w.bo), n);
-    for r in 0..n {
-        let orow = out.row_mut(r);
-        for j in 0..d {
-            orow[j] += g1[j] * proj[r * d + j];
-        }
-    }
+    // Attention branch: fused LN+adaLN -> qkv -> streaming attention ->
+    // proj with the g1-gated residual folded into the matmul writeback.
+    layernorm_mod(h, n, d, sh1, sc1, xnorm);
+    w.wqkv.forward(xnorm, n, Act::None, qkv);
+    attention_streaming(qkv, n, cfg.heads, d, attn);
+    w.wo.forward_add_gated(attn, n, g1, out);
 
-    // MLP branch.
-    let mut x2 = out.data().to_vec();
-    layer_norm(&mut x2, d);
-    for row in x2.chunks_mut(d) {
-        for j in 0..d {
-            row[j] = row[j] * (1.0 + sc2[j]) + sh2[j];
-        }
-    }
-    let mut hidden = matmul_bias(&x2, &w.w1, Some(&w.b1), n);
-    for vv in hidden.iter_mut() {
-        *vv = gelu(*vv);
-    }
-    let mlp = matmul_bias(&hidden, &w.w2, Some(&w.b2), n);
-    for r in 0..n {
-        let orow = out.row_mut(r);
-        for j in 0..d {
-            orow[j] += g2[j] * mlp[r * d + j];
-        }
-    }
-    out
+    // MLP branch over the residual-updated stream, same fusions
+    // (bias + GELU in the up-projection epilogue, g2-gated residual in
+    // the down-projection writeback).
+    layernorm_mod(out, n, d, sh2, sc2, xnorm);
+    w.w1.forward(xnorm, n, Act::Gelu, hidden);
+    w.w2.forward_add_gated(hidden, n, g2, out);
 }
 
-/// Final layer: adaLN -> linear to C channels. h: [N, D] -> [N, C].
-pub fn final_forward(h: &Tensor, c: &[f32], w: &FinalWeights) -> Tensor {
+/// Allocating convenience wrapper over [`block_forward_slice`].
+pub fn block_forward(
+    h: &Tensor,
+    c: &[f32],
+    cfg: &ModelConfig,
+    w: &PackedBlock,
+    arena: &mut ScratchArena,
+) -> Tensor {
     let (n, d) = (h.shape()[0], h.shape()[1]);
-    let cch = w.wout.shape()[1];
-    let cs: Vec<f32> = c.iter().map(|&x| silu(x)).collect();
-    let mod2 = matmul_bias(&cs, &w.wmod, Some(&w.bmod), 1);
-    let (sh, sc) = mod2.split_at(d);
-    let mut x = h.data().to_vec();
-    layer_norm(&mut x, d);
-    for row in x.chunks_mut(d) {
-        for j in 0..d {
-            row[j] = row[j] * (1.0 + sc[j]) + sh[j];
-        }
+    let mut out = vec![0.0f32; n * d];
+    block_forward_slice(h.data(), n, c, cfg, w, arena, &mut out);
+    Tensor::new(out, &[n, d])
+}
+
+/// Final layer: fused adaLN -> linear to C channels. h: [n·D] -> [n·C].
+pub fn final_forward_slice(
+    h: &[f32],
+    n: usize,
+    c: &[f32],
+    w: &PackedFinal,
+    arena: &mut ScratchArena,
+    out: &mut [f32],
+) {
+    let d = w.wmod.k();
+    assert_eq!(h.len(), n * d);
+    assert_eq!(out.len(), n * w.wout.m());
+    let (csilu, modv, xnorm) = final_views(arena, n, d);
+    for (o, &v) in csilu.iter_mut().zip(c) {
+        *o = silu(v);
     }
-    Tensor::new(matmul_bias(&x, &w.wout, Some(&w.bout), n), &[n, cch])
+    w.wmod.forward(csilu, 1, Act::None, modv);
+    let (sh, sc) = modv.split_at(d);
+    layernorm_mod(h, n, d, sh, sc, xnorm);
+    w.wout.forward(xnorm, n, Act::None, out);
 }
 
 /// Token-wise saliency ‖x_t − x_{t−1}‖² (paper Eq. 1) — [N, D] x2 -> [N].
@@ -279,54 +209,46 @@ mod tests {
     }
 
     #[test]
-    fn layer_norm_normalizes() {
-        let mut x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
-        layer_norm(&mut x, 4);
-        for row in x.chunks(4) {
-            let mean: f32 = row.iter().sum::<f32>() / 4.0;
-            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
-            assert!(mean.abs() < 1e-5);
-            assert!((var - 1.0).abs() < 1e-3);
-        }
-    }
-
-    #[test]
-    fn attention_uniform_for_identical_keys() {
-        let n = 4;
-        let d = 8;
-        let q = rnd_tensor(1, &[n, d], 1.0).into_data();
-        let k = vec![0.5f32; n * d]; // identical keys -> uniform weights
-        let v = rnd_tensor(2, &[n, d], 1.0).into_data();
-        let out = attention(&q, &k, &v, n, 2, d);
-        // Each output row should be the mean of v rows.
-        for j in 0..d {
-            let want: f32 = (0..n).map(|r| v[r * d + j]).sum::<f32>() / n as f32;
-            for i in 0..n {
-                assert!((out[i * d + j] - want).abs() < 1e-5);
-            }
-        }
-    }
-
-    #[test]
     fn block_identity_with_zero_modulation() {
         let cfg = ModelConfig::of(Variant::S);
         let mut w = WeightBank::generate(cfg, 9).blocks.remove(0);
         w.wmod = Tensor::zeros(&[cfg.d, 6 * cfg.d]);
         w.bmod = Tensor::zeros(&[6 * cfg.d]);
+        let pw = w.pack();
         let h = rnd_tensor(3, &[16, cfg.d], 1.0);
         let c = vec![0.3f32; cfg.d];
-        let out = block_forward(&h, &c, &cfg, &w);
+        let mut arena = ScratchArena::new();
+        let out = block_forward(&h, &c, &cfg, &pw, &mut arena);
         assert!(h.max_abs_diff(&out) < 1e-6);
     }
 
     #[test]
     fn block_changes_with_modulation() {
         let cfg = ModelConfig::of(Variant::S);
-        let w = &WeightBank::generate(cfg, 9).blocks[0];
+        let bank = WeightBank::generate(cfg, 9);
         let h = rnd_tensor(4, &[16, cfg.d], 1.0);
         let c = rnd_tensor(5, &[cfg.d], 1.0).into_data();
-        let out = block_forward(&h, &c, &cfg, &w);
+        let mut arena = ScratchArena::new();
+        let out = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
         assert!(h.max_abs_diff(&out) > 1e-5);
+    }
+
+    #[test]
+    fn block_reuses_arena_without_growth() {
+        // Two calls at the same shape: the second must not grow the
+        // arena (the zero-allocation steady-state contract), and the
+        // result must be identical (stale scratch never leaks through).
+        let cfg = ModelConfig::of(Variant::S);
+        let bank = WeightBank::generate(cfg, 9);
+        let h = rnd_tensor(6, &[32, cfg.d], 1.0);
+        let c = rnd_tensor(7, &[cfg.d], 1.0).into_data();
+        let mut arena = ScratchArena::new();
+        let a = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
+        let hw = arena.high_water_bytes();
+        assert!(hw > 0);
+        let b = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
+        assert_eq!(arena.high_water_bytes(), hw);
+        assert_eq!(a.data(), b.data());
     }
 
     #[test]

@@ -15,6 +15,8 @@ use crate::config::{ModelConfig, C_IN, MLP_RATIO};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
+use super::kernels::{PackedBank, PackedBlock, PackedFinal, PackedLinear, PackedTemb};
+
 /// Per-block weights, in calling-convention order.
 #[derive(Clone, Debug)]
 pub struct BlockWeights {
@@ -38,6 +40,17 @@ impl BlockWeights {
             &self.b2, &self.wmod, &self.bmod,
         ]
     }
+
+    /// Repack into the tiled microkernel layout (`model::kernels`).
+    pub fn pack(&self) -> PackedBlock {
+        PackedBlock {
+            wqkv: PackedLinear::pack(&self.wqkv, Some(&self.bqkv)),
+            wo: PackedLinear::pack(&self.wo, Some(&self.bo)),
+            w1: PackedLinear::pack(&self.w1, Some(&self.b1)),
+            w2: PackedLinear::pack(&self.w2, Some(&self.b2)),
+            wmod: PackedLinear::pack(&self.wmod, Some(&self.bmod)),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -51,6 +64,13 @@ pub struct TembWeights {
 impl TembWeights {
     pub fn ordered(&self) -> [&Tensor; 4] {
         [&self.w1, &self.b1, &self.w2, &self.b2]
+    }
+
+    pub fn pack(&self) -> PackedTemb {
+        PackedTemb {
+            w1: PackedLinear::pack(&self.w1, Some(&self.b1)),
+            w2: PackedLinear::pack(&self.w2, Some(&self.b2)),
+        }
     }
 }
 
@@ -66,6 +86,13 @@ impl FinalWeights {
     pub fn ordered(&self) -> [&Tensor; 4] {
         [&self.wmod, &self.bmod, &self.wout, &self.bout]
     }
+
+    pub fn pack(&self) -> PackedFinal {
+        PackedFinal {
+            wmod: PackedLinear::pack(&self.wmod, Some(&self.bmod)),
+            wout: PackedLinear::pack(&self.wout, Some(&self.bout)),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -74,7 +101,16 @@ pub struct EmbedWeights {
     pub b: Tensor, // [D]
 }
 
-/// Full weight bank for one model variant.
+impl EmbedWeights {
+    pub fn pack(&self) -> PackedLinear {
+        PackedLinear::pack(&self.w, Some(&self.b))
+    }
+}
+
+/// Full weight bank for one model variant. The row-major tensors are the
+/// calling-convention / HLO-upload copy; `packed` is the tiled layout
+/// every native kernel reads (built at generate time; call
+/// [`WeightBank::repack`] after mutating the tensors in place).
 #[derive(Clone, Debug)]
 pub struct WeightBank {
     pub cfg: ModelConfig,
@@ -82,6 +118,7 @@ pub struct WeightBank {
     pub temb: TembWeights,
     pub blocks: Vec<BlockWeights>,
     pub final_: FinalWeights,
+    pub packed: PackedBank,
 }
 
 fn dense(rng: &mut Rng, rows: usize, cols: usize, scale: Option<f32>) -> Tensor {
@@ -139,10 +176,39 @@ impl WeightBank {
             bout: Tensor::zeros(&[C_IN]),
         };
 
-        WeightBank { cfg, embed, temb, blocks, final_ }
+        let packed = PackedBank {
+            blocks: blocks.iter().map(BlockWeights::pack).collect(),
+            temb: temb.pack(),
+            final_: final_.pack(),
+            embed: embed.pack(),
+        };
+        WeightBank { cfg, embed, temb, blocks, final_, packed }
     }
 
-    /// Total parameter bytes (for memory reporting).
+    /// Rebuild the packed layout from the row-major tensors — required
+    /// after any in-place weight mutation (e.g. the simulated-bf16
+    /// quantization bench), or the native path silently serves stale
+    /// weights.
+    pub fn repack(&mut self) {
+        self.packed = PackedBank {
+            blocks: self.blocks.iter().map(BlockWeights::pack).collect(),
+            temb: self.temb.pack(),
+            final_: self.final_.pack(),
+            embed: self.embed.pack(),
+        };
+    }
+
+    /// Release the packed copy. HLO-mode models call this right after
+    /// the device upload: their forwards dispatch compiled programs and
+    /// never touch `packed`, so holding a second full weight copy for
+    /// the process lifetime would be pure waste.
+    pub fn release_packed(&mut self) {
+        self.packed = PackedBank::released();
+    }
+
+    /// Bytes of the row-major (calling-convention / HLO-upload) tensors
+    /// only — the packed kernel copy is accounted separately via
+    /// `packed.size_bytes()` (see `DitModel::weight_bytes`).
     pub fn size_bytes(&self) -> usize {
         let block: usize = self
             .blocks
@@ -191,6 +257,27 @@ mod tests {
         assert_eq!(b0.wmod.shape(), &[d, 6 * d]);
         assert_eq!(w.final_.wout.shape(), &[d, C_IN]);
         assert_eq!(w.embed.w.shape(), &[C_IN, d]);
+    }
+
+    #[test]
+    fn packed_bank_follows_mutation_only_after_repack() {
+        use crate::model::kernels::Act;
+        let cfg = ModelConfig::of(Variant::S);
+        let mut bank = WeightBank::generate(cfg, 3);
+        let x = vec![0.5f32; C_IN];
+        let run = |bank: &WeightBank| {
+            let mut out = vec![0.0f32; cfg.d];
+            bank.packed.embed.forward(&x, 1, Act::None, &mut out);
+            out
+        };
+        let before = run(&bank);
+        for v in bank.embed.w.data_mut().iter_mut() {
+            *v *= 2.0;
+        }
+        assert_eq!(run(&bank), before, "packed layout is a snapshot until repack");
+        bank.repack();
+        assert_ne!(run(&bank), before, "repack must pick up the mutated tensors");
+        assert!(bank.packed.size_bytes() > 0);
     }
 
     #[test]

@@ -28,12 +28,14 @@ use crate::cache::{
     build_policy, AffineFit, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo,
 };
 use crate::config::{ApproxMode, FastCacheConfig, PolicyKind, C_IN};
-use crate::model::{native, DitModel};
+use crate::model::{native, DitModel, ScratchArena};
 use crate::rng::Rng;
+use crate::store::lru::LruCounters;
 use crate::tensor::Tensor;
 use crate::tokens::{self, partition};
 
 use super::ddim::DdimSchedule;
+use super::temb::TembCache;
 
 /// Turbulence: per-step re-noising of selected token rows — the synthetic
 /// stand-in for high-motion content regions (DESIGN.md §2): those tokens
@@ -204,6 +206,11 @@ pub struct Lane {
     /// that site), recorded only when warm-start is on; retiring lanes
     /// publish this into the fleet profile.
     delta_log: Option<Vec<Vec<f64>>>,
+    /// Recycled per-lane output buffer: block kernels write into it,
+    /// then it rotates through the cache's input slot and back — so the
+    /// steady-state compute path allocates nothing. Persisted across
+    /// steps (rebuilding it per step would re-allocate at layer 0).
+    scratch_out: Tensor,
 }
 
 impl Lane {
@@ -344,6 +351,9 @@ struct StepCtx {
     h: Tensor,
     /// Conditioning embedding [1, D].
     c: Tensor,
+    /// The lane's recycled output buffer (borrowed from the lane for the
+    /// duration of the step, returned in the epilogue).
+    out: Tensor,
     /// STR bucket index set (None without STR / before the first step).
     motion_idx: Option<Vec<usize>>,
     /// Token-merge context: (merge map, pre-merge Z for residual fusion).
@@ -355,14 +365,19 @@ struct StepCtx {
 
 /// The unified stepper: one model + one config, advancing any set of lanes
 /// (possibly at different step indices) by one denoise step per call.
+/// Owns the kernel scratch arena (zero per-block-call allocations on the
+/// steady-state native path; high-water mark surfaces in `ServerReport`)
+/// and the memoized timestep-embedding cache co-scheduled lanes share.
 pub struct LaneStepper<'m> {
     model: &'m DitModel,
     fc: FastCacheConfig,
+    arena: ScratchArena,
+    temb: TembCache,
 }
 
 impl<'m> LaneStepper<'m> {
     pub fn new(model: &'m DitModel, fc: FastCacheConfig) -> LaneStepper<'m> {
-        LaneStepper { model, fc }
+        LaneStepper { model, fc, arena: ScratchArena::new(), temb: TembCache::new() }
     }
 
     pub fn model(&self) -> &'m DitModel {
@@ -371,6 +386,18 @@ impl<'m> LaneStepper<'m> {
 
     pub fn fc(&self) -> &FastCacheConfig {
         &self.fc
+    }
+
+    /// Kernel-scratch high-water mark in bytes. Stabilizes after the
+    /// first step at a given shape envelope — asserted in tests, and
+    /// reported per shard by the server.
+    pub fn scratch_high_water_bytes(&self) -> usize {
+        self.arena.high_water_bytes()
+    }
+
+    /// Hit/miss counters of the memoized timestep-embedding cache.
+    pub fn temb_cache_counters(&self) -> LruCounters {
+        self.temb.counters()
     }
 
     /// Build a lane with the config's policy.
@@ -438,6 +465,7 @@ impl<'m> LaneStepper<'m> {
             full_step_flops: cfg.full_step_flops(),
             warm_layers: 0,
             delta_log,
+            scratch_out: Tensor::empty(),
         }
     }
 
@@ -445,8 +473,10 @@ impl<'m> LaneStepper<'m> {
     /// layer, full-token Compute lanes are batched through the B=4 block
     /// artifact in chunks; everything else runs its per-lane path exactly
     /// as the single-request loop always did.
-    pub fn step(&self, lanes: &mut [Lane]) -> Result<()> {
-        let cfg = self.model.cfg;
+    pub fn step(&mut self, lanes: &mut [Lane]) -> Result<()> {
+        let Self { model, fc, arena, temb } = &mut *self;
+        let model: &DitModel = model;
+        let cfg = model.cfg;
         let (n, d, layers) = (cfg.n_tokens, cfg.d, cfg.layers);
         let nl = lanes.len();
         if nl == 0 {
@@ -458,9 +488,10 @@ impl<'m> LaneStepper<'m> {
         );
 
         // ---- Step prologue, per lane: temb + embed + policy + STR. ----
-        // Step-aligned lanes share one temb evaluation (in HLO mode each
-        // temb is a device dispatch — don't repeat it per lane).
-        let mut temb_memo: Vec<(u32, Tensor)> = Vec::new();
+        // temb(t) is pure in (t, variant, weight seed), so the stepper's
+        // LRU memo shares one evaluation across co-scheduled lanes AND
+        // across steps/requests (in HLO mode each temb is a device
+        // dispatch — don't repeat it at all).
         let mut ctxs: Vec<StepCtx> = Vec::with_capacity(nl);
         for lane in lanes.iter_mut() {
             let t0 = Instant::now();
@@ -468,12 +499,12 @@ impl<'m> LaneStepper<'m> {
             let tval = lane.schedule.timesteps[step];
 
             // Conditioning embedding c = temb(t) + cond.
-            let memo_hit = temb_memo.iter().position(|(k, _)| *k == tval.to_bits());
-            let mut c = match memo_hit {
-                Some(i) => temb_memo[i].1.clone(),
+            let bits = tval.to_bits();
+            let mut c = match temb.get(bits) {
+                Some(t) => t.clone(),
                 None => {
-                    let t = self.model.temb(&[tval])?; // [1, D]
-                    temb_memo.push((tval.to_bits(), t.clone()));
+                    let t = model.temb(&[tval])?; // [1, D]
+                    temb.insert(bits, t.clone());
                     t
                 }
             };
@@ -483,7 +514,7 @@ impl<'m> LaneStepper<'m> {
 
             // Embed latent -> hidden [N, D].
             let xb = lane.x.clone().reshape(&[1, n, C_IN]);
-            let h0 = self.model.embed(&xb)?.reshape(&[n, d]);
+            let h0 = model.embed(&xb)?.reshape(&[n, d]);
 
             // Step-level deltas for the step-granular policies.
             let temb_delta = lane
@@ -506,21 +537,22 @@ impl<'m> LaneStepper<'m> {
             });
 
             // STR: motion/static partition on the embedded state.
-            let part = if self.fc.enable_str {
-                lane.cache.prev_embed.as_ref().map(|p| partition(&h0, p, self.fc.tau_s))
+            let part = if fc.enable_str {
+                lane.cache.prev_embed.as_ref().map(|p| partition(&h0, p, fc.tau_s))
             } else {
                 None
             };
             let motion_idx: Option<Vec<usize>> = part.as_ref().map(tokens::pad_to_bucket);
             let motion_tokens = part.as_ref().map(|p| p.motion.len()).unwrap_or(n);
 
-            lane.cache.store_temb(c.clone());
-            lane.cache.store_embed(h0.clone());
+            lane.cache.store_temb_from(&c);
+            lane.cache.store_embed_from(&h0);
             lane.active += t0.elapsed();
 
             ctxs.push(StepCtx {
                 h: h0,
                 c,
+                out: std::mem::replace(&mut lane.scratch_out, Tensor::empty()),
                 motion_idx,
                 merge: None,
                 rec: StepRecord { step, n_tokens: n, motion_tokens, ..Default::default() },
@@ -531,7 +563,7 @@ impl<'m> LaneStepper<'m> {
 
         // Token-merge extension (Algorithm 2, S=2 stages): merge at the
         // midpoint, run the rest at the merged bucket, unpool at the end.
-        let merge_at = if self.fc.enable_merge { layers / 2 } else { usize::MAX };
+        let merge_at = if fc.enable_merge { layers / 2 } else { usize::MAX };
 
         // ---- The block stack, one layer at a time across all lanes. ----
         for l in 0..layers {
@@ -542,15 +574,15 @@ impl<'m> LaneStepper<'m> {
                 if l == merge_at && l > 0 {
                     // Importance = spatial kNN density x temporal saliency.
                     let rho_sp =
-                        tokens::knn_density(&ctx.h, self.fc.knn_k.min(ctx.h.shape()[0] - 1));
+                        tokens::knn_density(&ctx.h, fc.knn_k.min(ctx.h.shape()[0] - 1));
                     let rho_tm: Vec<f32> = match lane.cache.prev_input(l) {
                         Some(p) if p.shape() == ctx.h.shape() => {
                             tokens::temporal_saliency(&ctx.h, p)
                         }
                         _ => vec![0.0; ctx.h.shape()[0]],
                     };
-                    let scores = tokens::importance(&rho_sp, &rho_tm, self.fc.merge_lambda);
-                    let (merged, map) = tokens::local_ctm(&ctx.h, &scores, self.fc.merge_target);
+                    let scores = tokens::importance(&rho_sp, &rho_tm, fc.merge_lambda);
+                    let (merged, map) = tokens::local_ctm(&ctx.h, &scores, fc.merge_target);
                     let z = std::mem::replace(&mut ctx.h, merged); // keep Z for fusion
                     ctx.merge = Some((map, z));
                 }
@@ -583,8 +615,8 @@ impl<'m> LaneStepper<'m> {
                 // earlier and executes measurably fewer FLOPs. 0 = legacy
                 // behavior, bit-identical to pre-gate serving.
                 if action == BlockAction::Approx
-                    && self.fc.fit_min_updates > 0
-                    && lane.cache.fit(l).updates() < self.fc.fit_min_updates
+                    && fc.fit_min_updates > 0
+                    && lane.cache.fit(l).updates() < fc.fit_min_updates
                 {
                     action = BlockAction::Compute;
                 }
@@ -628,7 +660,7 @@ impl<'m> LaneStepper<'m> {
                     }
                     let hb = Tensor::new(hbatch, &[B, n, d]);
                     let cb = Tensor::new(cbatch, &[B, d]);
-                    let out = self.model.block(l, &hb, &cb)?;
+                    let out = model.block_with(l, &hb, &cb, arena)?;
                     for (slot, &li) in group.iter().enumerate() {
                         outs[li] = Some(Tensor::new(
                             out.data()[slot * n * d..(slot + 1) * n * d].to_vec(),
@@ -656,22 +688,26 @@ impl<'m> LaneStepper<'m> {
             }
 
             // Apply per-lane results: batched outputs, bucketed STR
-            // compute, lone compute, Approx, Reuse.
+            // compute, lone compute, Approx, Reuse. The lone native
+            // compute writes into the lane's recycled `ctx.out` buffer;
+            // other paths hand back an owned tensor.
             for li in 0..nl {
                 let lane = &mut lanes[li];
                 let ctx = &mut ctxs[li];
                 let t0 = Instant::now();
                 let cur_n = ctx.h.shape()[0];
                 lane.cache.counters.record(actions[li]);
-                let h_next = match actions[li] {
+                // `None` = the output landed in ctx.out (zero-alloc path).
+                let mut owned: Option<Tensor> = None;
+                match actions[li] {
                     BlockAction::Compute => {
                         ctx.rec.computed += 1;
-                        let out = if let Some(o) = outs[li].take() {
+                        if let Some(o) = outs[li].take() {
                             // Batched full-token compute.
                             lane.cache.observe_fit(l, &ctx.h, &o);
                             lane.flops_done += cfg.block_flops(cur_n);
                             lane.token_sites_computed += cur_n as u64;
-                            o
+                            owned = Some(o);
                         } else {
                             match &ctx.motion_idx {
                                 Some(idx)
@@ -684,77 +720,99 @@ impl<'m> LaneStepper<'m> {
                                     let nb = idx.len();
                                     let sub = ctx.h.gather_rows(idx);
                                     let sub_b = sub.clone().reshape(&[1, nb, d]);
-                                    let out_sub =
-                                        self.model.block(l, &sub_b, &ctx.c)?.reshape(&[nb, d]);
+                                    let out_sub = model
+                                        .block_with(l, &sub_b, &ctx.c, arena)?
+                                        .reshape(&[nb, d]);
                                     lane.cache.observe_fit(l, &sub, &out_sub);
                                     let mut out_full = lane.cache.fit(l).apply(&ctx.h);
                                     out_full.scatter_rows(idx, &out_sub);
                                     lane.flops_done += cfg.block_flops(nb)
                                         + cfg.approx_flops(cur_n - nb, false);
                                     lane.token_sites_computed += nb as u64;
-                                    out_full
+                                    owned = Some(out_full);
+                                }
+                                _ if model.is_native() => {
+                                    // Lone full-token (or merged-size)
+                                    // compute — zero-allocation kernel
+                                    // path into the recycled buffer.
+                                    model.block_native_into(
+                                        l, &ctx.h, ctx.c.data(), arena, &mut ctx.out,
+                                    )?;
+                                    lane.cache.observe_fit(l, &ctx.h, &ctx.out);
+                                    lane.flops_done += cfg.block_flops(cur_n);
+                                    lane.token_sites_computed += cur_n as u64;
                                 }
                                 _ => {
-                                    // Lone full-token (or merged-size) compute.
+                                    // Lone compute through the HLO B=1
+                                    // artifact.
                                     let hb = ctx.h.clone().reshape(&[1, cur_n, d]);
                                     let out =
-                                        self.model.block(l, &hb, &ctx.c)?.reshape(&[cur_n, d]);
+                                        model.block(l, &hb, &ctx.c)?.reshape(&[cur_n, d]);
                                     lane.cache.observe_fit(l, &ctx.h, &out);
                                     lane.flops_done += cfg.block_flops(cur_n);
                                     lane.token_sites_computed += cur_n as u64;
-                                    out
+                                    owned = Some(out);
                                 }
                             }
-                        };
+                        }
+                        let site_out = owned.as_ref().unwrap_or(&ctx.out);
                         let dv = match lane.cache.prev_output(l) {
-                            Some(prev_out) if prev_out.shape() == out.shape() => {
-                                Some(native::delta_rel(&out, prev_out))
+                            Some(prev_out) if prev_out.shape() == site_out.shape() => {
+                                Some(native::delta_rel(site_out, prev_out))
                             }
                             _ => None,
                         };
                         if let Some(dv) = dv {
                             lane.policy.observe_output(l, dv);
                         }
-                        out
                     }
                     BlockAction::Approx => {
                         ctx.rec.approximated += 1;
                         lane.flops_done +=
-                            cfg.approx_flops(cur_n, self.fc.approx == ApproxMode::FullMatrix);
-                        let approx = match self.fc.approx {
+                            cfg.approx_flops(cur_n, fc.approx == ApproxMode::FullMatrix);
+                        let approx = match fc.approx {
                             ApproxMode::FullMatrix => {
                                 let (w, b) = lane.cache.fit(l).to_full_matrix();
                                 let hb = ctx.h.clone().reshape(&[1, cur_n, d]);
-                                self.model
-                                    .linear_approx_full(&hb, &w, &b)?
-                                    .reshape(&[cur_n, d])
+                                model.linear_approx_full(&hb, &w, &b)?.reshape(&[cur_n, d])
                             }
                             _ => lane.cache.fit(l).apply(&ctx.h),
                         };
-                        match lane.cache.prev_output(l) {
+                        owned = Some(match lane.cache.prev_output(l) {
                             Some(prev_out)
-                                if self.fc.enable_mb && prev_out.shape() == approx.shape() =>
+                                if fc.enable_mb && prev_out.shape() == approx.shape() =>
                             {
-                                approx.lerp(prev_out, self.fc.gamma, 1.0 - self.fc.gamma)
+                                approx.lerp(prev_out, fc.gamma, 1.0 - fc.gamma)
                             }
                             _ => approx,
-                        }
+                        });
                     }
                     BlockAction::Reuse => {
                         ctx.rec.reused += 1;
-                        match lane.cache.prev_output(l) {
+                        owned = Some(match lane.cache.prev_output(l) {
                             Some(prev_out) if prev_out.shape() == ctx.h.shape() => {
                                 prev_out.clone()
                             }
                             _ => ctx.h.clone(),
-                        }
+                        });
                     }
+                }
+                // Rotate, allocation-free on the steady-state path: the
+                // pre-block hidden MOVES into the cache's input slot, the
+                // output becomes ctx.h, and the slot's evicted tensor is
+                // recycled as the next site's output buffer. Only the
+                // output copy into the cache remains (into a same-shape
+                // resident buffer, so it is a memcpy, not an allocation).
+                let h_next = match owned {
+                    Some(t) => t,
+                    None => std::mem::replace(&mut ctx.out, Tensor::empty()),
                 };
-                // One clone per site instead of two: the pre-block hidden
-                // moves into the cache, only the output copy remains.
                 let prev = std::mem::replace(&mut ctx.h, h_next);
-                lane.cache.store_input(l, prev);
-                lane.cache.store_output(l, ctx.h.clone());
+                let recycled = lane.cache.swap_input(l, prev);
+                if ctx.out.len() < recycled.len() {
+                    ctx.out = recycled;
+                }
+                lane.cache.store_output_from(l, &ctx.h);
                 lane.active += t0.elapsed();
             }
         }
@@ -762,7 +820,10 @@ impl<'m> LaneStepper<'m> {
         // ---- Step epilogue, per lane: unpool, final layer, DDIM. ----
         for (lane, ctx) in lanes.iter_mut().zip(ctxs.into_iter()) {
             let t0 = Instant::now();
-            let StepCtx { mut h, c, merge, mut rec, delta_sum, delta_cnt, .. } = ctx;
+            let StepCtx { mut h, c, out, merge, mut rec, delta_sum, delta_cnt, .. } = ctx;
+            // Hand the recycled output buffer back to the lane for the
+            // next step (so layer 0 of every step stays allocation-free).
+            lane.scratch_out = out;
 
             // Unpool + residual fusion if merged (Algorithm 2's MTA phase).
             if let Some((map, z)) = merge {
@@ -772,9 +833,9 @@ impl<'m> LaneStepper<'m> {
 
             rec.mean_delta = if delta_cnt > 0 { delta_sum / delta_cnt as f64 } else { 0.0 };
 
-            // Final projection + DDIM update.
+            // Final projection + DDIM update (arena-backed in native mode).
             let hb = h.reshape(&[1, n, d]);
-            let eps = self.model.final_layer(&hb, &c)?.reshape(&[n, C_IN]);
+            let eps = model.final_layer_with(&hb, &c, arena)?.reshape(&[n, C_IN]);
             let sched = Arc::clone(&lane.schedule);
             sched.update(lane.step, lane.x.data_mut(), eps.data());
 
@@ -805,7 +866,8 @@ mod tests {
     #[test]
     fn lane_steps_to_completion() {
         let model = DitModel::native(Variant::S, 7);
-        let stepper = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut stepper =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
         let mut schedules = ScheduleCache::new();
         let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 5), schedules.get(5));
         assert_eq!(lane.total_steps(), 5);
@@ -827,7 +889,7 @@ mod tests {
         // lane admitted later, both stepped together, both finish clean.
         let model = DitModel::native(Variant::S, 7);
         let fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
-        let stepper = LaneStepper::new(&model, fc.clone());
+        let mut stepper = LaneStepper::new(&model, fc.clone());
         let mut schedules = ScheduleCache::new();
 
         let mut lanes =
@@ -860,7 +922,8 @@ mod tests {
 
         // NoCache: before any step the estimate is the full budget; it
         // drains linearly and hits zero at completion.
-        let stepper = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut stepper =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
         let mut lane = stepper.make_lane(&GenRequest::simple(0, 3, 4), schedules.get(4));
         let full = lane.remaining_flops_estimate();
         assert_eq!(full, 4 * model.cfg.full_step_flops());
@@ -873,7 +936,7 @@ mod tests {
 
         // A caching policy that skips work predicts LESS remaining work
         // than NoCache at the same step index.
-        let cached =
+        let mut cached =
             LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::StaticCache));
         let mut cl = cached.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
         let mut nl = stepper.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
@@ -899,7 +962,7 @@ mod tests {
         let model = DitModel::native(Variant::S, 7);
         let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
         fc.enable_str = false;
-        let stepper = LaneStepper::new(&model, fc);
+        let mut stepper = LaneStepper::new(&model, fc);
         let mut schedules = ScheduleCache::new();
         let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 12), schedules.get(12));
         while !lane.is_done() {
@@ -914,6 +977,18 @@ mod tests {
         let embed = n * d * f32s; // prev_embed [n, d]
         let fit_stats = layers * d * 3 * 8;
         assert_eq!(r.cache_bytes_peak, hidden_copies + temb + embed + fit_stats);
+        // The block path's only transient working set is the stepper's
+        // arena — the per-call clones it replaced (the old residual copy
+        // + normalized copy + q/k/v splits + logits + mod/hidden vecs)
+        // are gone. Bill it: exactly the six kernel buffers
+        // (csilu [d] + mod6 [6d] + xnorm [n,d] + qkv [n,3d] + attn [n,d]
+        // + hidden [n,4d]), within allocator rounding.
+        let arena_exact = (7 * d + 9 * n * d) * f32s;
+        let hw = stepper.scratch_high_water_bytes();
+        assert!(
+            hw >= arena_exact && hw < arena_exact + 4096,
+            "arena high-water {hw} should bill exactly the kernel buffers ({arena_exact})"
+        );
     }
 
     #[test]
@@ -929,7 +1004,7 @@ mod tests {
         fc.warm_start = true;
         fc.fit_min_updates = 6;
         fc.tau_delta0 = 1.0; // permissive χ²: the gate is the binding constraint
-        let stepper = LaneStepper::new(&model, fc);
+        let mut stepper = LaneStepper::new(&model, fc);
         let mut schedules = ScheduleCache::new();
         let steps = 12;
 
@@ -975,7 +1050,7 @@ mod tests {
         let model = DitModel::native(Variant::S, 7);
         let mut fc = FastCacheConfig::with_policy(PolicyKind::L2C);
         fc.warm_start = true;
-        let stepper = LaneStepper::new(&model, fc);
+        let mut stepper = LaneStepper::new(&model, fc);
         let mut schedules = ScheduleCache::new();
         let steps = 5;
         let mut lane = stepper.make_lane(&GenRequest::simple(0, 11, steps), schedules.get(steps));
@@ -997,7 +1072,8 @@ mod tests {
         // 3 NoCache lanes => every (step, layer) site batches 3 lanes into
         // the B=4 artifact with one padded slot.
         let model = DitModel::native(Variant::S, 7);
-        let stepper = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut stepper =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
         let mut schedules = ScheduleCache::new();
         let steps = 3;
         let mut lanes: Vec<Lane> = (0..3)
@@ -1011,5 +1087,59 @@ mod tests {
         let expected =
             (steps * model.cfg.layers) as u64 * model.cfg.block_flops(model.cfg.n_tokens);
         assert_eq!(total_padded, expected, "one padded slot per site");
+    }
+
+    #[test]
+    fn scratch_high_water_stabilizes_after_first_step() {
+        // The zero-allocation acceptance criterion: all kernel scratch
+        // lives in the stepper's arena, which reaches its high-water
+        // mark on the first step and never grows again — later steps
+        // (including STR-bucketed sub-blocks, which are smaller) run
+        // allocation-free.
+        let model = DitModel::native(Variant::S, 7);
+        let mut stepper =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::FastCache));
+        let mut schedules = ScheduleCache::new();
+        let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
+        stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+        let hw = stepper.scratch_high_water_bytes();
+        assert!(hw > 0, "native stepping must exercise the arena");
+        while !lane.is_done() {
+            stepper.step(std::slice::from_mut(&mut lane)).unwrap();
+        }
+        assert_eq!(
+            stepper.scratch_high_water_bytes(),
+            hw,
+            "arena grew after the first step — the steady-state path allocated"
+        );
+    }
+
+    #[test]
+    fn temb_cache_shares_evaluations_across_lanes_and_steps() {
+        // Two co-scheduled lanes at the same step count share every
+        // timestep embedding: per step one miss (first lane) and one hit
+        // (second lane); a later same-steps request hits for every step.
+        let model = DitModel::native(Variant::S, 7);
+        let mut stepper =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        let mut schedules = ScheduleCache::new();
+        let steps = 4;
+        let mut lanes: Vec<Lane> = (0..2)
+            .map(|i| stepper.make_lane(&GenRequest::simple(i, 80 + i, steps), schedules.get(steps)))
+            .collect();
+        for _ in 0..steps {
+            stepper.step(&mut lanes).unwrap();
+        }
+        let ct = stepper.temb_cache_counters();
+        assert_eq!(ct.misses as usize, steps, "one eval per distinct timestep value");
+        assert_eq!(ct.hits as usize, steps, "co-scheduled lane must share the memo");
+
+        let mut late = stepper.make_lane(&GenRequest::simple(9, 99, steps), schedules.get(steps));
+        while !late.is_done() {
+            stepper.step(std::slice::from_mut(&mut late)).unwrap();
+        }
+        let ct2 = stepper.temb_cache_counters();
+        assert_eq!(ct2.misses as usize, steps, "a later same-schedule request re-uses it all");
+        assert_eq!(ct2.hits as usize, 2 * steps);
     }
 }

@@ -1,15 +1,18 @@
 //! Denoise scheduling: the DDIM schedule, the unified lane-based stepper
 //! (Algorithm 1 + the Algorithm 2 token-merge extension, executed once
-//! for every serving mode), and its two drivers — `DenoiseEngine`
-//! (batch-of-one) and `BatchEngine` (lockstep batch). The serving worker
-//! drives the stepper directly with continuous batching.
+//! for every serving mode), its two drivers — `DenoiseEngine`
+//! (batch-of-one) and `BatchEngine` (lockstep batch) — and the
+//! stepper-owned caches (schedules, memoized timestep embeddings). The
+//! serving worker drives the stepper directly with continuous batching.
 
 pub mod batch;
 pub mod ddim;
 pub mod engine;
 pub mod lane;
+pub mod temb;
 
 pub use batch::BatchEngine;
 pub use ddim::{DdimSchedule, ScheduleCache};
 pub use engine::DenoiseEngine;
 pub use lane::{GenRequest, GenResult, Lane, LaneStepper, StepRecord, Turbulence};
+pub use temb::TembCache;

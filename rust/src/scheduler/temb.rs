@@ -1,0 +1,106 @@
+//! Memoized timestep-conditioning embeddings.
+//!
+//! `temb_forward(t)` is a pure function of `(t, variant, weight seed)` —
+//! and a stepper serves exactly one (variant, seed) model — yet the old
+//! loop recomputed it per lane per step (and re-dispatched it per step in
+//! HLO mode). [`TembCache`] memoizes the [1, D] embedding per distinct
+//! timestep value through the same byte-budgeted `LruBytes` primitive as
+//! `ScheduleCache` and the warm store, so co-scheduled lanes — and
+//! successive steps, and successive requests at the same step count —
+//! share one evaluation. Owned by the `LaneStepper` (one per engine /
+//! shard worker); lanes receive clones, so cached entries are never
+//! aliased mutably.
+
+use crate::store::lru::{LruBytes, LruCounters};
+use crate::tensor::Tensor;
+
+pub struct TembCache {
+    lru: LruBytes<u32, Tensor>,
+}
+
+impl Default for TembCache {
+    fn default() -> Self {
+        TembCache::new()
+    }
+}
+
+impl TembCache {
+    /// Default byte budget: a [1, D] f32 embedding is ≤ ~1.2 KiB at
+    /// DiT-XL width, so this comfortably holds the ~100 distinct
+    /// timesteps of several coexisting schedules; rarely-used values are
+    /// recomputed on demand instead of held forever.
+    pub const DEFAULT_BUDGET_BYTES: usize = 128 * 1024;
+
+    pub fn new() -> TembCache {
+        TembCache::with_budget(Self::DEFAULT_BUDGET_BYTES)
+    }
+
+    pub fn with_budget(budget_bytes: usize) -> TembCache {
+        TembCache { lru: LruBytes::new(budget_bytes) }
+    }
+
+    /// Cached embedding for a timestep value (keyed by its exact bit
+    /// pattern). Counts a hit or a miss and refreshes recency.
+    pub fn get(&mut self, t_bits: u32) -> Option<&Tensor> {
+        self.lru.get(&t_bits)
+    }
+
+    /// Retain a freshly computed embedding (LRU-evicting within budget).
+    pub fn insert(&mut self, t_bits: u32, temb: Tensor) {
+        self.lru.insert(t_bits, temb);
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.lru.used_bytes()
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.lru.budget()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lru.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lru.is_empty()
+    }
+
+    /// Hit/miss/eviction counters (same shape as every other cache's).
+    pub fn counters(&self) -> LruCounters {
+        self.lru.counters()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb(v: f32, d: usize) -> Tensor {
+        Tensor::full(&[1, d], v)
+    }
+
+    #[test]
+    fn memoizes_per_timestep_bits() {
+        let mut c = TembCache::new();
+        assert!(c.get(1.5f32.to_bits()).is_none());
+        c.insert(1.5f32.to_bits(), emb(1.5, 8));
+        let got = c.get(1.5f32.to_bits()).expect("hit");
+        assert_eq!(got.shape(), &[1, 8]);
+        assert!(c.get(2.5f32.to_bits()).is_none());
+        let ct = c.counters();
+        assert_eq!((ct.hits, ct.misses, ct.inserts), (1, 2, 1));
+    }
+
+    #[test]
+    fn stays_within_byte_budget_under_flood() {
+        let one = Tensor::full(&[1, 64], 0.0).size_bytes() + crate::store::lru::ENTRY_OVERHEAD;
+        let mut c = TembCache::with_budget(4 * one);
+        for i in 0..100u32 {
+            c.insert((i as f32).to_bits(), emb(i as f32, 64));
+            assert!(c.used_bytes() <= c.budget_bytes());
+        }
+        assert!(c.len() <= 4);
+        assert!(c.counters().evictions > 0);
+    }
+}

@@ -67,6 +67,11 @@ pub struct ShardReport {
     /// layer or a calibrated policy) / total layers warm-started.
     pub warm_admissions: u64,
     pub warm_layers: u64,
+    /// High-water mark of this shard's kernel scratch arena, bytes —
+    /// the entire transient working set of the native block kernels
+    /// (reused across every lane and step; stabilizes after the first
+    /// step, so steady-state block calls allocate nothing).
+    pub scratch_bytes: u64,
 }
 
 impl ShardReport {
@@ -86,6 +91,7 @@ impl ShardReport {
             deadline_sheds: 0,
             warm_admissions: 0,
             warm_layers: 0,
+            scratch_bytes: 0,
         }
     }
 
@@ -125,6 +131,9 @@ pub struct ServerReport {
     /// Warm-start accounting, summed over shards.
     pub warm_admissions: u64,
     pub warm_layers: u64,
+    /// Largest per-shard kernel-scratch high-water mark, bytes (each
+    /// shard's arena is independent, so the max is the honest figure).
+    pub scratch_bytes: u64,
     /// Warm-start store counters/occupancy at shutdown (`None` when the
     /// server ran without a store).
     pub store: Option<StoreStats>,
@@ -152,6 +161,7 @@ impl ServerReport {
             deadline_sheds: 0,
             warm_admissions: 0,
             warm_layers: 0,
+            scratch_bytes: 0,
             store,
             shards: Vec::new(),
         };
@@ -168,6 +178,7 @@ impl ServerReport {
             r.deadline_sheds += s.deadline_sheds;
             r.warm_admissions += s.warm_admissions;
             r.warm_layers += s.warm_layers;
+            r.scratch_bytes = r.scratch_bytes.max(s.scratch_bytes);
         }
         r.shards = shards;
         r
@@ -346,7 +357,7 @@ where
     let _drain_guard = DrainOnExit(queue);
 
     let model = model_factory().expect("model load failed");
-    let stepper = LaneStepper::new(&model, fc);
+    let mut stepper = LaneStepper::new(&model, fc);
     let mut report = ShardReport::new(shard_id);
     // Guard against unvalidated configs: max_batch = 0 must degrade to
     // solo serving, not livelock the admission loop.
@@ -511,6 +522,7 @@ where
     }
 
     report.wall_s = t0.elapsed().as_secs_f64();
+    report.scratch_bytes = stepper.scratch_high_water_bytes() as u64;
     report
 }
 
@@ -559,6 +571,11 @@ mod tests {
         assert_eq!(report.admission_wait.count(), 6);
         assert_eq!(report.shards.len(), 1);
         assert_eq!(report.shards[0].completed, 6);
+        assert!(
+            report.scratch_bytes > 0,
+            "native serving must report the kernel-arena high-water mark"
+        );
+        assert_eq!(report.scratch_bytes, report.shards[0].scratch_bytes);
     }
 
     #[test]

@@ -29,6 +29,12 @@ impl<T: ByteSized> ByteSized for std::sync::Arc<T> {
     }
 }
 
+impl ByteSized for crate::tensor::Tensor {
+    fn size_bytes(&self) -> usize {
+        crate::tensor::Tensor::size_bytes(self)
+    }
+}
+
 /// Bookkeeping + key storage cost charged per entry on top of the value's
 /// own bytes.
 pub const ENTRY_OVERHEAD: usize = 96;

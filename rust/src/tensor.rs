@@ -42,6 +42,24 @@ impl Tensor {
         t
     }
 
+    /// A zero-element tensor — the placeholder the buffer-recycling
+    /// paths (scratch outputs, cache slots) swap through.
+    pub fn empty() -> Self {
+        Self { data: Vec::new(), shape: vec![0] }
+    }
+
+    /// Resize in place to `shape`, reusing the existing allocation (and
+    /// the shape vector's capacity) whenever possible. Contents are
+    /// UNSPECIFIED afterwards — callers overwrite the whole buffer.
+    pub fn ensure_shape(&mut self, shape: &[usize]) {
+        let len = shape.iter().product();
+        self.data.resize(len, 0.0);
+        if self.shape != shape {
+            self.shape.clear();
+            self.shape.extend_from_slice(shape);
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
@@ -208,6 +226,21 @@ mod tests {
         let i = Tensor::eye(3);
         assert_eq!(i.row(0), &[1.0, 0.0, 0.0]);
         assert_eq!(i.row(2), &[0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn ensure_shape_reuses_capacity() {
+        let mut t = Tensor::empty();
+        assert_eq!(t.len(), 0);
+        t.ensure_shape(&[4, 3]);
+        assert_eq!(t.shape(), &[4, 3]);
+        assert_eq!(t.len(), 12);
+        let cap_ptr = t.data().as_ptr();
+        t.ensure_shape(&[2, 3]); // shrink: same allocation
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        t.ensure_shape(&[4, 3]); // grow back within capacity
+        assert_eq!(t.data().as_ptr(), cap_ptr, "regrowth within capacity must not realloc");
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! Test & bench substrate: a mini property-testing harness and a bench
-//! timer (proptest/criterion are not vendored in the offline registry).
+//! Test & bench substrate: a mini property-testing harness, a bench
+//! timer (proptest/criterion are not vendored in the offline registry),
+//! and the retained scalar oracle the packed/fused kernels are verified
+//! against.
 
 pub mod bench;
+pub mod oracle;
 pub mod prop;
 
 pub use bench::{BenchResult, Bencher};

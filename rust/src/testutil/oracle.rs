@@ -1,0 +1,242 @@
+//! The retained scalar reference implementations of the DiT forward
+//! pieces — the pre-kernel `model::native` code, moved here verbatim as
+//! the ORACLE the property tests (and the `bench_tables kernels`
+//! old-vs-new table) compare the packed/fused/streaming kernels against.
+//!
+//! Semantics match python/compile/model.py (layer-norm eps 1e-6,
+//! tanh-approximate GELU, SiLU, `q|k|v` contiguous split). The packed
+//! matmul path is bit-exact against `matmul_bias` below (same
+//! k-ascending accumulation; the old `xv == 0.0` skip only ever added
+//! exact zeros); the streaming attention differs from `attention` below
+//! by float-summation order only, which is why block-level comparisons
+//! are tolerance-based. Do NOT optimize this module — its value is being
+//! the slow, obviously-correct baseline.
+
+use crate::config::ModelConfig;
+use crate::model::kernels::{gelu, silu};
+use crate::model::native::timestep_embedding;
+use crate::model::weights::{BlockWeights, EmbedWeights, FinalWeights, TembWeights};
+use crate::tensor::Tensor;
+
+/// y = x @ w + b, x: [n, k] row-major, w: [k, m], b: [m] or empty — the
+/// original scalar loop, data-dependent zero-skip included.
+pub fn matmul_bias(x: &[f32], w: &Tensor, b: Option<&Tensor>, n: usize) -> Vec<f32> {
+    let (k, m) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(x.len(), n * k);
+    let mut y = vec![0.0f32; n * m];
+    if let Some(b) = b {
+        assert_eq!(b.len(), m);
+        for r in 0..n {
+            y[r * m..(r + 1) * m].copy_from_slice(b.data());
+        }
+    }
+    let wd = w.data();
+    for r in 0..n {
+        let xr = &x[r * k..(r + 1) * k];
+        let yr = &mut y[r * m..(r + 1) * m];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &wd[kk * m..(kk + 1) * m];
+            for (yv, &wv) in yr.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+/// Parameter-free LayerNorm over the last dim (eps = 1e-6).
+pub fn layer_norm(x: &mut [f32], d: usize) {
+    let eps = 1e-6f32;
+    for row in x.chunks_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+}
+
+/// Two-pass softmax attention on already-split q, k, v (each [N, D],
+/// heads interleaved as D = heads · dh), materializing one logits row
+/// per query — the original implementation.
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, heads: usize, d: usize) -> Vec<f32> {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; n * d];
+    let mut logits = vec![0.0f32; n];
+    for h in 0..heads {
+        let off = h * dh;
+        for i in 0..n {
+            let qi = &q[i * d + off..i * d + off + dh];
+            let mut maxv = f32::NEG_INFINITY;
+            for j in 0..n {
+                let kj = &k[j * d + off..j * d + off + dh];
+                let mut dot = 0.0f32;
+                for c in 0..dh {
+                    dot += qi[c] * kj[c];
+                }
+                let l = dot * scale;
+                logits[j] = l;
+                if l > maxv {
+                    maxv = l;
+                }
+            }
+            let mut denom = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - maxv).exp();
+                denom += *l;
+            }
+            let oi = &mut out[i * d + off..i * d + off + dh];
+            for j in 0..n {
+                let p = logits[j] / denom;
+                if p == 0.0 {
+                    continue;
+                }
+                let vj = &v[j * d + off..j * d + off + dh];
+                for c in 0..dh {
+                    oi[c] += p * vj[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Timestep -> conditioning embedding. Returns [D].
+pub fn temb_forward(t: f32, w: &TembWeights) -> Vec<f32> {
+    let d = w.w1.shape()[0];
+    let e = timestep_embedding(t, d);
+    let mut h = matmul_bias(&e, &w.w1, Some(&w.b1), 1);
+    for v in h.iter_mut() {
+        *v = silu(*v);
+    }
+    matmul_bias(&h, &w.w2, Some(&w.b2), 1)
+}
+
+/// Latent -> hidden embedding. x: [N, C] -> [N, D].
+pub fn embed_forward(x: &Tensor, w: &EmbedWeights) -> Tensor {
+    let n = x.shape()[0];
+    let d = w.w.shape()[1];
+    Tensor::new(matmul_bias(x.data(), &w.w, Some(&w.b), n), &[n, d])
+}
+
+/// One adaLN-zero DiT block, scalar reference. h: [N, D], c: [D] -> [N, D].
+pub fn block_forward(h: &Tensor, c: &[f32], cfg: &ModelConfig, w: &BlockWeights) -> Tensor {
+    let (n, d) = (h.shape()[0], h.shape()[1]);
+    assert_eq!(d, cfg.d);
+
+    // Modulation: silu(c) @ wmod + bmod -> 6 chunks of D.
+    let cs: Vec<f32> = c.iter().map(|&x| silu(x)).collect();
+    let mod6 = matmul_bias(&cs, &w.wmod, Some(&w.bmod), 1);
+    let (sh1, rest) = mod6.split_at(d);
+    let (sc1, rest) = rest.split_at(d);
+    let (g1, rest) = rest.split_at(d);
+    let (sh2, rest) = rest.split_at(d);
+    let (sc2, g2) = rest.split_at(d);
+
+    let mut out = h.clone();
+
+    // Attention branch.
+    let mut x = h.data().to_vec();
+    layer_norm(&mut x, d);
+    for row in x.chunks_mut(d) {
+        for j in 0..d {
+            row[j] = row[j] * (1.0 + sc1[j]) + sh1[j];
+        }
+    }
+    let qkv = matmul_bias(&x, &w.wqkv, Some(&w.bqkv), n);
+    // qkv rows are [3D]: q | k | v contiguous (jnp.split on axis -1).
+    let mut q = vec![0.0f32; n * d];
+    let mut k = vec![0.0f32; n * d];
+    let mut v = vec![0.0f32; n * d];
+    for r in 0..n {
+        q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
+        k[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
+        v[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d]);
+    }
+    let a = attention(&q, &k, &v, n, cfg.heads, d);
+    let proj = matmul_bias(&a, &w.wo, Some(&w.bo), n);
+    for r in 0..n {
+        let orow = out.row_mut(r);
+        for j in 0..d {
+            orow[j] += g1[j] * proj[r * d + j];
+        }
+    }
+
+    // MLP branch.
+    let mut x2 = out.data().to_vec();
+    layer_norm(&mut x2, d);
+    for row in x2.chunks_mut(d) {
+        for j in 0..d {
+            row[j] = row[j] * (1.0 + sc2[j]) + sh2[j];
+        }
+    }
+    let mut hidden = matmul_bias(&x2, &w.w1, Some(&w.b1), n);
+    for vv in hidden.iter_mut() {
+        *vv = gelu(*vv);
+    }
+    let mlp = matmul_bias(&hidden, &w.w2, Some(&w.b2), n);
+    for r in 0..n {
+        let orow = out.row_mut(r);
+        for j in 0..d {
+            orow[j] += g2[j] * mlp[r * d + j];
+        }
+    }
+    out
+}
+
+/// Final layer: adaLN -> linear to C channels. h: [N, D] -> [N, C].
+pub fn final_forward(h: &Tensor, c: &[f32], w: &FinalWeights) -> Tensor {
+    let (n, d) = (h.shape()[0], h.shape()[1]);
+    let cch = w.wout.shape()[1];
+    let cs: Vec<f32> = c.iter().map(|&x| silu(x)).collect();
+    let mod2 = matmul_bias(&cs, &w.wmod, Some(&w.bmod), 1);
+    let (sh, sc) = mod2.split_at(d);
+    let mut x = h.data().to_vec();
+    layer_norm(&mut x, d);
+    for row in x.chunks_mut(d) {
+        for j in 0..d {
+            row[j] = row[j] * (1.0 + sc[j]) + sh[j];
+        }
+    }
+    Tensor::new(matmul_bias(&x, &w.wout, Some(&w.bout), n), &[n, cch])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        layer_norm(&mut x, 4);
+        for row in x.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn attention_uniform_for_identical_keys() {
+        let n = 4;
+        let d = 8;
+        let mut r = Rng::new(1);
+        let q = r.normal_vec(n * d, 1.0);
+        let k = vec![0.5f32; n * d]; // identical keys -> uniform weights
+        let v = Rng::new(2).normal_vec(n * d, 1.0);
+        let out = attention(&q, &k, &v, n, 2, d);
+        for j in 0..d {
+            let want: f32 = (0..n).map(|r| v[r * d + j]).sum::<f32>() / n as f32;
+            for i in 0..n {
+                assert!((out[i * d + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

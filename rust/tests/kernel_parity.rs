@@ -1,0 +1,220 @@
+//! Property tests pinning the packed/fused/streaming kernels
+//! (`model::kernels` + `model::native`) to the retained scalar oracle
+//! (`testutil::oracle` — the pre-kernel implementation, moved there
+//! verbatim).
+//!
+//! Contract split:
+//! - Matmuls (packed, sparse-row entry, runtime-weight) are BIT-LEVEL
+//!   parity: same k-ascending accumulation order as the oracle, the old
+//!   `x == 0.0` skip only ever added exact zeros.
+//! - The fused LayerNorm+adaLN is bit-level parity (identical
+//!   arithmetic, one pass).
+//! - Attention (and therefore the whole block) is TOLERANCE parity: the
+//!   streaming softmax changes float-summation order only.
+//!
+//! Shapes cover n ∈ {1, 7, 64, 256} and every model variant (the full n
+//! grid runs on DiT-S; the larger variants run the sub-quadratic sizes
+//! so the debug-mode test suite stays fast).
+
+use fastcache_dit::config::{ModelConfig, Variant};
+use fastcache_dit::model::kernels::{self, Act, PackedLinear, ScratchArena};
+use fastcache_dit::model::{native, WeightBank};
+use fastcache_dit::rng::Rng;
+use fastcache_dit::testutil::oracle;
+use fastcache_dit::tensor::Tensor;
+
+const SHAPES_FULL: [usize; 4] = [1, 7, 64, 256];
+const SHAPES_SMALL: [usize; 3] = [1, 7, 64];
+
+fn rnd(seed: u64, len: usize) -> Vec<f32> {
+    Rng::new(seed).normal_vec(len, 1.0)
+}
+
+fn rnd_t(seed: u64, shape: &[usize]) -> Tensor {
+    Tensor::new(rnd(seed, shape.iter().product()), shape)
+}
+
+fn shapes_for(v: Variant) -> &'static [usize] {
+    // Full grid (incl. the n=256 acceptance shape) on DiT-S; the wider
+    // variants skip the quadratic-attention size to keep debug-mode
+    // `cargo test` tractable.
+    if v == Variant::S {
+        &SHAPES_FULL
+    } else {
+        &SHAPES_SMALL
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn packed_matmul_bit_parity_with_oracle_across_variants() {
+    for v in Variant::ALL {
+        let cfg = ModelConfig::of(v);
+        let bank = WeightBank::generate(cfg, 0xD17);
+        let w = &bank.blocks[0];
+        for &n in shapes_for(v) {
+            let x = rnd(10 + n as u64, n * cfg.d);
+            // qkv [D, 3D] and mlp-up [D, 4D] exercise ragged/aligned tiles.
+            for (t, b, p) in [
+                (&w.wqkv, &w.bqkv, PackedLinear::pack(&w.wqkv, Some(&w.bqkv))),
+                (&w.w1, &w.b1, PackedLinear::pack(&w.w1, Some(&w.b1))),
+            ] {
+                let want = oracle::matmul_bias(&x, t, Some(b), n);
+                let mut got = vec![0.0f32; n * p.m()];
+                p.forward(&x, n, Act::None, &mut got);
+                let md = max_abs_diff(&got, &want);
+                assert!(md < 1e-6, "{v} n={n}: packed matmul diff {md}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_row_entry_matches_dense_with_zeros() {
+    // The STR contract: a gather-free caller may zero static rows and
+    // use the sparse entry point; the result must be exactly what the
+    // dense kernel produces on the same zero-padded input.
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 0xD17);
+    let p = PackedLinear::pack(&bank.blocks[0].w1, Some(&bank.blocks[0].b1));
+    for &n in &SHAPES_FULL {
+        let mut x = rnd(77 + n as u64, n * cfg.d);
+        let mut rng = Rng::new(n as u64);
+        for r in 0..n {
+            if rng.uniform() < 0.5 {
+                x[r * cfg.d..(r + 1) * cfg.d].fill(0.0);
+            }
+        }
+        let mut dense = vec![0.0f32; n * p.m()];
+        p.forward(&x, n, Act::Gelu, &mut dense);
+        let mut sparse = vec![0.0f32; n * p.m()];
+        p.forward_sparse(&x, n, Act::Gelu, &mut sparse);
+        assert_eq!(dense, sparse, "n={n}: sparse-row entry diverged from dense");
+    }
+}
+
+#[test]
+fn fused_layernorm_adaln_bit_parity() {
+    for v in Variant::ALL {
+        let d = ModelConfig::of(v).d;
+        for &n in shapes_for(v) {
+            let x = rnd(31 + n as u64, n * d);
+            let shift = rnd(32, d);
+            let scale = rnd(33, d);
+            let mut fused = vec![0.0f32; n * d];
+            kernels::layernorm_mod(&x, n, d, &shift, &scale, &mut fused);
+            let mut seq = x.clone();
+            oracle::layer_norm(&mut seq, d);
+            for row in seq.chunks_mut(d) {
+                for (j, vv) in row.iter_mut().enumerate() {
+                    *vv = *vv * (1.0 + scale[j]) + shift[j];
+                }
+            }
+            assert_eq!(fused, seq, "{v} n={n}: fused LN+adaLN drifted");
+        }
+    }
+}
+
+#[test]
+fn streaming_attention_tolerance_parity() {
+    for v in Variant::ALL {
+        let cfg = ModelConfig::of(v);
+        let d = cfg.d;
+        for &n in shapes_for(v) {
+            let q = rnd(41 + n as u64, n * d);
+            let k = rnd(42 + n as u64, n * d);
+            let vv = rnd(43 + n as u64, n * d);
+            let mut qkv = vec![0.0f32; n * 3 * d];
+            for r in 0..n {
+                qkv[r * 3 * d..r * 3 * d + d].copy_from_slice(&q[r * d..(r + 1) * d]);
+                qkv[r * 3 * d + d..r * 3 * d + 2 * d].copy_from_slice(&k[r * d..(r + 1) * d]);
+                qkv[r * 3 * d + 2 * d..r * 3 * d + 3 * d].copy_from_slice(&vv[r * d..(r + 1) * d]);
+            }
+            let mut got = rnd(44, n * d); // stale scratch must be wiped
+            kernels::attention_streaming(&qkv, n, cfg.heads, d, &mut got);
+            let want = oracle::attention(&q, &k, &vv, n, cfg.heads, d);
+            let md = max_abs_diff(&got, &want);
+            assert!(md < 1e-4, "{v} n={n}: attention diff {md}");
+        }
+    }
+}
+
+#[test]
+fn fused_block_tolerance_parity_across_variants_and_shapes() {
+    // The headline kernel: fused block vs the scalar oracle block, every
+    // variant, every layer's distinct weights exercised via layer 0 and
+    // the last layer (depth-dependent modulation scales).
+    let mut arena = ScratchArena::new();
+    for v in Variant::ALL {
+        let cfg = ModelConfig::of(v);
+        let bank = WeightBank::generate(cfg, 0xD17);
+        for &n in shapes_for(v) {
+            let h = rnd_t(50 + n as u64, &[n, cfg.d]);
+            let c = rnd(51, cfg.d);
+            for l in [0, cfg.layers - 1] {
+                let got =
+                    native::block_forward(&h, &c, &cfg, &bank.packed.blocks[l], &mut arena);
+                let want = oracle::block_forward(&h, &c, &cfg, &bank.blocks[l]);
+                let md = got.max_abs_diff(&want);
+                assert!(md < 1e-3, "{v} n={n} layer={l}: block diff {md}");
+            }
+        }
+    }
+}
+
+#[test]
+fn temb_embed_final_parity() {
+    let mut arena = ScratchArena::new();
+    for v in Variant::ALL {
+        let cfg = ModelConfig::of(v);
+        let bank = WeightBank::generate(cfg, 0xD17);
+        // temb: packed (fused SiLU epilogue) is bit-parity.
+        for t in [0.0f32, 17.5, 500.0, 999.0] {
+            let got = native::temb_forward(t, &bank.packed.temb);
+            let want = oracle::temb_forward(t, &bank.temb);
+            let md = max_abs_diff(&got, &want);
+            assert!(md < 1e-6, "{v} t={t}: temb diff {md}");
+        }
+        for &n in shapes_for(v) {
+            // embed.
+            let x = rnd_t(60 + n as u64, &[n, cfg.c_in]);
+            let mut got = vec![0.0f32; n * cfg.d];
+            native::embed_forward_slice(x.data(), n, &bank.packed.embed, &mut got);
+            let want = oracle::embed_forward(&x, &bank.embed);
+            let md = max_abs_diff(&got, want.data());
+            assert!(md < 1e-6, "{v} n={n}: embed diff {md}");
+            // final (fused adaLN).
+            let h = rnd_t(61 + n as u64, &[n, cfg.d]);
+            let c = rnd(62, cfg.d);
+            let mut fgot = vec![0.0f32; n * cfg.c_in];
+            native::final_forward_slice(h.data(), n, &c, &bank.packed.final_, &mut arena, &mut fgot);
+            let fwant = oracle::final_forward(&h, &c, &bank.final_);
+            let fmd = max_abs_diff(&fgot, fwant.data());
+            assert!(fmd < 1e-6, "{v} n={n}: final diff {fmd}");
+        }
+    }
+}
+
+#[test]
+fn block_kernel_is_deterministic_across_arena_reuse() {
+    // The same input through a dirty arena (after unrelated shapes) must
+    // be bit-identical — stale scratch never leaks into results. This is
+    // what makes the serving parity guarantees (workers=1 vs 4, batched
+    // vs single) survive the arena rework.
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 3);
+    let h = rnd_t(70, &[64, cfg.d]);
+    let c = rnd(71, cfg.d);
+    let mut a1 = ScratchArena::new();
+    let clean = native::block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut a1);
+    let mut a2 = ScratchArena::new();
+    for &n in &[256usize, 1, 33] {
+        let hx = rnd_t(72 + n as u64, &[n, cfg.d]);
+        let _ = native::block_forward(&hx, &c, &cfg, &bank.packed.blocks[1], &mut a2);
+    }
+    let dirty = native::block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut a2);
+    assert_eq!(clean.data(), dirty.data(), "arena reuse changed the result");
+}

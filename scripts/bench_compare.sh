@@ -1,0 +1,102 @@
+#!/usr/bin/env bash
+# Compare freshly-emitted bench tables (bench_out/BENCH_<table>.json,
+# written by `cargo bench --bench bench_tables`) against the most recent
+# committed snapshot in bench_history/ and WARN when any metric regressed
+# by more than 20%. Warn-only by design: wall-clock tables on shared CI
+# runners are noisy, so a regression here flags a PR for a human look
+# instead of failing the build. Exit code is always 0 unless the
+# comparison itself cannot run sanely.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+THRESHOLD="${BENCH_COMPARE_THRESHOLD:-0.20}"
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "bench_compare: python3 not found — skipping comparison"
+    exit 0
+fi
+
+baseline=$(ls bench_history/BENCH_*.json 2>/dev/null | sort -V | tail -n1 || true)
+if [ -z "${baseline}" ]; then
+    echo "bench_compare: no committed baseline under bench_history/ — nothing to compare"
+    exit 0
+fi
+
+python3 - "$baseline" "$THRESHOLD" <<'EOF'
+import glob
+import json
+import sys
+
+baseline_path, threshold = sys.argv[1], float(sys.argv[2])
+base = json.load(open(baseline_path))
+if base.get("provisional"):
+    print(f"bench_compare: baseline {baseline_path} is provisional "
+          "(authored without a toolchain) — comparisons skipped until a "
+          "real snapshot is committed")
+    sys.exit(0)
+base_tables = base.get("tables", {})
+
+# Metric direction by field-name convention: *_ns / *_ms / *gflop* /
+# flops_ratio are lower-is-better; rps / occupancy / speedup / hit
+# counters are higher-is-better. Identity fields pair up rows.
+LOWER = ("_ns", "_ms", "gflop", "flops_ratio", "gflop_per_step")
+HIGHER = ("rps", "occupancy", "speedup", "hit")
+IDENT = ("label", "variant", "op", "workers", "phase", "policy", "n")
+
+
+def direction(field):
+    # old_* columns are the frozen scalar-oracle baseline of the kernels
+    # table — pure runner noise, never a trajectory metric (the module
+    # header says "Do NOT optimize" it). Compare new_* and ratios only.
+    if field.startswith("old_"):
+        return None
+    if any(field.endswith(s) or s in field for s in LOWER):
+        return "lower"
+    if any(field == s or field.startswith(s) for s in HIGHER):
+        return "higher"
+    return None
+
+
+def ident(row):
+    return tuple((k, row[k]) for k in IDENT if k in row)
+
+
+warned = 0
+compared = 0
+for path in sorted(glob.glob("bench_out/BENCH_*.json")):
+    try:
+        doc = json.load(open(path))
+    except (ValueError, OSError):
+        continue
+    if not isinstance(doc, dict):
+        continue
+    name = doc.get("table")
+    if name is None or name not in base_tables:
+        continue
+    base_rows = {ident(r): r for r in base_tables[name] if isinstance(r, dict)}
+    for row in doc.get("rows", []):
+        if not isinstance(row, dict):
+            continue
+        ref = base_rows.get(ident(row))
+        if ref is None:
+            continue
+        for field, new in row.items():
+            d = direction(field)
+            if d is None or not isinstance(new, (int, float)):
+                continue
+            old = ref.get(field)
+            if not isinstance(old, (int, float)) or old <= 0:
+                continue
+            compared += 1
+            ratio = new / old
+            regressed = ratio > 1 + threshold if d == "lower" else ratio < 1 - threshold
+            if regressed:
+                warned += 1
+                print(f"bench_compare: WARNING {name} {dict(ident(row))} "
+                      f"{field}: {old:.4g} -> {new:.4g} "
+                      f"({(ratio - 1) * 100:+.1f}%, {d}-is-better)")
+
+print(f"bench_compare: {compared} metrics compared against "
+      f"{baseline_path}, {warned} regression warning(s) "
+      f"(threshold {threshold:.0%})")
+EOF

@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
-# Bench smoke (CI): run the serving + sharding + warmstart tables of
-# bench_tables at tiny sizes and leave the rendered tables plus
+# Bench smoke (CI): run the kernels + serving + sharding + warmstart
+# tables of bench_tables at tiny sizes and leave the rendered tables plus
 # machine-readable bench_out/BENCH_*.json behind for the workflow-artifact
-# upload, so the perf trajectory (including the cold-vs-warm FLOPs/step
-# win and store hit rate per PR) accumulates per-PR.
+# upload, so the perf trajectory (kernel old-vs-new ratios, occupancy,
+# the cold-vs-warm FLOPs/step win, store hit rate) accumulates per-PR.
+#
+# Also folds every table into bench_out/BENCH_history_snapshot.json —
+# commit that file as bench_history/BENCH_<pr>.json to extend the
+# in-repo trajectory that scripts/bench_compare.sh checks regressions
+# against.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,8 +18,33 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 mkdir -p bench_out
-BENCH_SMOKE=1 cargo bench --bench bench_tables -- serving sharding warmstart \
+BENCH_SMOKE=1 cargo bench --bench bench_tables -- kernels serving sharding warmstart \
     | tee bench_out/BENCH_smoke_tables.txt
+
+# Fold the per-table JSON rows into one committable snapshot.
+if command -v python3 >/dev/null 2>&1; then
+    python3 - <<'EOF'
+import glob, json
+tables = {}
+for path in sorted(glob.glob("bench_out/BENCH_*.json")):
+    try:
+        doc = json.load(open(path))
+    except (ValueError, OSError):
+        continue
+    if isinstance(doc, dict) and "table" in doc:
+        tables[doc["table"]] = doc.get("rows", [])
+snap = {"provisional": False, "tables": tables}
+with open("bench_out/BENCH_history_snapshot.json", "w") as f:
+    json.dump(snap, f, indent=1)
+    f.write("\n")
+print("bench_smoke: wrote bench_out/BENCH_history_snapshot.json "
+      f"({len(tables)} tables) — commit as bench_history/BENCH_<pr>.json")
+EOF
+fi
+
+# Warn (never fail) when a table regressed >20% vs the last committed
+# snapshot under bench_history/.
+./scripts/bench_compare.sh || true
 
 echo "bench_smoke: emitted artifacts:"
 ls -l bench_out/BENCH_*
