@@ -22,7 +22,7 @@ use fastcache_dit::experiments::{
     EvalConfig, ShardingEval, WarmstartEval,
 };
 use fastcache_dit::metrics::report::{f1, pct, Table};
-use fastcache_dit::model::kernels::{attention_streaming, Act};
+use fastcache_dit::model::kernels::{attention_streaming, attention_streaming_t, Act};
 use fastcache_dit::model::{native, DitModel, ScratchArena, WeightBank};
 use fastcache_dit::rng::Rng;
 use fastcache_dit::scheduler::DenoiseEngine;
@@ -562,6 +562,94 @@ fn kernels() {
             std::hint::black_box(&mm_out);
         });
         row("matmul", old.mean_ms, new.mean_ms);
+
+        // Per-lever rows: each speed lever benched against its own
+        // baseline so the per-PR JSON trajectory tracks them
+        // independently. All three levers are runtime-selectable; the
+        // lanes and threaded paths are bit-identical to scalar serial
+        // (rust/tests/threaded_parity.rs, kernel_parity.rs).
+        let scalar = b.bench(&format!("kernels/{v}/matmul/scalar"), || {
+            pw.w1.forward_kernel(&x, n, Act::None, &mut mm_out, false);
+            std::hint::black_box(&mm_out);
+        });
+        let lanes = b.bench(&format!("kernels/{v}/matmul/lanes"), || {
+            pw.w1.forward_kernel(&x, n, Act::None, &mut mm_out, true);
+            std::hint::black_box(&mm_out);
+        });
+        row("matmul_simd", scalar.mean_ms, lanes.mean_ms);
+
+        let threads =
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1).min(4);
+        let serial = b.bench(&format!("kernels/{v}/matmul/serial"), || {
+            pw.w1.forward_t(&x, n, Act::None, &mut mm_out, 1);
+            std::hint::black_box(&mm_out);
+        });
+        let par = b.bench(&format!("kernels/{v}/matmul/threads{threads}"), || {
+            pw.w1.forward_t(&x, n, Act::None, &mut mm_out, threads);
+            std::hint::black_box(&mm_out);
+        });
+        row("matmul_threaded", serial.mean_ms, par.mean_ms);
+
+        let serial = b.bench(&format!("kernels/{v}/attention/serial"), || {
+            attention_streaming_t(&qkv_buf, n, cfg.heads, d, &mut out, 1);
+            std::hint::black_box(&out);
+        });
+        let par = b.bench(&format!("kernels/{v}/attention/threads{threads}"), || {
+            attention_streaming_t(&qkv_buf, n, cfg.heads, d, &mut out, threads);
+            std::hint::black_box(&out);
+        });
+        row("attention_threaded", serial.mean_ms, par.mean_ms);
+
+        let mut arena_t = ScratchArena::new();
+        arena_t.set_threads(threads);
+        native::block_forward_slice(h.data(), n, &c, &cfg, pw, &mut arena_t, &mut out);
+        let serial = b.bench(&format!("kernels/{v}/block_forward/serial"), || {
+            native::block_forward_slice(h.data(), n, &c, &cfg, pw, &mut arena, &mut out);
+            std::hint::black_box(&out);
+        });
+        let par = b.bench(&format!("kernels/{v}/block_forward/threads{threads}"), || {
+            native::block_forward_slice(h.data(), n, &c, &cfg, pw, &mut arena_t, &mut out);
+            std::hint::black_box(&out);
+        });
+        row("block_threaded", serial.mean_ms, par.mean_ms);
+
+        let mut qb = pw.clone();
+        qb.quantize_int8();
+        let q1 = &qb.int8.as_ref().unwrap().w1;
+        let f32_ms = b.bench(&format!("kernels/{v}/matmul/f32"), || {
+            pw.w1.forward(&x, n, Act::None, &mut mm_out);
+            std::hint::black_box(&mm_out);
+        });
+        let int8_ms = b.bench(&format!("kernels/{v}/matmul/int8"), || {
+            q1.forward(&x, n, Act::None, &mut mm_out);
+            std::hint::black_box(&mm_out);
+        });
+        row("matmul_int8", f32_ms.mean_ms, int8_ms.mean_ms);
+
+        // Quality row: relative L2 drift of a full block under int8
+        // panels — the FID-proxy column for the quantization lever. The
+        // `_err`-suffixed field matches neither compare direction, so
+        // bench_compare.sh reports it without gating on it.
+        let mut q_out = vec![0.0f32; n * d];
+        native::block_forward_slice(h.data(), n, &c, &cfg, pw, &mut arena, &mut out);
+        native::block_forward_slice(h.data(), n, &c, &cfg, &qb, &mut arena, &mut q_out);
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, bq) in out.iter().zip(q_out.iter()) {
+            num += f64::from(a - bq).powi(2);
+            den += f64::from(*a).powi(2);
+        }
+        let rel_err = (num / den.max(1e-30)).sqrt();
+        t.row(&[
+            v.paper_name().to_string(),
+            "block_int8".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            format!("rel err {rel_err:.4}"),
+        ]);
+        json_rows.push(format!(
+            "{{\"variant\":\"{}\",\"op\":\"block_int8\",\"n\":{n},\"int8_rel_err\":{rel_err:.6}}}",
+            v.key()
+        ));
     }
     println!("{}", t.render());
     write_json("kernels", json_rows);

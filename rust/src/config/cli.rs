@@ -16,7 +16,7 @@ pub struct Args {
 const VALUE_OPTS: &[&str] = &[
     "model", "policy", "config", "alpha", "tau-s", "gamma", "steps", "guidance",
     "requests", "max-batch", "queue-depth", "artifacts", "seed", "workers",
-    "knn-k", "merge-target", "motion", "frames", "approx", "fb-rdt",
+    "threads", "knn-k", "merge-target", "motion", "frames", "approx", "fb-rdt",
     "tea-threshold", "l2c-threshold", "static-period", "out", "table",
     "warmup", "iters", "quant", "deadline-every", "deadline-ms",
     "warm-budget-mib", "fit-min-updates",

@@ -7,6 +7,13 @@ use super::model::Variant;
 /// is bounded by physical cores and memory — far below this cap.
 pub const MAX_WORKERS: usize = 8;
 
+/// Upper bound on intra-op kernel threads per shard. The real ceiling is
+/// physical cores — [`ServerConfig::effective_threads`] clamps
+/// `workers × threads` to the host's parallelism at shard startup — so
+/// this static bound only keeps configs sane and host-independent
+/// (`validate()` must give the same verdict on CI and on a laptop).
+pub const MAX_THREADS: usize = 8;
+
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Model variant served by this worker.
@@ -32,6 +39,21 @@ pub struct ServerConfig {
     /// physical cores — on a single-core host extra shards only add
     /// scheduling overhead and shrink per-shard batches.
     pub workers: usize,
+    /// Intra-op kernel threads PER SHARD: the native kernels split each
+    /// block's token dimension across this many scoped workers
+    /// (bit-identical to serial — see rust/tests/threaded_parity.rs).
+    /// Complements `workers`: shards scale across requests, intra-op
+    /// threads make ONE request saturate idle cores when batch occupancy
+    /// is low. Total demand is `workers × threads`, clamped to the
+    /// host's cores at shard startup via
+    /// [`ServerConfig::effective_threads`].
+    pub threads: usize,
+    /// Serve the four big matmuls of every block from int8 panels
+    /// (per-NR-tile symmetric scales, i32 accumulation, fused f32
+    /// dequant). Default OFF: the f32 path is byte-for-byte untouched
+    /// unless this opts in. Quality cost is measured by the
+    /// `block_int8` row of `bench_tables kernels`.
+    pub int8: bool,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
     /// Base seed for weight generation (fixed => reproducible serving).
@@ -54,6 +76,8 @@ impl Default for ServerConfig {
             steps: 50,
             guidance: 7.5,
             workers: 1,
+            threads: 1,
+            int8: false,
             artifacts_dir: "artifacts".to_string(),
             weight_seed: 0xD17,
             warm_budget_bytes: 8 << 20,
@@ -87,6 +111,12 @@ impl ServerConfig {
                 self.queue_depth, self.workers
             ));
         }
+        if self.threads == 0 || self.threads > MAX_THREADS {
+            return Err(format!(
+                "threads must be 1..={MAX_THREADS} (intra-op kernel threads per shard; workers × threads is clamped to the host's cores at startup), got {}",
+                self.threads
+            ));
+        }
         if self.warm_budget_bytes < 1024 {
             return Err(format!(
                 "warm_budget_bytes must be >= 1 KiB (one store entry is a per-layer fit of several KiB), got {}",
@@ -94,6 +124,23 @@ impl ServerConfig {
             ));
         }
         Ok(())
+    }
+
+    /// The intra-op thread count a shard should actually use: the
+    /// configured `threads`, capped so `workers × threads` never exceeds
+    /// the host's available parallelism (and never below 1). Runtime
+    /// clamp rather than a `validate()` error so the same config file
+    /// works on CI runners and many-core hosts alike — oversubscribed
+    /// configs degrade to fewer threads instead of failing or thrashing.
+    pub fn effective_threads(&self) -> usize {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        self.effective_threads_on(cores)
+    }
+
+    /// Core-count-injected form of [`ServerConfig::effective_threads`]
+    /// (testable on any host).
+    pub fn effective_threads_on(&self, cores: usize) -> usize {
+        (cores / self.workers.max(1)).clamp(1, self.threads.max(1))
     }
 }
 
@@ -125,6 +172,38 @@ mod tests {
         assert!(c.validate().is_err());
         c.workers = MAX_WORKERS + 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_nonsense_thread_counts() {
+        let mut c = ServerConfig { threads: MAX_THREADS, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
+        c.threads = 0;
+        assert!(c.validate().is_err());
+        c.threads = MAX_THREADS + 1;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("intra-op"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn effective_threads_caps_shards_times_threads_to_cores() {
+        let c = ServerConfig { workers: 2, threads: 4, ..ServerConfig::default() };
+        assert_eq!(c.effective_threads_on(8), 4); // fits exactly
+        assert_eq!(c.effective_threads_on(4), 2); // halved to fit
+        assert_eq!(c.effective_threads_on(1), 1); // never below 1
+        let solo = ServerConfig { workers: 1, threads: 3, ..ServerConfig::default() };
+        assert_eq!(solo.effective_threads_on(16), 3); // config is the cap
+        assert_eq!(solo.effective_threads_on(2), 2);
+        // And the live probe agrees with some injected core count >= 1.
+        let live = c.effective_threads();
+        assert!((1..=c.threads).contains(&live));
+    }
+
+    #[test]
+    fn int8_defaults_off() {
+        assert!(!ServerConfig::default().int8);
+        let c = ServerConfig { int8: true, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
     }
 
     #[test]

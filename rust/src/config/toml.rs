@@ -209,6 +209,8 @@ pub fn apply(
     usize_key!("server.max_batch", scfg.max_batch);
     usize_key!("server.queue_depth", scfg.queue_depth);
     usize_key!("server.workers", scfg.workers);
+    usize_key!("server.threads", scfg.threads);
+    bool_key!("server.int8", scfg.int8);
     if let Some(v) = doc.get("server.guidance") {
         scfg.guidance = v.as_f64().ok_or("server.guidance must be a number")? as f32;
     }
@@ -249,6 +251,8 @@ fit_min_updates = 6
 [server]
 steps = 25
 max_batch = 2
+threads = 2
+int8 = true
 artifacts_dir = "artifacts"
 warm_budget_mib = 4
 "#;
@@ -278,6 +282,8 @@ warm_budget_mib = 4
         assert_eq!(fc.fit_min_updates, 6);
         assert_eq!(scfg.steps, 25);
         assert_eq!(scfg.max_batch, 2);
+        assert_eq!(scfg.threads, 2);
+        assert!(scfg.int8);
         assert_eq!(scfg.warm_budget_bytes, 4 << 20);
     }
 

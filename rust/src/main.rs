@@ -9,8 +9,14 @@
 //!
 //! Common options: --model s|b|l|xl  --policy fastcache|fbcache|...
 //!   --steps N --requests N --alpha A --tau-s T --gamma G --max-batch B
-//!   --workers W --queue-depth Q --artifacts DIR --seed S
-//!   --motion calm|mixed|stormy --native
+//!   --workers W --threads T --int8 --queue-depth Q --artifacts DIR
+//!   --seed S --motion calm|mixed|stormy --native
+//!
+//! --threads T runs each shard's kernels on T intra-op worker threads
+//! (token-dimension split, bit-identical results; workers × threads is
+//! clamped to the host's cores). --int8 serves the four big block
+//! matmuls from int8 panels (opt-in; quality delta tracked by
+//! `bench_tables kernels`).
 //!
 //! Serve-only: --deadline-every K --deadline-ms D tag every K-th request
 //! with an SLA deadline of D ms; the sharded server admits tagged jobs
@@ -84,6 +90,10 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     scfg.queue_depth =
         args.parse_num("queue-depth", scfg.queue_depth).map_err(anyhow::Error::msg)?;
     scfg.workers = args.parse_num("workers", scfg.workers).map_err(anyhow::Error::msg)?;
+    scfg.threads = args.parse_num("threads", scfg.threads).map_err(anyhow::Error::msg)?;
+    if args.flag("int8") {
+        scfg.int8 = true;
+    }
     scfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     scfg.weight_seed = args.parse_num("seed", scfg.weight_seed).map_err(anyhow::Error::msg)?;
     let warm_mib: usize = args
@@ -209,13 +219,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.parse_num("deadline-ms", 60_000.0).map_err(anyhow::Error::msg)?;
     let native = args.flag("native");
     println!(
-        "serving {} with policy {} (workers={}, max_batch={}/shard, queue_depth={}, steps={})",
+        "serving {} with policy {} (workers={}, threads={}/shard, max_batch={}/shard, queue_depth={}, steps={}{})",
         variant.paper_name(),
         fc.policy,
         scfg.workers,
+        scfg.threads,
         scfg.max_batch,
         scfg.queue_depth,
-        scfg.steps
+        scfg.steps,
+        if scfg.int8 { ", int8" } else { "" }
     );
 
     let scfg2 = scfg.clone();
@@ -262,11 +274,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let report = server.shutdown();
     println!(
-        "served {} requests in {:.2}s — {:.2} req/s, occupancy {:.2}, p50 {:.0} ms, p95 {:.0} ms",
+        "served {} requests in {:.2}s — {:.2} req/s, occupancy {:.2}, intra-op threads {}, p50 {:.0} ms, p95 {:.0} ms",
         report.completed,
         report.wall_s,
         report.throughput_rps(),
         report.mean_batch_size(),
+        report.threads,
         report.e2e.percentile(50.0),
         report.e2e.percentile(95.0)
     );

@@ -122,6 +122,15 @@ impl DitModel {
         self.bank.repack();
     }
 
+    /// Enable int8 serving for the four big matmuls of every block
+    /// (native mode; per-NR-tile symmetric scales, i32 accumulation).
+    /// Sticky across [`DitModel::repack`]. The f32 panels stay resident
+    /// as the reference path, so [`DitModel::weight_bytes`] grows by the
+    /// int8 copy — quantization here buys bandwidth, not capacity.
+    pub fn quantize_int8(&mut self) {
+        self.bank.quantize_int8();
+    }
+
     /// Timestep conditioning: t (len B) -> [B, D].
     pub fn temb(&self, t: &[f32]) -> Result<Tensor> {
         let b = t.len();

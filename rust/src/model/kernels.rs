@@ -50,6 +50,88 @@ pub const NR: usize = 16;
 /// streamed panel is reused MR times from registers/L1).
 pub const MR: usize = 4;
 
+/// Whether this build defaults the microkernel inner loop to the
+/// explicit f32x8-lane path (`--features simd`) or the scalar
+/// accumulator. Exposed as a function so benches and tests can report
+/// the compiled default without repeating the `cfg!` probe (which trips
+/// `unexpected_cfgs` in crates that don't declare the feature).
+pub fn simd_default() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Portable 8-wide f32 vector for the explicit-SIMD microkernel path
+/// (`wide`-style fixed-width array, no unstable `std::simd`, no arch
+/// intrinsics). Multiply and add stay SEPARATE operations — never a
+/// hardware fused mul-add — so every output element sees exactly the
+/// summation the scalar path produces and oracle bit-parity holds on
+/// both paths.
+#[derive(Clone, Copy)]
+struct F32x8([f32; 8]);
+
+impl F32x8 {
+    #[inline(always)]
+    fn from_slice(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> F32x8 {
+        F32x8([x; 8])
+    }
+
+    #[inline(always)]
+    fn mul(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a *= b;
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn add(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a += b;
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn write(self, out: &mut [f32]) {
+        out[..8].copy_from_slice(&self.0);
+    }
+}
+
+/// `acc[j] += xv · w[j]` across one NR-wide accumulator row as two
+/// explicit f32x8 lanes (NR = 16 = 2 × 8; the const assert below pins
+/// that). Per-element arithmetic is identical to the scalar loop.
+#[inline(always)]
+fn axpy_nr_lanes(acc: &mut [f32; NR], xv: f32, w: &[f32]) {
+    const _: () = assert!(NR == 16, "lane kernel assumes two f32x8 per tile row");
+    let xs = F32x8::splat(xv);
+    let lo = F32x8::from_slice(&acc[..8]).add(xs.mul(F32x8::from_slice(&w[..8])));
+    let hi = F32x8::from_slice(&acc[8..]).add(xs.mul(F32x8::from_slice(&w[8..16])));
+    lo.write(&mut acc[..8]);
+    hi.write(&mut acc[8..]);
+}
+
+/// Effective intra-op worker count for an n-row kernel: never more
+/// workers than `unit`-aligned row blocks, never zero.
+fn plan_threads(threads: usize, n: usize, unit: usize) -> usize {
+    threads.clamp(1, n.div_ceil(unit).max(1))
+}
+
+/// Rows per worker, rounded up to a multiple of `unit` so chunk
+/// boundaries stay on microkernel row-block edges. Together with
+/// [`plan_threads`] this guarantees `span × workers >= n` and at most
+/// `workers` chunks.
+fn row_span(n: usize, workers: usize, unit: usize) -> usize {
+    n.div_ceil(workers).div_ceil(unit) * unit
+}
+
 /// SiLU (x · σ(x)), matching jax.nn.silu.
 pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
@@ -151,11 +233,35 @@ impl PackedLinear {
         self.run(x, n, WriteBack::Store(act), out);
     }
 
+    /// [`PackedLinear::forward`] with the token dimension split across
+    /// `threads` scoped workers in MR-aligned row chunks. Each worker
+    /// owns a disjoint slice of `out` and runs the identical per-row
+    /// microkernel — per-row summation never crosses rows, so the result
+    /// is BIT-IDENTICAL to `threads == 1` (rust/tests/threaded_parity.rs
+    /// pins it).
+    pub fn forward_t(&self, x: &[f32], n: usize, act: Act, out: &mut [f32], threads: usize) {
+        self.run_t(x, n, WriteBack::Store(act), out, threads);
+    }
+
     /// `out[r, j] += gate[j] · (x @ W + b)[r, j]` — residual accumulation
     /// written in place, no intermediate buffer.
     pub fn forward_add_gated(&self, x: &[f32], n: usize, gate: &[f32], out: &mut [f32]) {
         assert_eq!(gate.len(), self.m, "gate length mismatch");
         self.run(x, n, WriteBack::AddGated(gate), out);
+    }
+
+    /// Threaded [`PackedLinear::forward_add_gated`] (same bit-identity
+    /// contract as [`PackedLinear::forward_t`]).
+    pub fn forward_add_gated_t(
+        &self,
+        x: &[f32],
+        n: usize,
+        gate: &[f32],
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        assert_eq!(gate.len(), self.m, "gate length mismatch");
+        self.run_t(x, n, WriteBack::AddGated(gate), out, threads);
     }
 
     /// Sparse-row entry point for STR-zeroed inputs: rows of `x` that are
@@ -182,7 +288,62 @@ impl PackedLinear {
         }
     }
 
+    /// Threaded [`PackedLinear::forward_sparse`]: each worker applies the
+    /// same per-row zero-skip to its own row chunk, so the zero-row
+    /// short-circuit and the dense path stay bit-identical under any
+    /// thread count.
+    pub fn forward_sparse_t(&self, x: &[f32], n: usize, act: Act, out: &mut [f32], threads: usize) {
+        assert_eq!(x.len(), n * self.k);
+        assert_eq!(out.len(), n * self.m);
+        let workers = plan_threads(threads, n, MR);
+        if workers <= 1 {
+            return self.forward_sparse(x, n, act, out);
+        }
+        let span = row_span(n, workers, MR);
+        std::thread::scope(|s| {
+            for (wi, och) in out.chunks_mut(span * self.m).enumerate() {
+                let rows = och.len() / self.m;
+                let xs = &x[wi * span * self.k..wi * span * self.k + rows * self.k];
+                s.spawn(move || self.forward_sparse(xs, rows, act, och));
+            }
+        });
+    }
+
+    /// Bench/test entry point exposing the inner-loop choice explicitly:
+    /// `lanes = false` runs the scalar accumulator, `lanes = true` the
+    /// explicit f32x8 path. Both share per-element summation order, so
+    /// both are bit-exact against the oracle; production `forward*` uses
+    /// the `simd` feature's compiled default ([`simd_default`]).
+    pub fn forward_kernel(&self, x: &[f32], n: usize, act: Act, out: &mut [f32], lanes: bool) {
+        self.run_with(x, n, WriteBack::Store(act), out, lanes);
+    }
+
     fn run(&self, x: &[f32], n: usize, wb: WriteBack<'_>, out: &mut [f32]) {
+        self.run_with(x, n, wb, out, simd_default());
+    }
+
+    /// Scoped intra-op split of [`PackedLinear::run`]: MR-aligned row
+    /// chunks, one scoped worker per chunk, disjoint `out` slices via
+    /// `chunks_mut`. Falls back to the serial path when the row count
+    /// cannot feed more than one worker.
+    fn run_t(&self, x: &[f32], n: usize, wb: WriteBack<'_>, out: &mut [f32], threads: usize) {
+        assert_eq!(x.len(), n * self.k, "x length mismatch");
+        assert_eq!(out.len(), n * self.m, "out length mismatch");
+        let workers = plan_threads(threads, n, MR);
+        if workers <= 1 {
+            return self.run(x, n, wb, out);
+        }
+        let span = row_span(n, workers, MR);
+        std::thread::scope(|s| {
+            for (wi, och) in out.chunks_mut(span * self.m).enumerate() {
+                let rows = och.len() / self.m;
+                let xs = &x[wi * span * self.k..wi * span * self.k + rows * self.k];
+                s.spawn(move || self.run(xs, rows, wb, och));
+            }
+        });
+    }
+
+    fn run_with(&self, x: &[f32], n: usize, wb: WriteBack<'_>, out: &mut [f32], lanes: bool) {
         let (k, m) = (self.k, self.m);
         assert_eq!(x.len(), n * k, "x length mismatch");
         assert_eq!(out.len(), n * m, "out length mismatch");
@@ -202,11 +363,19 @@ impl PackedLinear {
                 for a in acc.iter_mut().take(mr) {
                     a[..jw].copy_from_slice(&self.bias[jb..jb + jw]);
                 }
-                for (kk, prow) in panel.chunks_exact(NR).enumerate() {
-                    for (i, a) in acc.iter_mut().enumerate().take(mr) {
-                        let xv = x[(r + i) * k + kk];
-                        for (av, &wv) in a.iter_mut().zip(prow) {
-                            *av += xv * wv;
+                if lanes {
+                    for (kk, prow) in panel.chunks_exact(NR).enumerate() {
+                        for (i, a) in acc.iter_mut().enumerate().take(mr) {
+                            axpy_nr_lanes(a, x[(r + i) * k + kk], prow);
+                        }
+                    }
+                } else {
+                    for (kk, prow) in panel.chunks_exact(NR).enumerate() {
+                        for (i, a) in acc.iter_mut().enumerate().take(mr) {
+                            let xv = x[(r + i) * k + kk];
+                            for (av, &wv) in a.iter_mut().zip(prow) {
+                                *av += xv * wv;
+                            }
                         }
                     }
                 }
@@ -237,6 +406,165 @@ impl PackedLinear {
             }
             r += mr;
         }
+    }
+}
+
+/// Int8-quantized [`PackedLinear`]: the identical `[K, NR]` panel layout
+/// with i8 weights plus one symmetric scale per NR column tile (max |w|
+/// over the tile / 127, computed at quantize time). Activations are
+/// quantized per input row at call time (symmetric max-|x| / 127),
+/// products accumulate in i32, and the f32 dequant
+/// (`acc · x_scale · tile_scale`) is fused into the same
+/// bias/activation/gated-residual epilogues as the f32 path. Opt-in per
+/// model (`ServerConfig.int8` / `WeightBank::quantize_int8`); when
+/// disabled the f32 kernels are byte-for-byte untouched. Parity against
+/// the f32 path is a TOLERANCE tier (rust/tests/kernel_parity.rs); the
+/// quality cost is measured by the `block_int8` row of
+/// `bench_tables kernels`, not assumed.
+#[derive(Clone, Debug)]
+pub struct Int8PackedLinear {
+    k: usize,
+    m: usize,
+    data: Vec<i8>,
+    /// One symmetric scale per NR column tile.
+    scales: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl Int8PackedLinear {
+    /// Quantize an existing packed layer. Panels are already tiled, so
+    /// each tile's scale falls out of one pass over its panel.
+    pub fn quantize(p: &PackedLinear) -> Int8PackedLinear {
+        let (k, m) = (p.k, p.m);
+        let tiles = m.div_ceil(NR);
+        let mut data = vec![0i8; p.data.len()];
+        let mut scales = vec![1.0f32; tiles];
+        for (t, ts) in scales.iter_mut().enumerate() {
+            let panel = &p.data[t * k * NR..(t + 1) * k * NR];
+            let max_abs = panel.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+            *ts = scale;
+            for (q, &v) in data[t * k * NR..(t + 1) * k * NR].iter_mut().zip(panel) {
+                *q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Int8PackedLinear { k, m, data, scales, bias: p.bias.clone() }
+    }
+
+    /// Input features.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output features.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Heap bytes of the i8 panels + per-tile scales + f32 bias.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<i8>()
+            + (self.scales.len() + self.bias.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Int8 counterpart of [`PackedLinear::forward`].
+    pub fn forward(&self, x: &[f32], n: usize, act: Act, out: &mut [f32]) {
+        self.run(x, n, WriteBack::Store(act), out);
+    }
+
+    /// Int8 counterpart of [`PackedLinear::forward_add_gated`].
+    pub fn forward_add_gated(&self, x: &[f32], n: usize, gate: &[f32], out: &mut [f32]) {
+        assert_eq!(gate.len(), self.m, "gate length mismatch");
+        self.run(x, n, WriteBack::AddGated(gate), out);
+    }
+
+    fn run(&self, x: &[f32], n: usize, wb: WriteBack<'_>, out: &mut [f32]) {
+        let (k, m) = (self.k, self.m);
+        assert_eq!(x.len(), n * k, "x length mismatch");
+        assert_eq!(out.len(), n * m, "out length mismatch");
+        let tiles = m.div_ceil(NR);
+        // Per-row symmetric activation quantization. The i8 staging
+        // buffer is a per-call allocation: the int8 path is opt-in and
+        // trades the zero-alloc steady-state contract for half-width
+        // weight panels. Fold it into the ScratchArena if this ever
+        // becomes the default serving path.
+        let mut qx = vec![0i8; n * k];
+        let mut xscale = vec![0.0f32; n];
+        for (r, row) in x.chunks(k).enumerate() {
+            let max_abs = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let s = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+            xscale[r] = s;
+            for (q, &v) in qx[r * k..(r + 1) * k].iter_mut().zip(row) {
+                *q = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        let mut r = 0;
+        while r < n {
+            let mr = MR.min(n - r);
+            for t in 0..tiles {
+                let jb = t * NR;
+                let jw = NR.min(m - jb);
+                let panel = &self.data[t * k * NR..(t + 1) * k * NR];
+                let mut acc = [[0i32; NR]; MR];
+                for (kk, prow) in panel.chunks_exact(NR).enumerate() {
+                    for (i, a) in acc.iter_mut().enumerate().take(mr) {
+                        let xv = qx[(r + i) * k + kk] as i32;
+                        for (av, &wv) in a.iter_mut().zip(prow) {
+                            *av += xv * wv as i32;
+                        }
+                    }
+                }
+                // Dequant fused straight into the epilogues: bias is
+                // added in f32 AFTER dequant (the int8 grid never sees
+                // it), then the same act / gated-residual writeback as
+                // the f32 path.
+                let ts = self.scales[t];
+                for (i, a) in acc.iter().enumerate().take(mr) {
+                    let deq = xscale[r + i] * ts;
+                    let orow = &mut out[(r + i) * m + jb..(r + i) * m + jb + jw];
+                    match wb {
+                        WriteBack::Store(act) => {
+                            for ((o, &av), &b) in
+                                orow.iter_mut().zip(&a[..jw]).zip(&self.bias[jb..jb + jw])
+                            {
+                                *o = apply_act(act, b + av as f32 * deq);
+                            }
+                        }
+                        WriteBack::AddGated(gate) => {
+                            let grow = &gate[jb..jb + jw];
+                            for (((o, &av), &b), &g) in
+                                orow.iter_mut().zip(&a[..jw]).zip(&self.bias[jb..jb + jw]).zip(grow)
+                            {
+                                *o += g * (b + av as f32 * deq);
+                            }
+                        }
+                    }
+                }
+            }
+            r += mr;
+        }
+    }
+}
+
+/// The four big block matmuls in int8 form. Modulation, temb, embed,
+/// and the final layer stay f32 — they are tiny relative to these four
+/// and disproportionately quality-critical (adaLN gates scale every
+/// residual contribution).
+#[derive(Clone, Debug)]
+pub struct Int8Quad {
+    pub wqkv: Int8PackedLinear,
+    pub wo: Int8PackedLinear,
+    pub w1: Int8PackedLinear,
+    pub w2: Int8PackedLinear,
+}
+
+impl Int8Quad {
+    /// Heap bytes across the four quantized layers.
+    pub fn size_bytes(&self) -> usize {
+        self.wqkv.size_bytes()
+            + self.wo.size_bytes()
+            + self.w1.size_bytes()
+            + self.w2.size_bytes()
     }
 }
 
@@ -286,6 +614,34 @@ pub fn layernorm_mod(x: &[f32], n: usize, d: usize, shift: &[f32], scale: &[f32]
     }
 }
 
+/// [`layernorm_mod`] with rows split across scoped workers (MR-aligned
+/// chunks, disjoint output rows). Normalization is strictly per-row, so
+/// the threaded result is bit-identical to the serial one.
+pub fn layernorm_mod_t(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    shift: &[f32],
+    scale: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    let workers = plan_threads(threads, n, MR);
+    if workers <= 1 {
+        return layernorm_mod(x, n, d, shift, scale, out);
+    }
+    assert_eq!(x.len(), n * d);
+    assert_eq!(out.len(), n * d);
+    let span = row_span(n, workers, MR);
+    std::thread::scope(|s| {
+        for (wi, och) in out.chunks_mut(span * d).enumerate() {
+            let rows = och.len() / d;
+            let xs = &x[wi * span * d..wi * span * d + rows * d];
+            s.spawn(move || layernorm_mod(xs, rows, d, shift, scale, och));
+        }
+    });
+}
+
 /// Query-block size of the streaming attention (k/v rows are streamed
 /// once per block instead of once per query).
 const MQ: usize = 4;
@@ -300,35 +656,83 @@ const MQ: usize = 4;
 pub fn attention_streaming(qkv: &[f32], n: usize, heads: usize, d: usize, out: &mut [f32]) {
     let dh = d / heads;
     assert_eq!(heads * dh, d, "d must split evenly into heads");
-    let stride = 3 * d;
-    assert_eq!(qkv.len(), n * stride);
+    assert_eq!(qkv.len(), n * 3 * d);
     assert_eq!(out.len(), n * d);
+    attention_rows(qkv, n, heads, d, 0, n, out);
+}
+
+/// [`attention_streaming`] with the QUERY rows split across scoped
+/// workers (MQ-aligned chunks). Keys/values still stream over all `n`
+/// rows inside every worker — only queries are partitioned, and each
+/// query's online-softmax state (max, denominator, accumulator) is
+/// private to that query, so regrouping queries across workers cannot
+/// change any output bit.
+pub fn attention_streaming_t(
+    qkv: &[f32],
+    n: usize,
+    heads: usize,
+    d: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let dh = d / heads;
+    assert_eq!(heads * dh, d, "d must split evenly into heads");
+    assert_eq!(qkv.len(), n * 3 * d);
+    assert_eq!(out.len(), n * d);
+    let workers = plan_threads(threads, n, MQ);
+    if workers <= 1 {
+        return attention_rows(qkv, n, heads, d, 0, n, out);
+    }
+    let span = row_span(n, workers, MQ);
+    std::thread::scope(|s| {
+        for (wi, och) in out.chunks_mut(span * d).enumerate() {
+            let rows = och.len() / d;
+            s.spawn(move || attention_rows(qkv, n, heads, d, wi * span, rows, och));
+        }
+    });
+}
+
+/// The query-row slice `[r0, r0 + rows)` of the streaming attention,
+/// written to `out_rows` (`rows × d`, row 0 = query `r0`). All heads,
+/// all `n` key/value rows.
+fn attention_rows(
+    qkv: &[f32],
+    n: usize,
+    heads: usize,
+    d: usize,
+    r0: usize,
+    rows: usize,
+    out_rows: &mut [f32],
+) {
+    let dh = d / heads;
+    let stride = 3 * d;
     let scale = 1.0 / (dh as f32).sqrt();
     for h in 0..heads {
         let qo = h * dh;
         let ko = d + h * dh;
         let vo = 2 * d + h * dh;
         let mut i0 = 0;
-        while i0 < n {
-            let bq = MQ.min(n - i0);
+        while i0 < rows {
+            let bq = MQ.min(rows - i0);
             let mut mx = [f32::NEG_INFINITY; MQ];
             let mut den = [0.0f32; MQ];
             // The out slices are the accumulators: zero them explicitly
             // (the buffer may be a reused arena allocation).
             for i in i0..i0 + bq {
-                out[i * d + qo..i * d + qo + dh].fill(0.0);
+                out_rows[i * d + qo..i * d + qo + dh].fill(0.0);
             }
             for j in 0..n {
                 let kj = &qkv[j * stride + ko..j * stride + ko + dh];
                 let vj = &qkv[j * stride + vo..j * stride + vo + dh];
                 for i in 0..bq {
-                    let qrow = &qkv[(i0 + i) * stride + qo..(i0 + i) * stride + qo + dh];
+                    let q_abs = r0 + i0 + i;
+                    let qrow = &qkv[q_abs * stride + qo..q_abs * stride + qo + dh];
                     let mut dot = 0.0f32;
                     for (&qv, &kv) in qrow.iter().zip(kj) {
                         dot += qv * kv;
                     }
                     let logit = dot * scale;
-                    let oi = &mut out[(i0 + i) * d + qo..(i0 + i) * d + qo + dh];
+                    let oi = &mut out_rows[(i0 + i) * d + qo..(i0 + i) * d + qo + dh];
                     if logit > mx[i] {
                         // Rescale the running sum to the new max
                         // (exp(-inf) = 0 cleanly initializes the first
@@ -349,7 +753,7 @@ pub fn attention_streaming(qkv: &[f32], n: usize, heads: usize, d: usize, out: &
             }
             for i in 0..bq {
                 let inv = 1.0 / den[i];
-                for o in out[(i0 + i) * d + qo..(i0 + i) * d + qo + dh].iter_mut() {
+                for o in out_rows[(i0 + i) * d + qo..(i0 + i) * d + qo + dh].iter_mut() {
                     *o *= inv;
                 }
             }
@@ -371,11 +775,28 @@ pub struct ScratchArena {
     qkv: Vec<f32>,
     attn: Vec<f32>,
     hidden: Vec<f32>,
+    /// Intra-op worker count for kernels driven through this arena
+    /// (0 and 1 both mean serial). Lives here because the arena already
+    /// flows through every native forward — block/final entry points
+    /// read it instead of growing a `threads` parameter on each
+    /// signature.
+    threads: usize,
 }
 
 impl ScratchArena {
     pub fn new() -> ScratchArena {
         ScratchArena::default()
+    }
+
+    /// Set the intra-op worker count used by block/final forwards that
+    /// run through this arena (bit-identical output at any setting).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// Intra-op worker count (always >= 1).
+    pub fn threads(&self) -> usize {
+        self.threads.max(1)
     }
 
     /// Total bytes currently reserved across all scratch buffers — the
@@ -445,6 +866,32 @@ pub struct PackedBlock {
     pub w1: PackedLinear,
     pub w2: PackedLinear,
     pub wmod: PackedLinear,
+    /// Int8 copies of the four big matmuls; `None` = pure f32 serving
+    /// (the default — the f32 path is untouched until
+    /// `WeightBank::quantize_int8` opts in).
+    pub int8: Option<Int8Quad>,
+}
+
+impl PackedBlock {
+    /// Build (or refresh) the int8 quad from the current f32 panels.
+    pub fn quantize_int8(&mut self) {
+        self.int8 = Some(Int8Quad {
+            wqkv: Int8PackedLinear::quantize(&self.wqkv),
+            wo: Int8PackedLinear::quantize(&self.wo),
+            w1: Int8PackedLinear::quantize(&self.w1),
+            w2: Int8PackedLinear::quantize(&self.w2),
+        });
+    }
+
+    /// Heap bytes of the packed f32 layers plus any int8 copies.
+    pub fn size_bytes(&self) -> usize {
+        self.wqkv.size_bytes()
+            + self.wo.size_bytes()
+            + self.w1.size_bytes()
+            + self.w2.size_bytes()
+            + self.wmod.size_bytes()
+            + self.int8.as_ref().map_or(0, Int8Quad::size_bytes)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -489,17 +936,7 @@ impl PackedBank {
     /// Heap bytes held by the packed copies (reported separately from the
     /// row-major bank the HLO path uploads).
     pub fn size_bytes(&self) -> usize {
-        let block: usize = self
-            .blocks
-            .iter()
-            .map(|b| {
-                b.wqkv.size_bytes()
-                    + b.wo.size_bytes()
-                    + b.w1.size_bytes()
-                    + b.w2.size_bytes()
-                    + b.wmod.size_bytes()
-            })
-            .sum();
+        let block: usize = self.blocks.iter().map(PackedBlock::size_bytes).sum();
         block
             + self.temb.w1.size_bytes()
             + self.temb.w2.size_bytes()
@@ -696,5 +1133,131 @@ mod tests {
         // A larger request grows it (and it sticks).
         let _ = block_views(&mut a, 32, 8, 48, 32 * 32);
         assert!(a.high_water_bytes() > hw);
+    }
+
+    #[test]
+    fn arena_threads_default_serial_and_never_zero() {
+        let mut a = ScratchArena::new();
+        assert_eq!(a.threads(), 1);
+        a.set_threads(0);
+        assert_eq!(a.threads(), 1);
+        a.set_threads(4);
+        assert_eq!(a.threads(), 4);
+        // The threads knob must not perturb the memory accounting.
+        assert_eq!(a.high_water_bytes(), 0);
+    }
+
+    #[test]
+    fn row_partition_covers_exactly_once() {
+        // span × workers >= n, at most `workers` chunks, unit-aligned
+        // boundaries — for every awkward (n, threads) combination.
+        for n in [1usize, 3, 4, 5, 7, 8, 63, 64, 65, 256] {
+            for threads in [1usize, 2, 3, 4, 8] {
+                let workers = plan_threads(threads, n, MR);
+                assert!(workers >= 1 && workers <= threads.max(1));
+                let span = row_span(n, workers, MR);
+                assert_eq!(span % MR, 0);
+                assert!(span * workers >= n, "n={n} threads={threads}");
+                let chunks = n.div_ceil(span);
+                assert!(chunks <= workers, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_inner_loop_is_bit_identical_to_scalar() {
+        // The explicit f32x8 path must be indistinguishable from the
+        // scalar accumulator at the bit level: same per-element
+        // k-ascending summation, no fused mul-add.
+        for (n, k, m) in [(1, 3, 5), (7, 33, 17), (10, 96, 50)] {
+            let w = rnd_t(70 + n as u64, &[k, m]);
+            let b = rnd_t(71 + n as u64, &[m]);
+            let x = rnd(72 + n as u64, n * k);
+            let p = PackedLinear::pack(&w, Some(&b));
+            let mut scalar = vec![0.0f32; n * m];
+            p.forward_kernel(&x, n, Act::Gelu, &mut scalar, false);
+            let mut lanes = vec![0.0f32; n * m];
+            p.forward_kernel(&x, n, Act::Gelu, &mut lanes, true);
+            assert_eq!(scalar, lanes, "n={n} k={k} m={m}");
+        }
+    }
+
+    #[test]
+    fn threaded_forward_bit_identical_to_serial() {
+        let (k, m) = (48, 40);
+        let w = rnd_t(81, &[k, m]);
+        let b = rnd_t(82, &[m]);
+        let p = PackedLinear::pack(&w, Some(&b));
+        let gate = rnd(83, m);
+        for n in [1usize, 7, 64] {
+            let x = rnd(84 + n as u64, n * k);
+            let mut serial = vec![0.0f32; n * m];
+            p.forward(&x, n, Act::Silu, &mut serial);
+            let base = rnd(85, n * m);
+            let mut serial_gated = base.clone();
+            p.forward_add_gated(&x, n, &gate, &mut serial_gated);
+            for threads in [2usize, 4] {
+                let mut got = vec![0.0f32; n * m];
+                p.forward_t(&x, n, Act::Silu, &mut got, threads);
+                assert_eq!(serial, got, "forward_t n={n} threads={threads}");
+                let mut got_gated = base.clone();
+                p.forward_add_gated_t(&x, n, &gate, &mut got_gated, threads);
+                assert_eq!(serial_gated, got_gated, "gated n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_quantized_forward_within_tolerance_and_billed() {
+        let (n, k, m) = (9, 96, 64);
+        let w = rnd_t(91, &[k, m]);
+        let b = rnd_t(92, &[m]);
+        let x = rnd(93, n * k);
+        let p = PackedLinear::pack(&w, Some(&b));
+        let q = Int8PackedLinear::quantize(&p);
+        assert_eq!((q.k(), q.m()), (k, m));
+        // i8 panels + f32 scales + f32 bias, strictly smaller than the
+        // f32 packed copy.
+        assert!(q.size_bytes() < p.size_bytes());
+        let mut f32_out = vec![0.0f32; n * m];
+        p.forward(&x, n, Act::None, &mut f32_out);
+        let mut q_out = vec![0.0f32; n * m];
+        q.forward(&x, n, Act::None, &mut q_out);
+        let num: f64 = f32_out.iter().zip(&q_out).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = f32_out.iter().map(|a| (*a as f64).powi(2)).sum();
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel > 0.0, "int8 path must actually quantize");
+        assert!(rel < 0.05, "int8 matmul drifted too far from f32: rel={rel}");
+        // Gated epilogue stays consistent with the Store epilogue.
+        let base = rnd(94, n * m);
+        let gate = rnd(95, m);
+        let mut got = base.clone();
+        q.forward_add_gated(&x, n, &gate, &mut got);
+        for r in 0..n {
+            for j in 0..m {
+                let want = base[r * m + j] + gate[j] * q_out[r * m + j];
+                assert!((got[r * m + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_and_constant_tiles_survive_quantization() {
+        // An all-zero weight column tile must quantize to exact zeros
+        // (scale guard), and a zero input row must produce exactly the
+        // bias through the int8 path too.
+        let (k, m) = (16, NR);
+        let w = Tensor::new(vec![0.0f32; k * m], &[k, m]);
+        let b = rnd_t(96, &[m]);
+        let p = PackedLinear::pack(&w, Some(&b));
+        let q = Int8PackedLinear::quantize(&p);
+        let x = rnd(97, 2 * k);
+        let mut out = vec![1.0f32; 2 * m];
+        q.forward(&x, 2, Act::None, &mut out);
+        for (r, orow) in out.chunks(m).enumerate() {
+            for (o, bb) in orow.iter().zip(b.data()) {
+                assert_eq!(o, bb, "row {r}: zero weights must yield exactly the bias");
+            }
+        }
     }
 }

@@ -8,5 +8,5 @@ pub mod native;
 pub mod weights;
 
 pub use dit::{DitModel, ExecMode};
-pub use kernels::{PackedBank, PackedBlock, PackedLinear, ScratchArena};
+pub use kernels::{Int8PackedLinear, Int8Quad, PackedBank, PackedBlock, PackedLinear, ScratchArena};
 pub use weights::{BlockWeights, EmbedWeights, FinalWeights, TembWeights, WeightBank};

@@ -22,7 +22,7 @@ use crate::config::{ModelConfig, MLP_RATIO};
 use crate::tensor::Tensor;
 
 use super::kernels::{
-    self, attention_streaming, block_views, final_views, layernorm_mod, Act, PackedBlock,
+    self, attention_streaming_t, block_views, final_views, layernorm_mod_t, Act, PackedBlock,
     PackedFinal, PackedTemb, ScratchArena,
 };
 
@@ -88,10 +88,13 @@ pub fn block_forward_slice(
     assert_eq!(h.len(), n * d);
     assert_eq!(c.len(), d);
     assert_eq!(out.len(), n * d);
+    let threads = arena.threads();
     let (csilu, modv, xnorm, qkv, attn, hidden) =
         block_views(arena, n, d, 6 * d, n * MLP_RATIO * d);
 
-    // Modulation: silu(c) @ wmod + bmod -> 6 chunks of D.
+    // Modulation: silu(c) @ wmod + bmod -> 6 chunks of D. Single-row —
+    // stays serial and f32 regardless of threads/int8 (adaLN gates scale
+    // every residual contribution, so they are quality-critical).
     for (o, &v) in csilu.iter_mut().zip(c) {
         *o = silu(v);
     }
@@ -107,17 +110,33 @@ pub fn block_forward_slice(
 
     // Attention branch: fused LN+adaLN -> qkv -> streaming attention ->
     // proj with the g1-gated residual folded into the matmul writeback.
-    layernorm_mod(h, n, d, sh1, sc1, xnorm);
-    w.wqkv.forward(xnorm, n, Act::None, qkv);
-    attention_streaming(qkv, n, cfg.heads, d, attn);
-    w.wo.forward_add_gated(attn, n, g1, out);
+    // The four big matmuls switch to the int8 quad when the block
+    // carries one (serial — the int8 path is opt-in and not yet
+    // threaded); everything else splits the token dimension across the
+    // arena's intra-op workers, bit-identical to serial.
+    layernorm_mod_t(h, n, d, sh1, sc1, xnorm, threads);
+    match &w.int8 {
+        Some(q) => q.wqkv.forward(xnorm, n, Act::None, qkv),
+        None => w.wqkv.forward_t(xnorm, n, Act::None, qkv, threads),
+    }
+    attention_streaming_t(qkv, n, cfg.heads, d, attn, threads);
+    match &w.int8 {
+        Some(q) => q.wo.forward_add_gated(attn, n, g1, out),
+        None => w.wo.forward_add_gated_t(attn, n, g1, out, threads),
+    }
 
     // MLP branch over the residual-updated stream, same fusions
     // (bias + GELU in the up-projection epilogue, g2-gated residual in
     // the down-projection writeback).
-    layernorm_mod(out, n, d, sh2, sc2, xnorm);
-    w.w1.forward(xnorm, n, Act::Gelu, hidden);
-    w.w2.forward_add_gated(hidden, n, g2, out);
+    layernorm_mod_t(out, n, d, sh2, sc2, xnorm, threads);
+    match &w.int8 {
+        Some(q) => q.w1.forward(xnorm, n, Act::Gelu, hidden),
+        None => w.w1.forward_t(xnorm, n, Act::Gelu, hidden, threads),
+    }
+    match &w.int8 {
+        Some(q) => q.w2.forward_add_gated(hidden, n, g2, out),
+        None => w.w2.forward_add_gated_t(hidden, n, g2, out, threads),
+    }
 }
 
 /// Allocating convenience wrapper over [`block_forward_slice`].
@@ -146,14 +165,15 @@ pub fn final_forward_slice(
     let d = w.wmod.k();
     assert_eq!(h.len(), n * d);
     assert_eq!(out.len(), n * w.wout.m());
+    let threads = arena.threads();
     let (csilu, modv, xnorm) = final_views(arena, n, d);
     for (o, &v) in csilu.iter_mut().zip(c) {
         *o = silu(v);
     }
     w.wmod.forward(csilu, 1, Act::None, modv);
     let (sh, sc) = modv.split_at(d);
-    layernorm_mod(h, n, d, sh, sc, xnorm);
-    w.wout.forward(xnorm, n, Act::None, out);
+    layernorm_mod_t(h, n, d, sh, sc, xnorm, threads);
+    w.wout.forward_t(xnorm, n, Act::None, out, threads);
 }
 
 /// Token-wise saliency ‖x_t − x_{t−1}‖² (paper Eq. 1) — [N, D] x2 -> [N].
@@ -249,6 +269,38 @@ mod tests {
         let b = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
         assert_eq!(arena.high_water_bytes(), hw);
         assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn threaded_arena_block_is_bit_identical_to_serial() {
+        let cfg = ModelConfig::of(Variant::S);
+        let bank = WeightBank::generate(cfg, 9);
+        let h = rnd_tensor(8, &[17, cfg.d], 1.0); // ragged row-block tail
+        let c = rnd_tensor(9, &[cfg.d], 1.0).into_data();
+        let mut serial = ScratchArena::new();
+        let base = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut serial);
+        for threads in [2usize, 4] {
+            let mut arena = ScratchArena::new();
+            arena.set_threads(threads);
+            let got = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
+            assert_eq!(base.data(), got.data(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn int8_block_engages_and_stays_close_to_f32() {
+        let cfg = ModelConfig::of(Variant::S);
+        let bank = WeightBank::generate(cfg, 9);
+        let h = rnd_tensor(10, &[16, cfg.d], 1.0);
+        let c = rnd_tensor(11, &[cfg.d], 1.0).into_data();
+        let mut arena = ScratchArena::new();
+        let f32_out = block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
+        let mut qb = bank.packed.blocks[0].clone();
+        qb.quantize_int8();
+        let q_out = block_forward(&h, &c, &cfg, &qb, &mut arena);
+        let md = f32_out.max_abs_diff(&q_out);
+        assert!(md > 0.0, "int8 quad must actually be used");
+        assert!(md < 0.5, "int8 block drifted too far from f32: {md}");
     }
 
     #[test]

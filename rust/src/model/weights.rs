@@ -42,6 +42,8 @@ impl BlockWeights {
     }
 
     /// Repack into the tiled microkernel layout (`model::kernels`).
+    /// Always f32-only; `WeightBank::quantize_int8` (sticky across
+    /// `repack`) adds the int8 quad afterwards.
     pub fn pack(&self) -> PackedBlock {
         PackedBlock {
             wqkv: PackedLinear::pack(&self.wqkv, Some(&self.bqkv)),
@@ -49,6 +51,7 @@ impl BlockWeights {
             w1: PackedLinear::pack(&self.w1, Some(&self.b1)),
             w2: PackedLinear::pack(&self.w2, Some(&self.b2)),
             wmod: PackedLinear::pack(&self.wmod, Some(&self.bmod)),
+            int8: None,
         }
     }
 }
@@ -119,6 +122,11 @@ pub struct WeightBank {
     pub blocks: Vec<BlockWeights>,
     pub final_: FinalWeights,
     pub packed: PackedBank,
+    /// Whether [`WeightBank::quantize_int8`] has been applied. Sticky:
+    /// `repack()` re-quantizes from the freshly packed panels, so
+    /// in-place weight mutation can never silently serve stale int8
+    /// copies.
+    int8: bool,
 }
 
 fn dense(rng: &mut Rng, rows: usize, cols: usize, scale: Option<f32>) -> Tensor {
@@ -182,13 +190,13 @@ impl WeightBank {
             final_: final_.pack(),
             embed: embed.pack(),
         };
-        WeightBank { cfg, embed, temb, blocks, final_, packed }
+        WeightBank { cfg, embed, temb, blocks, final_, packed, int8: false }
     }
 
     /// Rebuild the packed layout from the row-major tensors — required
     /// after any in-place weight mutation (e.g. the simulated-bf16
     /// quantization bench), or the native path silently serves stale
-    /// weights.
+    /// weights. Re-applies int8 quantization when it was enabled.
     pub fn repack(&mut self) {
         self.packed = PackedBank {
             blocks: self.blocks.iter().map(BlockWeights::pack).collect(),
@@ -196,6 +204,29 @@ impl WeightBank {
             final_: self.final_.pack(),
             embed: self.embed.pack(),
         };
+        if self.int8 {
+            for b in self.packed.blocks.iter_mut() {
+                b.quantize_int8();
+            }
+        }
+    }
+
+    /// Build int8 copies of every block's four big matmuls from the
+    /// current packed f32 panels (per-NR-tile symmetric scales, i32
+    /// accumulation at serve time). Opt-in and sticky: `repack()` keeps
+    /// the quantization in sync with the f32 panels. The f32 path is
+    /// byte-for-byte untouched — the quads live alongside it (and are
+    /// billed via `packed.size_bytes()` / `DitModel::weight_bytes`).
+    pub fn quantize_int8(&mut self) {
+        self.int8 = true;
+        for b in self.packed.blocks.iter_mut() {
+            b.quantize_int8();
+        }
+    }
+
+    /// Whether int8 serving copies are enabled on this bank.
+    pub fn int8_enabled(&self) -> bool {
+        self.int8
     }
 
     /// Release the packed copy. HLO-mode models call this right after
@@ -278,6 +309,28 @@ mod tests {
         bank.repack();
         assert_ne!(run(&bank), before, "repack must pick up the mutated tensors");
         assert!(bank.packed.size_bytes() > 0);
+    }
+
+    #[test]
+    fn int8_is_sticky_across_repack_and_billed() {
+        let cfg = ModelConfig::of(Variant::S);
+        let mut bank = WeightBank::generate(cfg, 3);
+        assert!(!bank.int8_enabled());
+        assert!(bank.packed.blocks.iter().all(|b| b.int8.is_none()), "int8 must be opt-in");
+        let f32_bytes = bank.packed.size_bytes();
+        bank.quantize_int8();
+        assert!(bank.int8_enabled());
+        assert!(bank.packed.blocks.iter().all(|b| b.int8.is_some()));
+        let q_bytes = bank.packed.size_bytes();
+        assert!(q_bytes > f32_bytes, "int8 copies must be billed");
+        // repack() must rebuild the quads from the fresh panels, not
+        // drop them.
+        for v in bank.blocks[0].wqkv.data_mut().iter_mut() {
+            *v *= 2.0;
+        }
+        bank.repack();
+        assert!(bank.packed.blocks.iter().all(|b| b.int8.is_some()), "int8 sticky across repack");
+        assert_eq!(bank.packed.size_bytes(), q_bytes);
     }
 
     #[test]

@@ -377,7 +377,22 @@ pub struct LaneStepper<'m> {
 
 impl<'m> LaneStepper<'m> {
     pub fn new(model: &'m DitModel, fc: FastCacheConfig) -> LaneStepper<'m> {
-        LaneStepper { model, fc, arena: ScratchArena::new(), temb: TembCache::new() }
+        LaneStepper::with_threads(model, fc, 1)
+    }
+
+    /// A stepper whose kernel calls split each block's token dimension
+    /// across `threads` intra-op workers (1 = serial). Results are
+    /// bit-identical at any setting (rust/tests/threaded_parity.rs);
+    /// only wall-clock changes. The shard loop sizes this from
+    /// `ServerConfig::effective_threads`.
+    pub fn with_threads(
+        model: &'m DitModel,
+        fc: FastCacheConfig,
+        threads: usize,
+    ) -> LaneStepper<'m> {
+        let mut arena = ScratchArena::new();
+        arena.set_threads(threads);
+        LaneStepper { model, fc, arena, temb: TembCache::new() }
     }
 
     pub fn model(&self) -> &'m DitModel {

@@ -72,6 +72,10 @@ pub struct ShardReport {
     /// (reused across every lane and step; stabilizes after the first
     /// step, so steady-state block calls allocate nothing).
     pub scratch_bytes: u64,
+    /// Effective intra-op kernel threads this shard used: the configured
+    /// `ServerConfig::threads` after the `workers × threads ≤ cores`
+    /// clamp applied at startup. 1 means fully serial kernels.
+    pub threads: u64,
 }
 
 impl ShardReport {
@@ -92,6 +96,7 @@ impl ShardReport {
             warm_admissions: 0,
             warm_layers: 0,
             scratch_bytes: 0,
+            threads: 1,
         }
     }
 
@@ -134,6 +139,10 @@ pub struct ServerReport {
     /// Largest per-shard kernel-scratch high-water mark, bytes (each
     /// shard's arena is independent, so the max is the honest figure).
     pub scratch_bytes: u64,
+    /// Largest effective intra-op thread count across shards (every shard
+    /// applies the same `workers × threads ≤ cores` clamp, so in practice
+    /// they agree; max keeps the merge honest if they ever diverge).
+    pub threads: u64,
     /// Warm-start store counters/occupancy at shutdown (`None` when the
     /// server ran without a store).
     pub store: Option<StoreStats>,
@@ -162,6 +171,7 @@ impl ServerReport {
             warm_admissions: 0,
             warm_layers: 0,
             scratch_bytes: 0,
+            threads: 1,
             store,
             shards: Vec::new(),
         };
@@ -179,6 +189,7 @@ impl ServerReport {
             r.warm_admissions += s.warm_admissions;
             r.warm_layers += s.warm_layers;
             r.scratch_bytes = r.scratch_bytes.max(s.scratch_bytes);
+            r.threads = r.threads.max(s.threads);
         }
         r.shards = shards;
         r
@@ -356,9 +367,21 @@ where
     }
     let _drain_guard = DrainOnExit(queue);
 
-    let model = model_factory().expect("model load failed");
-    let mut stepper = LaneStepper::new(&model, fc);
+    let mut model = model_factory().expect("model load failed");
+    if scfg.int8 {
+        // Opt-in int8 serving: quantize every packed block once, up
+        // front, on this shard's own copy — the f32 panels stay resident
+        // for the layers that remain full-precision (LN modulation,
+        // temb/embed/final).
+        model.quantize_int8();
+    }
+    // Intra-op threads: the configured count after the global
+    // `workers × threads ≤ cores` clamp. Bit-identical to serial, so
+    // this only changes wall time, never outputs.
+    let threads = scfg.effective_threads();
+    let mut stepper = LaneStepper::with_threads(&model, fc, threads);
     let mut report = ShardReport::new(shard_id);
+    report.threads = threads as u64;
     // Guard against unvalidated configs: max_batch = 0 must degrade to
     // solo serving, not livelock the admission loop.
     let max_batch = scfg.max_batch.max(1);
@@ -825,5 +848,69 @@ mod tests {
             warm_fps < cold_fps,
             "warm-started burst must execute fewer FLOPs/step: {warm_fps} vs {cold_fps}"
         );
+    }
+
+    /// Serve the same seeded requests through a given server config and
+    /// return the latents keyed by submission order.
+    fn serve_latents(scfg: ServerConfig) -> Vec<Vec<f32>> {
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
+        let mut out = Vec::new();
+        for i in 0..3u64 {
+            let rx = server.submit(GenRequest::simple(i, 200 + i, 4)).unwrap();
+            let resp = rx.recv().unwrap().completed();
+            out.push(resp.result.latent.data().to_vec());
+        }
+        server.shutdown();
+        out
+    }
+
+    #[test]
+    fn threaded_serving_is_bit_identical_and_reported() {
+        // Intra-op threading repartitions rows across scoped workers but
+        // never changes any per-row arithmetic, so served latents must be
+        // bit-identical whatever thread count the host grants. (On a
+        // single-core runner effective_threads clamps to 1 and this
+        // degenerates to serial-vs-serial — the kernel-level parity is
+        // separately pinned by rust/tests/threaded_parity.rs.)
+        let serial = serve_latents(ServerConfig { threads: 1, ..ServerConfig::default() });
+        let scfg = ServerConfig { threads: 4, ..ServerConfig::default() };
+        let threaded = serve_latents(scfg.clone());
+        assert_eq!(serial, threaded, "intra-op threading changed served latents");
+
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        let server = Server::start(scfg.clone(), fc, || Ok(DitModel::native(Variant::S, 1)));
+        let rx = server.submit(GenRequest::simple(0, 200, 4)).unwrap();
+        let _ = rx.recv().unwrap().completed();
+        let report = server.shutdown();
+        assert_eq!(report.threads, scfg.effective_threads() as u64);
+        assert!(report.threads >= 1);
+        assert_eq!(report.shards[0].threads, report.threads);
+    }
+
+    #[test]
+    fn int8_serving_engages_and_stays_close_to_f32() {
+        // `int8: true` must actually route the block matmuls through the
+        // quantized panels (outputs differ from f32) without wrecking the
+        // latent (bounded relative error after a full denoise).
+        let f32_lat = serve_latents(ServerConfig::default());
+        let int8_lat = serve_latents(ServerConfig { int8: true, ..ServerConfig::default() });
+        let mut max_diff = 0.0f32;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in f32_lat.iter().flatten().zip(int8_lat.iter().flatten()) {
+            assert!(b.is_finite(), "int8 serving produced non-finite latent");
+            max_diff = max_diff.max((a - b).abs());
+            num += f64::from(a - b).powi(2);
+            den += f64::from(*a).powi(2);
+        }
+        assert!(
+            max_diff > 0.0,
+            "int8 config served bit-identical latents — quantization never engaged"
+        );
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.5, "int8 latents drifted too far from f32: rel L2 {rel}");
     }
 }

@@ -199,6 +199,65 @@ fn temb_embed_final_parity() {
 }
 
 #[test]
+fn lane_kernel_bit_parity_with_scalar_and_oracle() {
+    // The explicit-f32x8 inner loop keeps per-element summation order
+    // (separate mul then add, never fused), so it is bit-exact against
+    // both the scalar inner loop and the oracle — whichever way the
+    // `simd` feature sets the compiled default.
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 0xD17);
+    let w = &bank.blocks[0];
+    let p = PackedLinear::pack(&w.w1, Some(&w.b1));
+    for &n in &SHAPES_FULL {
+        let x = rnd(90 + n as u64, n * cfg.d);
+        let mut scalar = vec![0.0f32; n * p.m()];
+        p.forward_kernel(&x, n, Act::Gelu, &mut scalar, false);
+        let mut lanes = vec![0.0f32; n * p.m()];
+        p.forward_kernel(&x, n, Act::Gelu, &mut lanes, true);
+        assert_eq!(scalar, lanes, "n={n}: lane inner loop is not bit-identical");
+        // And against the oracle (Act::None so the oracle comparison is
+        // the raw matmul).
+        let mut raw = vec![0.0f32; n * p.m()];
+        p.forward_kernel(&x, n, Act::None, &mut raw, true);
+        let want = oracle::matmul_bias(&x, &w.w1, Some(&w.b1), n);
+        let md = max_abs_diff(&raw, &want);
+        assert!(md < 1e-6, "n={n}: lane kernel drifted from oracle by {md}");
+    }
+}
+
+#[test]
+fn int8_quantized_block_is_a_bounded_tolerance_tier() {
+    // The int8 path is the one deliberate NON-bit-exact tier: per-tile
+    // symmetric weight scales + per-row activation scales bound the
+    // block-level drift, and the tier is strictly opt-in — a fresh bank
+    // serves pure f32.
+    let mut arena = ScratchArena::new();
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 0xD17);
+    assert!(
+        bank.packed.blocks.iter().all(|b| b.int8.is_none()),
+        "int8 must be opt-in: a fresh bank carries no quantized panels"
+    );
+    let mut qbank = bank.clone();
+    qbank.quantize_int8();
+    for &n in &SHAPES_SMALL {
+        let h = rnd_t(95 + n as u64, &[n, cfg.d]);
+        let c = rnd(96, cfg.d);
+        let f32_out = native::block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
+        let q_out = native::block_forward(&h, &c, &cfg, &qbank.packed.blocks[0], &mut arena);
+        let md = f32_out.max_abs_diff(&q_out);
+        assert!(md > 0.0, "n={n}: int8 block is bit-identical — quantization never engaged");
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, b) in f32_out.data().iter().zip(q_out.data()) {
+            num += f64::from(a - b).powi(2);
+            den += f64::from(*a).powi(2);
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.05, "n={n}: int8 block rel L2 {rel} beyond the 5% tier");
+    }
+}
+
+#[test]
 fn block_kernel_is_deterministic_across_arena_reuse() {
     // The same input through a dirty arena (after unrelated shapes) must
     // be bit-identical — stale scratch never leaks into results. This is

@@ -1,0 +1,152 @@
+//! Determinism tests for the intra-op threaded kernels: every `_t` entry
+//! point (and the arena-driven block/final paths) must be BIT-IDENTICAL
+//! to its serial form for any thread count. This is the contract that
+//! lets `--threads` be a pure wall-time knob — served latents never
+//! depend on how many cores the host happened to grant.
+//!
+//! Why bit-identity is achievable at all: the row partition hands each
+//! worker whole MR/MQ-aligned row blocks, and no kernel's per-row (or
+//! per-query) accumulation ever reads another row's state — so
+//! regrouping rows across workers reorders nothing within any one
+//! output element.
+//!
+//! Shapes cover n ∈ {1, 7, 64, 256} (including ragged tails that leave
+//! some workers with short or empty chunks) × threads ∈ {1, 2, 4}.
+
+use fastcache_dit::config::{ModelConfig, Variant};
+use fastcache_dit::model::kernels::{self, Act, PackedLinear, ScratchArena};
+use fastcache_dit::model::{native, WeightBank};
+use fastcache_dit::rng::Rng;
+use fastcache_dit::tensor::Tensor;
+
+const SHAPES: [usize; 4] = [1, 7, 64, 256];
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn rnd(seed: u64, len: usize) -> Vec<f32> {
+    Rng::new(seed).normal_vec(len, 1.0)
+}
+
+#[test]
+fn threaded_packed_matmuls_bit_identical_to_serial() {
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 0xD17);
+    let w = &bank.blocks[0];
+    // qkv [D, 3D] and mlp-up [D, 4D]: ragged and aligned output tiles.
+    for p in [
+        PackedLinear::pack(&w.wqkv, Some(&w.bqkv)),
+        PackedLinear::pack(&w.w1, Some(&w.b1)),
+    ] {
+        for &n in &SHAPES {
+            let x = rnd(100 + n as u64, n * p.k());
+            let gate = rnd(101, p.m());
+            let mut serial = vec![0.0f32; n * p.m()];
+            p.forward(&x, n, Act::Gelu, &mut serial);
+            let mut serial_gated = rnd(102, n * p.m());
+            p.forward_add_gated(&x, n, &gate, &mut serial_gated);
+            for &t in &THREADS {
+                let mut got = vec![0.0f32; n * p.m()];
+                p.forward_t(&x, n, Act::Gelu, &mut got, t);
+                assert_eq!(serial, got, "forward_t n={n} threads={t} diverged");
+                let mut got_gated = rnd(102, n * p.m());
+                p.forward_add_gated_t(&x, n, &gate, &mut got_gated, t);
+                assert_eq!(
+                    serial_gated, got_gated,
+                    "forward_add_gated_t n={n} threads={t} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_sparse_entry_bit_identical_with_zero_rows() {
+    // STR-style inputs: random rows zeroed out. The per-row zero
+    // short-circuit must survive any partition of rows across workers.
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 0xD17);
+    let p = PackedLinear::pack(&bank.blocks[0].w1, Some(&bank.blocks[0].b1));
+    for &n in &SHAPES {
+        let mut x = rnd(110 + n as u64, n * cfg.d);
+        let mut rng = Rng::new(n as u64);
+        for r in 0..n {
+            if rng.uniform() < 0.5 {
+                x[r * cfg.d..(r + 1) * cfg.d].fill(0.0);
+            }
+        }
+        let mut serial = vec![0.0f32; n * p.m()];
+        p.forward_sparse(&x, n, Act::Gelu, &mut serial);
+        for &t in &THREADS {
+            let mut got = vec![0.0f32; n * p.m()];
+            p.forward_sparse_t(&x, n, Act::Gelu, &mut got, t);
+            assert_eq!(serial, got, "forward_sparse_t n={n} threads={t} diverged");
+        }
+    }
+}
+
+#[test]
+fn threaded_layernorm_and_attention_bit_identical_to_serial() {
+    let cfg = ModelConfig::of(Variant::S);
+    let d = cfg.d;
+    for &n in &SHAPES {
+        let x = rnd(120 + n as u64, n * d);
+        let shift = rnd(121, d);
+        let scale = rnd(122, d);
+        let mut ln_serial = vec![0.0f32; n * d];
+        kernels::layernorm_mod(&x, n, d, &shift, &scale, &mut ln_serial);
+        let qkv = rnd(123 + n as u64, n * 3 * d);
+        let mut at_serial = vec![0.0f32; n * d];
+        kernels::attention_streaming(&qkv, n, cfg.heads, d, &mut at_serial);
+        for &t in &THREADS {
+            let mut ln = rnd(124, n * d); // stale scratch must be wiped
+            kernels::layernorm_mod_t(&x, n, d, &shift, &scale, &mut ln, t);
+            assert_eq!(ln_serial, ln, "layernorm_mod_t n={n} threads={t} diverged");
+            let mut at = rnd(125, n * d);
+            kernels::attention_streaming_t(&qkv, n, cfg.heads, d, &mut at, t);
+            assert_eq!(at_serial, at, "attention_streaming_t n={n} threads={t} diverged");
+        }
+    }
+}
+
+#[test]
+fn threaded_arena_block_and_final_bit_identical_to_serial() {
+    // The production route: LaneStepper sets the arena's thread count
+    // once and every block/final call inherits it. Serial and threaded
+    // arenas must produce byte-for-byte the same tensors.
+    let cfg = ModelConfig::of(Variant::S);
+    let bank = WeightBank::generate(cfg, 0xD17);
+    let mut serial_arena = ScratchArena::new();
+    for &n in &SHAPES {
+        let h = Tensor::new(rnd(130 + n as u64, n * cfg.d), &[n, cfg.d]);
+        let c = rnd(131, cfg.d);
+        let want = native::block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut serial_arena);
+        let mut fwant = vec![0.0f32; n * cfg.c_in];
+        native::final_forward_slice(
+            h.data(),
+            n,
+            &c,
+            &bank.packed.final_,
+            &mut serial_arena,
+            &mut fwant,
+        );
+        for &t in &THREADS {
+            let mut arena = ScratchArena::new();
+            arena.set_threads(t);
+            let got = native::block_forward(&h, &c, &cfg, &bank.packed.blocks[0], &mut arena);
+            assert_eq!(
+                want.data(),
+                got.data(),
+                "block n={n} threads={t} diverged from serial"
+            );
+            let mut fgot = vec![0.0f32; n * cfg.c_in];
+            native::final_forward_slice(
+                h.data(),
+                n,
+                &c,
+                &bank.packed.final_,
+                &mut arena,
+                &mut fgot,
+            );
+            assert_eq!(fwant, fgot, "final n={n} threads={t} diverged from serial");
+        }
+    }
+}

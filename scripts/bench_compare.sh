@@ -35,6 +35,11 @@ if base.get("provisional"):
           "real snapshot is committed")
     sys.exit(0)
 base_tables = base.get("tables", {})
+if not any(rows for rows in base_tables.values() if isinstance(rows, list)):
+    print(f"bench_compare: baseline {baseline_path} has no measured rows "
+          "(empty tables) — nothing to compare against until a populated "
+          "snapshot is committed")
+    sys.exit(0)
 
 # Metric direction by field-name convention: *_ns / *_ms / *gflop* /
 # flops_ratio are lower-is-better; rps / occupancy / speedup / hit

@@ -4,6 +4,12 @@
 # machine-readable bench_out/BENCH_*.json behind for the workflow-artifact
 # upload, so the perf trajectory (kernel old-vs-new ratios, occupancy,
 # the cold-vs-warm FLOPs/step win, store hit rate) accumulates per-PR.
+# The kernels table carries one row per speed lever — scalar-vs-lanes
+# (matmul_simd), 1-vs-N intra-op threads (matmul/attention/
+# block_threaded), f32-vs-int8 (matmul_int8) — plus the block_int8
+# quality row, whose int8_rel_err field is informational (the _err
+# suffix matches no compare direction, so bench_compare never gates on
+# it).
 #
 # Also folds every table into bench_out/BENCH_history_snapshot.json —
 # commit that file as bench_history/BENCH_<pr>.json to extend the

@@ -9,18 +9,27 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
-cargo build --release
+# Optional cargo feature set for the build/lint/test legs, e.g.
+# TIER1_FEATURES="--features simd" — CI runs the gate once per feature
+# combination (see .github/workflows/ci.yml). Formatting is
+# feature-independent and runs once, unconditionally.
+FEATURES=${TIER1_FEATURES:-}
+
+# shellcheck disable=SC2086  # FEATURES is intentionally word-split
+cargo build --release $FEATURES
 
 # Lint gate: every target (lib, bins, tests, benches, examples), warnings
 # are errors. Skipped only where the clippy component itself is absent
 # (some minimal toolchains); CI always installs it, so the gate is real
 # there.
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings
+    # shellcheck disable=SC2086
+    cargo clippy --all-targets $FEATURES -- -D warnings
 else
     echo "tier1: WARNING — clippy not installed, lint gate skipped (rustup component add clippy)" >&2
 fi
 
-cargo test -q
+# shellcheck disable=SC2086
+cargo test -q $FEATURES
 cargo fmt --check
 echo "tier1: OK"
