@@ -113,12 +113,12 @@ fn main() {
         let m = DitModel::native(Variant::B, 1);
         b.bench("E2E-native/fastcache dit-b 10 steps", || {
             let mut eng = DenoiseEngine::new(&m, FastCacheConfig::default());
-            std::hint::black_box(eng.generate(&GenRequest::simple(0, 42, 10)).unwrap());
+            std::hint::black_box(eng.generate(&GenRequest::builder(0, 42).steps(10).build().unwrap()).unwrap());
         });
         b.bench("E2E-native/nocache dit-b 10 steps", || {
             let mut eng =
                 DenoiseEngine::new(&m, FastCacheConfig::with_policy(PolicyKind::NoCache));
-            std::hint::black_box(eng.generate(&GenRequest::simple(0, 42, 10)).unwrap());
+            std::hint::black_box(eng.generate(&GenRequest::builder(0, 42).steps(10).build().unwrap()).unwrap());
         });
     }
 }

@@ -57,7 +57,7 @@ fn main() -> Result<()> {
     let mut engine = DenoiseEngine::new(&model, fc);
 
     // 4. Generate.
-    let req = GenRequest::simple(0, 42, 25);
+    let req = GenRequest::builder(0, 42).steps(25).build().unwrap();
     let out = engine.generate(&req)?;
     println!(
         "generated latent {:?} in {:.1} ms",

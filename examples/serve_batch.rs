@@ -84,7 +84,7 @@ fn main() -> Result<()> {
         let mut skip_sum = 0.0;
         for rx in rxs {
             // No deadlines in this workload, so every outcome completes.
-            let resp = rx.recv().context("server dropped response")?.completed();
+            let resp = rx.wait().completed();
             skip_sum += resp.result.skip_ratio();
         }
         let wall = t0.elapsed().as_secs_f64();

@@ -1,0 +1,135 @@
+//! The one client surface: [`GenClient`] + [`ResponseStream`].
+//!
+//! Both the in-process [`crate::server::Server`] and the remote
+//! [`crate::net::NetClient`] implement [`GenClient`], so drivers,
+//! examples, and tests are written once against the trait and run
+//! unchanged over either transport.
+
+use std::sync::mpsc;
+
+use crate::scheduler::GenRequest;
+
+use super::{Event, Outcome, Reject};
+
+/// A handle to one in-flight request: zero or more [`Event::Progress`]
+/// ticks followed by exactly one terminal [`Event::Done`].
+///
+/// Dropping the stream abandons the request (the server still finishes
+/// the work; the terminal event is discarded on the closed channel).
+#[derive(Debug)]
+pub struct ResponseStream {
+    id: u64,
+    rx: mpsc::Receiver<Event>,
+}
+
+impl ResponseStream {
+    /// Wrap a receiving channel. The sender side is owned by whichever
+    /// transport services the request (shard worker or socket reader).
+    pub fn new(id: u64, rx: mpsc::Receiver<Event>) -> ResponseStream {
+        ResponseStream { id, rx }
+    }
+
+    /// The request id this stream answers.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the terminal event has been
+    /// taken (or the serving side vanished).
+    pub fn recv_event(&self) -> Option<Event> {
+        self.rx.recv().ok()
+    }
+
+    /// Block until the terminal outcome, discarding progress ticks.
+    ///
+    /// If the serving side disappears without a terminal event (worker
+    /// panic, socket torn down), this degrades to a typed
+    /// [`ErrorCode::Closed`](super::ErrorCode::Closed) rejection rather
+    /// than hanging or panicking.
+    pub fn wait(self) -> Outcome {
+        loop {
+            match self.rx.recv() {
+                Ok(Event::Progress(_)) => continue,
+                Ok(Event::Done(outcome)) => return outcome,
+                Err(_) => {
+                    return Outcome::Rejected(Reject::closed(
+                        self.id,
+                        "response channel closed before terminal event",
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// The one client API. `submit` answers with a terminal outcome only;
+/// `submit_streaming` additionally delivers per-step progress. Both
+/// return `Err(Reject)` when the request is refused up front (backpressure,
+/// validation, closed transport) — the same [`Reject`] that in-band
+/// rejections carry, so callers handle one error shape.
+pub trait GenClient {
+    /// Submit a request; progress ticks suppressed.
+    fn submit(&self, req: &GenRequest) -> Result<ResponseStream, Reject>;
+
+    /// Submit a request with per-step [`Event::Progress`] ticks.
+    fn submit_streaming(&self, req: &GenRequest) -> Result<ResponseStream, Reject>;
+
+    /// Submit and block to completion, retrying `Busy` rejections with a
+    /// short backoff. Non-retryable rejections (and in-band sheds) come
+    /// back as `Outcome::Rejected`.
+    fn generate(&self, req: &GenRequest) -> Outcome {
+        loop {
+            match self.submit(req) {
+                Ok(stream) => return stream.wait(),
+                Err(rej) if rej.code == super::ErrorCode::Busy => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(rej) => return Outcome::Rejected(rej),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Progress;
+
+    #[test]
+    fn wait_skips_progress_and_returns_terminal() {
+        let (tx, rx) = mpsc::channel();
+        let stream = ResponseStream::new(7, rx);
+        tx.send(Event::Progress(Progress { id: 7, step: 1, total: 2 })).unwrap();
+        tx.send(Event::Done(Outcome::Rejected(Reject::expired(7, 3.0, 1.0)))).unwrap();
+        let out = stream.wait();
+        assert_eq!(out.code(), Some(crate::api::ErrorCode::Expired));
+    }
+
+    #[test]
+    fn wait_degrades_to_closed_on_dropped_sender() {
+        let (tx, rx) = mpsc::channel::<Event>();
+        drop(tx);
+        let out = ResponseStream::new(3, rx).wait();
+        let rej = out.rejected().expect("must be a rejection");
+        assert_eq!(rej.code, crate::api::ErrorCode::Closed);
+        assert_eq!(rej.id, 3);
+    }
+
+    #[test]
+    fn recv_event_yields_events_in_order() {
+        let (tx, rx) = mpsc::channel();
+        let stream = ResponseStream::new(1, rx);
+        tx.send(Event::Progress(Progress { id: 1, step: 1, total: 3 })).unwrap();
+        tx.send(Event::Progress(Progress { id: 1, step: 2, total: 3 })).unwrap();
+        drop(tx);
+        match stream.recv_event() {
+            Some(Event::Progress(p)) => assert_eq!(p.step, 1),
+            other => panic!("expected progress, got {other:?}"),
+        }
+        match stream.recv_event() {
+            Some(Event::Progress(p)) => assert_eq!(p.step, 2),
+            other => panic!("expected progress, got {other:?}"),
+        }
+        assert!(stream.recv_event().is_none());
+    }
+}

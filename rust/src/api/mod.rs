@@ -1,0 +1,295 @@
+//! The public request/response API — ONE set of types shared by every
+//! transport.
+//!
+//! Before the network front door existed, the in-process path grew an
+//! ad-hoc dialect: `GenOutcome` (completed vs shed) on the response
+//! channel, `SubmitError` (queue full vs closed) on the submit call, and
+//! `ShedNotice` as a third shape for dropped jobs. A wire protocol cannot
+//! afford three overlapping vocabularies, so this module collapses them:
+//!
+//! - [`ErrorCode`] — the *stable numeric* rejection codes ([`ErrorCode::Busy`],
+//!   [`ErrorCode::Expired`], [`ErrorCode::Closed`], [`ErrorCode::BadRequest`]).
+//!   The numbers are part of the wire protocol (docs/PROTOCOL.md) and must
+//!   never be reassigned.
+//! - [`Reject`] — one rejection payload for every path: returned by
+//!   `Server::submit` on backpressure, delivered in-band when a queued
+//!   job's deadline expires, produced by `GenRequest::builder()` on
+//!   validation failure, and encoded verbatim into `Error`/`Shed` frames.
+//! - [`Outcome`] — the terminal result of a request: completed or
+//!   rejected. One enum, two transports: `server::worker` sends it on the
+//!   in-process channel and `net` encodes it onto the socket.
+//! - [`Event`] / [`ResponseStream`] — the streaming response surface
+//!   (progress ticks, then exactly one terminal [`Outcome`]).
+//! - [`GenClient`] — the one client trait implemented by both the
+//!   in-process [`crate::server::Server`] and the remote
+//!   [`crate::net::NetClient`].
+
+pub mod client;
+
+use crate::scheduler::GenResult;
+
+pub use client::{GenClient, ResponseStream};
+
+/// Stable numeric rejection codes — identical on the in-process path and
+/// the wire (`Error` frames carry `code as u16`). Part of the protocol:
+/// never renumber, only append.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u16)]
+pub enum ErrorCode {
+    /// Over capacity — refused at the door (queue full or connection
+    /// budget exceeded). Retryable after backoff.
+    Busy = 1,
+    /// The request's SLA deadline passed before service; it was dropped
+    /// unserved. Counts as an SLA miss in `deadline_hit_rate()`.
+    Expired = 2,
+    /// Server shutting down / connection gone. Not retryable here.
+    Closed = 3,
+    /// The request itself is invalid (failed `GenRequest` validation or
+    /// an undecodable frame). Retrying the same request cannot succeed.
+    BadRequest = 4,
+}
+
+impl ErrorCode {
+    /// The wire representation.
+    pub fn code(self) -> u16 {
+        self as u16
+    }
+
+    /// Decode a wire code; `None` for codes this version doesn't know
+    /// (a newer peer — callers should treat unknown codes as terminal).
+    pub fn from_code(c: u16) -> Option<ErrorCode> {
+        match c {
+            1 => Some(ErrorCode::Busy),
+            2 => Some(ErrorCode::Expired),
+            3 => Some(ErrorCode::Closed),
+            4 => Some(ErrorCode::BadRequest),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            ErrorCode::Busy => "busy",
+            ErrorCode::Expired => "expired",
+            ErrorCode::Closed => "closed",
+            ErrorCode::BadRequest => "bad-request",
+        };
+        write!(f, "{name}({})", self.code())
+    }
+}
+
+/// One rejection shape for every path: submit-time backpressure,
+/// pop-time deadline sheds, request validation, connection errors. The
+/// numeric fields are 0.0 where they carry no information (only
+/// `Expired` rejections have meaningful wait/deadline values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reject {
+    pub code: ErrorCode,
+    /// The request this rejection answers (0 = connection-level).
+    pub id: u64,
+    /// Human-readable context. NOT part of the stable protocol — match
+    /// on `code`, never on this string.
+    pub detail: String,
+    /// How long the request sat queued before rejection (ms); 0.0 for
+    /// door-level rejections that never queued.
+    pub waited_ms: f64,
+    /// For `Expired`: the deadline budget (ms from submission) that
+    /// could no longer be met. 0.0 otherwise.
+    pub deadline_ms: f64,
+}
+
+impl Reject {
+    fn new(code: ErrorCode, id: u64, detail: impl Into<String>) -> Reject {
+        Reject { code, id, detail: detail.into(), waited_ms: 0.0, deadline_ms: 0.0 }
+    }
+
+    /// Backpressure: the server is at capacity right now.
+    pub fn busy(id: u64, detail: impl Into<String>) -> Reject {
+        Reject::new(ErrorCode::Busy, id, detail)
+    }
+
+    /// The server (or connection) is gone.
+    pub fn closed(id: u64, detail: impl Into<String>) -> Reject {
+        Reject::new(ErrorCode::Closed, id, detail)
+    }
+
+    /// The request failed validation.
+    pub fn bad_request(id: u64, detail: impl Into<String>) -> Reject {
+        Reject::new(ErrorCode::BadRequest, id, detail)
+    }
+
+    /// A queued job whose absolute deadline passed before admission —
+    /// dropped unserved (an SLA miss, never a vanished denominator).
+    pub fn expired(id: u64, waited_ms: f64, deadline_ms: f64) -> Reject {
+        Reject {
+            code: ErrorCode::Expired,
+            id,
+            detail: format!(
+                "deadline {deadline_ms:.1} ms expired after {waited_ms:.1} ms queued"
+            ),
+            waited_ms,
+            deadline_ms,
+        }
+    }
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (req {}): {}", self.code, self.id, self.detail)
+    }
+}
+
+impl std::error::Error for Reject {}
+
+/// What the server returns per served request.
+#[derive(Debug)]
+pub struct GenResponse {
+    pub result: GenResult,
+    /// Admission latency: submit → lane admitted into the shard's
+    /// active set (ms).
+    pub queued_ms: f64,
+    /// End-to-end latency: submit → response (ms).
+    pub e2e_ms: f64,
+    /// For deadline-tagged requests: whether e2e met the deadline.
+    /// `None` for best-effort requests.
+    pub deadline_met: Option<bool>,
+}
+
+/// Terminal outcome of one request — the SAME enum on the in-process
+/// response channel and (encoded) on the socket. `Completed` carries the
+/// full response; `Rejected` carries the typed code (`Expired` for
+/// deadline sheds, `Busy`/`Closed`/`BadRequest` for door rejections).
+#[derive(Debug)]
+pub enum Outcome {
+    Completed(GenResponse),
+    Rejected(Reject),
+}
+
+impl Outcome {
+    /// The completed response; panics on a rejection (tests and drivers
+    /// that know their requests are servable).
+    pub fn completed(self) -> GenResponse {
+        match self {
+            Outcome::Completed(r) => r,
+            Outcome::Rejected(rej) => panic!("request was rejected: {rej}"),
+        }
+    }
+
+    pub fn as_completed(&self) -> Option<&GenResponse> {
+        match self {
+            Outcome::Completed(r) => Some(r),
+            Outcome::Rejected(_) => None,
+        }
+    }
+
+    pub fn rejected(&self) -> Option<&Reject> {
+        match self {
+            Outcome::Completed(_) => None,
+            Outcome::Rejected(r) => Some(r),
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, Outcome::Rejected(_))
+    }
+
+    /// The rejection code, if any.
+    pub fn code(&self) -> Option<ErrorCode> {
+        self.rejected().map(|r| r.code)
+    }
+}
+
+/// A mid-flight progress tick: the lane finished `step` of `total`
+/// denoise steps. Only emitted for streaming submissions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Progress {
+    pub id: u64,
+    pub step: u32,
+    pub total: u32,
+}
+
+/// One element of a response stream: zero or more `Progress` ticks
+/// followed by exactly one terminal `Done`.
+#[derive(Debug)]
+pub enum Event {
+    Progress(Progress),
+    Done(Outcome),
+}
+
+/// Network-door counters, folded into `ServerReport` at shutdown. All
+/// counters are monotonic sums over the server's lifetime.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections admitted past the concurrency gate.
+    pub conns_accepted: u64,
+    /// Connections refused at accept time (`Busy` frame) because the
+    /// active-connection budget was exhausted.
+    pub conns_door_shed: u64,
+    /// Submit frames decoded and offered to the dispatcher.
+    pub reqs_submitted: u64,
+    /// Requests that completed and streamed a full latent back.
+    pub reqs_completed: u64,
+    /// Requests shed in-band (deadline expired while queued).
+    pub reqs_shed: u64,
+    /// Requests refused at the door with `Busy` (every shard queue full)
+    /// — cheaper than pop-time shedding: no queue slot, no lane, no
+    /// wasted wait.
+    pub reqs_door_shed: u64,
+    /// The subset of `reqs_door_shed` that carried an SLA deadline.
+    /// These count AGAINST `deadline_hit_rate()` — refusing a tagged
+    /// request at the door is still an SLA miss.
+    pub door_sheds_deadline: u64,
+    /// Raw socket traffic (framed bytes, both directions).
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_are_stable() {
+        // These numbers are wire protocol — a change here is a protocol
+        // version bump, not a refactor.
+        assert_eq!(ErrorCode::Busy.code(), 1);
+        assert_eq!(ErrorCode::Expired.code(), 2);
+        assert_eq!(ErrorCode::Closed.code(), 3);
+        assert_eq!(ErrorCode::BadRequest.code(), 4);
+        for c in [ErrorCode::Busy, ErrorCode::Expired, ErrorCode::Closed, ErrorCode::BadRequest]
+        {
+            assert_eq!(ErrorCode::from_code(c.code()), Some(c));
+        }
+        assert_eq!(ErrorCode::from_code(0), None);
+        assert_eq!(ErrorCode::from_code(999), None);
+    }
+
+    #[test]
+    fn reject_constructors_set_codes() {
+        assert_eq!(Reject::busy(1, "q").code, ErrorCode::Busy);
+        assert_eq!(Reject::closed(2, "c").code, ErrorCode::Closed);
+        assert_eq!(Reject::bad_request(3, "b").code, ErrorCode::BadRequest);
+        let e = Reject::expired(4, 12.5, 10.0);
+        assert_eq!(e.code, ErrorCode::Expired);
+        assert_eq!(e.id, 4);
+        assert_eq!(e.waited_ms, 12.5);
+        assert_eq!(e.deadline_ms, 10.0);
+    }
+
+    #[test]
+    fn outcome_accessors_distinguish_rejections() {
+        let rej = Outcome::Rejected(Reject::expired(9, 1.0, 2.0));
+        assert!(rej.is_rejected());
+        assert!(rej.as_completed().is_none());
+        assert_eq!(rej.code(), Some(ErrorCode::Expired));
+        assert_eq!(rej.rejected().unwrap().id, 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "rejected")]
+    fn completed_panics_on_rejection() {
+        Outcome::Rejected(Reject::busy(1, "full")).completed();
+    }
+}

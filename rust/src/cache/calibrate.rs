@@ -172,7 +172,7 @@ mod tests {
 
     fn profile() -> (DitModel, DeltaProfile) {
         let model = DitModel::native(Variant::S, 5);
-        let reqs: Vec<GenRequest> = (0..2).map(|i| GenRequest::simple(i, 30 + i, 6)).collect();
+        let reqs: Vec<GenRequest> = (0..2).map(|i| GenRequest::builder(i, 30 + i).steps(6).build().unwrap()).collect();
         let p = record_profile(&model, &reqs).unwrap();
         (model, p)
     }

@@ -19,7 +19,7 @@ const VALUE_OPTS: &[&str] = &[
     "threads", "knn-k", "merge-target", "motion", "frames", "approx", "fb-rdt",
     "tea-threshold", "l2c-threshold", "static-period", "out", "table",
     "warmup", "iters", "quant", "deadline-every", "deadline-ms",
-    "warm-budget-mib", "fit-min-updates",
+    "warm-budget-mib", "fit-min-updates", "listen", "net-max-conns", "connect",
 ];
 
 impl Args {

@@ -12,4 +12,4 @@ pub use fastcache::{ApproxMode, FastCacheConfig, PolicyKind};
 pub use model::{
     token_bucket, ModelConfig, Variant, BATCH_SIZES, C_IN, MLP_RATIO, N_TOKENS, TOKEN_BUCKETS,
 };
-pub use server::{ServerConfig, MAX_WORKERS};
+pub use server::{ServerConfig, MAX_NET_CONNS, MAX_WORKERS};

@@ -7,6 +7,11 @@ use super::model::Variant;
 /// is bounded by physical cores and memory — far below this cap.
 pub const MAX_WORKERS: usize = 8;
 
+/// Upper bound on the network door's connection budget. The door is
+/// thread-per-connection, so the real ceiling is what the host tolerates
+/// in mostly-idle threads; this static bound keeps configs sane.
+pub const MAX_NET_CONNS: usize = 4096;
+
 /// Upper bound on intra-op kernel threads per shard. The real ceiling is
 /// physical cores — [`ServerConfig::effective_threads`] clamps
 /// `workers × threads` to the host's parallelism at shard startup — so
@@ -63,6 +68,14 @@ pub struct ServerConfig {
     /// `FastCacheConfig::warm_start` is on — the store is not built
     /// otherwise.
     pub warm_budget_bytes: usize,
+    /// Network front door: bind address for the framed-socket listener
+    /// (`--listen 127.0.0.1:7433`, port 0 for ephemeral). `None` (the
+    /// default) serves in-process only — no socket is ever opened.
+    pub listen: Option<String>,
+    /// Connection budget for the network door; connection
+    /// `net_max_conns + 1` is refused with a `Busy` frame before it
+    /// costs a thread.
+    pub net_max_conns: usize,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +94,8 @@ impl Default for ServerConfig {
             artifacts_dir: "artifacts".to_string(),
             weight_seed: 0xD17,
             warm_budget_bytes: 8 << 20,
+            listen: None,
+            net_max_conns: 64,
         }
     }
 }
@@ -121,6 +136,12 @@ impl ServerConfig {
             return Err(format!(
                 "warm_budget_bytes must be >= 1 KiB (one store entry is a per-layer fit of several KiB), got {}",
                 self.warm_budget_bytes
+            ));
+        }
+        if self.net_max_conns == 0 || self.net_max_conns > MAX_NET_CONNS {
+            return Err(format!(
+                "net_max_conns must be 1..={MAX_NET_CONNS} (thread-per-connection door budget), got {}",
+                self.net_max_conns
             ));
         }
         Ok(())
@@ -211,6 +232,22 @@ mod tests {
         let c = ServerConfig { warm_budget_bytes: 100, ..ServerConfig::default() };
         assert!(c.validate().is_err());
         let c = ServerConfig { warm_budget_bytes: 1024, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_nonsense_net_conn_budgets() {
+        assert_eq!(ServerConfig::default().listen, None, "no socket unless asked");
+        let c = ServerConfig { net_max_conns: 0, ..ServerConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ServerConfig { net_max_conns: MAX_NET_CONNS + 1, ..ServerConfig::default() };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("net_max_conns"), "unexpected message: {err}");
+        let c = ServerConfig {
+            listen: Some("127.0.0.1:0".into()),
+            net_max_conns: 2,
+            ..ServerConfig::default()
+        };
         assert!(c.validate().is_ok());
     }
 

@@ -224,6 +224,10 @@ pub fn apply(
         scfg.warm_budget_bytes =
             v.as_usize().ok_or("server.warm_budget_mib must be an integer")? << 20;
     }
+    if let Some(v) = doc.get("net.listen").and_then(|v| v.as_str()) {
+        scfg.listen = Some(v.to_string());
+    }
+    usize_key!("net.max_conns", scfg.net_max_conns);
     fc.validate()?;
     scfg.validate()?;
     Ok(())
@@ -255,6 +259,10 @@ threads = 2
 int8 = true
 artifacts_dir = "artifacts"
 warm_budget_mib = 4
+
+[net]
+listen = "127.0.0.1:0"
+max_conns = 8
 "#;
 
     #[test]
@@ -285,6 +293,8 @@ warm_budget_mib = 4
         assert_eq!(scfg.threads, 2);
         assert!(scfg.int8);
         assert_eq!(scfg.warm_budget_bytes, 4 << 20);
+        assert_eq!(scfg.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(scfg.net_max_conns, 8);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::{FastCacheConfig, ModelConfig, PolicyKind, ServerConfig, Variant};
 use crate::metrics::{clip_display, clip_proxy, FidAccumulator};
@@ -295,7 +295,7 @@ pub fn eval_serving(
             rxs.push(rx);
         }
         for rx in rxs {
-            let _ = rx.recv().context("server dropped a response")?;
+            let _ = rx.wait();
         }
         let report = server.shutdown();
         rows.push(ServeRow {
@@ -400,7 +400,7 @@ pub fn eval_sharding(fc: &FastCacheConfig, e: &ShardingEval) -> Result<Vec<Shard
             .enumerate()
             .map(|(i, req)| {
                 if e.deadline_every > 0 && i % e.deadline_every == 0 {
-                    req.with_deadline(e.deadline_ms)
+                    req.into_builder().deadline_ms(e.deadline_ms).build().unwrap()
                 } else {
                     req
                 }
@@ -414,7 +414,7 @@ pub fn eval_sharding(fc: &FastCacheConfig, e: &ShardingEval) -> Result<Vec<Shard
             rxs.push(rx);
         }
         for rx in rxs {
-            let _ = rx.recv().context("server dropped a response")?;
+            let _ = rx.wait();
         }
         let report = server.shutdown();
         rows.push(ShardingRow {
@@ -553,7 +553,7 @@ pub fn eval_warmstart(fc: &FastCacheConfig, e: &WarmstartEval) -> Result<Vec<War
         let mut skip_den = 0usize;
         let mut fid = FidAccumulator::new();
         for rx in rxs {
-            let resp = rx.recv().context("server dropped a response")?.completed();
+            let resp = rx.wait().completed();
             flops_done += resp.result.flops_done;
             flops_full += resp.result.flops_full;
             steps_run += resp.result.records.len();

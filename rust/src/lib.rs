@@ -26,11 +26,13 @@
 // cfg probe instead of hard-coding a feature list here.
 #![allow(unexpected_cfgs)]
 
+pub mod api;
 pub mod cache;
 pub mod config;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod rng;
 pub mod runtime;
 pub mod scheduler;

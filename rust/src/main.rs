@@ -6,6 +6,11 @@
 //!   serve [opts]                 — start the batching server, replay a
 //!                                  synthetic workload, report latency /
 //!                                  throughput / quality
+//!   serve --listen HOST:PORT     — same server behind the framed-socket
+//!                                  front door (port 0 picks an ephemeral
+//!                                  port; "drain" or EOF on stdin drains)
+//!   client --connect HOST:PORT   — built-in remote client driving the
+//!                                  same workload over the wire
 //!
 //! Common options: --model s|b|l|xl  --policy fastcache|fbcache|...
 //!   --steps N --requests N --alpha A --tau-s T --gamma G --max-batch B
@@ -100,6 +105,11 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
         .parse_num("warm-budget-mib", scfg.warm_budget_bytes >> 20)
         .map_err(anyhow::Error::msg)?;
     scfg.warm_budget_bytes = warm_mib << 20;
+    if let Some(addr) = args.get("listen") {
+        scfg.listen = Some(addr.to_string());
+    }
+    scfg.net_max_conns =
+        args.parse_num("net-max-conns", scfg.net_max_conns).map_err(anyhow::Error::msg)?;
     scfg.validate().map_err(anyhow::Error::msg)?;
     Ok((variant, fc, scfg))
 }
@@ -233,12 +243,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let scfg2 = scfg.clone();
     let server = Server::start(scfg.clone(), fc, move || load_model(&scfg2, native));
 
+    // Network mode: instead of replaying a synthetic workload in-process,
+    // open the front door and serve remote clients until stdin closes (or
+    // a "drain" line arrives), then drain gracefully.
+    if let Some(addr) = &scfg.listen {
+        let net = fastcache_dit::net::NetServer::start(server, addr.as_str(), scfg.net_max_conns)
+            .with_context(|| format!("binding --listen {addr}"))?;
+        println!("listening on {}", net.local_addr());
+        use std::io::BufRead;
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let line = line.unwrap_or_default();
+            let line = line.trim();
+            if line.is_empty() || line == "drain" || line == "quit" {
+                break;
+            }
+        }
+        println!("draining...");
+        let report = net.shutdown();
+        print_report(&report);
+        return Ok(());
+    }
+
     let mut wl = WorkloadGen::new(scfg.weight_seed ^ 0x5EED);
     let reqs = wl.image_set(n_req, scfg.steps, profile);
     let mut pending = Vec::new();
     for (i, req) in reqs.into_iter().enumerate() {
         let req = if deadline_every > 0 && i % deadline_every == 0 {
-            req.with_deadline(deadline_ms)
+            req.into_builder().deadline_ms(deadline_ms).build().unwrap()
         } else {
             req
         };
@@ -248,31 +280,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     for rx in pending {
-        match rx.recv().context("response channel closed")? {
-            fastcache_dit::server::GenOutcome::Completed(resp) => {
-                let sla = match resp.deadline_met {
-                    Some(true) => "  [SLA hit]",
-                    Some(false) => "  [SLA MISS]",
-                    None => "",
-                };
-                let warm = if resp.result.warm_layers > 0 { "  [warm]" } else { "" };
-                println!(
-                    "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}{warm}",
-                    resp.result.id,
-                    resp.e2e_ms,
-                    resp.queued_ms,
-                    resp.result.skip_ratio() * 100.0
-                );
-            }
-            fastcache_dit::server::GenOutcome::Shed(n) => {
-                println!(
-                    "  req {:>3}: SHED after {:>7.1} ms queued (deadline {:.0} ms already passed)",
-                    n.id, n.waited_ms, n.deadline_ms
-                );
-            }
-        }
+        print_outcome(&rx.wait());
     }
     let report = server.shutdown();
+    print_report(&report);
+    Ok(())
+}
+
+/// Print one terminal outcome in the per-request report format shared by
+/// `serve` (in-process replay) and `client` (over the wire).
+fn print_outcome(outcome: &fastcache_dit::api::Outcome) {
+    use fastcache_dit::api::{ErrorCode, Outcome};
+    match outcome {
+        Outcome::Completed(resp) => {
+            let sla = match resp.deadline_met {
+                Some(true) => "  [SLA hit]",
+                Some(false) => "  [SLA MISS]",
+                None => "",
+            };
+            let warm = if resp.result.warm_layers > 0 { "  [warm]" } else { "" };
+            println!(
+                "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}{warm}",
+                resp.result.id,
+                resp.e2e_ms,
+                resp.queued_ms,
+                resp.result.skip_ratio() * 100.0
+            );
+        }
+        Outcome::Rejected(rej) if rej.code == ErrorCode::Expired => {
+            println!(
+                "  req {:>3}: SHED after {:>7.1} ms queued (deadline {:.0} ms already passed)",
+                rej.id, rej.waited_ms, rej.deadline_ms
+            );
+        }
+        Outcome::Rejected(rej) => {
+            println!("  req {:>3}: REJECTED ({}): {}", rej.id, rej.code, rej.detail);
+        }
+    }
+}
+
+fn print_report(report: &fastcache_dit::server::ServerReport) {
     println!(
         "served {} requests in {:.2}s — {:.2} req/s, occupancy {:.2}, intra-op threads {}, p50 {:.0} ms, p95 {:.0} ms",
         report.completed,
@@ -296,6 +343,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "SLA: {} deadline-tagged jobs shed (expired while queued)",
             report.deadline_sheds
+        );
+    }
+    if report.door_sheds > 0 {
+        println!("SLA: {} deadline-tagged requests shed at the door", report.door_sheds);
+    }
+    if let Some(n) = &report.net {
+        println!(
+            "net: {} conns accepted, {} door-shed conns, {} submits ({} completed, {} shed, \
+             {} door-shed), {} B in / {} B out",
+            n.conns_accepted,
+            n.conns_door_shed,
+            n.reqs_submitted,
+            n.reqs_completed,
+            n.reqs_shed,
+            n.reqs_door_shed,
+            n.bytes_in,
+            n.bytes_out
         );
     }
     if let Some(s) = &report.store {
@@ -324,6 +388,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+}
+
+/// Built-in remote client: connects to a `serve --listen` front door and
+/// drives the same workload shapes as in-process `serve`, over the wire.
+///
+/// Options: --connect HOST:PORT (required)  --requests N  --steps N
+///   --seed S  --motion calm|mixed|stormy  --deadline-every K
+///   --deadline-ms D  --progress (stream per-step progress frames)
+fn cmd_client(args: &Args) -> Result<()> {
+    use fastcache_dit::api::{Event, GenClient};
+    let (_, _, scfg) = parse_common(args)?;
+    let addr = args
+        .get("connect")
+        .context("client needs --connect HOST:PORT")?;
+    let n_req: usize = args.parse_num("requests", 4).map_err(anyhow::Error::msg)?;
+    let profile = motion_profile(args.get_or("motion", "mixed"))?;
+    let deadline_every: usize =
+        args.parse_num("deadline-every", 0).map_err(anyhow::Error::msg)?;
+    let deadline_ms: f64 =
+        args.parse_num("deadline-ms", 60_000.0).map_err(anyhow::Error::msg)?;
+    let progress = args.flag("progress");
+
+    let client = fastcache_dit::net::NetClient::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    println!("connected to {addr}, submitting {n_req} requests");
+
+    let mut wl = WorkloadGen::new(scfg.weight_seed ^ 0x5EED);
+    let reqs = wl.image_set(n_req, scfg.steps, profile);
+    let mut pending = Vec::new();
+    for (i, req) in reqs.into_iter().enumerate() {
+        let req = if deadline_every > 0 && i % deadline_every == 0 {
+            req.into_builder().deadline_ms(deadline_ms).build().unwrap()
+        } else {
+            req
+        };
+        let stream = if progress {
+            client.submit_streaming(&req)
+        } else {
+            client.submit(&req)
+        };
+        match stream {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("  req {:>3}: REJECTED ({}): {}", e.id, e.code, e.detail),
+        }
+    }
+    let mut completed = 0usize;
+    for rx in pending {
+        let mut ticks = 0u32;
+        let outcome = loop {
+            match rx.recv_event() {
+                Some(Event::Progress(_)) => ticks += 1,
+                Some(Event::Done(outcome)) => break outcome,
+                None => {
+                    break fastcache_dit::api::Outcome::Rejected(
+                        fastcache_dit::api::Reject::closed(rx.id(), "stream dropped"),
+                    )
+                }
+            }
+        };
+        if progress && ticks > 0 {
+            println!("  req {:>3}: {} progress frames", rx.id(), ticks);
+        }
+        if outcome.as_completed().is_some() {
+            completed += 1;
+        }
+        print_outcome(&outcome);
+    }
+    client.close();
+    println!("client done: {completed}/{n_req} completed");
     Ok(())
 }
 
@@ -334,6 +467,7 @@ fn main() -> Result<()> {
         "info" => cmd_info(&args),
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
-        other => bail!("unknown command {other} (want info|generate|serve)"),
+        "client" => cmd_client(&args),
+        other => bail!("unknown command {other} (want info|generate|serve|client)"),
     }
 }

@@ -1,0 +1,265 @@
+//! The remote client: speaks the framed protocol to a [`super::NetServer`]
+//! and implements the same [`GenClient`] trait as the in-process
+//! [`crate::server::Server`], so driver code is transport-agnostic.
+//!
+//! One reader thread demultiplexes response frames to per-request
+//! [`ResponseStream`]s by request id (`Partial` chunks accumulate
+//! client-side until the `Completed` stats frame closes the latent); one
+//! writer thread owns the socket's write half, fed pre-encoded frames
+//! over a channel — the same no-mutex-across-write discipline as the
+//! server side.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::{ErrorCode, Event, GenClient, Outcome, Progress, Reject, ResponseStream};
+use crate::scheduler::GenRequest;
+
+use super::proto::{self, Frame, VERSION};
+
+/// Client-side state of one in-flight request.
+struct Pending {
+    tx: mpsc::Sender<Event>,
+    /// Latent values accumulated from `Partial` chunks, in offset order.
+    latent: Vec<f32>,
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, Pending>>>;
+
+/// A connected remote client. Dropping it tears the connection down
+/// (in-flight streams resolve to `Rejected(Closed)`); [`NetClient::close`]
+/// says `Goodbye` first for a clean close.
+pub struct NetClient {
+    wtx: mpsc::Sender<Vec<u8>>,
+    pending: PendingMap,
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl NetClient {
+    /// Connect and handshake. Every failure comes back as a typed
+    /// [`Reject`] (connection-level, `id == 0`).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient, Reject> {
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| Reject::closed(0, format!("connect failed: {e}")))?;
+        let _ = stream.set_nodelay(true);
+
+        // Handshake synchronously, before any demux thread exists.
+        stream
+            .write_all(&proto::encode(&Frame::Hello { version: VERSION }))
+            .map_err(|e| Reject::closed(0, format!("handshake write failed: {e}")))?;
+        match proto::read_frame(&mut stream) {
+            Ok(Some((Frame::HelloAck { version }, _))) if version == VERSION => {}
+            Ok(Some((Frame::HelloAck { version }, _))) => {
+                return Err(Reject::bad_request(
+                    0,
+                    format!("server speaks protocol version {version}, want {VERSION}"),
+                ));
+            }
+            Ok(Some((Frame::Error { code, detail, .. }, _))) => {
+                let code = ErrorCode::from_code(code).unwrap_or(ErrorCode::Closed);
+                return Err(Reject { code, id: 0, detail, waited_ms: 0.0, deadline_ms: 0.0 });
+            }
+            Ok(Some((other, _))) => {
+                return Err(Reject::bad_request(0, format!("expected HelloAck, got {other:?}")));
+            }
+            Ok(None) => return Err(Reject::closed(0, "server closed during handshake")),
+            Err(e) => return Err(Reject::closed(0, format!("handshake failed: {e}"))),
+        }
+
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+
+        let writer = {
+            let mut half = stream
+                .try_clone()
+                .map_err(|e| Reject::closed(0, format!("stream clone failed: {e}")))?;
+            std::thread::Builder::new()
+                .name("fastcache-client-writer".into())
+                .spawn(move || {
+                    while let Ok(buf) = wrx.recv() {
+                        if half.write_all(&buf).is_err() {
+                            while wrx.recv().is_ok() {}
+                            return;
+                        }
+                    }
+                    let _ = half.flush();
+                })
+                .expect("spawning client writer")
+        };
+
+        let reader = {
+            let mut half = stream
+                .try_clone()
+                .map_err(|e| Reject::closed(0, format!("stream clone failed: {e}")))?;
+            let pending = Arc::clone(&pending);
+            std::thread::Builder::new()
+                .name("fastcache-client-reader".into())
+                .spawn(move || demux_loop(&mut half, &pending))
+                .expect("spawning client reader")
+        };
+
+        Ok(NetClient {
+            wtx,
+            pending,
+            stream,
+            reader: Some(reader),
+            writer: Some(writer),
+        })
+    }
+
+    fn submit_inner(&self, req: &GenRequest, progress: bool) -> Result<ResponseStream, Reject> {
+        let id = req.id;
+        let (tx, rx) = mpsc::channel();
+        {
+            // Register BEFORE writing: the response cannot race past its
+            // demux entry. Ids must be unique among in-flight requests on
+            // one connection — the wire has no other correlator.
+            let mut map = self.pending.lock().expect("pending map poisoned");
+            if map.contains_key(&id) {
+                return Err(Reject::bad_request(
+                    id,
+                    "request id already in flight on this connection",
+                ));
+            }
+            map.insert(id, Pending { tx, latent: Vec::new() });
+        }
+        let buf = proto::encode(&Frame::Submit { req: req.clone(), progress });
+        if self.wtx.send(buf).is_err() {
+            self.pending.lock().expect("pending map poisoned").remove(&id);
+            return Err(Reject::closed(id, "connection writer gone"));
+        }
+        Ok(ResponseStream::new(id, rx))
+    }
+
+    /// Clean close: `Goodbye`, flush, join the IO threads. In-flight
+    /// requests resolve to `Rejected(Closed)`.
+    pub fn close(mut self) {
+        let _ = self.wtx.send(proto::encode(&Frame::Goodbye));
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        // Replace the sender so the writer's channel disconnects and it
+        // drains + exits; then unblock and join the reader.
+        let (dead_tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.wtx, dead_tx));
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+impl GenClient for NetClient {
+    fn submit(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
+        self.submit_inner(req, false)
+    }
+
+    fn submit_streaming(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
+        self.submit_inner(req, true)
+    }
+}
+
+/// Route one terminal outcome to its pending stream and forget the id.
+fn finish(pending: &PendingMap, id: u64, outcome: Outcome) {
+    if let Some(p) = pending.lock().expect("pending map poisoned").remove(&id) {
+        let _ = p.tx.send(Event::Done(outcome));
+    }
+}
+
+/// Connection is gone: every in-flight request resolves to a typed
+/// `Closed` rejection — a client must never hang on a dead socket.
+fn fail_all(pending: &PendingMap, why: &str) {
+    let mut map = pending.lock().expect("pending map poisoned");
+    for (id, p) in map.drain() {
+        let _ = p.tx.send(Event::Done(Outcome::Rejected(Reject::closed(id, why))));
+    }
+}
+
+fn demux_loop(stream: &mut TcpStream, pending: &PendingMap) {
+    loop {
+        match proto::read_frame(stream) {
+            Ok(Some((Frame::Progress(Progress { id, step, total }), _))) => {
+                if let Some(p) = pending.lock().expect("pending map poisoned").get(&id) {
+                    let _ = p.tx.send(Event::Progress(Progress { id, step, total }));
+                }
+            }
+            Ok(Some((Frame::Partial { id, offset, total, values }, _))) => {
+                let mut map = pending.lock().expect("pending map poisoned");
+                let Some(p) = map.get_mut(&id) else { continue };
+                // Chunks arrive in offset order on one TCP stream; a gap
+                // means the stream is corrupt beyond per-request repair.
+                if offset as usize != p.latent.len()
+                    || p.latent.len() + values.len() > total as usize
+                {
+                    drop(map);
+                    fail_all(pending, "partial chunk out of order — stream corrupt");
+                    return;
+                }
+                p.latent.extend_from_slice(&values);
+            }
+            Ok(Some((Frame::Completed(c), _))) => {
+                let id = c.id;
+                let latent = match pending.lock().expect("pending map poisoned").get_mut(&id) {
+                    Some(p) => std::mem::take(&mut p.latent),
+                    None => continue,
+                };
+                let outcome = match c.into_response(latent) {
+                    Ok(resp) => Outcome::Completed(resp),
+                    Err(e) => Outcome::Rejected(Reject::closed(
+                        id,
+                        format!("response reassembly failed: {e}"),
+                    )),
+                };
+                finish(pending, id, outcome);
+            }
+            Ok(Some((Frame::Shed { id, waited_ms, deadline_ms }, _))) => {
+                finish(pending, id, Outcome::Rejected(Reject::expired(id, waited_ms, deadline_ms)));
+            }
+            Ok(Some((Frame::Error { id, code, detail }, _))) if id != 0 => {
+                let code = ErrorCode::from_code(code).unwrap_or(ErrorCode::Closed);
+                finish(
+                    pending,
+                    id,
+                    Outcome::Rejected(Reject { code, id, detail, waited_ms: 0.0, deadline_ms: 0.0 }),
+                );
+            }
+            // Connection-level error, server Goodbye, clean EOF, or a
+            // broken stream: nothing more will arrive.
+            Ok(Some((Frame::Error { detail, .. }, _))) => {
+                fail_all(pending, &format!("connection error: {detail}"));
+                return;
+            }
+            Ok(Some((Frame::Goodbye, _))) => {
+                fail_all(pending, "server said goodbye");
+                return;
+            }
+            Ok(Some(_)) => {
+                fail_all(pending, "unexpected frame on response path");
+                return;
+            }
+            Ok(None) => {
+                fail_all(pending, "connection closed");
+                return;
+            }
+            Err(e) => {
+                fail_all(pending, &format!("read failed: {e}"));
+                return;
+            }
+        }
+    }
+}

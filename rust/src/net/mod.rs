@@ -1,0 +1,35 @@
+//! The network front door: a TCP listener speaking the framed protocol
+//! in [`proto`], feeding decoded requests into the unchanged sharded
+//! [`crate::server::Dispatcher`] — and a [`NetClient`] implementing the
+//! same [`crate::api::GenClient`] trait the in-process [`crate::server::Server`]
+//! does, so callers are written once and run over either transport.
+//!
+//! Threading model (std-only, no async runtime): one nonblocking accept
+//! loop, thread-per-connection with an atomic reservation gate (the
+//! semaphore), one dedicated writer thread per connection (NO mutex is
+//! ever held across a blocking socket write — response producers hand
+//! encoded frames to the writer over an mpsc channel), and one short-lived
+//! forwarder thread per in-flight request pumping `api::Event`s into
+//! frames.
+//!
+//! Load shedding happens AT THE DOOR: a connection over the
+//! `net.max_conns` budget is answered with `Error{Busy}` and closed
+//! before it costs a thread, and a `Submit` that every shard queue
+//! refuses is answered with `Error{Busy}` without occupying a queue
+//! slot. Deadline-tagged door refusals are counted and folded into
+//! `ServerReport::deadline_hit_rate()` as SLA misses — shedding at the
+//! door must never make the SLA numbers look better.
+//!
+//! Graceful drain ([`NetServer::shutdown`]): stop accepting, unblock
+//! every connection reader (no new submits), let every in-flight lane
+//! finish and its terminal frame flush, send `Goodbye`, join all
+//! threads, then drain the inner server and fold the door counters into
+//! its report. Zero admitted responses are lost.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::NetClient;
+pub use proto::{Frame, ProtoError, MAGIC, MAX_FRAME_LEN, VERSION};
+pub use server::NetServer;

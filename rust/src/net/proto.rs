@@ -1,0 +1,675 @@
+//! The wire protocol: versioned, length-prefixed binary frames with a
+//! zero-dependency codec. The full grammar lives in `docs/PROTOCOL.md`;
+//! this file IS the normative implementation.
+//!
+//! Layout of every frame:
+//!
+//! ```text
+//! [len: u32 LE] [type: u8] [payload: len-1 bytes]
+//! ```
+//!
+//! `len` counts the type byte plus the payload (not itself) and is
+//! bounded by [`MAX_FRAME_LEN`] — an oversized length is rejected
+//! *before* any body byte is read or buffered, so a hostile peer cannot
+//! make the server allocate. All multi-byte integers are little-endian;
+//! floats are IEEE-754 bit patterns in LE byte order (latents round-trip
+//! bit-identically — the loopback parity guarantee rests on this).
+//!
+//! Decoding is strict: every payload must consume exactly its `len`
+//! (trailing bytes are `Malformed`), unknown type bytes are
+//! `UnknownType`, and a `Submit` payload is re-validated through
+//! `GenRequest::builder` — a malformed remote request gets the same
+//! typed `BadRequest` an in-process caller would.
+
+use std::io::Read;
+
+use crate::api::{GenResponse, Progress, Reject};
+use crate::scheduler::{GenRequest, GenResult, Turbulence};
+use crate::tensor::Tensor;
+
+/// `b"FCP1"` interpreted as a little-endian u32 — the first field of the
+/// `Hello`/`HelloAck` payload.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FCP1");
+
+/// Protocol version spoken by this build. Version negotiation is
+/// exact-match (see docs/PROTOCOL.md): a mismatched `Hello` is answered
+/// with `Error{BadRequest}` and the connection closes.
+pub const VERSION: u16 = 1;
+
+/// Upper bound on `len` (type byte + payload): 16 MiB. Far above any
+/// legitimate frame (the largest — `Partial` — is ~64 KiB) while small
+/// enough that a hostile length prefix cannot drive allocation.
+pub const MAX_FRAME_LEN: u32 = 1 << 24;
+
+/// f32 values per `Partial` chunk (64 KiB of payload). Latents larger
+/// than this stream as multiple chunks with increasing `offset`.
+pub const PARTIAL_CHUNK_F32: usize = 16 * 1024;
+
+/// Frame type bytes. Requests are < 0x80, responses ≥ 0x80.
+const T_HELLO: u8 = 0x01;
+const T_SUBMIT: u8 = 0x02;
+const T_GOODBYE: u8 = 0x03;
+const T_HELLO_ACK: u8 = 0x81;
+const T_PROGRESS: u8 = 0x82;
+const T_PARTIAL: u8 = 0x83;
+const T_COMPLETED: u8 = 0x84;
+const T_SHED: u8 = 0x85;
+const T_ERROR: u8 = 0x86;
+
+/// Decode/IO failure modes. `BadRequest` is the one *semantic* rejection:
+/// the frame was structurally valid but the request inside failed the
+/// same validation an in-process caller goes through.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// The input ended mid-frame.
+    Truncated,
+    /// Declared length exceeds [`MAX_FRAME_LEN`] (rejected before read).
+    Oversized { len: u32 },
+    /// `Hello`/`HelloAck` magic mismatch.
+    BadMagic(u32),
+    /// Peer speaks a protocol version this build does not.
+    BadVersion(u16),
+    /// Unknown frame type byte.
+    UnknownType(u8),
+    /// Structurally invalid payload (overrun, trailing bytes, bad UTF-8,
+    /// inconsistent counts).
+    Malformed(String),
+    /// Structurally valid `Submit` whose request failed validation.
+    BadRequest(Reject),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "truncated frame"),
+            ProtoError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds max {MAX_FRAME_LEN}")
+            }
+            ProtoError::BadMagic(m) => write!(f, "bad magic {m:#010x}"),
+            ProtoError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            ProtoError::UnknownType(t) => write!(f, "unknown frame type {t:#04x}"),
+            ProtoError::Malformed(why) => write!(f, "malformed frame: {why}"),
+            ProtoError::BadRequest(rej) => write!(f, "bad request: {rej}"),
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> ProtoError {
+        ProtoError::Io(e)
+    }
+}
+
+/// The serving-stats body of a `Completed` frame. The latent itself
+/// travels in the preceding `Partial` chunks; `shape` here lets the
+/// client reassemble the tensor and cross-check the chunk total.
+/// Per-step records and the conditioning vector are intentionally NOT
+/// shipped (diagnostic payloads, unbounded size) — see docs/PROTOCOL.md.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Completed {
+    pub id: u64,
+    pub shape: Vec<u32>,
+    pub queued_ms: f64,
+    pub e2e_ms: f64,
+    pub deadline_met: Option<bool>,
+    pub wall_ms: f64,
+    pub computed: u64,
+    pub approximated: u64,
+    pub reused: u64,
+    pub token_sites_computed: u64,
+    pub token_sites_total: u64,
+    pub flops_done: u64,
+    pub flops_full: u64,
+    pub flops_padded: u64,
+    pub cache_bytes_peak: u64,
+    pub warm_layers: u64,
+}
+
+impl Completed {
+    /// Project a served response onto the wire stats body.
+    pub fn from_response(resp: &GenResponse) -> Completed {
+        let r = &resp.result;
+        Completed {
+            id: r.id,
+            shape: r.latent.shape().iter().map(|&d| d as u32).collect(),
+            queued_ms: resp.queued_ms,
+            e2e_ms: resp.e2e_ms,
+            deadline_met: resp.deadline_met,
+            wall_ms: r.wall_ms,
+            computed: r.computed as u64,
+            approximated: r.approximated as u64,
+            reused: r.reused as u64,
+            token_sites_computed: r.token_sites_computed,
+            token_sites_total: r.token_sites_total,
+            flops_done: r.flops_done,
+            flops_full: r.flops_full,
+            flops_padded: r.flops_padded,
+            cache_bytes_peak: r.cache_bytes_peak as u64,
+            warm_layers: r.warm_layers as u64,
+        }
+    }
+
+    /// Reassemble a client-side `GenResponse` from this stats body plus
+    /// the latent values collected from `Partial` chunks. The per-step
+    /// records and conditioning vector are not transported, so they come
+    /// back empty — everything else round-trips exactly.
+    pub fn into_response(self, values: Vec<f32>) -> Result<GenResponse, ProtoError> {
+        let shape: Vec<usize> = self.shape.iter().map(|&d| d as usize).collect();
+        let expect: usize = shape.iter().product();
+        if expect != values.len() {
+            return Err(ProtoError::Malformed(format!(
+                "latent shape {:?} wants {expect} values, got {}",
+                self.shape,
+                values.len()
+            )));
+        }
+        Ok(GenResponse {
+            result: GenResult {
+                id: self.id,
+                latent: Tensor::new(values, &shape),
+                cond: Vec::new(),
+                records: Vec::new(),
+                wall_ms: self.wall_ms,
+                computed: self.computed as usize,
+                approximated: self.approximated as usize,
+                reused: self.reused as usize,
+                token_sites_computed: self.token_sites_computed,
+                token_sites_total: self.token_sites_total,
+                flops_done: self.flops_done,
+                flops_full: self.flops_full,
+                flops_padded: self.flops_padded,
+                cache_bytes_peak: self.cache_bytes_peak as usize,
+                warm_layers: self.warm_layers as usize,
+            },
+            queued_ms: self.queued_ms,
+            e2e_ms: self.e2e_ms,
+            deadline_met: self.deadline_met,
+        })
+    }
+}
+
+/// One protocol frame. Request frames flow client → server, response
+/// frames server → client; `Goodbye` is valid in both directions (clean
+/// close / end-of-drain marker).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client handshake: magic + version, first frame on every
+    /// connection.
+    Hello { version: u16 },
+    /// One generation request; `progress` asks for per-step ticks.
+    Submit { req: GenRequest, progress: bool },
+    /// Clean close marker.
+    Goodbye,
+    /// Server handshake answer.
+    HelloAck { version: u16 },
+    /// Per-step progress tick (streaming submissions only).
+    Progress(Progress),
+    /// One chunk of a completed latent: `values` starts at f32 index
+    /// `offset` of a `total`-element tensor.
+    Partial { id: u64, offset: u32, total: u32, values: Vec<f32> },
+    /// Terminal: request served (stats body; latent arrived as
+    /// `Partial` chunks).
+    Completed(Completed),
+    /// Terminal: deadline-tagged request dropped unserved.
+    Shed { id: u64, waited_ms: f64, deadline_ms: f64 },
+    /// Terminal (or connection-level when `id == 0`): typed rejection.
+    /// `code` stays a raw u16 so unknown codes from newer peers
+    /// round-trip; map through `api::ErrorCode::from_code` to interpret.
+    Error { id: u64, code: u16, detail: String },
+}
+
+// ---------------------------------------------------------------- encode
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn str(&mut self, s: &str) {
+        let bytes = s.as_bytes();
+        // Detail strings are advisory; clamp instead of erroring so an
+        // over-long message can never make a frame unencodable.
+        let take = bytes.len().min(u16::MAX as usize);
+        self.u16(take as u16);
+        self.buf.extend_from_slice(&bytes[..take]);
+    }
+}
+
+/// Encode one frame: `[len][type][payload]`, ready to write.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::with_capacity(64) };
+    // Reserve the length prefix; backfilled below.
+    e.u32(0);
+    match frame {
+        Frame::Hello { version } => {
+            e.u8(T_HELLO);
+            e.u32(MAGIC);
+            e.u16(*version);
+        }
+        Frame::Submit { req, progress } => {
+            e.u8(T_SUBMIT);
+            e.u64(req.id);
+            e.u64(req.seed);
+            e.u64(req.cond_seed);
+            e.f32(req.guidance);
+            e.u32(req.steps as u32);
+            match req.deadline_ms {
+                Some(ms) => {
+                    e.u8(1);
+                    e.f64(ms);
+                }
+                None => e.u8(0),
+            }
+            match &req.turbulence {
+                Some(t) => {
+                    e.u8(1);
+                    e.f32(t.amp);
+                    e.u64(t.seed);
+                    e.u32(t.tokens.len() as u32);
+                    for &tok in &t.tokens {
+                        e.u32(tok as u32);
+                    }
+                }
+                None => e.u8(0),
+            }
+            match &req.init_latent {
+                Some(t) => {
+                    e.u8(1);
+                    e.u8(t.shape().len() as u8);
+                    for &d in t.shape() {
+                        e.u32(d as u32);
+                    }
+                    e.f32s(t.data());
+                }
+                None => e.u8(0),
+            }
+            e.u8(u8::from(*progress));
+        }
+        Frame::Goodbye => e.u8(T_GOODBYE),
+        Frame::HelloAck { version } => {
+            e.u8(T_HELLO_ACK);
+            e.u32(MAGIC);
+            e.u16(*version);
+        }
+        Frame::Progress(p) => {
+            e.u8(T_PROGRESS);
+            e.u64(p.id);
+            e.u32(p.step);
+            e.u32(p.total);
+        }
+        Frame::Partial { id, offset, total, values } => {
+            e.u8(T_PARTIAL);
+            e.u64(*id);
+            e.u32(*offset);
+            e.u32(*total);
+            e.u32(values.len() as u32);
+            e.f32s(values);
+        }
+        Frame::Completed(c) => {
+            e.u8(T_COMPLETED);
+            e.u64(c.id);
+            e.u8(c.shape.len() as u8);
+            for &d in &c.shape {
+                e.u32(d);
+            }
+            e.f64(c.queued_ms);
+            e.f64(c.e2e_ms);
+            e.u8(match c.deadline_met {
+                None => 0,
+                Some(false) => 1,
+                Some(true) => 2,
+            });
+            e.f64(c.wall_ms);
+            e.u64(c.computed);
+            e.u64(c.approximated);
+            e.u64(c.reused);
+            e.u64(c.token_sites_computed);
+            e.u64(c.token_sites_total);
+            e.u64(c.flops_done);
+            e.u64(c.flops_full);
+            e.u64(c.flops_padded);
+            e.u64(c.cache_bytes_peak);
+            e.u64(c.warm_layers);
+        }
+        Frame::Shed { id, waited_ms, deadline_ms } => {
+            e.u8(T_SHED);
+            e.u64(*id);
+            e.f64(*waited_ms);
+            e.f64(*deadline_ms);
+        }
+        Frame::Error { id, code, detail } => {
+            e.u8(T_ERROR);
+            e.u64(*id);
+            e.u16(*code);
+            e.str(detail);
+        }
+    }
+    let len = (e.buf.len() - 4) as u32;
+    debug_assert!(len <= MAX_FRAME_LEN, "encoded frame exceeds MAX_FRAME_LEN");
+    e.buf[0..4].copy_from_slice(&len.to_le_bytes());
+    e.buf
+}
+
+/// Chunk a completed latent into `Partial` frames of at most
+/// [`PARTIAL_CHUNK_F32`] values each, offsets increasing. An empty
+/// latent still yields one (empty) chunk so the receiver always sees the
+/// declared total at least once.
+pub fn partial_frames(id: u64, values: &[f32]) -> Vec<Frame> {
+    let total = values.len() as u32;
+    if values.is_empty() {
+        return vec![Frame::Partial { id, offset: 0, total, values: Vec::new() }];
+    }
+    values
+        .chunks(PARTIAL_CHUNK_F32)
+        .enumerate()
+        .map(|(i, chunk)| Frame::Partial {
+            id,
+            offset: (i * PARTIAL_CHUNK_F32) as u32,
+            total,
+            values: chunk.to_vec(),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked cursor over one frame's payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ProtoError::Malformed(format!(
+                "payload overrun: want {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, ProtoError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// A u32 count that must be plausible for `elem_bytes`-sized elements
+    /// within the remaining payload — checked BEFORE allocating, so a
+    /// hostile count cannot drive a huge `Vec::with_capacity`.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, ProtoError> {
+        let n = self.u32()? as usize;
+        let avail = self.buf.len() - self.pos;
+        if n.saturating_mul(elem_bytes) > avail {
+            return Err(ProtoError::Malformed(format!(
+                "count {n} x {elem_bytes}B exceeds remaining payload {avail}B"
+            )));
+        }
+        Ok(n)
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ProtoError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn str(&mut self) -> Result<String, ProtoError> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| ProtoError::Malformed("detail string is not UTF-8".into()))
+    }
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_handshake(cur: &mut Cur) -> Result<u16, ProtoError> {
+    let magic = cur.u32()?;
+    if magic != MAGIC {
+        return Err(ProtoError::BadMagic(magic));
+    }
+    cur.u16()
+}
+
+fn decode_submit(cur: &mut Cur) -> Result<Frame, ProtoError> {
+    let id = cur.u64()?;
+    let seed = cur.u64()?;
+    let cond_seed = cur.u64()?;
+    let guidance = cur.f32()?;
+    let steps = cur.u32()? as usize;
+    let deadline = if cur.u8()? != 0 { Some(cur.f64()?) } else { None };
+    let turbulence = if cur.u8()? != 0 {
+        let amp = cur.f32()?;
+        let tseed = cur.u64()?;
+        let n = cur.count(4)?;
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..n {
+            tokens.push(cur.u32()? as usize);
+        }
+        Some(Turbulence { tokens, amp, seed: tseed })
+    } else {
+        None
+    };
+    let init_latent = if cur.u8()? != 0 {
+        let ndims = cur.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(cur.u32()? as usize);
+        }
+        let want: usize = shape.iter().product();
+        let avail = cur.buf.len() - cur.pos;
+        if want.saturating_mul(4) > avail {
+            return Err(ProtoError::Malformed(format!(
+                "init_latent shape {shape:?} wants {want} f32s, payload has {avail} bytes"
+            )));
+        }
+        Some(Tensor::new(cur.f32s(want)?, &shape))
+    } else {
+        None
+    };
+    let progress = cur.u8()? != 0;
+
+    // Same validation gate as the in-process path: route the decoded
+    // fields through the builder so a hostile frame cannot smuggle a
+    // request an in-process caller could not construct.
+    let mut b = GenRequest::builder(id, seed).cond_seed(cond_seed).guidance(guidance).steps(steps);
+    if let Some(ms) = deadline {
+        b = b.deadline_ms(ms);
+    }
+    if let Some(t) = turbulence {
+        b = b.turbulence(t);
+    }
+    if let Some(t) = init_latent {
+        b = b.init_latent(t);
+    }
+    let req = b.build().map_err(ProtoError::BadRequest)?;
+    Ok(Frame::Submit { req, progress })
+}
+
+fn decode_completed(cur: &mut Cur) -> Result<Completed, ProtoError> {
+    let id = cur.u64()?;
+    let ndims = cur.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        shape.push(cur.u32()?);
+    }
+    let queued_ms = cur.f64()?;
+    let e2e_ms = cur.f64()?;
+    let deadline_met = match cur.u8()? {
+        0 => None,
+        1 => Some(false),
+        2 => Some(true),
+        other => {
+            return Err(ProtoError::Malformed(format!("bad deadline_met tag {other}")));
+        }
+    };
+    Ok(Completed {
+        id,
+        shape,
+        queued_ms,
+        e2e_ms,
+        deadline_met,
+        wall_ms: cur.f64()?,
+        computed: cur.u64()?,
+        approximated: cur.u64()?,
+        reused: cur.u64()?,
+        token_sites_computed: cur.u64()?,
+        token_sites_total: cur.u64()?,
+        flops_done: cur.u64()?,
+        flops_full: cur.u64()?,
+        flops_padded: cur.u64()?,
+        cache_bytes_peak: cur.u64()?,
+        warm_layers: cur.u64()?,
+    })
+}
+
+/// Decode one frame from the front of `buf`. Returns the frame and the
+/// total bytes consumed (length prefix included). `Truncated` when the
+/// buffer ends mid-frame; `Oversized` is raised from the 4-byte prefix
+/// alone, before any body inspection.
+pub fn decode_slice(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
+    if buf.len() < 4 {
+        return Err(ProtoError::Truncated);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(ProtoError::Oversized { len });
+    }
+    if len == 0 {
+        return Err(ProtoError::Malformed("zero-length frame (missing type byte)".into()));
+    }
+    let end = 4 + len as usize;
+    if buf.len() < end {
+        return Err(ProtoError::Truncated);
+    }
+    let ty = buf[4];
+    let mut cur = Cur { buf: &buf[5..end], pos: 0 };
+    let frame = match ty {
+        T_HELLO => Frame::Hello { version: decode_handshake(&mut cur)? },
+        T_SUBMIT => decode_submit(&mut cur)?,
+        T_GOODBYE => Frame::Goodbye,
+        T_HELLO_ACK => Frame::HelloAck { version: decode_handshake(&mut cur)? },
+        T_PROGRESS => {
+            let id = cur.u64()?;
+            let step = cur.u32()?;
+            let total = cur.u32()?;
+            Frame::Progress(Progress { id, step, total })
+        }
+        T_PARTIAL => {
+            let id = cur.u64()?;
+            let offset = cur.u32()?;
+            let total = cur.u32()?;
+            let n = cur.count(4)?;
+            Frame::Partial { id, offset, total, values: cur.f32s(n)? }
+        }
+        T_COMPLETED => Frame::Completed(decode_completed(&mut cur)?),
+        T_SHED => {
+            let id = cur.u64()?;
+            let waited_ms = cur.f64()?;
+            let deadline_ms = cur.f64()?;
+            Frame::Shed { id, waited_ms, deadline_ms }
+        }
+        T_ERROR => {
+            let id = cur.u64()?;
+            let code = cur.u16()?;
+            let detail = cur.str()?;
+            Frame::Error { id, code, detail }
+        }
+        other => return Err(ProtoError::UnknownType(other)),
+    };
+    cur.done()?;
+    Ok((frame, end))
+}
+
+/// Read one frame from a blocking reader. `Ok(None)` on clean EOF at a
+/// frame boundary; `Truncated` on EOF mid-frame. The length prefix is
+/// validated BEFORE the body is read, so an oversized declaration costs
+/// the peer 4 bytes of our attention and no allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(Frame, usize)>, ProtoError> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(ProtoError::Truncated);
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(hdr);
+    if len > MAX_FRAME_LEN {
+        return Err(ProtoError::Oversized { len });
+    }
+    if len == 0 {
+        return Err(ProtoError::Malformed("zero-length frame (missing type byte)".into()));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ProtoError::Truncated
+        } else {
+            ProtoError::Io(e)
+        }
+    })?;
+    // Reuse the strict slice decoder on [len][body] to keep one code path.
+    let mut framed = Vec::with_capacity(4 + body.len());
+    framed.extend_from_slice(&hdr);
+    framed.extend_from_slice(&body);
+    let (frame, consumed) = decode_slice(&framed)?;
+    debug_assert_eq!(consumed, framed.len());
+    Ok(Some((frame, consumed)))
+}

@@ -1,0 +1,472 @@
+//! The listener side: accept loop, connection tasks, door-level load
+//! shedding, graceful drain.
+//!
+//! Lock discipline (the pelikan checklist, adapted to std threads):
+//! - Counters are relaxed atomics — they carry statistics, not
+//!   synchronization; the shutdown snapshot happens after `join()`ing
+//!   every thread, and the join edge is what orders the final reads.
+//! - The connection gate is a `fetch_add` reservation: increment FIRST,
+//!   then compare the value we reserved. Two racing accepts can never
+//!   both conclude "there is one slot left" (no TOCTOU) because the RMW
+//!   is atomic; an over-limit reservation rolls itself back.
+//! - No mutex is held across a blocking socket write: each connection
+//!   has ONE writer thread owning the socket's write half, fed by an
+//!   mpsc channel of pre-encoded frames. Producers (the reader, the
+//!   per-request forwarders) only ever block on the channel, never on
+//!   the peer's receive window.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::{ErrorCode, Event, NetStats, Outcome, ResponseStream};
+use crate::server::{Server, ServerReport};
+
+use super::proto::{self, Frame, ProtoError, VERSION};
+
+/// Relaxed-ordering door counters (see the module's lock-discipline
+/// note: the final snapshot is ordered by thread joins, not by these
+/// loads).
+#[derive(Default)]
+struct Counters {
+    conns_accepted: AtomicU64,
+    conns_door_shed: AtomicU64,
+    reqs_submitted: AtomicU64,
+    reqs_completed: AtomicU64,
+    reqs_shed: AtomicU64,
+    reqs_door_shed: AtomicU64,
+    door_sheds_deadline: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> NetStats {
+        NetStats {
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            conns_door_shed: self.conns_door_shed.load(Ordering::Relaxed),
+            reqs_submitted: self.reqs_submitted.load(Ordering::Relaxed),
+            reqs_completed: self.reqs_completed.load(Ordering::Relaxed),
+            reqs_shed: self.reqs_shed.load(Ordering::Relaxed),
+            reqs_door_shed: self.reqs_door_shed.load(Ordering::Relaxed),
+            door_sheds_deadline: self.door_sheds_deadline.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct Shared {
+    server: Server,
+    stats: Counters,
+    /// Set once by `shutdown`; the accept loop stops and connection
+    /// readers refuse new `Submit`s. AcqRel is unnecessary — the flag
+    /// gates behavior, it does not publish data.
+    draining: AtomicBool,
+    /// Connection budget and the live reservation count.
+    max_conns: usize,
+    active_conns: AtomicUsize,
+}
+
+/// A running network front door wrapping an in-process [`Server`].
+pub struct NetServer {
+    local_addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept: JoinHandle<()>,
+    /// (join handle, read-half handle for drain wakeup) per connection.
+    conns: Arc<Mutex<Vec<(JoinHandle<()>, TcpStream)>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back from
+    /// [`NetServer::local_addr`]) and start accepting. `max_conns` is
+    /// the door's connection budget; connection number `max_conns + 1`
+    /// is answered with `Error{Busy}` and closed.
+    pub fn start<A: ToSocketAddrs>(
+        server: Server,
+        addr: A,
+        max_conns: usize,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        // Nonblocking accept + short sleep: the loop must notice the
+        // drain flag without a signal, and std has no select/poll.
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            server,
+            stats: Counters::default(),
+            draining: AtomicBool::new(false),
+            max_conns: max_conns.max(1),
+            active_conns: AtomicUsize::new(0),
+        });
+        let conns: Arc<Mutex<Vec<(JoinHandle<()>, TcpStream)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("fastcache-accept".into())
+                .spawn(move || accept_loop(&listener, &shared, &conns))
+                .expect("spawning accept thread")
+        };
+
+        Ok(NetServer { local_addr, shared, accept, conns })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful drain: stop accepting, unblock every connection reader
+    /// (in-flight requests keep their lanes and deliver terminal frames),
+    /// join everything, drain the inner server, and fold the door
+    /// counters into its report.
+    pub fn shutdown(self) -> ServerReport {
+        self.shared.draining.store(true, Ordering::Relaxed);
+        self.accept.join().expect("accept thread panicked");
+        // Wake blocked readers: shutting down the read half surfaces EOF,
+        // which the connection loop treats exactly like a client close —
+        // finish in-flight requests, flush terminal frames, Goodbye.
+        let conns = std::mem::take(&mut *self.conns.lock().expect("conn registry poisoned"));
+        for (_, stream) in &conns {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        for (handle, _) in conns {
+            handle.join().expect("connection thread panicked");
+        }
+        let shared = Arc::try_unwrap(self.shared)
+            .unwrap_or_else(|_| panic!("connection threads still hold the server"));
+        let stats = shared.stats.snapshot();
+        let mut report = shared.server.shutdown();
+        report.absorb_net(stats);
+        report
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &Arc<Shared>,
+    conns: &Arc<Mutex<Vec<(JoinHandle<()>, TcpStream)>>>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Reservation gate: increment first, compare what we
+                // reserved, roll back if over budget — atomic RMW, so
+                // two racing accepts cannot both take the last slot.
+                let prev = shared.active_conns.fetch_add(1, Ordering::Relaxed);
+                if prev >= shared.max_conns {
+                    shared.active_conns.fetch_sub(1, Ordering::Relaxed);
+                    shared.stats.conns_door_shed.fetch_add(1, Ordering::Relaxed);
+                    shed_connection(stream, &shared.stats);
+                    continue;
+                }
+                shared.stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                let read_half = match stream.try_clone() {
+                    Ok(c) => c,
+                    Err(_) => {
+                        shared.active_conns.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
+                };
+                let sh = Arc::clone(shared);
+                let handle = std::thread::Builder::new()
+                    .name("fastcache-conn".into())
+                    .spawn(move || {
+                        conn_loop(stream, &sh);
+                        sh.active_conns.fetch_sub(1, Ordering::Relaxed);
+                    })
+                    .expect("spawning connection thread");
+                let mut reg = conns.lock().expect("conn registry poisoned");
+                // Reap finished connections so a long-lived door doesn't
+                // accumulate dead handles (dropping a finished JoinHandle
+                // just detaches it).
+                reg.retain(|(h, _)| !h.is_finished());
+                reg.push((handle, read_half));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shared.draining.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failure (EMFILE, aborted handshake):
+                // keep serving the connections we have.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Refuse an over-budget connection: one `Busy` frame, then close. The
+/// peer never cost us a connection thread.
+fn shed_connection(mut stream: TcpStream, stats: &Counters) {
+    let buf = proto::encode(&Frame::Error {
+        id: 0,
+        code: ErrorCode::Busy.code(),
+        detail: "connection budget exhausted".into(),
+    });
+    if stream.write_all(&buf).is_ok() {
+        stats.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        // FIN our side, then absorb whatever the peer already sent (its
+        // Hello, typically). Closing with unread bytes in the receive
+        // buffer would RST the connection and flush our Busy frame out
+        // of the peer's buffer before it could read the refusal. Bounded
+        // by a short timeout so a silent peer cannot stall the accept
+        // loop.
+        let _ = stream.shutdown(Shutdown::Write);
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+        let mut sink = [0u8; 256];
+        use std::io::Read;
+        let _ = stream.read(&mut sink);
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Writer-half plumbing: pre-encoded frames go over this channel to the
+/// single thread that owns the socket's write half.
+type FrameTx = mpsc::Sender<Vec<u8>>;
+
+fn send_frame(wtx: &FrameTx, frame: &Frame) {
+    // A dead writer means the connection is gone; producers just stop.
+    let _ = wtx.send(proto::encode(frame));
+}
+
+/// One connection: handshake, then a Submit loop. Returns when the peer
+/// closes, says Goodbye, breaks framing, or drain wakes us.
+fn conn_loop(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+    let writer = {
+        let stats_bytes = Arc::clone(shared);
+        std::thread::Builder::new()
+            .name("fastcache-conn-writer".into())
+            .spawn(move || writer_loop(write_half, &wrx, &stats_bytes))
+            .expect("spawning connection writer")
+    };
+
+    let mut reader = stream;
+    run_connection(&mut reader, &wtx, shared);
+
+    // Terminal sequence: everything queued behind the forwarders has
+    // been sent (run_connection joins them), so Goodbye is the last
+    // frame. Dropping wtx lets the writer drain and exit.
+    send_frame(&wtx, &Frame::Goodbye);
+    drop(wtx);
+    writer.join().expect("connection writer panicked");
+    let _ = reader.shutdown(Shutdown::Both);
+}
+
+fn writer_loop(mut stream: TcpStream, wrx: &mpsc::Receiver<Vec<u8>>, shared: &Arc<Shared>) {
+    while let Ok(buf) = wrx.recv() {
+        if stream.write_all(&buf).is_err() {
+            // Peer gone: drain the channel so producers never block on a
+            // full pipe that will not empty.
+            while wrx.recv().is_ok() {}
+            return;
+        }
+        shared.stats.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+    }
+    let _ = stream.flush();
+}
+
+fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
+    // Handshake: exactly one Hello, version must match exactly.
+    match proto::read_frame(reader) {
+        Ok(Some((Frame::Hello { version }, n))) => {
+            shared.stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+            if version != VERSION {
+                send_frame(
+                    wtx,
+                    &Frame::Error {
+                        id: 0,
+                        code: ErrorCode::BadRequest.code(),
+                        detail: format!("unsupported protocol version {version} (want {VERSION})"),
+                    },
+                );
+                return;
+            }
+            send_frame(wtx, &Frame::HelloAck { version: VERSION });
+        }
+        Ok(Some((_, _))) | Err(_) => {
+            send_frame(
+                wtx,
+                &Frame::Error {
+                    id: 0,
+                    code: ErrorCode::BadRequest.code(),
+                    detail: "expected Hello".into(),
+                },
+            );
+            return;
+        }
+        Ok(None) => return,
+    }
+
+    // One forwarder per in-flight request; joined before Goodbye so no
+    // admitted response can be lost to a racing close.
+    let mut forwarders: Vec<JoinHandle<()>> = Vec::new();
+
+    loop {
+        match proto::read_frame(reader) {
+            Ok(Some((frame, n))) => {
+                shared.stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                match frame {
+                    Frame::Submit { req, progress } => {
+                        if shared.draining.load(Ordering::Relaxed) {
+                            send_frame(
+                                wtx,
+                                &Frame::Error {
+                                    id: req.id,
+                                    code: ErrorCode::Closed.code(),
+                                    detail: "server draining".into(),
+                                },
+                            );
+                            continue;
+                        }
+                        shared.stats.reqs_submitted.fetch_add(1, Ordering::Relaxed);
+                        let submitted = if progress {
+                            shared.server.submit_streaming(&req)
+                        } else {
+                            shared.server.submit(&req)
+                        };
+                        match submitted {
+                            Ok(stream) => {
+                                let fwtx = wtx.clone();
+                                let fsh = Arc::clone(shared);
+                                let f = std::thread::Builder::new()
+                                    .name("fastcache-forward".into())
+                                    .spawn(move || forward(stream, &fwtx, &fsh))
+                                    .expect("spawning forwarder");
+                                forwarders.push(f);
+                            }
+                            Err(rej) => {
+                                // Door shed: refused before any queue
+                                // slot. A deadline-tagged refusal is an
+                                // SLA miss (absorbed into the report's
+                                // hit-rate denominator at shutdown).
+                                if rej.code == ErrorCode::Busy {
+                                    shared.stats.reqs_door_shed.fetch_add(1, Ordering::Relaxed);
+                                    if req.deadline_ms.is_some() {
+                                        shared
+                                            .stats
+                                            .door_sheds_deadline
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                send_frame(
+                                    wtx,
+                                    &Frame::Error {
+                                        id: rej.id,
+                                        code: rej.code.code(),
+                                        detail: rej.detail,
+                                    },
+                                );
+                            }
+                        }
+                    }
+                    Frame::Goodbye => break,
+                    other => {
+                        send_frame(
+                            wtx,
+                            &Frame::Error {
+                                id: 0,
+                                code: ErrorCode::BadRequest.code(),
+                                detail: format!("unexpected frame on request path: {other:?}"),
+                            },
+                        );
+                        break;
+                    }
+                }
+            }
+            // Structurally valid frame, semantically bad request: the
+            // stream is still well-delimited, so answer and keep going.
+            Err(ProtoError::BadRequest(rej)) => {
+                send_frame(
+                    wtx,
+                    &Frame::Error { id: rej.id, code: rej.code.code(), detail: rej.detail },
+                );
+            }
+            // EOF (client closed, or drain shut our read half down).
+            Ok(None) => break,
+            // Framing is lost (malformed/truncated/oversized/io): answer
+            // once, then close — we can no longer find frame boundaries.
+            Err(e) => {
+                send_frame(
+                    wtx,
+                    &Frame::Error {
+                        id: 0,
+                        code: ErrorCode::BadRequest.code(),
+                        detail: format!("{e}"),
+                    },
+                );
+                break;
+            }
+        }
+    }
+
+    for f in forwarders {
+        f.join().expect("forwarder panicked");
+    }
+}
+
+/// Pump one request's events into frames: Progress ticks, then exactly
+/// one terminal frame (Partial chunks + Completed, or Shed, or Error).
+fn forward(stream: ResponseStream, wtx: &FrameTx, shared: &Arc<Shared>) {
+    let id = stream.id();
+    loop {
+        match stream.recv_event() {
+            Some(Event::Progress(p)) => send_frame(wtx, &Frame::Progress(p)),
+            Some(Event::Done(Outcome::Completed(resp))) => {
+                shared.stats.reqs_completed.fetch_add(1, Ordering::Relaxed);
+                for chunk in proto::partial_frames(id, resp.result.latent.data()) {
+                    send_frame(wtx, &chunk);
+                }
+                send_frame(wtx, &Frame::Completed(proto::Completed::from_response(&resp)));
+                return;
+            }
+            Some(Event::Done(Outcome::Rejected(rej))) => {
+                if rej.code == ErrorCode::Expired {
+                    shared.stats.reqs_shed.fetch_add(1, Ordering::Relaxed);
+                    send_frame(
+                        wtx,
+                        &Frame::Shed {
+                            id: rej.id,
+                            waited_ms: rej.waited_ms,
+                            deadline_ms: rej.deadline_ms,
+                        },
+                    );
+                } else {
+                    send_frame(
+                        wtx,
+                        &Frame::Error { id: rej.id, code: rej.code.code(), detail: rej.detail },
+                    );
+                }
+                return;
+            }
+            // Channel died without a terminal event (shard panic): the
+            // client still deserves a typed terminal frame.
+            None => {
+                send_frame(
+                    wtx,
+                    &Frame::Error {
+                        id,
+                        code: ErrorCode::Closed.code(),
+                        detail: "response channel closed before terminal event".into(),
+                    },
+                );
+                return;
+            }
+        }
+    }
+}

@@ -89,7 +89,7 @@ mod tests {
         let mut fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
         fc.enable_str = false;
         let reqs: Vec<GenRequest> =
-            (0..3).map(|i| GenRequest::simple(i, 40 + i, 4)).collect();
+            (0..3).map(|i| GenRequest::builder(i, 40 + i).steps(4).build().unwrap()).collect();
         assert_parity(&model, &fc, &reqs);
     }
 
@@ -102,7 +102,7 @@ mod tests {
         let fc = FastCacheConfig::with_policy(PolicyKind::FastCache); // STR on
         assert!(fc.enable_str);
         let reqs: Vec<GenRequest> =
-            (0..3).map(|i| GenRequest::simple(i, 60 + i, 6)).collect();
+            (0..3).map(|i| GenRequest::builder(i, 60 + i).steps(6).build().unwrap()).collect();
         assert_parity(&model, &fc, &reqs);
     }
 
@@ -114,7 +114,7 @@ mod tests {
         fc.enable_merge = true;
         fc.merge_target = 32;
         let reqs: Vec<GenRequest> =
-            (0..3).map(|i| GenRequest::simple(i, 70 + i, 4)).collect();
+            (0..3).map(|i| GenRequest::builder(i, 70 + i).steps(4).build().unwrap()).collect();
         assert_parity(&model, &fc, &reqs);
     }
 
@@ -125,7 +125,7 @@ mod tests {
         fc.enable_str = false;
         fc.approx = ApproxMode::FullMatrix;
         let reqs: Vec<GenRequest> =
-            (0..3).map(|i| GenRequest::simple(i, 80 + i, 6)).collect();
+            (0..3).map(|i| GenRequest::builder(i, 80 + i).steps(6).build().unwrap()).collect();
         assert_parity(&model, &fc, &reqs);
     }
 
@@ -134,7 +134,7 @@ mod tests {
         let model = DitModel::native(Variant::S, 3);
         let fc = FastCacheConfig { enable_str: false, ..FastCacheConfig::default() };
         let reqs: Vec<GenRequest> =
-            (0..4).map(|i| GenRequest::simple(i, 7 + i, 8)).collect();
+            (0..4).map(|i| GenRequest::builder(i, 7 + i).steps(8).build().unwrap()).collect();
         let mut be = BatchEngine::new(&model, fc, 4);
         let out = be.generate(&reqs).unwrap();
         assert_eq!(out.len(), 4);
@@ -154,7 +154,7 @@ mod tests {
         let mut fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
         fc.enable_str = false;
         let reqs: Vec<GenRequest> =
-            (0..4).map(|i| GenRequest::simple(i, 90 + i, 4)).collect();
+            (0..4).map(|i| GenRequest::builder(i, 90 + i).steps(4).build().unwrap()).collect();
         let mut be = BatchEngine::new(&model, fc, 4);
         let t0 = std::time::Instant::now();
         let out = be.generate(&reqs).unwrap();
@@ -173,8 +173,8 @@ mod tests {
         let model = DitModel::native(Variant::S, 3);
         let fc = FastCacheConfig::default();
         let mut be = BatchEngine::new(&model, fc, 4);
-        let mut r1 = GenRequest::simple(0, 1, 4);
-        let r2 = GenRequest::simple(1, 2, 8);
+        let mut r1 = GenRequest::builder(0, 1).steps(4).build().unwrap();
+        let r2 = GenRequest::builder(1, 2).steps(8).build().unwrap();
         r1.steps = 4;
         let _ = be.generate(&[r1, r2]);
     }

@@ -90,7 +90,7 @@ mod tests {
         let model = DitModel::native(Variant::S, 7);
         let fc = FastCacheConfig::with_policy(policy);
         let mut eng = DenoiseEngine::new(&model, fc);
-        eng.generate(&GenRequest::simple(1, 99, steps)).unwrap()
+        eng.generate(&GenRequest::builder(1, 99).steps(steps).build().unwrap()).unwrap()
     }
 
     #[test]
@@ -151,8 +151,8 @@ mod tests {
         let model = DitModel::native(Variant::S, 7);
         let fc = FastCacheConfig::default();
         let mut eng = DenoiseEngine::new(&model, fc.clone());
-        let calm = eng.generate(&GenRequest::simple(1, 3, 8)).unwrap();
-        let mut req = GenRequest::simple(2, 3, 8);
+        let calm = eng.generate(&GenRequest::builder(1, 3).steps(8).build().unwrap()).unwrap();
+        let mut req = GenRequest::builder(2, 3).steps(8).build().unwrap();
         req.turbulence = Some(Turbulence { tokens: (0..24).collect(), amp: 1.0, seed: 5 });
         let mut eng2 = DenoiseEngine::new(&model, fc);
         let stormy = eng2.generate(&req).unwrap();
@@ -174,7 +174,7 @@ mod tests {
             ..FastCacheConfig::default()
         };
         let mut eng = DenoiseEngine::new(&model, fc);
-        let r = eng.generate(&GenRequest::simple(3, 11, 4)).unwrap();
+        let r = eng.generate(&GenRequest::builder(3, 11).steps(4).build().unwrap()).unwrap();
         assert_eq!(r.latent.shape(), &[64, C_IN]);
         assert!(r.latent.data().iter().all(|v| v.is_finite()));
         // Merged layers ran at 32 tokens: token sites reflect that.
@@ -185,9 +185,9 @@ mod tests {
     fn guidance_affects_conditioning_strength() {
         let model = DitModel::native(Variant::S, 7);
         let eng = DenoiseEngine::new(&model, FastCacheConfig::default());
-        let mut lo = GenRequest::simple(1, 5, 4);
+        let mut lo = GenRequest::builder(1, 5).steps(4).build().unwrap();
         lo.guidance = 1.0;
-        let mut hi = GenRequest::simple(1, 5, 4);
+        let mut hi = GenRequest::builder(1, 5).steps(4).build().unwrap();
         hi.guidance = 15.0;
         let cl = eng.make_cond(&lo);
         let ch = eng.make_cond(&hi);

@@ -41,7 +41,7 @@ use super::temb::TembCache;
 /// stand-in for high-motion content regions (DESIGN.md §2): those tokens
 /// keep changing between steps, so a content-aware cache must recompute
 /// them while the rest of the latent settles.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Turbulence {
     pub tokens: Vec<usize>,
     pub amp: f32,
@@ -49,7 +49,7 @@ pub struct Turbulence {
 }
 
 /// One generation request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GenRequest {
     pub id: u64,
     pub seed: u64,
@@ -67,23 +67,169 @@ pub struct GenRequest {
 }
 
 impl GenRequest {
-    pub fn simple(id: u64, seed: u64, steps: usize) -> GenRequest {
-        GenRequest {
+    /// Start building a request. `id` and `seed` are the only mandatory
+    /// fields; everything else has a production default (cond seed
+    /// derived from the latent seed, guidance 7.5, 50 steps). Validation
+    /// happens once, at [`GenRequestBuilder::build`] — the same checks
+    /// guard the in-process path and the wire decoder.
+    pub fn builder(id: u64, seed: u64) -> GenRequestBuilder {
+        GenRequestBuilder {
             id,
             seed,
             cond_seed: seed ^ 0xC04D,
             guidance: 7.5,
-            steps,
+            steps: 50,
             turbulence: None,
             init_latent: None,
             deadline_ms: None,
         }
     }
 
+    /// Re-open a built request for modification (re-validated at the
+    /// next `build()`).
+    pub fn into_builder(self) -> GenRequestBuilder {
+        GenRequestBuilder {
+            id: self.id,
+            seed: self.seed,
+            cond_seed: self.cond_seed,
+            guidance: self.guidance,
+            steps: self.steps,
+            turbulence: self.turbulence,
+            init_latent: self.init_latent,
+            deadline_ms: self.deadline_ms,
+        }
+    }
+
+    #[deprecated(since = "0.7.0", note = "use GenRequest::builder(id, seed).steps(n).build()")]
+    pub fn simple(id: u64, seed: u64, steps: usize) -> GenRequest {
+        GenRequest::builder(id, seed)
+            .steps(steps)
+            .build()
+            .expect("legacy GenRequest::simple arguments failed validation")
+    }
+
     /// Tag the request with an SLA deadline (ms from submission).
-    pub fn with_deadline(mut self, ms: f64) -> GenRequest {
+    #[deprecated(since = "0.7.0", note = "use .into_builder().deadline_ms(ms).build()")]
+    pub fn with_deadline(self, ms: f64) -> GenRequest {
+        self.into_builder()
+            .deadline_ms(ms)
+            .build()
+            .expect("legacy GenRequest::with_deadline arguments failed validation")
+    }
+}
+
+/// Builder for [`GenRequest`] — the ONE place request validation lives.
+/// Both transports construct requests through it: in-process callers
+/// directly, and the wire decoder when it rebuilds a request from a
+/// `Submit` frame (so a malformed remote request is rejected with the
+/// same `BadRequest` a local caller would get).
+#[derive(Clone, Debug)]
+pub struct GenRequestBuilder {
+    id: u64,
+    seed: u64,
+    cond_seed: u64,
+    guidance: f32,
+    steps: usize,
+    turbulence: Option<Turbulence>,
+    init_latent: Option<Tensor>,
+    deadline_ms: Option<f64>,
+}
+
+/// Bounds enforced by [`GenRequestBuilder::build`]. Public so the wire
+/// protocol docs and tests reference the same numbers.
+pub const MAX_STEPS: usize = 4096;
+pub const MAX_GUIDANCE: f32 = 100.0;
+
+impl GenRequestBuilder {
+    /// Number of denoise steps (1..=[`MAX_STEPS`]).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Conditioning seed (the "prompt"). Defaults to `seed ^ 0xC04D`.
+    pub fn cond_seed(mut self, cond_seed: u64) -> Self {
+        self.cond_seed = cond_seed;
+        self
+    }
+
+    /// CFG guidance scale (finite, 0..=[`MAX_GUIDANCE`]).
+    pub fn guidance(mut self, guidance: f32) -> Self {
+        self.guidance = guidance;
+        self
+    }
+
+    /// SLA deadline in ms from submission (finite, >= 0).
+    pub fn deadline_ms(mut self, ms: f64) -> Self {
         self.deadline_ms = Some(ms);
         self
+    }
+
+    /// Remove any deadline (back to best-effort).
+    pub fn best_effort(mut self) -> Self {
+        self.deadline_ms = None;
+        self
+    }
+
+    /// Per-step re-noising of selected token rows (synthetic motion).
+    pub fn turbulence(mut self, t: Turbulence) -> Self {
+        self.turbulence = Some(t);
+        self
+    }
+
+    /// Initial latent (video frames share correlated inits). Must be
+    /// shaped `[N_TOKENS, C_IN]`.
+    pub fn init_latent(mut self, t: Tensor) -> Self {
+        self.init_latent = Some(t);
+        self
+    }
+
+    /// Validate and construct. Every rejection is a typed
+    /// `BadRequest` carrying the offending field in its detail string.
+    pub fn build(self) -> Result<GenRequest, crate::api::Reject> {
+        use crate::config::N_TOKENS;
+        let id = self.id;
+        let bad = move |detail: String| Err(crate::api::Reject::bad_request(id, detail));
+        if self.steps == 0 || self.steps > MAX_STEPS {
+            return bad(format!("steps must be 1..={MAX_STEPS}, got {}", self.steps));
+        }
+        if !self.guidance.is_finite() || !(0.0..=MAX_GUIDANCE).contains(&self.guidance) {
+            return bad(format!(
+                "guidance must be finite in 0..={MAX_GUIDANCE}, got {}",
+                self.guidance
+            ));
+        }
+        if let Some(ms) = self.deadline_ms {
+            if !ms.is_finite() || ms < 0.0 {
+                return bad(format!("deadline_ms must be finite and >= 0, got {ms}"));
+            }
+        }
+        if let Some(t) = &self.turbulence {
+            if !t.amp.is_finite() {
+                return bad(format!("turbulence amp must be finite, got {}", t.amp));
+            }
+            if let Some(&tok) = t.tokens.iter().find(|&&tok| tok >= N_TOKENS) {
+                return bad(format!("turbulence token {tok} out of range (< {N_TOKENS})"));
+            }
+        }
+        if let Some(t) = &self.init_latent {
+            if t.shape() != [N_TOKENS, C_IN] {
+                return bad(format!(
+                    "init_latent must be [{N_TOKENS}, {C_IN}], got {:?}",
+                    t.shape()
+                ));
+            }
+        }
+        Ok(GenRequest {
+            id: self.id,
+            seed: self.seed,
+            cond_seed: self.cond_seed,
+            guidance: self.guidance,
+            steps: self.steps,
+            turbulence: self.turbulence,
+            init_latent: self.init_latent,
+            deadline_ms: self.deadline_ms,
+        })
     }
 }
 
@@ -884,7 +1030,7 @@ mod tests {
         let mut stepper =
             LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
         let mut schedules = ScheduleCache::new();
-        let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 5), schedules.get(5));
+        let mut lane = stepper.make_lane(&GenRequest::builder(1, 3).steps(5).build().unwrap(), schedules.get(5));
         assert_eq!(lane.total_steps(), 5);
         while !lane.is_done() {
             let before = lane.step_index();
@@ -908,10 +1054,10 @@ mod tests {
         let mut schedules = ScheduleCache::new();
 
         let mut lanes =
-            vec![stepper.make_lane(&GenRequest::simple(0, 21, 6), schedules.get(6))];
+            vec![stepper.make_lane(&GenRequest::builder(0, 21).steps(6).build().unwrap(), schedules.get(6))];
         stepper.step(&mut lanes).unwrap();
         stepper.step(&mut lanes).unwrap();
-        lanes.push(stepper.make_lane(&GenRequest::simple(1, 22, 4), schedules.get(4)));
+        lanes.push(stepper.make_lane(&GenRequest::builder(1, 22).steps(4).build().unwrap(), schedules.get(4)));
         for _ in 0..4 {
             stepper.step(&mut lanes).unwrap();
         }
@@ -919,7 +1065,7 @@ mod tests {
 
         // The mid-flight-joined lane matches a solo run exactly.
         let solo = {
-            let mut l = stepper.make_lane(&GenRequest::simple(1, 22, 4), schedules.get(4));
+            let mut l = stepper.make_lane(&GenRequest::builder(1, 22).steps(4).build().unwrap(), schedules.get(4));
             while !l.is_done() {
                 stepper.step(std::slice::from_mut(&mut l)).unwrap();
             }
@@ -939,7 +1085,7 @@ mod tests {
         // drains linearly and hits zero at completion.
         let mut stepper =
             LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
-        let mut lane = stepper.make_lane(&GenRequest::simple(0, 3, 4), schedules.get(4));
+        let mut lane = stepper.make_lane(&GenRequest::builder(0, 3).steps(4).build().unwrap(), schedules.get(4));
         let full = lane.remaining_flops_estimate();
         assert_eq!(full, 4 * model.cfg.full_step_flops());
         stepper.step(std::slice::from_mut(&mut lane)).unwrap();
@@ -953,8 +1099,8 @@ mod tests {
         // than NoCache at the same step index.
         let mut cached =
             LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::StaticCache));
-        let mut cl = cached.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
-        let mut nl = stepper.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
+        let mut cl = cached.make_lane(&GenRequest::builder(1, 3).steps(8).build().unwrap(), schedules.get(8));
+        let mut nl = stepper.make_lane(&GenRequest::builder(1, 3).steps(8).build().unwrap(), schedules.get(8));
         for _ in 0..4 {
             cached.step(std::slice::from_mut(&mut cl)).unwrap();
             stepper.step(std::slice::from_mut(&mut nl)).unwrap();
@@ -979,7 +1125,7 @@ mod tests {
         fc.enable_str = false;
         let mut stepper = LaneStepper::new(&model, fc);
         let mut schedules = ScheduleCache::new();
-        let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 12), schedules.get(12));
+        let mut lane = stepper.make_lane(&GenRequest::builder(1, 3).steps(12).build().unwrap(), schedules.get(12));
         while !lane.is_done() {
             stepper.step(std::slice::from_mut(&mut lane)).unwrap();
         }
@@ -1023,7 +1169,7 @@ mod tests {
         let mut schedules = ScheduleCache::new();
         let steps = 12;
 
-        let mut cold = stepper.make_lane(&GenRequest::simple(0, 9, steps), schedules.get(steps));
+        let mut cold = stepper.make_lane(&GenRequest::builder(0, 9).steps(steps).build().unwrap(), schedules.get(steps));
         while !cold.is_done() {
             stepper.step(std::slice::from_mut(&mut cold)).unwrap();
         }
@@ -1041,7 +1187,7 @@ mod tests {
         let cold_r = cold.into_result();
         assert_eq!(cold_r.warm_layers, 0);
 
-        let mut warm = stepper.make_lane(&GenRequest::simple(1, 9, steps), schedules.get(steps));
+        let mut warm = stepper.make_lane(&GenRequest::builder(1, 9).steps(steps).build().unwrap(), schedules.get(steps));
         assert_eq!(warm.warm_start_fits(&warm_fits), model.cfg.layers);
         while !warm.is_done() {
             stepper.step(std::slice::from_mut(&mut warm)).unwrap();
@@ -1068,7 +1214,7 @@ mod tests {
         let mut stepper = LaneStepper::new(&model, fc);
         let mut schedules = ScheduleCache::new();
         let steps = 5;
-        let mut lane = stepper.make_lane(&GenRequest::simple(0, 11, steps), schedules.get(steps));
+        let mut lane = stepper.make_lane(&GenRequest::builder(0, 11).steps(steps).build().unwrap(), schedules.get(steps));
         while !lane.is_done() {
             stepper.step(std::slice::from_mut(&mut lane)).unwrap();
         }
@@ -1078,7 +1224,7 @@ mod tests {
         assert!(log[1].iter().all(|d| d.is_finite()));
         // Warm-start off: nobody records, L2C or not.
         let off = LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::L2C));
-        let lane = off.make_lane(&GenRequest::simple(1, 11, steps), schedules.get(steps));
+        let lane = off.make_lane(&GenRequest::builder(1, 11).steps(steps).build().unwrap(), schedules.get(steps));
         assert!(lane.delta_log().is_none());
     }
 
@@ -1092,7 +1238,7 @@ mod tests {
         let mut schedules = ScheduleCache::new();
         let steps = 3;
         let mut lanes: Vec<Lane> = (0..3)
-            .map(|i| stepper.make_lane(&GenRequest::simple(i, 50 + i, steps), schedules.get(steps)))
+            .map(|i| stepper.make_lane(&GenRequest::builder(i, 50 + i).steps(steps).build().unwrap(), schedules.get(steps)))
             .collect();
         for _ in 0..steps {
             stepper.step(&mut lanes).unwrap();
@@ -1115,7 +1261,7 @@ mod tests {
         let mut stepper =
             LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::FastCache));
         let mut schedules = ScheduleCache::new();
-        let mut lane = stepper.make_lane(&GenRequest::simple(1, 3, 8), schedules.get(8));
+        let mut lane = stepper.make_lane(&GenRequest::builder(1, 3).steps(8).build().unwrap(), schedules.get(8));
         stepper.step(std::slice::from_mut(&mut lane)).unwrap();
         let hw = stepper.scratch_high_water_bytes();
         assert!(hw > 0, "native stepping must exercise the arena");
@@ -1140,7 +1286,7 @@ mod tests {
         let mut schedules = ScheduleCache::new();
         let steps = 4;
         let mut lanes: Vec<Lane> = (0..2)
-            .map(|i| stepper.make_lane(&GenRequest::simple(i, 80 + i, steps), schedules.get(steps)))
+            .map(|i| stepper.make_lane(&GenRequest::builder(i, 80 + i).steps(steps).build().unwrap(), schedules.get(steps)))
             .collect();
         for _ in 0..steps {
             stepper.step(&mut lanes).unwrap();
@@ -1149,7 +1295,7 @@ mod tests {
         assert_eq!(ct.misses as usize, steps, "one eval per distinct timestep value");
         assert_eq!(ct.hits as usize, steps, "co-scheduled lane must share the memo");
 
-        let mut late = stepper.make_lane(&GenRequest::simple(9, 99, steps), schedules.get(steps));
+        let mut late = stepper.make_lane(&GenRequest::builder(9, 99).steps(steps).build().unwrap(), schedules.get(steps));
         while !late.is_done() {
             stepper.step(std::slice::from_mut(&mut late)).unwrap();
         }

@@ -29,7 +29,9 @@ use crate::model::DitModel;
 use crate::scheduler::ScheduleCache;
 use crate::store::WarmStore;
 
-use super::queue::{Job, JobQueue, Push, SubmitError};
+use crate::api::Reject;
+
+use super::queue::{Job, JobQueue, Push};
 use super::worker::{shard_loop, ServerReport, ShardReport};
 
 /// Live load signals one shard publishes for the router.
@@ -123,9 +125,9 @@ impl Dispatcher {
     }
 
     /// Route a job to the least-predicted-load shard, falling back
-    /// through heavier shards when queues are full. `QueueFull` only when
+    /// through heavier shards when queues are full. `Busy` only when
     /// every shard pushed back; `Closed` only when every shard is gone.
-    pub fn submit(&self, mut job: Job) -> Result<(), SubmitError> {
+    pub fn submit(&self, mut job: Job) -> Result<(), Reject> {
         job.cost = job.req.steps as u64 * self.step_flops;
         let mut order: Vec<usize> = (0..self.shards.len()).collect();
         order.sort_by_key(|&i| {
@@ -154,9 +156,9 @@ impl Dispatcher {
             }
         }
         if saw_full {
-            Err(SubmitError::QueueFull)
+            Err(Reject::busy(job.req.id, "every shard queue at capacity"))
         } else {
-            Err(SubmitError::Closed)
+            Err(Reject::closed(job.req.id, "server shutting down"))
         }
     }
 

@@ -4,8 +4,9 @@
 //!
 //! Layout:
 //! - `queue`    — job envelope, bounded per-shard [`queue::JobQueue`]
-//!   (backpressure + deadline-first pop order), outcome types
-//!   ([`GenOutcome`]: completed vs shed-on-expired-deadline).
+//!   (backpressure + deadline-first pop order). Response/outcome types
+//!   live in [`crate::api`] — ONE vocabulary shared with the network
+//!   front door (`crate::net`).
 //! - `worker`   — the shard serve loop (continuous batching, SLA-aware
 //!   admission at step boundaries, expired-deadline shedding, warm-start
 //!   adopt/publish hooks), `ShardReport`/`ServerReport`, and the public
@@ -26,5 +27,9 @@ pub mod queue;
 pub mod worker;
 
 pub use dispatch::{Dispatcher, ShardLoad};
-pub use queue::{GenOutcome, GenResponse, Job, JobQueue, ShedNotice, SubmitError};
+pub use queue::{Job, JobQueue};
 pub use worker::{Server, ServerReport, ShardReport};
+
+// Response-side types moved to `crate::api` in the front-door redesign;
+// re-exported here so `server::GenResponse`-style paths keep working.
+pub use crate::api::{Event, GenResponse, Outcome, Reject};

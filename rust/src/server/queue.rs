@@ -1,87 +1,36 @@
-//! Request/response plumbing for the sharded server: job envelope,
-//! per-request outcome types ([`GenOutcome`]: completed vs shed — the
-//! shard sheds a queued job whose absolute deadline already expired,
-//! see [`Job::expired`]), submission errors, and the bounded per-shard
-//! [`JobQueue`] with SLA-aware ordering — deadline-tagged jobs pop ahead
-//! of best-effort ones (earliest absolute deadline first), best-effort
-//! jobs pop FIFO.
+//! Request plumbing for the sharded server: the job envelope and the
+//! bounded per-shard [`JobQueue`] with SLA-aware ordering —
+//! deadline-tagged jobs pop ahead of best-effort ones (earliest absolute
+//! deadline first), best-effort jobs pop FIFO.
+//!
+//! Response types live in [`crate::api`] (ONE vocabulary for the
+//! in-process and network transports): a job's channel carries
+//! [`Event`]s — optional progress ticks, then exactly one terminal
+//! [`Outcome`]. A shard sheds a queued job whose absolute deadline has
+//! already expired (see [`Job::expired`]) by sending
+//! `Outcome::Rejected(Reject::expired(..))`.
 
 use std::cmp::Ordering;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::scheduler::{GenRequest, GenResult};
-
-/// What the server returns per request.
-#[derive(Debug)]
-pub struct GenResponse {
-    pub result: GenResult,
-    /// Admission latency: submit → lane admitted into the shard's
-    /// active set (ms).
-    pub queued_ms: f64,
-    /// End-to-end latency: submit -> response (ms).
-    pub e2e_ms: f64,
-    /// For deadline-tagged requests: whether e2e met the deadline.
-    /// `None` for best-effort requests.
-    pub deadline_met: Option<bool>,
-}
-
-/// A shed notice: the job was dropped unserved because its absolute
-/// deadline had already passed when the shard went to admit it — running
-/// it could only burn compute on a guaranteed SLA miss.
-#[derive(Debug, Clone, Copy)]
-pub struct ShedNotice {
-    pub id: u64,
-    /// How long the job sat queued before being shed (ms).
-    pub waited_ms: f64,
-    /// The deadline budget it could no longer meet (ms from submission).
-    pub deadline_ms: f64,
-}
-
-/// Per-request outcome delivered on the response channel: served, or shed
-/// at the admission boundary. Best-effort jobs (no deadline) are never
-/// shed.
-#[derive(Debug)]
-pub enum GenOutcome {
-    Completed(GenResponse),
-    Shed(ShedNotice),
-}
-
-impl GenOutcome {
-    /// The completed response; panics on a shed job (tests and drivers
-    /// that know their deadlines are generous).
-    pub fn completed(self) -> GenResponse {
-        match self {
-            GenOutcome::Completed(r) => r,
-            GenOutcome::Shed(n) => panic!(
-                "request {} was shed after {:.1} ms (deadline {:.1} ms)",
-                n.id, n.waited_ms, n.deadline_ms
-            ),
-        }
-    }
-
-    pub fn as_completed(&self) -> Option<&GenResponse> {
-        match self {
-            GenOutcome::Completed(r) => Some(r),
-            GenOutcome::Shed(_) => None,
-        }
-    }
-
-    pub fn is_shed(&self) -> bool {
-        matches!(self, GenOutcome::Shed(_))
-    }
-}
+use crate::api::{Event, Outcome, Reject};
+use crate::scheduler::GenRequest;
 
 /// Internal job envelope.
 pub struct Job {
     pub req: GenRequest,
-    pub resp: mpsc::Sender<GenOutcome>,
+    pub resp: mpsc::Sender<Event>,
     pub submitted: Instant,
     /// Predicted full-compute FLOPs of this job, stamped by the
     /// dispatcher at routing time; the shard subtracts exactly this when
     /// it admits the job, so queued-load accounting cannot drift.
     pub cost: u64,
+    /// Whether the caller asked for per-step [`Event::Progress`] ticks
+    /// (streaming submissions). Non-streaming jobs get the terminal
+    /// event only.
+    pub progress: bool,
 }
 
 impl Job {
@@ -115,36 +64,15 @@ impl Job {
         self.deadline().is_some_and(|d| d <= now)
     }
 
-    /// Send the shed outcome for this job (consumes it).
+    /// Send the shed outcome for this job (consumes it): a typed
+    /// `Expired` rejection carrying how long it waited and the budget it
+    /// could no longer meet.
     pub fn shed(self) {
-        let notice = ShedNotice {
-            id: self.req.id,
-            waited_ms: self.waited_ms(),
-            deadline_ms: self.req.deadline_ms.unwrap_or(0.0),
-        };
-        let _ = self.resp.send(GenOutcome::Shed(notice));
+        let rej =
+            Reject::expired(self.req.id, self.waited_ms(), self.req.deadline_ms.unwrap_or(0.0));
+        let _ = self.resp.send(Event::Done(Outcome::Rejected(rej)));
     }
 }
-
-/// Submission failure modes.
-#[derive(Debug, PartialEq, Eq)]
-pub enum SubmitError {
-    /// Bounded queue is full — caller should back off (backpressure).
-    QueueFull,
-    /// Server is shutting down.
-    Closed,
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::QueueFull => write!(f, "queue full (backpressure)"),
-            SubmitError::Closed => write!(f, "server closed"),
-        }
-    }
-}
-
-impl std::error::Error for SubmitError {}
 
 /// Outcome of a [`JobQueue::push`]. Rejections hand the job back (boxed —
 /// rejection is the rare path) so the dispatcher can retry it on another
@@ -267,12 +195,13 @@ impl JobQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::ErrorCode;
 
-    fn job(id: u64, deadline_ms: Option<f64>) -> (Job, mpsc::Receiver<GenOutcome>) {
+    fn job(id: u64, deadline_ms: Option<f64>) -> (Job, mpsc::Receiver<Event>) {
         let (tx, rx) = mpsc::channel();
-        let mut req = GenRequest::simple(id, id, 2);
+        let mut req = GenRequest::builder(id, id).steps(2).build().unwrap();
         req.deadline_ms = deadline_ms;
-        (Job { req, resp: tx, submitted: Instant::now(), cost: 1 }, rx)
+        (Job { req, resp: tx, submitted: Instant::now(), cost: 1, progress: false }, rx)
     }
 
     #[test]
@@ -349,7 +278,7 @@ mod tests {
     }
 
     #[test]
-    fn expiry_predicate_and_shed_notice() {
+    fn expiry_predicate_and_shed_rejection() {
         let now = Instant::now();
         // Already-expired budget (0 ms), live budget, best-effort.
         let (dead, rx) = job(1, Some(0.0));
@@ -360,19 +289,13 @@ mod tests {
         assert!(!be.expired(now + Duration::from_secs(3600)), "best-effort never expires");
         dead.shed();
         match rx.recv().unwrap() {
-            GenOutcome::Shed(n) => {
-                assert_eq!(n.id, 1);
-                assert_eq!(n.deadline_ms, 0.0);
-                assert!(n.waited_ms >= 0.0);
+            Event::Done(Outcome::Rejected(rej)) => {
+                assert_eq!(rej.code, ErrorCode::Expired);
+                assert_eq!(rej.id, 1);
+                assert_eq!(rej.deadline_ms, 0.0);
+                assert!(rej.waited_ms >= 0.0);
             }
-            GenOutcome::Completed(_) => panic!("expected a shed outcome"),
+            other => panic!("expected an expired rejection, got {other:?}"),
         }
-    }
-
-    #[test]
-    fn outcome_accessors_distinguish_shed() {
-        let shed = GenOutcome::Shed(ShedNotice { id: 9, waited_ms: 1.0, deadline_ms: 2.0 });
-        assert!(shed.is_shed());
-        assert!(shed.as_completed().is_none());
     }
 }

@@ -9,8 +9,11 @@
 //! Admission is SLA-aware: the shard's `JobQueue` pops deadline-tagged
 //! jobs (earliest absolute deadline first) ahead of best-effort ones,
 //! jobs whose absolute deadline already expired are SHED at pop time
-//! (distinct `GenOutcome::Shed`, counted per class), and the shard
-//! records per-class deadline-hit rates. After each step the shard
+//! (a typed `Expired` rejection, counted per class), and the shard
+//! records per-class deadline-hit rates. Responses travel as
+//! `api::Event`s: optional per-step progress ticks for streaming
+//! submissions, then exactly one terminal `api::Outcome` — the same
+//! types the network front door (`crate::net`) puts on the wire. After each step the shard
 //! publishes its predicted remaining FLOPs so the dispatcher can route by
 //! least predicted load.
 //!
@@ -33,8 +36,13 @@ use crate::model::DitModel;
 use crate::scheduler::{GenRequest, Lane, LaneStepper, ScheduleCache};
 use crate::store::{ModelFingerprint, StoreStats, WarmStore};
 
+use crate::api::{
+    ErrorCode, Event, GenClient, GenResponse, NetStats, Outcome, Progress, Reject,
+    ResponseStream,
+};
+
 use super::dispatch::{Dispatcher, ShardLoad};
-use super::queue::{GenOutcome, GenResponse, Job, JobQueue, SubmitError};
+use super::queue::{Job, JobQueue};
 
 /// One shard's slice of the final report.
 #[derive(Debug)]
@@ -133,6 +141,10 @@ pub struct ServerReport {
     /// Deadline-class jobs shed unserved (expired before admission),
     /// summed over shards.
     pub deadline_sheds: u64,
+    /// Deadline-tagged requests refused at the NETWORK DOOR (`Busy`
+    /// frame before any queue slot was taken). Folded in by
+    /// [`ServerReport::absorb_net`]; always 0 for in-process-only runs.
+    pub door_sheds: u64,
     /// Warm-start accounting, summed over shards.
     pub warm_admissions: u64,
     pub warm_layers: u64,
@@ -146,6 +158,8 @@ pub struct ServerReport {
     /// Warm-start store counters/occupancy at shutdown (`None` when the
     /// server ran without a store).
     pub store: Option<StoreStats>,
+    /// Network-door counters (`None` when no listener served traffic).
+    pub net: Option<NetStats>,
     /// Per-shard breakdown (one entry per worker thread).
     pub shards: Vec<ShardReport>,
 }
@@ -168,11 +182,13 @@ impl ServerReport {
             deadline_hits: 0,
             best_effort_jobs: 0,
             deadline_sheds: 0,
+            door_sheds: 0,
             warm_admissions: 0,
             warm_layers: 0,
             scratch_bytes: 0,
             threads: 1,
             store,
+            net: None,
             shards: Vec::new(),
         };
         for s in &shards {
@@ -219,16 +235,25 @@ impl ServerReport {
     }
 
     /// Fraction of deadline-class jobs that finished within their
-    /// deadline. Shed jobs count as misses (they were dropped unserved),
-    /// so the rate cannot be inflated by shedding. `None` when the
-    /// workload had no deadline-class jobs.
+    /// deadline. Shed jobs count as misses (they were dropped unserved)
+    /// — and so do deadline-tagged requests refused at the network door
+    /// — so the rate cannot be inflated by shedding anywhere in the
+    /// stack. `None` when the workload had no deadline-class jobs.
     pub fn deadline_hit_rate(&self) -> Option<f64> {
-        let attempted = self.deadline_jobs + self.deadline_sheds;
+        let attempted = self.deadline_jobs + self.deadline_sheds + self.door_sheds;
         if attempted == 0 {
             None
         } else {
             Some(self.deadline_hits as f64 / attempted as f64)
         }
+    }
+
+    /// Fold the network door's counters into this report (called by
+    /// `net::NetServer::shutdown` after the inner server drains).
+    /// Deadline-tagged door refusals enter the SLA denominator here.
+    pub fn absorb_net(&mut self, stats: NetStats) {
+        self.door_sheds += stats.door_sheds_deadline;
+        self.net = Some(stats);
     }
 }
 
@@ -279,30 +304,38 @@ impl Server {
         self.dispatcher.workers()
     }
 
-    /// Submit a request; returns the outcome channel or backpressure.
-    /// The channel yields `GenOutcome::Completed` for served requests and
-    /// `GenOutcome::Shed` for deadline-tagged requests dropped because
-    /// their deadline expired while queued.
-    pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenOutcome>, SubmitError> {
+    fn submit_inner(&self, req: &GenRequest, progress: bool) -> Result<ResponseStream, Reject> {
+        let id = req.id;
         let (rtx, rrx) = mpsc::channel();
-        let job = Job { req, resp: rtx, submitted: Instant::now(), cost: 0 };
+        let job =
+            Job { req: req.clone(), resp: rtx, submitted: Instant::now(), cost: 0, progress };
         self.dispatcher.submit(job)?;
-        Ok(rrx)
+        Ok(ResponseStream::new(id, rrx))
+    }
+
+    /// Submit a request. The stream yields exactly one terminal
+    /// `Outcome`: `Completed` for served requests, `Rejected(Expired)`
+    /// for deadline-tagged requests dropped because their deadline
+    /// expired while queued. Backpressure comes back as `Err(Busy)`.
+    pub fn submit(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
+        self.submit_inner(req, false)
+    }
+
+    /// Like [`Server::submit`], plus per-step `Event::Progress` ticks.
+    pub fn submit_streaming(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
+        self.submit_inner(req, true)
     }
 
     /// Submit, sleeping through backpressure until a shard accepts the
     /// request. Only fails when the server is shutting down.
-    pub fn submit_blocking(
-        &self,
-        req: &GenRequest,
-    ) -> Result<mpsc::Receiver<GenOutcome>, SubmitError> {
+    pub fn submit_blocking(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
         loop {
-            match self.submit(req.clone()) {
+            match self.submit(req) {
                 Ok(rx) => return Ok(rx),
-                Err(SubmitError::QueueFull) => {
+                Err(rej) if rej.code == ErrorCode::Busy => {
                     std::thread::sleep(std::time::Duration::from_millis(2));
                 }
-                Err(e) => return Err(e),
+                Err(rej) => return Err(rej),
             }
         }
     }
@@ -310,6 +343,16 @@ impl Server {
     /// Close every shard queue and wait for the shards to drain.
     pub fn shutdown(self) -> ServerReport {
         self.dispatcher.shutdown()
+    }
+}
+
+impl GenClient for Server {
+    fn submit(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
+        Server::submit(self, req)
+    }
+
+    fn submit_streaming(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
+        Server::submit_streaming(self, req)
     }
 }
 
@@ -492,6 +535,21 @@ where
         report.lane_steps += lanes.len() as u64;
         stepper.step(&mut lanes).expect("denoise step failed");
 
+        // Progress ticks for streaming submissions: `step_index()` is the
+        // count of completed steps after the call above, so a finishing
+        // lane's last tick reads step == total just before its terminal
+        // Completed event. Dropped receivers are ignored — an abandoned
+        // stream must not kill the shard.
+        for (lane, fl) in lanes.iter().zip(inflight.iter()) {
+            if fl.job.progress {
+                let _ = fl.job.resp.send(Event::Progress(Progress {
+                    id: fl.job.req.id,
+                    step: lane.step_index() as u32,
+                    total: lane.total_steps() as u32,
+                }));
+            }
+        }
+
         // Retire finished lanes; their slots free up for the next
         // admission round.
         let mut i = 0;
@@ -532,12 +590,12 @@ where
             }
             report.e2e.record(e2e);
             report.completed += 1;
-            let _ = fl.job.resp.send(GenOutcome::Completed(GenResponse {
+            let _ = fl.job.resp.send(Event::Done(Outcome::Completed(GenResponse {
                 result,
                 queued_ms,
                 e2e_ms: e2e,
                 deadline_met,
-            }));
+            })));
         }
 
         // Refresh the router's view of this shard after admit+retire.
@@ -576,10 +634,10 @@ mod tests {
         let server = test_server(PolicyKind::FastCache, 4, 16);
         let mut rxs = Vec::new();
         for i in 0..6 {
-            rxs.push(server.submit(GenRequest::simple(i, 100 + i, 4)).unwrap());
+            rxs.push(server.submit(&GenRequest::builder(i, 100 + i).steps(4).build().unwrap()).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap().completed();
+            let resp = rx.wait().completed();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
             assert!(resp.e2e_ms >= resp.queued_ms);
             assert_eq!(resp.deadline_met, None, "best-effort jobs carry no deadline verdict");
@@ -608,18 +666,18 @@ mod tests {
         let mut saw_full = false;
         let mut rxs = Vec::new();
         for i in 0..50 {
-            match server.submit(GenRequest::simple(i, i, 8)) {
+            match server.submit(&GenRequest::builder(i, i).steps(8).build().unwrap()) {
                 Ok(rx) => rxs.push(rx),
-                Err(SubmitError::QueueFull) => {
+                Err(rej) if rej.code == ErrorCode::Busy => {
                     saw_full = true;
                     break;
                 }
-                Err(e) => panic!("unexpected: {e}"),
+                Err(rej) => panic!("unexpected: {rej}"),
             }
         }
         assert!(saw_full, "bounded queue never pushed back");
         for rx in rxs {
-            let _ = rx.recv();
+            let _ = rx.wait();
         }
         server.shutdown();
     }
@@ -627,8 +685,8 @@ mod tests {
     #[test]
     fn submit_after_shutdown_fails() {
         let server = test_server(PolicyKind::NoCache, 1, 4);
-        let rx = server.submit(GenRequest::simple(0, 0, 2)).unwrap();
-        let _ = rx.recv();
+        let rx = server.submit(&GenRequest::builder(0, 0).steps(2).build().unwrap()).unwrap();
+        let _ = rx.wait();
         // Shutdown consumes the server; a clone of tx would be Closed.
         let report = server.shutdown();
         assert_eq!(report.completed, 1);
@@ -639,10 +697,10 @@ mod tests {
         let server = test_server(PolicyKind::FastCache, 4, 32);
         let mut rxs = Vec::new();
         for i in 0..12 {
-            rxs.push(server.submit(GenRequest::simple(i, 7 + i, 4)).unwrap());
+            rxs.push(server.submit(&GenRequest::builder(i, 7 + i).steps(4).build().unwrap()).unwrap());
         }
         for rx in rxs {
-            let _ = rx.recv().unwrap();
+            let _ = rx.wait();
         }
         let report = server.shutdown();
         assert_eq!(report.completed, 12);
@@ -663,10 +721,10 @@ mod tests {
         let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
         let mut rxs = Vec::new();
         for i in 0..12 {
-            rxs.push(server.submit(GenRequest::simple(i, 31 + i, 6)).unwrap());
+            rxs.push(server.submit(&GenRequest::builder(i, 31 + i).steps(6).build().unwrap()).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap().completed();
+            let resp = rx.wait().completed();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
         }
         let report = server.shutdown();
@@ -685,11 +743,11 @@ mod tests {
         let server = test_server(PolicyKind::FastCache, 4, 32);
         let mut rxs = Vec::new();
         for i in 0..4u64 {
-            rxs.push((4usize, server.submit(GenRequest::simple(i, 11 + i, 4)).unwrap()));
-            rxs.push((8usize, server.submit(GenRequest::simple(10 + i, 17 + i, 8)).unwrap()));
+            rxs.push((4usize, server.submit(&GenRequest::builder(i, 11 + i).steps(4).build().unwrap()).unwrap()));
+            rxs.push((8usize, server.submit(&GenRequest::builder(10 + i, 17 + i).steps(8).build().unwrap()).unwrap()));
         }
         for (steps, rx) in rxs {
-            let resp = rx.recv().unwrap().completed();
+            let resp = rx.wait().completed();
             assert_eq!(resp.result.records.len(), steps);
         }
         let report = server.shutdown();
@@ -703,10 +761,10 @@ mod tests {
         assert_eq!(server.workers(), 3);
         let mut rxs = Vec::new();
         for i in 0..12 {
-            rxs.push(server.submit_blocking(&GenRequest::simple(i, 40 + i, 4)).unwrap());
+            rxs.push(server.submit_blocking(&GenRequest::builder(i, 40 + i).steps(4).build().unwrap()).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv().unwrap().completed();
+            let resp = rx.wait().completed();
             assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
         }
         let report = server.shutdown();
@@ -727,18 +785,18 @@ mod tests {
         // must be admitted (and so complete) before the queued
         // best-effort jobs.
         let server = test_server(PolicyKind::NoCache, 1, 8);
-        let head = server.submit(GenRequest::simple(0, 1, 10)).unwrap();
+        let head = server.submit(&GenRequest::builder(0, 1).steps(10).build().unwrap()).unwrap();
         let mut best_effort = Vec::new();
         for i in 1..4u64 {
-            best_effort.push(server.submit(GenRequest::simple(i, 1 + i, 4)).unwrap());
+            best_effort.push(server.submit(&GenRequest::builder(i, 1 + i).steps(4).build().unwrap()).unwrap());
         }
         let tagged = server
-            .submit(GenRequest::simple(9, 9, 4).with_deadline(120_000.0))
+            .submit(&GenRequest::builder(9, 9).steps(4).deadline_ms(120_000.0).build().unwrap())
             .unwrap();
-        let _ = head.recv().unwrap();
-        let tagged_resp = tagged.recv().unwrap().completed();
+        let _ = head.wait();
+        let tagged_resp = tagged.wait().completed();
         let be_e2e: Vec<f64> =
-            best_effort.into_iter().map(|rx| rx.recv().unwrap().completed().e2e_ms).collect();
+            best_effort.into_iter().map(|rx| rx.wait().completed().e2e_ms).collect();
         assert_eq!(tagged_resp.deadline_met, Some(true));
         let max_be = be_e2e.iter().cloned().fold(0.0, f64::max);
         assert!(
@@ -763,22 +821,23 @@ mod tests {
         // outcome, counted, never served — while best-effort jobs and the
         // head complete normally.
         let server = test_server(PolicyKind::NoCache, 1, 8);
-        let head = server.submit(GenRequest::simple(0, 1, 10)).unwrap();
+        let head = server.submit(&GenRequest::builder(0, 1).steps(10).build().unwrap()).unwrap();
         let doomed = server
-            .submit(GenRequest::simple(1, 2, 4).with_deadline(0.0))
+            .submit(&GenRequest::builder(1, 2).steps(4).deadline_ms(0.0).build().unwrap())
             .unwrap();
-        let tail = server.submit(GenRequest::simple(2, 3, 4)).unwrap();
+        let tail = server.submit(&GenRequest::builder(2, 3).steps(4).build().unwrap()).unwrap();
 
-        match doomed.recv().unwrap() {
-            GenOutcome::Shed(n) => {
-                assert_eq!(n.id, 1);
-                assert_eq!(n.deadline_ms, 0.0);
-                assert!(n.waited_ms >= 0.0);
+        match doomed.wait() {
+            Outcome::Rejected(rej) => {
+                assert_eq!(rej.code, ErrorCode::Expired);
+                assert_eq!(rej.id, 1);
+                assert_eq!(rej.deadline_ms, 0.0);
+                assert!(rej.waited_ms >= 0.0);
             }
-            GenOutcome::Completed(_) => panic!("expired job must be shed, not served"),
+            Outcome::Completed(_) => panic!("expired job must be shed, not served"),
         }
-        let _ = head.recv().unwrap().completed();
-        let _ = tail.recv().unwrap().completed();
+        let _ = head.wait().completed();
+        let _ = tail.wait().completed();
         let report = server.shutdown();
         assert_eq!(report.completed, 2, "shed jobs are not completions");
         assert_eq!(report.deadline_sheds, 1);
@@ -821,12 +880,12 @@ mod tests {
             );
             let mut rxs = Vec::new();
             for i in 0..4 {
-                rxs.push(server.submit(GenRequest::simple(i, 60 + i, 10)).unwrap());
+                rxs.push(server.submit(&GenRequest::builder(i, 60 + i).steps(10).build().unwrap()).unwrap());
             }
             let mut flops = 0u64;
             let mut steps = 0usize;
             for rx in rxs {
-                let resp = rx.recv().unwrap().completed();
+                let resp = rx.wait().completed();
                 flops += resp.result.flops_done;
                 steps += resp.result.records.len();
                 assert_eq!(resp.result.warm_layers > 0, expect_warm, "warm_layers mismatch");
@@ -858,8 +917,8 @@ mod tests {
         let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
         let mut out = Vec::new();
         for i in 0..3u64 {
-            let rx = server.submit(GenRequest::simple(i, 200 + i, 4)).unwrap();
-            let resp = rx.recv().unwrap().completed();
+            let rx = server.submit(&GenRequest::builder(i, 200 + i).steps(4).build().unwrap()).unwrap();
+            let resp = rx.wait().completed();
             out.push(resp.result.latent.data().to_vec());
         }
         server.shutdown();
@@ -882,8 +941,8 @@ mod tests {
         let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
         fc.enable_str = false;
         let server = Server::start(scfg.clone(), fc, || Ok(DitModel::native(Variant::S, 1)));
-        let rx = server.submit(GenRequest::simple(0, 200, 4)).unwrap();
-        let _ = rx.recv().unwrap().completed();
+        let rx = server.submit(&GenRequest::builder(0, 200).steps(4).build().unwrap()).unwrap();
+        let _ = rx.wait().completed();
         let report = server.shutdown();
         assert_eq!(report.threads, scfg.effective_threads() as u64);
         assert!(report.threads >= 1);
@@ -912,5 +971,82 @@ mod tests {
         );
         let rel = (num / den.max(1e-30)).sqrt();
         assert!(rel < 0.5, "int8 latents drifted too far from f32: rel L2 {rel}");
+    }
+
+    #[test]
+    fn door_sheds_fold_into_report_and_lower_hit_rate() {
+        // One served deadline job gives a perfect 1.0 hit rate; folding
+        // in a network door that refused two deadline-tagged requests
+        // must drop the rate to 1/3 — refusing at the door is still an
+        // SLA miss, never a vanished denominator.
+        let server = test_server(PolicyKind::NoCache, 1, 4);
+        let rx = server
+            .submit(&GenRequest::builder(0, 1).steps(2).deadline_ms(120_000.0).build().unwrap())
+            .unwrap();
+        assert_eq!(rx.wait().completed().deadline_met, Some(true));
+        let mut report = server.shutdown();
+        assert_eq!(report.door_sheds, 0);
+        assert_eq!(report.net, None);
+        assert_eq!(report.deadline_hit_rate(), Some(1.0));
+
+        let stats = NetStats {
+            conns_accepted: 3,
+            conns_door_shed: 1,
+            reqs_submitted: 1,
+            reqs_completed: 1,
+            reqs_door_shed: 2,
+            door_sheds_deadline: 2,
+            bytes_in: 64,
+            bytes_out: 128,
+            ..NetStats::default()
+        };
+        report.absorb_net(stats.clone());
+        assert_eq!(report.door_sheds, 2);
+        assert_eq!(report.net, Some(stats));
+        assert_eq!(report.deadline_hit_rate(), Some(1.0 / 3.0));
+    }
+
+    #[test]
+    fn streaming_submissions_deliver_one_progress_tick_per_step() {
+        let server = test_server(PolicyKind::NoCache, 1, 4);
+        let steps = 4u32;
+        let stream = server
+            .submit_streaming(&GenRequest::builder(0, 5).steps(steps as usize).build().unwrap())
+            .unwrap();
+        let mut ticks = 0u32;
+        let mut last = 0u32;
+        loop {
+            match stream.recv_event() {
+                Some(Event::Progress(p)) => {
+                    ticks += 1;
+                    assert_eq!(p.id, 0);
+                    assert_eq!(p.total, steps);
+                    assert!(p.step > last, "progress must be strictly increasing");
+                    last = p.step;
+                }
+                Some(Event::Done(out)) => {
+                    out.completed();
+                    break;
+                }
+                None => panic!("stream ended without a terminal event"),
+            }
+        }
+        assert_eq!(ticks, steps, "one progress tick per denoise step");
+        assert_eq!(last, steps, "final tick reads step == total");
+        server.shutdown();
+    }
+
+    #[test]
+    fn non_streaming_submissions_skip_progress() {
+        let server = test_server(PolicyKind::NoCache, 1, 4);
+        let stream =
+            server.submit(&GenRequest::builder(0, 5).steps(3).build().unwrap()).unwrap();
+        match stream.recv_event() {
+            Some(Event::Done(out)) => {
+                out.completed();
+            }
+            other => panic!("expected only a terminal event, got {other:?}"),
+        }
+        server.shutdown();
     }
 }

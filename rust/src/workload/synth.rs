@@ -75,16 +75,13 @@ impl WorkloadGen {
         } else {
             None
         };
-        GenRequest {
-            id,
-            seed,
-            cond_seed: self.rng.next_u64(),
-            guidance: 7.5,
-            steps,
-            turbulence: turb,
-            init_latent: None,
-            deadline_ms: None,
+        let mut b = GenRequest::builder(id, seed)
+            .cond_seed(self.rng.next_u64())
+            .steps(steps);
+        if let Some(t) = turb {
+            b = b.turbulence(t);
         }
+        b.build().expect("workload generator emits valid requests")
     }
 
     /// A batch of image requests.
@@ -119,20 +116,17 @@ impl WorkloadGen {
                         *v = 0.5 * *v + profile.amplitude * fr.normal();
                     }
                 }
-                GenRequest {
-                    id,
-                    seed: base_seed ^ f as u64,
-                    cond_seed,
-                    guidance: 7.5,
-                    steps,
-                    turbulence: Some(Turbulence {
+                GenRequest::builder(id, base_seed ^ f as u64)
+                    .cond_seed(cond_seed)
+                    .steps(steps)
+                    .turbulence(Turbulence {
                         tokens: region.clone(),
                         amp: profile.amplitude,
                         seed: base_seed ^ (0xBEEF + f as u64),
-                    }),
-                    init_latent: Some(init),
-                    deadline_ms: None,
-                }
+                    })
+                    .init_latent(init)
+                    .build()
+                    .expect("workload generator emits valid requests")
             })
             .collect()
     }

@@ -1,0 +1,265 @@
+//! Loopback integration for the network front door: a real TCP socket on
+//! 127.0.0.1, the framed protocol end to end, and the three acceptance
+//! properties — bit-identical parity with in-process serving, door-level
+//! shedding that shows up in the SLA accounting, and a graceful drain
+//! that loses zero admitted responses.
+
+use std::collections::BTreeMap;
+
+use fastcache_dit::api::{ErrorCode, Event, GenClient, Outcome};
+use fastcache_dit::config::{FastCacheConfig, PolicyKind, ServerConfig, Variant};
+use fastcache_dit::model::DitModel;
+use fastcache_dit::net::proto::{self, Frame};
+use fastcache_dit::net::{NetClient, NetServer, VERSION};
+use fastcache_dit::scheduler::GenRequest;
+use fastcache_dit::server::Server;
+use fastcache_dit::tensor::Tensor;
+use fastcache_dit::workload::{MotionProfile, WorkloadGen};
+
+fn native_server(max_batch: usize, queue_depth: usize) -> Server {
+    let scfg = ServerConfig { max_batch, queue_depth, workers: 1, ..ServerConfig::default() };
+    let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+    fc.enable_str = false;
+    Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 5)))
+}
+
+fn start_door(max_batch: usize, queue_depth: usize, max_conns: usize) -> NetServer {
+    NetServer::start(native_server(max_batch, queue_depth), "127.0.0.1:0", max_conns)
+        .expect("bind loopback")
+}
+
+#[test]
+fn loopback_latents_are_bit_identical_to_in_process_submits() {
+    let mut wl = WorkloadGen::new(0x10B4);
+    let reqs = wl.image_set(4, 6, MotionProfile::MIXED);
+
+    // In-process reference latents, keyed by request id.
+    let server = native_server(2, 64);
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r).expect("submit")).collect();
+    let mut reference: BTreeMap<u64, Tensor> = BTreeMap::new();
+    for rx in rxs {
+        let resp = rx.wait().completed();
+        reference.insert(resp.result.id, resp.result.latent);
+    }
+    server.shutdown();
+
+    // The same requests over the socket, against an identically-seeded
+    // server. Latents are f32 bit patterns on the wire, so they must
+    // come back without a single bit of drift.
+    let door = start_door(2, 64, 4);
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    let rxs: Vec<_> = reqs.iter().map(|r| client.submit(r).expect("submit")).collect();
+    for rx in rxs {
+        let resp = rx.wait().completed();
+        let want = &reference[&resp.result.id];
+        assert_eq!(resp.result.latent.shape(), want.shape());
+        let a: Vec<u32> = want.data().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = resp.result.latent.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "req {}: socket latent differs from in-process", resp.result.id);
+        assert!(resp.e2e_ms >= 0.0);
+    }
+    client.close();
+    let report = door.shutdown();
+    assert_eq!(report.completed, 4);
+    let net = report.net.expect("door stats folded into the report");
+    assert_eq!(net.reqs_submitted, 4);
+    assert_eq!(net.reqs_completed, 4);
+    assert_eq!(net.conns_accepted, 1);
+    assert_eq!(net.conns_door_shed, 0);
+    assert!(net.bytes_in > 0 && net.bytes_out > 0);
+}
+
+#[test]
+fn streaming_submission_delivers_progress_ticks_over_the_socket() {
+    let door = start_door(1, 16, 2);
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    let steps = 5;
+    let req = GenRequest::builder(1, 0xFEED).steps(steps).build().unwrap();
+    let rx = client.submit_streaming(&req).expect("submit");
+    let mut ticks = Vec::new();
+    let outcome = loop {
+        match rx.recv_event() {
+            Some(Event::Progress(p)) => {
+                assert_eq!(p.id, 1);
+                assert_eq!(p.total, steps as u32);
+                ticks.push(p.step);
+            }
+            Some(Event::Done(outcome)) => break outcome,
+            None => panic!("stream ended without a terminal event"),
+        }
+    };
+    assert_eq!(ticks.len(), steps, "one progress frame per denoise step");
+    assert!(ticks.windows(2).all(|w| w[0] < w[1]), "ticks not increasing: {ticks:?}");
+    assert_eq!(*ticks.last().unwrap(), steps as u32);
+    outcome.completed();
+
+    // A plain submit on the same connection stays tick-free.
+    let quiet = GenRequest::builder(2, 0xFEED).steps(3).build().unwrap();
+    let rx = client.submit(&quiet).expect("submit");
+    match rx.recv_event() {
+        Some(Event::Done(outcome)) => {
+            outcome.completed();
+        }
+        other => panic!("expected an immediate terminal event, got {other:?}"),
+    }
+    client.close();
+    door.shutdown();
+}
+
+#[test]
+fn over_budget_connections_are_shed_at_the_door() {
+    let door = start_door(1, 16, 1);
+    let first = NetClient::connect(door.local_addr()).expect("first connection fits");
+    // The budget is 1: the second connection must be answered with a
+    // typed Busy before it costs a connection thread.
+    let second = NetClient::connect(door.local_addr());
+    let rej = second.err().expect("second connection must be refused");
+    assert_eq!(rej.code, ErrorCode::Busy, "door refusal must be Busy, got {rej:?}");
+    first.close();
+    let report = door.shutdown();
+    let net = report.net.expect("net stats");
+    assert_eq!(net.conns_accepted, 1);
+    assert_eq!(net.conns_door_shed, 1);
+}
+
+#[test]
+fn queue_full_door_sheds_are_sla_misses_in_the_report() {
+    // A deliberately tiny server (1 lane, queue depth 1) and a burst of
+    // deadline-tagged requests fired as fast as the socket carries them:
+    // most must be refused at the door with Busy, and every one of those
+    // refusals must LOWER deadline_hit_rate() — shedding at the door is
+    // not allowed to make the SLA numbers look better.
+    let door = start_door(1, 1, 2);
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    let n = 32u64;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let req = GenRequest::builder(i, i ^ 0xD00D)
+                .steps(6)
+                .deadline_ms(300_000.0)
+                .build()
+                .unwrap();
+            client.submit(&req).expect("wire submit itself never refuses")
+        })
+        .collect();
+    let mut completed = 0u64;
+    let mut busy = 0u64;
+    for rx in rxs {
+        match rx.wait() {
+            Outcome::Completed(_) => completed += 1,
+            Outcome::Rejected(rej) if rej.code == ErrorCode::Busy => busy += 1,
+            Outcome::Rejected(rej) => panic!("unexpected rejection: {rej:?}"),
+        }
+    }
+    assert_eq!(completed + busy, n, "every request gets exactly one terminal outcome");
+    assert!(busy > 0, "queue depth 1 cannot absorb a {n}-request burst");
+    client.close();
+
+    let report = door.shutdown();
+    assert_eq!(report.completed, completed);
+    assert_eq!(report.door_sheds, busy, "deadline-tagged door refusals must be counted");
+    let net = report.net.expect("net stats");
+    assert_eq!(net.reqs_door_shed, busy);
+    assert_eq!(net.door_sheds_deadline, busy);
+    // All served jobs met the 5-minute budget, so the rate is exactly
+    // served / (served + door_sheds) — strictly below 1.
+    let rate = report.deadline_hit_rate().expect("deadline traffic present");
+    assert!(rate < 1.0, "door sheds must lower the hit rate, got {rate}");
+    let want = report.deadline_hits as f64
+        / (report.deadline_jobs + report.deadline_sheds + report.door_sheds) as f64;
+    assert!((rate - want).abs() < 1e-12);
+}
+
+#[test]
+fn graceful_drain_finishes_every_admitted_lane_with_zero_lost_responses() {
+    let door = start_door(2, 16, 2);
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    let rxs: Vec<_> = (0..4u64)
+        .map(|i| {
+            let req = GenRequest::builder(i, i).steps(8).build().unwrap();
+            client.submit_streaming(&req).expect("submit")
+        })
+        .collect();
+    // Wait for every request's first progress tick — proof it was
+    // admitted and its lane is running — THEN drain mid-flight. Shutdown
+    // must block until every admitted lane finished and its terminal
+    // frame flushed: the client-side streams all resolve to Completed.
+    for rx in &rxs {
+        match rx.recv_event() {
+            Some(Event::Progress(_)) => {}
+            other => panic!("expected a first progress tick, got {other:?}"),
+        }
+    }
+    let report = door.shutdown();
+    for rx in rxs {
+        let resp = rx.wait().completed();
+        assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(report.completed, 4, "drain lost admitted work");
+    let net = report.net.expect("net stats");
+    assert_eq!(net.reqs_completed, 4, "every admitted response must reach the wire");
+    drop(client);
+}
+
+#[test]
+fn malformed_submit_gets_typed_error_and_the_connection_survives() {
+    use std::io::Write;
+    let door = start_door(1, 16, 2);
+
+    // Speak the protocol by hand so we can send what NetClient refuses to
+    // build: a structurally valid Submit whose request is invalid
+    // (steps = 0).
+    let mut sock = std::net::TcpStream::connect(door.local_addr()).expect("connect");
+    sock.write_all(&proto::encode(&Frame::Hello { version: VERSION })).unwrap();
+    match proto::read_frame(&mut sock).unwrap() {
+        Some((Frame::HelloAck { version }, _)) => assert_eq!(version, VERSION),
+        other => panic!("expected HelloAck, got {other:?}"),
+    }
+
+    let mut body = vec![0x02u8]; // T_SUBMIT
+    body.extend_from_slice(&9u64.to_le_bytes()); // id
+    body.extend_from_slice(&1u64.to_le_bytes()); // seed
+    body.extend_from_slice(&2u64.to_le_bytes()); // cond_seed
+    body.extend_from_slice(&7.5f32.to_le_bytes()); // guidance
+    body.extend_from_slice(&0u32.to_le_bytes()); // steps = 0: invalid
+    body.extend_from_slice(&[0, 0, 0, 0]); // no deadline/turb/init, no progress
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    sock.write_all(&frame).unwrap();
+
+    match proto::read_frame(&mut sock).unwrap() {
+        Some((Frame::Error { id, code, .. }, _)) => {
+            assert_eq!(id, 9, "rejection must be addressed to the bad request");
+            assert_eq!(code, ErrorCode::BadRequest.code());
+        }
+        other => panic!("expected a typed Error frame, got {other:?}"),
+    }
+
+    // The stream is still frame-delimited: a valid Submit on the same
+    // connection completes normally (Partial chunks, then Completed).
+    let req = GenRequest::builder(10, 3).steps(2).build().unwrap();
+    sock.write_all(&proto::encode(&Frame::Submit { req, progress: false })).unwrap();
+    let mut values = 0usize;
+    loop {
+        match proto::read_frame(&mut sock).unwrap() {
+            Some((Frame::Partial { id, values: chunk, .. }, _)) => {
+                assert_eq!(id, 10);
+                values += chunk.len();
+            }
+            Some((Frame::Completed(c), _)) => {
+                assert_eq!(c.id, 10);
+                let want: usize = c.shape.iter().map(|&d| d as usize).product();
+                assert_eq!(values, want, "partial chunks must cover the whole latent");
+                break;
+            }
+            other => panic!("expected Partial/Completed, got {other:?}"),
+        }
+    }
+    sock.write_all(&proto::encode(&Frame::Goodbye)).unwrap();
+    match proto::read_frame(&mut sock).unwrap() {
+        Some((Frame::Goodbye, _)) | None => {}
+        other => panic!("expected Goodbye or EOF, got {other:?}"),
+    }
+    drop(sock);
+    door.shutdown();
+}

@@ -202,7 +202,7 @@ fn prop_engine_counters_account_every_site() {
             fc.enable_merge = false;
             let mut eng = DenoiseEngine::new(&model, fc);
             let r = eng
-                .generate(&GenRequest::simple(0, seed, steps))
+                .generate(&GenRequest::builder(0, seed).steps(steps).build().unwrap())
                 .map_err(|e| e.to_string())?;
             let sites = steps * model.cfg.layers;
             if r.computed + r.approximated + r.reused != sites {
@@ -264,7 +264,7 @@ fn prop_batch_engine_matches_single_nocache() {
             let reqs: Vec<GenRequest> = seeds
                 .iter()
                 .enumerate()
-                .map(|(i, &s)| GenRequest::simple(i as u64, s, *steps))
+                .map(|(i, &s)| GenRequest::builder(i as u64, s).steps(*steps).build().unwrap())
                 .collect();
             let mut be = BatchEngine::new(&model, fc.clone(), 4);
             let batched = be.generate(&reqs).map_err(|e| e.to_string())?;

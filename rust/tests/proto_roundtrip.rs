@@ -1,0 +1,273 @@
+//! Wire-codec properties (docs/PROTOCOL.md): every frame type round-trips
+//! bit-exactly through encode → decode, ragged latent lengths chunk and
+//! reassemble losslessly, and hostile inputs — truncations at every byte
+//! boundary, bad magic, unknown types, oversized lengths, lying counts,
+//! invalid UTF-8, semantically bad requests — are rejected with typed
+//! errors, never a panic or an unbounded allocation.
+
+use fastcache_dit::api::{ErrorCode, Progress};
+use fastcache_dit::config::{C_IN, N_TOKENS};
+use fastcache_dit::net::proto::{
+    self, decode_slice, encode, partial_frames, read_frame, Completed, PARTIAL_CHUNK_F32,
+};
+use fastcache_dit::net::{Frame, ProtoError, MAX_FRAME_LEN, VERSION};
+use fastcache_dit::rng::Rng;
+use fastcache_dit::scheduler::{GenRequest, Turbulence};
+use fastcache_dit::tensor::Tensor;
+
+fn sample_completed(id: u64, deadline_met: Option<bool>) -> Completed {
+    Completed {
+        id,
+        shape: vec![N_TOKENS as u32, C_IN as u32],
+        queued_ms: 12.25,
+        e2e_ms: 340.5,
+        deadline_met,
+        wall_ms: 328.25,
+        computed: 100,
+        approximated: 40,
+        reused: 9,
+        token_sites_computed: 12_345,
+        token_sites_total: 20_000,
+        flops_done: 1 << 33,
+        flops_full: 1 << 34,
+        flops_padded: 123,
+        cache_bytes_peak: 4096,
+        warm_layers: 3,
+    }
+}
+
+/// One of every frame type, several with ragged payload sizes.
+fn sample_frames() -> Vec<Frame> {
+    let mut rng = Rng::new(0xF4A3);
+    let full = GenRequest::builder(42, 7)
+        .cond_seed(99)
+        .guidance(3.25)
+        .steps(12)
+        .deadline_ms(1500.0)
+        .turbulence(Turbulence { tokens: vec![0, 5, 63], amp: 0.5, seed: 11 })
+        .init_latent(Tensor::new(rng.normal_vec(N_TOKENS * C_IN, 1.0), &[N_TOKENS, C_IN]))
+        .build()
+        .unwrap();
+    let mut frames = vec![
+        Frame::Hello { version: VERSION },
+        Frame::HelloAck { version: 7 },
+        Frame::Submit { req: GenRequest::builder(1, 2).build().unwrap(), progress: false },
+        Frame::Submit { req: full, progress: true },
+        Frame::Goodbye,
+        Frame::Progress(Progress { id: u64::MAX, step: 3, total: 50 }),
+        Frame::Completed(sample_completed(1, None)),
+        Frame::Completed(sample_completed(2, Some(true))),
+        Frame::Completed(sample_completed(3, Some(false))),
+        Frame::Shed { id: 8, waited_ms: 1234.5, deadline_ms: 1000.0 },
+        Frame::Error { id: 0, code: ErrorCode::Busy.code(), detail: String::new() },
+        Frame::Error { id: 9, code: 0xBEEF, detail: "unknown codes round-trip raw".into() },
+    ];
+    for n in [0usize, 1, 3, 1000] {
+        frames.push(Frame::Partial {
+            id: n as u64,
+            offset: 16,
+            total: 64 * 1024,
+            values: rng.normal_vec(n, 2.0),
+        });
+    }
+    frames
+}
+
+#[test]
+fn every_frame_type_round_trips_exactly() {
+    for frame in sample_frames() {
+        let buf = encode(&frame);
+        let (back, consumed) = decode_slice(&buf)
+            .unwrap_or_else(|e| panic!("decode failed for {frame:?}: {e}"));
+        assert_eq!(consumed, buf.len(), "partial consume for {frame:?}");
+        assert_eq!(back, frame);
+        // The streaming reader agrees with the slice decoder.
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        let (streamed, n) = read_frame(&mut cursor).unwrap().expect("frame expected");
+        assert_eq!(streamed, frame);
+        assert_eq!(n, buf.len());
+    }
+}
+
+#[test]
+fn ragged_latents_chunk_and_reassemble_bit_identically() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for n in [0usize, 1, PARTIAL_CHUNK_F32 - 1, PARTIAL_CHUNK_F32, PARTIAL_CHUNK_F32 + 1, 3 * PARTIAL_CHUNK_F32 + 7] {
+        let values = rng.normal_vec(n, 1.0);
+        let frames = partial_frames(77, &values);
+        assert!(!frames.is_empty(), "even empty latents ship one chunk");
+        let mut got: Vec<f32> = Vec::new();
+        for f in &frames {
+            let buf = encode(f);
+            match decode_slice(&buf).unwrap().0 {
+                Frame::Partial { id, offset, total, values: chunk } => {
+                    assert_eq!(id, 77);
+                    assert_eq!(total as usize, n);
+                    assert_eq!(offset as usize, got.len(), "chunks must be in offset order");
+                    assert!(chunk.len() <= PARTIAL_CHUNK_F32);
+                    got.extend_from_slice(&chunk);
+                }
+                other => panic!("expected Partial, got {other:?}"),
+            }
+        }
+        // Bit-identical: compare IEEE-754 bit patterns, not float equality.
+        let a: Vec<u32> = values.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "n={n} latent did not survive chunking");
+    }
+}
+
+#[test]
+fn truncation_at_every_boundary_is_a_typed_error() {
+    for frame in sample_frames() {
+        let buf = encode(&frame);
+        for cut in 0..buf.len() {
+            match decode_slice(&buf[..cut]) {
+                Err(ProtoError::Truncated) => {}
+                other => panic!("cut at {cut}/{} of {frame:?}: expected Truncated, got {other:?}", buf.len()),
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_reader_distinguishes_clean_eof_from_mid_frame_eof() {
+    let buf = encode(&Frame::Goodbye);
+    // Clean EOF at a frame boundary: None, not an error.
+    let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+    assert!(read_frame(&mut empty).unwrap().is_none());
+    // EOF inside the header and inside the body: Truncated.
+    for cut in 1..buf.len() {
+        let mut cursor = std::io::Cursor::new(buf[..cut].to_vec());
+        match read_frame(&mut cursor) {
+            Err(ProtoError::Truncated) => {}
+            other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn hostile_inputs_are_rejected_without_panic() {
+    // Oversized length prefix: rejected from 4 bytes, before any body.
+    let mut oversized = (MAX_FRAME_LEN + 1).to_le_bytes().to_vec();
+    oversized.extend_from_slice(&[0u8; 16]);
+    assert!(matches!(decode_slice(&oversized), Err(ProtoError::Oversized { .. })));
+    let mut cursor = std::io::Cursor::new(oversized);
+    assert!(matches!(read_frame(&mut cursor), Err(ProtoError::Oversized { .. })));
+
+    // Zero-length frame (no type byte).
+    assert!(matches!(decode_slice(&0u32.to_le_bytes()), Err(ProtoError::Malformed(_))));
+
+    // Unknown type byte.
+    let unknown = [1u32.to_le_bytes().as_slice(), &[0x7F]].concat();
+    assert!(matches!(decode_slice(&unknown), Err(ProtoError::UnknownType(0x7F))));
+
+    // Bad magic in a Hello.
+    let mut hello = encode(&Frame::Hello { version: VERSION });
+    hello[5] ^= 0xFF;
+    assert!(matches!(decode_slice(&hello), Err(ProtoError::BadMagic(_))));
+
+    // Trailing bytes after a complete payload.
+    let mut trailing = encode(&Frame::Goodbye);
+    trailing[0..4].copy_from_slice(&2u32.to_le_bytes());
+    trailing.push(0xAA);
+    assert!(matches!(decode_slice(&trailing), Err(ProtoError::Malformed(_))));
+
+    // A Partial whose count field lies about the payload: rejected by the
+    // count-vs-remaining check before any allocation happens.
+    let mut lying = encode(&Frame::Partial { id: 1, offset: 0, total: 4, values: vec![1.0] });
+    let count_at = 4 + 1 + 8 + 4 + 4; // len, type, id, offset, total
+    lying[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(decode_slice(&lying), Err(ProtoError::Malformed(_))));
+
+    // Invalid UTF-8 in an Error detail.
+    let mut bad_utf8 = encode(&Frame::Error { id: 1, code: 1, detail: "ab".into() });
+    let detail_at = bad_utf8.len() - 2;
+    bad_utf8[detail_at] = 0xFF;
+    bad_utf8[detail_at + 1] = 0xFE;
+    assert!(matches!(decode_slice(&bad_utf8), Err(ProtoError::Malformed(_))));
+}
+
+/// Hand-build a structurally valid Submit payload with chosen field
+/// values (the builder refuses to construct invalid requests, so hostile
+/// Submits must be forged at the byte level).
+fn forge_submit(steps: u32, guidance: f32, deadline: Option<f64>) -> Vec<u8> {
+    let mut body = vec![0x02u8]; // T_SUBMIT
+    body.extend_from_slice(&1u64.to_le_bytes()); // id
+    body.extend_from_slice(&2u64.to_le_bytes()); // seed
+    body.extend_from_slice(&3u64.to_le_bytes()); // cond_seed
+    body.extend_from_slice(&guidance.to_le_bytes());
+    body.extend_from_slice(&steps.to_le_bytes());
+    match deadline {
+        Some(ms) => {
+            body.push(1);
+            body.extend_from_slice(&ms.to_le_bytes());
+        }
+        None => body.push(0),
+    }
+    body.push(0); // no turbulence
+    body.push(0); // no init latent
+    body.push(0); // progress off
+    let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+    buf.extend_from_slice(&body);
+    buf
+}
+
+#[test]
+fn forged_invalid_submits_get_the_in_process_validation_rejection() {
+    // Sanity: a forged VALID submit decodes.
+    let ok = forge_submit(10, 7.5, Some(100.0));
+    assert!(matches!(decode_slice(&ok), Ok((Frame::Submit { .. }, _))));
+
+    // steps = 0, NaN guidance, NaN deadline: each rejected as the typed
+    // BadRequest an in-process builder call would produce.
+    for bytes in [
+        forge_submit(0, 7.5, None),
+        forge_submit(10, f32::NAN, None),
+        forge_submit(10, 7.5, Some(f64::NAN)),
+        forge_submit(10, 7.5, Some(-5.0)),
+    ] {
+        match decode_slice(&bytes) {
+            Err(ProtoError::BadRequest(rej)) => {
+                assert_eq!(rej.code, ErrorCode::BadRequest);
+                assert_eq!(rej.id, 1, "rejection must carry the request id");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn oversized_detail_strings_clamp_instead_of_breaking_framing() {
+    let detail = "x".repeat(u16::MAX as usize + 500);
+    let buf = encode(&Frame::Error { id: 4, code: 2, detail });
+    match decode_slice(&buf).unwrap().0 {
+        Frame::Error { detail, .. } => assert_eq!(detail.len(), u16::MAX as usize),
+        other => panic!("expected Error, got {other:?}"),
+    }
+}
+
+#[test]
+fn completed_reassembly_validates_shape_against_values() {
+    let c = sample_completed(5, Some(true));
+    let want: usize = c.shape.iter().map(|&d| d as usize).product();
+    let resp = c.clone().into_response(vec![0.5; want]).expect("matching length");
+    assert_eq!(resp.result.latent.shape(), [N_TOKENS, C_IN]);
+    assert_eq!(resp.deadline_met, Some(true));
+    assert!(matches!(c.into_response(vec![0.5; want - 1]), Err(ProtoError::Malformed(_))));
+}
+
+#[test]
+fn version_is_stable_and_request_response_spaces_are_disjoint() {
+    assert_eq!(VERSION, 1);
+    assert_eq!(proto::MAGIC, u32::from_le_bytes(*b"FCP1"));
+    // Request frames encode type bytes < 0x80, responses >= 0x80.
+    for frame in sample_frames() {
+        let ty = encode(&frame)[4];
+        let is_request = matches!(
+            frame,
+            Frame::Hello { .. } | Frame::Submit { .. } | Frame::Goodbye
+        );
+        assert_eq!(ty < 0x80, is_request, "type byte space violated for {frame:?}");
+    }
+}

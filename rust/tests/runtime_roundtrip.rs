@@ -123,7 +123,7 @@ fn hlo_generation_close_to_native_generation() {
     assert_eq!(hlo.mode, ExecMode::Hlo);
     let nat = DitModel::native(Variant::S, 23);
     let fc = FastCacheConfig::with_policy(PolicyKind::NoCache);
-    let req = GenRequest::simple(1, 42, 8);
+    let req = GenRequest::builder(1, 42).steps(8).build().unwrap();
     let a = DenoiseEngine::new(&hlo, fc.clone()).generate(&req).unwrap();
     let b = DenoiseEngine::new(&nat, fc).generate(&req).unwrap();
     let md = a.latent.max_abs_diff(&b.latent);
@@ -135,7 +135,7 @@ fn hlo_fastcache_generation_finite_and_skipping() {
     let Some(hlo) = hlo_model(Variant::S, 29) else { return };
     let fc = FastCacheConfig::default();
     let r = DenoiseEngine::new(&hlo, fc)
-        .generate(&GenRequest::simple(2, 77, 12))
+        .generate(&GenRequest::builder(2, 77).steps(12).build().unwrap())
         .unwrap();
     assert!(r.latent.data().iter().all(|v| v.is_finite()));
     assert!(r.approximated > 0, "fastcache never approximated on HLO path");

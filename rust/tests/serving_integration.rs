@@ -12,7 +12,8 @@ use fastcache_dit::metrics::FidAccumulator;
 use fastcache_dit::model::DitModel;
 use fastcache_dit::runtime::{ArtifactStore, Client};
 use fastcache_dit::scheduler::{DenoiseEngine, GenRequest};
-use fastcache_dit::server::{Server, SubmitError};
+use fastcache_dit::api::ErrorCode;
+use fastcache_dit::server::Server;
 use fastcache_dit::tensor::Tensor;
 use fastcache_dit::workload::{MotionProfile, WorkloadGen};
 
@@ -40,10 +41,10 @@ fn throughput_improves_with_caching() {
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = reqs
             .iter()
-            .map(|r| server.submit(r.clone()).expect("submit"))
+            .map(|r| server.submit(r).expect("submit"))
             .collect();
         for rx in rxs {
-            rx.recv().expect("response").completed();
+            rx.wait().completed();
         }
         walls.push(t0.elapsed().as_secs_f64());
         let report = server.shutdown();
@@ -71,11 +72,11 @@ fn str_enabled_serving_batches_and_matches_single_request() {
     let reqs = wl.image_set(8, 6, MotionProfile::MIXED);
     let rxs: Vec<_> = reqs
         .iter()
-        .map(|r| (r.clone(), server.submit(r.clone()).expect("submit")))
+        .map(|r| (r.clone(), server.submit(r).expect("submit")))
         .collect();
     let model = DitModel::native(Variant::S, 5);
     for (req, rx) in rxs {
-        let resp = rx.recv().expect("response").completed();
+        let resp = rx.wait().completed();
         let mut eng = DenoiseEngine::new(&model, fc.clone());
         let solo = eng.generate(&req).expect("solo generate");
         let md = resp.result.latent.max_abs_diff(&solo.latent);
@@ -97,10 +98,10 @@ fn responses_match_request_ids_under_batching() {
     let reqs = wl.image_set(9, 6, MotionProfile::MIXED);
     let rxs: Vec<_> = reqs
         .iter()
-        .map(|r| (r.id, server.submit(r.clone()).unwrap()))
+        .map(|r| (r.id, server.submit(r).unwrap()))
         .collect();
     for (id, rx) in rxs {
-        let resp = rx.recv().unwrap().completed();
+        let resp = rx.wait().completed();
         assert_eq!(resp.result.id, id, "response routed to wrong request");
     }
     server.shutdown();
@@ -116,7 +117,7 @@ fn serve_burst(workers: usize, reqs: &[GenRequest]) -> BTreeMap<u64, Tensor> {
         .collect();
     let mut out = BTreeMap::new();
     for (id, rx) in rxs {
-        let resp = rx.recv().expect("response").completed();
+        let resp = rx.wait().completed();
         assert_eq!(resp.result.id, id);
         out.insert(id, resp.result.latent);
     }
@@ -159,14 +160,14 @@ fn sharded_deadline_traffic_is_tracked_per_class() {
         .image_set(8, 5, MotionProfile::MIXED)
         .into_iter()
         .enumerate()
-        .map(|(i, r)| if i % 2 == 0 { r.with_deadline(300_000.0) } else { r })
+        .map(|(i, r)| if i % 2 == 0 { r.into_builder().deadline_ms(300_000.0).build().unwrap() } else { r })
         .collect();
     let rxs: Vec<_> = reqs
         .iter()
         .map(|r| (r.deadline_ms.is_some(), server.submit_blocking(r).unwrap()))
         .collect();
     for (tagged, rx) in rxs {
-        let resp = rx.recv().unwrap().completed();
+        let resp = rx.wait().completed();
         assert_eq!(resp.deadline_met.is_some(), tagged);
     }
     let report = server.shutdown();
@@ -189,18 +190,18 @@ fn backpressure_and_shutdown_error_paths() {
     let mut accepted = Vec::new();
     let mut saw_full = false;
     for i in 0..64 {
-        match server.submit(GenRequest::simple(i, i, 6)) {
+        match server.submit(&GenRequest::builder(i, i).steps(6).build().unwrap()) {
             Ok(rx) => accepted.push(rx),
-            Err(SubmitError::QueueFull) => {
+            Err(rej) if rej.code == ErrorCode::Busy => {
                 saw_full = true;
                 break;
             }
             Err(e) => panic!("unexpected submit error: {e}"),
         }
     }
-    assert!(saw_full, "bounded queue never reported QueueFull");
+    assert!(saw_full, "bounded queue never reported Busy");
     for rx in accepted {
-        rx.recv().expect("accepted requests must still complete").completed();
+        rx.wait().completed();
     }
     // ...and once the server is shut down, the queues report Closed (the
     // owning handle is consumed by shutdown, so exercise the shard queue
@@ -210,10 +211,11 @@ fn backpressure_and_shutdown_error_paths() {
     q.close();
     let (tx, _rx) = std::sync::mpsc::channel();
     let job = fastcache_dit::server::Job {
-        req: GenRequest::simple(0, 0, 2),
+        req: GenRequest::builder(0, 0).steps(2).build().unwrap(),
         resp: tx,
         submitted: std::time::Instant::now(),
         cost: 1,
+        progress: false,
     };
     match q.push(job) {
         fastcache_dit::server::queue::Push::Closed(_) => {}
@@ -228,15 +230,15 @@ fn warm_start_flag_with_empty_store_matches_warm_start_off_exactly() {
     // per server (so nothing retires-and-publishes before admission): the
     // warm server consults an empty store (all misses) and must produce a
     // bit-identical latent to the cold server.
-    let req = GenRequest::simple(0, 1234, 8);
+    let req = GenRequest::builder(0, 1234).steps(8).build().unwrap();
     let run = |warm: bool| -> Tensor {
         let scfg = ServerConfig { max_batch: 2, queue_depth: 8, ..ServerConfig::default() };
         let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
         fc.warm_start = warm;
         fc.fit_min_updates = 4; // same gate both sides — it is store-independent
         let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 5)));
-        let rx = server.submit(req.clone()).expect("submit");
-        let latent = rx.recv().expect("response").completed().result.latent;
+        let rx = server.submit(&req).expect("submit");
+        let latent = rx.wait().completed().result.latent;
         let report = server.shutdown();
         if warm {
             let stats = report.store.expect("warm server reports its store");
@@ -281,11 +283,11 @@ fn warm_started_second_burst_is_cheaper_at_bounded_quality() {
         let server = Server::start_with_store(scfg.clone(), fc.clone(), store, move || {
             Ok(DitModel::native(Variant::S, seed))
         });
-        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone()).unwrap()).collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r).unwrap()).collect();
         let mut flops = 0;
         let mut latents = Vec::new();
         for rx in rxs {
-            let resp = rx.recv().unwrap().completed();
+            let resp = rx.wait().completed();
             assert_eq!(resp.result.warm_layers > 0, expect_warm);
             flops += resp.result.flops_done;
             latents.push(resp.result.latent);
@@ -389,9 +391,9 @@ fn hlo_server_smoke() {
     });
     let mut wl = WorkloadGen::new(6);
     let reqs = wl.image_set(3, 4, MotionProfile::MIXED);
-    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone()).unwrap()).collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r).unwrap()).collect();
     for rx in rxs {
-        let resp = rx.recv().unwrap().completed();
+        let resp = rx.wait().completed();
         assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
     }
     let report = server.shutdown();

@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# Network front-door smoke (docs/PROTOCOL.md): boot `fastcache-serve
+# serve --listen` on an ephemeral port, drive it with the built-in
+# client over a real socket — happy path, deadline sheds, graceful
+# drain — and assert on both sides' logs. CI runs exactly this (see
+# .github/workflows/ci.yml, job net-smoke).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "net_smoke: cargo not found on PATH — install a Rust toolchain (rustup) first" >&2
+    exit 1
+fi
+
+cargo build --release
+
+BIN=target/release/fastcache-serve
+OUT=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$OUT"
+}
+trap cleanup EXIT
+
+# --- boot: ephemeral port; stdin is a fifo we hold open so we can send
+# the "drain" line later (EOF would drain immediately).
+mkfifo "$OUT/ctl"
+"$BIN" serve --native --model s --steps 6 --listen 127.0.0.1:0 --net-max-conns 8 \
+    < "$OUT/ctl" > "$OUT/server.log" 2>&1 &
+SERVER_PID=$!
+exec 9>"$OUT/ctl"
+
+for _ in $(seq 1 100); do
+    grep -q "^listening on " "$OUT/server.log" && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "net_smoke: server died during startup" >&2
+        cat "$OUT/server.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$OUT/server.log" | head -n1)
+if [ -z "$ADDR" ]; then
+    echo "net_smoke: no 'listening on' line after 10s" >&2
+    cat "$OUT/server.log" >&2
+    exit 1
+fi
+echo "net_smoke: door is up on $ADDR"
+
+# --- happy path: every request completes over the wire, with per-step
+# progress frames streaming back.
+"$BIN" client --connect "$ADDR" --requests 4 --steps 6 --progress \
+    > "$OUT/happy.log" 2>&1
+grep -q "client done: 4/4 completed" "$OUT/happy.log"
+grep -q "progress frames" "$OUT/happy.log"
+echo "net_smoke: happy path OK (4/4 completed with progress)"
+
+# --- deadline sheds: a 0 ms budget is expired by the time any job pops
+# from the queue, so every tagged request must come back as a typed shed
+# — over the wire, as a Shed frame.
+"$BIN" client --connect "$ADDR" --requests 3 --steps 6 \
+    --deadline-every 1 --deadline-ms 0 > "$OUT/shed.log" 2>&1
+grep -q "SHED after" "$OUT/shed.log"
+grep -q "client done: 0/3 completed" "$OUT/shed.log"
+echo "net_smoke: deadline shed path OK (3/3 shed)"
+
+# --- graceful drain: one line on stdin; the server must drain, print
+# its report (including the door counters), and exit 0.
+echo drain >&9
+exec 9>&-
+if ! wait "$SERVER_PID"; then
+    echo "net_smoke: server exited non-zero after drain" >&2
+    cat "$OUT/server.log" >&2
+    exit 1
+fi
+SERVER_PID=""
+grep -q "draining..." "$OUT/server.log"
+grep -q "conns accepted" "$OUT/server.log"
+grep -q "^SLA: " "$OUT/server.log"
+grep -q ", 3 shed" "$OUT/server.log"
+echo "net_smoke: graceful drain OK"
+echo "net_smoke: OK"
