@@ -5,7 +5,7 @@
 //!   cargo bench --bench bench_tables            # all tables + figures
 //!   cargo bench --bench bench_tables -- table1  # one experiment
 //!   BENCH_FULL=1 cargo bench ...                # paper-faithful sizes
-//!   BENCH_SMOKE=1 cargo bench -- serving sharding warmstart  # CI smoke
+//!   BENCH_SMOKE=1 cargo bench -- serving sharding warmstart obs  # CI smoke
 //!
 //! The serving, sharding, and warmstart tables also land as
 //! bench_out/BENCH_*.json (uploaded as a CI artifact by
@@ -861,6 +861,75 @@ fn warmstart() {
     write_json("warmstart", json_rows);
 }
 
+/// Observability overhead guard: the same fixed-seed burst served with
+/// the registry alone (recorder off — the default) vs the flight
+/// recorder tracing every lane (rate 1.0, the worst case). The registry
+/// is always on, so the delta between the two rows IS the recorder's
+/// marginal cost; production sample rates trace a fraction of lanes and
+/// pay proportionally less. Methodology: docs/OBSERVABILITY.md.
+fn obs() {
+    use fastcache_dit::config::ServerConfig;
+    use fastcache_dit::server::Server;
+    let full = std::env::var("BENCH_FULL").as_deref() == Ok("1");
+    let (requests, steps) = if smoke() {
+        (6, 4)
+    } else if full {
+        (24, 20)
+    } else {
+        (12, 8)
+    };
+    let mut t = Table::new(
+        "Observability — registry only vs flight recorder at rate 1.0",
+        &["Config", "req/s↑", "lane-steps/s", "Trace events", "Overhead vs base"],
+    );
+    let mut json_rows = Vec::new();
+    let mut base_rps = 0.0f64;
+    for (label, rate) in [("registry only (default)", 0.0f64), ("recorder rate=1.0", 1.0)] {
+        let scfg = ServerConfig {
+            variant: Variant::S,
+            steps,
+            workers: 1,
+            max_batch: 4,
+            trace_sample_rate: rate,
+            ..ServerConfig::default()
+        };
+        let mut cfg = fc(PolicyKind::FastCache);
+        cfg.enable_str = false;
+        let server = Server::start(scfg, cfg, || Ok(DitModel::native(Variant::S, 0xD17)));
+        let recorder = server.recorder();
+        let mut wl = WorkloadGen::new(0x0B5);
+        let reqs = wl.image_set(requests, steps, MotionProfile::MIXED);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> =
+            reqs.iter().map(|r| server.submit_blocking(r).expect("submit")).collect();
+        for rx in rxs {
+            rx.wait();
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        server.shutdown();
+        let rps = requests as f64 / wall;
+        let sps = (requests * steps) as f64 / wall;
+        let events = recorder.as_deref().map(|r| r.len() as u64 + r.dropped()).unwrap_or(0);
+        let overhead = if base_rps > 0.0 { 1.0 - rps / base_rps } else { 0.0 };
+        if rate == 0.0 {
+            base_rps = rps;
+        }
+        t.row(&[
+            label.to_string(),
+            format!("{rps:.2}"),
+            format!("{sps:.1}"),
+            format!("{events}"),
+            if rate == 0.0 { "baseline".to_string() } else { format!("{:+.1}%", overhead * 100.0) },
+        ]);
+        json_rows.push(format!(
+            "{{\"label\":\"{label}\",\"rps\":{rps:.4},\"lane_steps_per_s\":{sps:.3},\
+             \"trace_events\":{events},\"overhead_frac\":{overhead:.4}}}"
+        ));
+    }
+    println!("{}", t.render());
+    write_json("obs", json_rows);
+}
+
 /// Figure 1: derivative-magnitude heatmap, high- vs low-motion content.
 fn fig1() {
     let v = Variant::B;
@@ -1027,6 +1096,9 @@ fn main() {
     }
     if want("warmstart") {
         warmstart();
+    }
+    if want("obs") {
+        obs();
     }
     if want("fig1") {
         fig1();

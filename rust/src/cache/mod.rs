@@ -35,6 +35,18 @@ pub enum BlockAction {
     Reuse,
 }
 
+impl BlockAction {
+    /// Stable lower-case label, used by the flight recorder's trace
+    /// events and the observability docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockAction::Compute => "compute",
+            BlockAction::Approx => "approx",
+            BlockAction::Reuse => "reuse",
+        }
+    }
+}
+
 /// Per-step information available before any block runs.
 #[derive(Clone, Copy, Debug)]
 pub struct StepInfo {

@@ -76,6 +76,20 @@ pub struct ServerConfig {
     /// `net_max_conns + 1` is refused with a `Busy` frame before it
     /// costs a thread.
     pub net_max_conns: usize,
+    /// Flight-recorder sampling: the fraction of lanes (deterministic,
+    /// by request-id hash) whose per-(step, layer) cache decisions, STR
+    /// partitions, and stage timings are recorded as trace events.
+    /// 0.0 (the default) disables the recorder entirely — served latents
+    /// are bit-identical to a build without it; 1.0 traces every lane.
+    pub trace_sample_rate: f64,
+    /// Where `fastcache-serve` dumps the recorded trace at drain:
+    /// a `.json` suffix selects Chrome `trace_event` format (load in
+    /// `chrome://tracing` / Perfetto), anything else NDJSON. `None`
+    /// keeps the ring in memory only.
+    pub trace_out: Option<String>,
+    /// Period (seconds) for printing a registry scrape to stderr while
+    /// serving. 0.0 (the default) disables the ticker.
+    pub stats_every: f64,
 }
 
 impl Default for ServerConfig {
@@ -96,6 +110,9 @@ impl Default for ServerConfig {
             warm_budget_bytes: 8 << 20,
             listen: None,
             net_max_conns: 64,
+            trace_sample_rate: 0.0,
+            trace_out: None,
+            stats_every: 0.0,
         }
     }
 }
@@ -142,6 +159,20 @@ impl ServerConfig {
             return Err(format!(
                 "net_max_conns must be 1..={MAX_NET_CONNS} (thread-per-connection door budget), got {}",
                 self.net_max_conns
+            ));
+        }
+        if !self.trace_sample_rate.is_finite()
+            || !(0.0..=1.0).contains(&self.trace_sample_rate)
+        {
+            return Err(format!(
+                "trace_sample_rate must be a finite fraction in 0.0..=1.0 (0 disables the flight recorder), got {}",
+                self.trace_sample_rate
+            ));
+        }
+        if !self.stats_every.is_finite() || self.stats_every < 0.0 {
+            return Err(format!(
+                "stats_every must be a finite period in seconds >= 0 (0 disables the ticker), got {}",
+                self.stats_every
             ));
         }
         Ok(())
@@ -248,6 +279,26 @@ mod tests {
             net_max_conns: 2,
             ..ServerConfig::default()
         };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_nonsense_observability_knobs() {
+        let d = ServerConfig::default();
+        assert_eq!(d.trace_sample_rate, 0.0, "recorder must default OFF");
+        assert_eq!(d.trace_out, None);
+        assert_eq!(d.stats_every, 0.0, "stats ticker must default OFF");
+        for bad in [-0.1, 1.1, f64::NAN, f64::INFINITY] {
+            let c = ServerConfig { trace_sample_rate: bad, ..ServerConfig::default() };
+            assert!(c.validate().is_err(), "trace_sample_rate {bad} must be rejected");
+        }
+        let c = ServerConfig { trace_sample_rate: 1.0, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
+        for bad in [-1.0, f64::NAN, f64::NEG_INFINITY] {
+            let c = ServerConfig { stats_every: bad, ..ServerConfig::default() };
+            assert!(c.validate().is_err(), "stats_every {bad} must be rejected");
+        }
+        let c = ServerConfig { stats_every: 2.5, ..ServerConfig::default() };
         assert!(c.validate().is_ok());
     }
 

@@ -228,6 +228,11 @@ pub fn apply(
         scfg.listen = Some(v.to_string());
     }
     usize_key!("net.max_conns", scfg.net_max_conns);
+    f64_key!("obs.trace_sample_rate", scfg.trace_sample_rate);
+    f64_key!("obs.stats_every", scfg.stats_every);
+    if let Some(v) = doc.get("obs.trace_out").and_then(|v| v.as_str()) {
+        scfg.trace_out = Some(v.to_string());
+    }
     fc.validate()?;
     scfg.validate()?;
     Ok(())
@@ -263,6 +268,11 @@ warm_budget_mib = 4
 [net]
 listen = "127.0.0.1:0"
 max_conns = 8
+
+[obs]
+trace_sample_rate = 0.25
+trace_out = "trace.json"
+stats_every = 5
 "#;
 
     #[test]
@@ -295,6 +305,9 @@ max_conns = 8
         assert_eq!(scfg.warm_budget_bytes, 4 << 20);
         assert_eq!(scfg.listen.as_deref(), Some("127.0.0.1:0"));
         assert_eq!(scfg.net_max_conns, 8);
+        assert_eq!(scfg.trace_sample_rate, 0.25);
+        assert_eq!(scfg.trace_out.as_deref(), Some("trace.json"));
+        assert_eq!(scfg.stats_every, 5.0);
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod scheduler;

@@ -11,6 +11,8 @@
 //!                                  port; "drain" or EOF on stdin drains)
 //!   client --connect HOST:PORT   — built-in remote client driving the
 //!                                  same workload over the wire
+//!   stats --connect HOST:PORT    — scrape a running front door's live
+//!                                  telemetry registry (one Stats frame)
 //!
 //! Common options: --model s|b|l|xl  --policy fastcache|fbcache|...
 //!   --steps N --requests N --alpha A --tau-s T --gamma G --max-batch B
@@ -32,6 +34,12 @@
 //! converged affine fits / calibration profiles from previously served
 //! traffic and publish theirs back), --warm-budget-mib N bounds it, and
 //! --fit-min-updates K gates Approx on fit convergence.
+//!
+//! Observability (docs/OBSERVABILITY.md): --stats-every S prints a live
+//! registry scrape to stderr every S seconds; --trace-sample-rate R
+//! turns on the flight recorder for fraction R of lanes, and
+//! --trace-out PATH dumps the recorded events at drain (.json = Chrome
+//! trace_event for chrome://tracing / Perfetto, otherwise NDJSON).
 
 use std::sync::Arc;
 
@@ -110,6 +118,13 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     }
     scfg.net_max_conns =
         args.parse_num("net-max-conns", scfg.net_max_conns).map_err(anyhow::Error::msg)?;
+    scfg.trace_sample_rate =
+        args.parse_num("trace-sample-rate", scfg.trace_sample_rate).map_err(anyhow::Error::msg)?;
+    if let Some(path) = args.get("trace-out") {
+        scfg.trace_out = Some(path.to_string());
+    }
+    scfg.stats_every =
+        args.parse_num("stats-every", scfg.stats_every).map_err(anyhow::Error::msg)?;
     scfg.validate().map_err(anyhow::Error::msg)?;
     Ok((variant, fc, scfg))
 }
@@ -242,6 +257,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let scfg2 = scfg.clone();
     let server = Server::start(scfg.clone(), fc, move || load_model(&scfg2, native));
+    // Grab the observability handles before anything consumes the server:
+    // both outlive it (Arc), so the drain path can still dump the trace
+    // and the ticker keeps scraping while the front door owns the server.
+    let registry = server.registry();
+    let recorder = server.recorder();
+    let ticker = spawn_stats_ticker(&registry, scfg.stats_every);
 
     // Network mode: instead of replaying a synthetic workload in-process,
     // open the front door and serve remote clients until stdin closes (or
@@ -261,7 +282,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         println!("draining...");
         let report = net.shutdown();
+        stop_stats_ticker(ticker);
         print_report(&report);
+        dump_trace(recorder.as_deref(), scfg.trace_out.as_deref())?;
         return Ok(());
     }
 
@@ -283,7 +306,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_outcome(&rx.wait());
     }
     let report = server.shutdown();
+    stop_stats_ticker(ticker);
     print_report(&report);
+    dump_trace(recorder.as_deref(), scfg.trace_out.as_deref())?;
+    Ok(())
+}
+
+/// Periodic registry scrape to stderr (stdout carries the serve report).
+/// Returns `None` when the ticker is disabled (`stats_every == 0`).
+type StatsTicker = (std::sync::mpsc::Sender<()>, std::thread::JoinHandle<()>);
+
+fn spawn_stats_ticker(
+    registry: &Arc<fastcache_dit::obs::Registry>,
+    every_s: f64,
+) -> Option<StatsTicker> {
+    if every_s <= 0.0 {
+        return None;
+    }
+    let reg = Arc::clone(registry);
+    let every = std::time::Duration::from_secs_f64(every_s);
+    let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+    let handle = std::thread::Builder::new()
+        .name("fastcache-stats".into())
+        .spawn(move || {
+            // recv_timeout doubles as the tick clock: a disconnect (the
+            // sender dropped at drain) ends the loop immediately instead
+            // of sleeping out the last period.
+            while stop_rx.recv_timeout(every)
+                == Err(std::sync::mpsc::RecvTimeoutError::Timeout)
+            {
+                eprint!("--- stats ---\n{}", reg.render_text());
+            }
+        })
+        .expect("spawning stats ticker");
+    Some((stop_tx, handle))
+}
+
+fn stop_stats_ticker(ticker: Option<StatsTicker>) {
+    if let Some((stop_tx, handle)) = ticker {
+        drop(stop_tx);
+        let _ = handle.join();
+    }
+}
+
+/// Dump the flight recorder's ring at drain: `.json` selects Chrome
+/// `trace_event` format, anything else NDJSON. No-op unless both a
+/// recorder and an output path exist.
+fn dump_trace(
+    recorder: Option<&fastcache_dit::obs::FlightRecorder>,
+    path: Option<&str>,
+) -> Result<()> {
+    let (Some(rec), Some(path)) = (recorder, path) else {
+        return Ok(());
+    };
+    let body =
+        if path.ends_with(".json") { rec.to_chrome_trace() } else { rec.to_ndjson() };
+    std::fs::write(path, body).with_context(|| format!("writing --trace-out {path}"))?;
+    println!("trace: {} events ({} dropped) -> {path}", rec.len(), rec.dropped());
     Ok(())
 }
 
@@ -320,6 +399,7 @@ fn print_outcome(outcome: &fastcache_dit::api::Outcome) {
 }
 
 fn print_report(report: &fastcache_dit::server::ServerReport) {
+    let pcts = report.e2e.percentiles(&[50.0, 95.0]);
     println!(
         "served {} requests in {:.2}s — {:.2} req/s, occupancy {:.2}, intra-op threads {}, p50 {:.0} ms, p95 {:.0} ms",
         report.completed,
@@ -327,8 +407,8 @@ fn print_report(report: &fastcache_dit::server::ServerReport) {
         report.throughput_rps(),
         report.mean_batch_size(),
         report.threads,
-        report.e2e.percentile(50.0),
-        report.e2e.percentile(95.0)
+        pcts[0],
+        pcts[1]
     );
     if let Some(rate) = report.deadline_hit_rate() {
         println!(
@@ -460,6 +540,25 @@ fn cmd_client(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One-shot telemetry scrape of a running `serve --listen` front door:
+/// sends a single `Stats` frame, prints the returned series as
+/// `name kind value` lines, and disconnects.
+///
+/// Options: --connect HOST:PORT (required)
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .context("stats needs --connect HOST:PORT")?;
+    let client = fastcache_dit::net::NetClient::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let series = client
+        .stats()
+        .map_err(|e| anyhow::anyhow!("stats scrape failed: {e}"))?;
+    print!("{}", fastcache_dit::obs::render_series(&series));
+    client.close();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse().map_err(anyhow::Error::msg)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("info");
@@ -468,6 +567,7 @@ fn main() -> Result<()> {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
-        other => bail!("unknown command {other} (want info|generate|serve|client)"),
+        "stats" => cmd_stats(&args),
+        other => bail!("unknown command {other} (want info|generate|serve|client|stats)"),
     }
 }

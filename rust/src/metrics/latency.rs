@@ -63,14 +63,29 @@ impl LatencyHistogram {
     }
 
     /// Exact percentile from retained samples (p in [0, 100]).
+    ///
+    /// For more than one percentile of the same histogram, prefer
+    /// [`percentiles`](Self::percentiles): this is a convenience wrapper
+    /// that pays the sort for a single value.
     pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// All requested percentiles in one pass: the retained samples are
+    /// sorted once and every `p` is read off the sorted copy, instead of
+    /// clone + sort per call.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        ps.iter()
+            .map(|&p| {
+                let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+                s[idx.min(s.len() - 1)]
+            })
+            .collect()
     }
 
     pub fn merge(&mut self, other: &LatencyHistogram) {
@@ -80,8 +95,26 @@ impl LatencyHistogram {
         self.sum_ms += other.sum_ms;
         self.max_ms = self.max_ms.max(other.max_ms);
         self.n += other.n;
-        for &s in other.samples.iter().take(SAMPLE_CAP - self.samples.len().min(SAMPLE_CAP)) {
-            self.samples.push(s);
+        let total = self.samples.len() + other.samples.len();
+        if total <= SAMPLE_CAP {
+            self.samples.extend_from_slice(&other.samples);
+        } else {
+            // Proportional retention: each side keeps a share of the cap
+            // proportional to its contribution, thinned by even striding
+            // so the survivors span each side's full recording window —
+            // never "self keeps everything, donor contributes only its
+            // earliest samples".
+            let keep_self = self.samples.len() * SAMPLE_CAP / total;
+            let keep_other = SAMPLE_CAP - keep_self;
+            let thin = |src: &[f64], keep: usize| -> Vec<f64> {
+                if src.len() <= keep {
+                    return src.to_vec();
+                }
+                (0..keep).map(|i| src[i * src.len() / keep]).collect()
+            };
+            let mut merged = thin(&self.samples, keep_self);
+            merged.extend(thin(&other.samples, keep_other));
+            self.samples = merged;
         }
     }
 }
@@ -125,5 +158,71 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.percentile(50.0), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_single_calls() {
+        let mut h = LatencyHistogram::new();
+        for ms in [5.0, 1.0, 4.0, 2.0, 3.0, 100.0, 0.5] {
+            h.record(ms);
+        }
+        let ps = [0.0, 25.0, 50.0, 95.0, 100.0];
+        let batch = h.percentiles(&ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i], h.percentile(p), "p{p} diverged");
+        }
+        assert!(h.percentiles(&[]).is_empty());
+        let empty = LatencyHistogram::new();
+        assert_eq!(empty.percentiles(&[50.0, 95.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn merge_retention_is_proportional_not_first_wins() {
+        // Two equally-sized donors near the cap: the old code kept ALL of
+        // self and only the donor's EARLIEST leftovers. Both sides must
+        // survive in proportion, and the donor's late samples must be
+        // represented too.
+        let m = 90_000usize;
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..m {
+            a.record(1.0 + (i as f64) * 1e-6); // ~1ms band
+            b.record(1000.0 + i as f64); // 1s band, strictly increasing
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2 * m as u64, "counts are exact even when samples thin");
+        assert!(a.samples.len() <= SAMPLE_CAP);
+        let from_b = a.samples.iter().filter(|&&s| s >= 1000.0).count();
+        // Proportional split of a 50/50 merge: each side holds ~half the
+        // cap (the old behavior left b with ~10%).
+        assert!(
+            from_b >= SAMPLE_CAP * 2 / 5,
+            "donor under-represented: {from_b}/{} retained",
+            a.samples.len()
+        );
+        // The donor's LAST decile must appear: striding spans the whole
+        // window, the old take(front) never got past its earliest 10k.
+        let b_last_decile = 1000.0 + (m as f64) * 0.9;
+        assert!(
+            a.samples.iter().any(|&s| s >= b_last_decile),
+            "donor's late samples all dropped"
+        );
+        // Exact-percentile queries still work on the thinned set, and the
+        // median of a 1ms/1s bimodal merge sits between the bands.
+        let p50 = a.percentile(50.0);
+        assert!((1.0..=91_000.0).contains(&p50), "p50 {p50} outside merged range");
+    }
+
+    #[test]
+    fn merge_below_cap_keeps_every_sample() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..10 {
+            a.record(i as f64);
+            b.record(100.0 + i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.samples.len(), 20);
+        assert_eq!(a.percentile(100.0), 109.0);
     }
 }

@@ -9,13 +9,14 @@
 //! over a channel — the same no-mutex-across-write discipline as the
 //! server side.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::api::{ErrorCode, Event, GenClient, Outcome, Progress, Reject, ResponseStream};
+use crate::obs::Series;
 use crate::scheduler::GenRequest;
 
 use super::proto::{self, Frame, VERSION};
@@ -29,12 +30,18 @@ struct Pending {
 
 type PendingMap = Arc<Mutex<HashMap<u64, Pending>>>;
 
+/// In-flight `Stats` scrapes, FIFO: the server answers them in request
+/// order on the one TCP stream, so the oldest waiter owns the next
+/// `StatsReply`.
+type StatsWaiters = Arc<Mutex<VecDeque<mpsc::Sender<Vec<Series>>>>>;
+
 /// A connected remote client. Dropping it tears the connection down
 /// (in-flight streams resolve to `Rejected(Closed)`); [`NetClient::close`]
 /// says `Goodbye` first for a clean close.
 pub struct NetClient {
     wtx: mpsc::Sender<Vec<u8>>,
     pending: PendingMap,
+    stats_waiters: StatsWaiters,
     stream: TcpStream,
     reader: Option<JoinHandle<()>>,
     writer: Option<JoinHandle<()>>,
@@ -72,6 +79,7 @@ impl NetClient {
         }
 
         let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let stats_waiters: StatsWaiters = Arc::new(Mutex::new(VecDeque::new()));
         let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
 
         let writer = {
@@ -97,19 +105,37 @@ impl NetClient {
                 .try_clone()
                 .map_err(|e| Reject::closed(0, format!("stream clone failed: {e}")))?;
             let pending = Arc::clone(&pending);
+            let waiters = Arc::clone(&stats_waiters);
             std::thread::Builder::new()
                 .name("fastcache-client-reader".into())
-                .spawn(move || demux_loop(&mut half, &pending))
+                .spawn(move || demux_loop(&mut half, &pending, &waiters))
                 .expect("spawning client reader")
         };
 
         Ok(NetClient {
             wtx,
             pending,
+            stats_waiters,
             stream,
             reader: Some(reader),
             writer: Some(writer),
         })
+    }
+
+    /// Scrape the server's live telemetry registry: one `Stats` frame
+    /// out, one `StatsReply` back. Blocks until the reply arrives (the
+    /// server answers inline on the request path, so this is one
+    /// round-trip) or the connection dies.
+    pub fn stats(&self) -> Result<Vec<Series>, Reject> {
+        let (tx, rx) = mpsc::channel();
+        // Enqueue BEFORE writing, mirroring submit_inner: the reply
+        // cannot race past its waiter.
+        self.stats_waiters.lock().expect("stats waiters poisoned").push_back(tx);
+        if self.wtx.send(proto::encode(&Frame::Stats)).is_err() {
+            self.stats_waiters.lock().expect("stats waiters poisoned").pop_back();
+            return Err(Reject::closed(0, "connection writer gone"));
+        }
+        rx.recv().map_err(|_| Reject::closed(0, "connection closed before stats reply"))
     }
 
     fn submit_inner(&self, req: &GenRequest, progress: bool) -> Result<ResponseStream, Reject> {
@@ -183,14 +209,17 @@ fn finish(pending: &PendingMap, id: u64, outcome: Outcome) {
 
 /// Connection is gone: every in-flight request resolves to a typed
 /// `Closed` rejection — a client must never hang on a dead socket.
-fn fail_all(pending: &PendingMap, why: &str) {
+/// Pending stats scrapes unblock too: dropping their senders makes the
+/// blocked `recv` fail, which [`NetClient::stats`] maps to `Closed`.
+fn fail_all(pending: &PendingMap, waiters: &StatsWaiters, why: &str) {
     let mut map = pending.lock().expect("pending map poisoned");
     for (id, p) in map.drain() {
         let _ = p.tx.send(Event::Done(Outcome::Rejected(Reject::closed(id, why))));
     }
+    waiters.lock().expect("stats waiters poisoned").clear();
 }
 
-fn demux_loop(stream: &mut TcpStream, pending: &PendingMap) {
+fn demux_loop(stream: &mut TcpStream, pending: &PendingMap, waiters: &StatsWaiters) {
     loop {
         match proto::read_frame(stream) {
             Ok(Some((Frame::Progress(Progress { id, step, total }), _))) => {
@@ -207,7 +236,7 @@ fn demux_loop(stream: &mut TcpStream, pending: &PendingMap) {
                     || p.latent.len() + values.len() > total as usize
                 {
                     drop(map);
-                    fail_all(pending, "partial chunk out of order — stream corrupt");
+                    fail_all(pending, waiters, "partial chunk out of order — stream corrupt");
                     return;
                 }
                 p.latent.extend_from_slice(&values);
@@ -238,26 +267,36 @@ fn demux_loop(stream: &mut TcpStream, pending: &PendingMap) {
                     Outcome::Rejected(Reject { code, id, detail, waited_ms: 0.0, deadline_ms: 0.0 }),
                 );
             }
+            Ok(Some((Frame::StatsReply(series), _))) => {
+                // FIFO pairing: one TCP stream, server answers scrapes
+                // in order, so the oldest waiter owns this reply. A
+                // missing waiter (caller gave up) is dropped silently.
+                let waiter =
+                    waiters.lock().expect("stats waiters poisoned").pop_front();
+                if let Some(tx) = waiter {
+                    let _ = tx.send(series);
+                }
+            }
             // Connection-level error, server Goodbye, clean EOF, or a
             // broken stream: nothing more will arrive.
             Ok(Some((Frame::Error { detail, .. }, _))) => {
-                fail_all(pending, &format!("connection error: {detail}"));
+                fail_all(pending, waiters, &format!("connection error: {detail}"));
                 return;
             }
             Ok(Some((Frame::Goodbye, _))) => {
-                fail_all(pending, "server said goodbye");
+                fail_all(pending, waiters, "server said goodbye");
                 return;
             }
             Ok(Some(_)) => {
-                fail_all(pending, "unexpected frame on response path");
+                fail_all(pending, waiters, "unexpected frame on response path");
                 return;
             }
             Ok(None) => {
-                fail_all(pending, "connection closed");
+                fail_all(pending, waiters, "connection closed");
                 return;
             }
             Err(e) => {
-                fail_all(pending, &format!("read failed: {e}"));
+                fail_all(pending, waiters, &format!("read failed: {e}"));
                 return;
             }
         }

@@ -24,6 +24,7 @@
 use std::io::Read;
 
 use crate::api::{GenResponse, Progress, Reject};
+use crate::obs::{HistSummary, Series, SeriesValue};
 use crate::scheduler::{GenRequest, GenResult, Turbulence};
 use crate::tensor::Tensor;
 
@@ -34,7 +35,10 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"FCP1");
 /// Protocol version spoken by this build. Version negotiation is
 /// exact-match (see docs/PROTOCOL.md): a mismatched `Hello` is answered
 /// with `Error{BadRequest}` and the connection closes.
-pub const VERSION: u16 = 1;
+///
+/// History: v1 — initial protocol; v2 — adds the `Stats`/`StatsReply`
+/// telemetry-scrape pair.
+pub const VERSION: u16 = 2;
 
 /// Upper bound on `len` (type byte + payload): 16 MiB. Far above any
 /// legitimate frame (the largest — `Partial` — is ~64 KiB) while small
@@ -49,12 +53,14 @@ pub const PARTIAL_CHUNK_F32: usize = 16 * 1024;
 const T_HELLO: u8 = 0x01;
 const T_SUBMIT: u8 = 0x02;
 const T_GOODBYE: u8 = 0x03;
+const T_STATS: u8 = 0x04;
 const T_HELLO_ACK: u8 = 0x81;
 const T_PROGRESS: u8 = 0x82;
 const T_PARTIAL: u8 = 0x83;
 const T_COMPLETED: u8 = 0x84;
 const T_SHED: u8 = 0x85;
 const T_ERROR: u8 = 0x86;
+const T_STATS_REPLY: u8 = 0x87;
 
 /// Decode/IO failure modes. `BadRequest` is the one *semantic* rejection:
 /// the frame was structurally valid but the request inside failed the
@@ -204,6 +210,9 @@ pub enum Frame {
     Submit { req: GenRequest, progress: bool },
     /// Clean close marker.
     Goodbye,
+    /// Telemetry scrape request (empty payload, v2+). Valid any time
+    /// after the handshake; answered with one `StatsReply`.
+    Stats,
     /// Server handshake answer.
     HelloAck { version: u16 },
     /// Per-step progress tick (streaming submissions only).
@@ -220,6 +229,9 @@ pub enum Frame {
     /// `code` stays a raw u16 so unknown codes from newer peers
     /// round-trip; map through `api::ErrorCode::from_code` to interpret.
     Error { id: u64, code: u16, detail: String },
+    /// A registry scrape: every live series at the instant the server
+    /// handled the `Stats` frame (v2+).
+    StatsReply(Vec<Series>),
 }
 
 // ---------------------------------------------------------------- encode
@@ -314,6 +326,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             e.u8(u8::from(*progress));
         }
         Frame::Goodbye => e.u8(T_GOODBYE),
+        Frame::Stats => e.u8(T_STATS),
         Frame::HelloAck { version } => {
             e.u8(T_HELLO_ACK);
             e.u32(MAGIC);
@@ -370,6 +383,32 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             e.u64(*id);
             e.u16(*code);
             e.str(detail);
+        }
+        Frame::StatsReply(series) => {
+            e.u8(T_STATS_REPLY);
+            e.u32(series.len() as u32);
+            for s in series {
+                e.str(&s.name);
+                match &s.value {
+                    SeriesValue::Counter(v) => {
+                        e.u8(0);
+                        e.u64(*v);
+                    }
+                    SeriesValue::Gauge(v) => {
+                        e.u8(1);
+                        e.u64(*v);
+                    }
+                    SeriesValue::Hist(h) => {
+                        e.u8(2);
+                        e.u64(h.count);
+                        e.f64(h.mean_ms);
+                        e.f64(h.p50_ms);
+                        e.f64(h.p95_ms);
+                        e.f64(h.p99_ms);
+                        e.f64(h.max_ms);
+                    }
+                }
+            }
         }
     }
     let len = (e.buf.len() - 4) as u32;
@@ -572,6 +611,33 @@ fn decode_completed(cur: &mut Cur) -> Result<Completed, ProtoError> {
     })
 }
 
+fn decode_stats_reply(cur: &mut Cur) -> Result<Vec<Series>, ProtoError> {
+    // Smallest possible series: empty name (2-byte length) + kind byte
+    // + one u64 value = 11 bytes — enough to bound the pre-allocation.
+    let n = cur.count(11)?;
+    let mut series = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = cur.str()?;
+        let value = match cur.u8()? {
+            0 => SeriesValue::Counter(cur.u64()?),
+            1 => SeriesValue::Gauge(cur.u64()?),
+            2 => SeriesValue::Hist(HistSummary {
+                count: cur.u64()?,
+                mean_ms: cur.f64()?,
+                p50_ms: cur.f64()?,
+                p95_ms: cur.f64()?,
+                p99_ms: cur.f64()?,
+                max_ms: cur.f64()?,
+            }),
+            other => {
+                return Err(ProtoError::Malformed(format!("unknown series kind {other}")));
+            }
+        };
+        series.push(Series { name, value });
+    }
+    Ok(series)
+}
+
 /// Decode one frame from the front of `buf`. Returns the frame and the
 /// total bytes consumed (length prefix included). `Truncated` when the
 /// buffer ends mid-frame; `Oversized` is raised from the 4-byte prefix
@@ -597,6 +663,7 @@ pub fn decode_slice(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
         T_HELLO => Frame::Hello { version: decode_handshake(&mut cur)? },
         T_SUBMIT => decode_submit(&mut cur)?,
         T_GOODBYE => Frame::Goodbye,
+        T_STATS => Frame::Stats,
         T_HELLO_ACK => Frame::HelloAck { version: decode_handshake(&mut cur)? },
         T_PROGRESS => {
             let id = cur.u64()?;
@@ -624,6 +691,7 @@ pub fn decode_slice(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
             let detail = cur.str()?;
             Frame::Error { id, code, detail }
         }
+        T_STATS_REPLY => Frame::StatsReply(decode_stats_reply(&mut cur)?),
         other => return Err(ProtoError::UnknownType(other)),
     };
     cur.done()?;

@@ -17,51 +17,26 @@
 
 use std::io::Write;
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{ErrorCode, Event, NetStats, Outcome, ResponseStream};
+use crate::api::{ErrorCode, Event, Outcome, ResponseStream};
+use crate::obs::{NetMetrics, Registry};
 use crate::server::{Server, ServerReport};
 
 use super::proto::{self, Frame, ProtoError, VERSION};
 
-/// Relaxed-ordering door counters (see the module's lock-discipline
-/// note: the final snapshot is ordered by thread joins, not by these
-/// loads).
-#[derive(Default)]
-struct Counters {
-    conns_accepted: AtomicU64,
-    conns_door_shed: AtomicU64,
-    reqs_submitted: AtomicU64,
-    reqs_completed: AtomicU64,
-    reqs_shed: AtomicU64,
-    reqs_door_shed: AtomicU64,
-    door_sheds_deadline: AtomicU64,
-    bytes_in: AtomicU64,
-    bytes_out: AtomicU64,
-}
-
-impl Counters {
-    fn snapshot(&self) -> NetStats {
-        NetStats {
-            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
-            conns_door_shed: self.conns_door_shed.load(Ordering::Relaxed),
-            reqs_submitted: self.reqs_submitted.load(Ordering::Relaxed),
-            reqs_completed: self.reqs_completed.load(Ordering::Relaxed),
-            reqs_shed: self.reqs_shed.load(Ordering::Relaxed),
-            reqs_door_shed: self.reqs_door_shed.load(Ordering::Relaxed),
-            door_sheds_deadline: self.door_sheds_deadline.load(Ordering::Relaxed),
-            bytes_in: self.bytes_in.load(Ordering::Relaxed),
-            bytes_out: self.bytes_out.load(Ordering::Relaxed),
-        }
-    }
-}
-
 struct Shared {
     server: Server,
-    stats: Counters,
+    /// The inner server's telemetry registry — serves `Stats` scrapes
+    /// and owns the door's own counter series.
+    registry: Arc<Registry>,
+    /// The door's live counters: the registry's `net.*` series. Counting
+    /// here makes them scrapeable mid-flight; the shutdown report
+    /// absorbs the final snapshot as before.
+    stats: Arc<NetMetrics>,
     /// Set once by `shutdown`; the accept loop stops and connection
     /// readers refuse new `Submit`s. AcqRel is unnecessary — the flag
     /// gates behavior, it does not publish data.
@@ -96,9 +71,12 @@ impl NetServer {
         // drain flag without a signal, and std has no select/poll.
         listener.set_nonblocking(true)?;
 
+        let registry = server.registry();
+        let stats = Arc::clone(registry.net());
         let shared = Arc::new(Shared {
             server,
-            stats: Counters::default(),
+            registry,
+            stats,
             draining: AtomicBool::new(false),
             max_conns: max_conns.max(1),
             active_conns: AtomicUsize::new(0),
@@ -163,11 +141,11 @@ fn accept_loop(
                 let prev = shared.active_conns.fetch_add(1, Ordering::Relaxed);
                 if prev >= shared.max_conns {
                     shared.active_conns.fetch_sub(1, Ordering::Relaxed);
-                    shared.stats.conns_door_shed.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.conns_door_shed.inc();
                     shed_connection(stream, &shared.stats);
                     continue;
                 }
-                shared.stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                shared.stats.conns_accepted.inc();
                 let read_half = match stream.try_clone() {
                     Ok(c) => c,
                     Err(_) => {
@@ -207,14 +185,14 @@ fn accept_loop(
 
 /// Refuse an over-budget connection: one `Busy` frame, then close. The
 /// peer never cost us a connection thread.
-fn shed_connection(mut stream: TcpStream, stats: &Counters) {
+fn shed_connection(mut stream: TcpStream, stats: &NetMetrics) {
     let buf = proto::encode(&Frame::Error {
         id: 0,
         code: ErrorCode::Busy.code(),
         detail: "connection budget exhausted".into(),
     });
     if stream.write_all(&buf).is_ok() {
-        stats.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        stats.bytes_out.add(buf.len() as u64);
         // FIN our side, then absorb whatever the peer already sent (its
         // Hello, typically). Closing with unread bytes in the receive
         // buffer would RST the connection and flush our Busy frame out
@@ -276,7 +254,7 @@ fn writer_loop(mut stream: TcpStream, wrx: &mpsc::Receiver<Vec<u8>>, shared: &Ar
             while wrx.recv().is_ok() {}
             return;
         }
-        shared.stats.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        shared.stats.bytes_out.add(buf.len() as u64);
     }
     let _ = stream.flush();
 }
@@ -285,7 +263,7 @@ fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
     // Handshake: exactly one Hello, version must match exactly.
     match proto::read_frame(reader) {
         Ok(Some((Frame::Hello { version }, n))) => {
-            shared.stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+            shared.stats.bytes_in.add(n as u64);
             if version != VERSION {
                 send_frame(
                     wtx,
@@ -320,7 +298,7 @@ fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
     loop {
         match proto::read_frame(reader) {
             Ok(Some((frame, n))) => {
-                shared.stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                shared.stats.bytes_in.add(n as u64);
                 match frame {
                     Frame::Submit { req, progress } => {
                         if shared.draining.load(Ordering::Relaxed) {
@@ -334,7 +312,7 @@ fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
                             );
                             continue;
                         }
-                        shared.stats.reqs_submitted.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.reqs_submitted.inc();
                         let submitted = if progress {
                             shared.server.submit_streaming(&req)
                         } else {
@@ -356,12 +334,9 @@ fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
                                 // SLA miss (absorbed into the report's
                                 // hit-rate denominator at shutdown).
                                 if rej.code == ErrorCode::Busy {
-                                    shared.stats.reqs_door_shed.fetch_add(1, Ordering::Relaxed);
+                                    shared.stats.reqs_door_shed.inc();
                                     if req.deadline_ms.is_some() {
-                                        shared
-                                            .stats
-                                            .door_sheds_deadline
-                                            .fetch_add(1, Ordering::Relaxed);
+                                        shared.stats.door_sheds_deadline.inc();
                                     }
                                 }
                                 send_frame(
@@ -374,6 +349,12 @@ fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
                                 );
                             }
                         }
+                    }
+                    // Telemetry scrape: answer from the live registry.
+                    // Valid even while draining — operators watching a
+                    // drain is precisely when the scrape matters.
+                    Frame::Stats => {
+                        send_frame(wtx, &Frame::StatsReply(shared.registry.series()));
                     }
                     Frame::Goodbye => break,
                     other => {
@@ -428,7 +409,7 @@ fn forward(stream: ResponseStream, wtx: &FrameTx, shared: &Arc<Shared>) {
         match stream.recv_event() {
             Some(Event::Progress(p)) => send_frame(wtx, &Frame::Progress(p)),
             Some(Event::Done(Outcome::Completed(resp))) => {
-                shared.stats.reqs_completed.fetch_add(1, Ordering::Relaxed);
+                shared.stats.reqs_completed.inc();
                 for chunk in proto::partial_frames(id, resp.result.latent.data()) {
                     send_frame(wtx, &chunk);
                 }
@@ -437,7 +418,7 @@ fn forward(stream: ResponseStream, wtx: &FrameTx, shared: &Arc<Shared>) {
             }
             Some(Event::Done(Outcome::Rejected(rej))) => {
                 if rej.code == ErrorCode::Expired {
-                    shared.stats.reqs_shed.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.reqs_shed.inc();
                     send_frame(
                         wtx,
                         &Frame::Shed {

@@ -1,0 +1,582 @@
+//! Live telemetry plane: a registry of named counters, gauges, and
+//! latency histograms that the serving stack updates lock-free on the
+//! hot path and operators read WHILE the server runs.
+//!
+//! Before this module every number funnelled into write-once fields of
+//! `ShardReport`/`NetStats` and surfaced only at shutdown. Now the
+//! owners hold `Arc<ShardMetrics>` / `Arc<NetMetrics>` and bump atomics
+//! as they serve; the shutdown `ServerReport` is just the FINAL snapshot
+//! of the same series, and a live snapshot is one [`Registry::series`]
+//! call away (scraped over the wire via the `Stats` frame, printed by
+//! `--stats-every`, or the `fastcache-serve stats` subcommand).
+//!
+//! ```text
+//!  shard thread ──┐ Relaxed fetch_add            ┌─▶ Stats frame (net)
+//!  net door     ──┼─▶ Counter/Gauge/Hist ── series() ─▶ --stats-every text
+//!  warm store   ──┘   (Registry)                 └─▶ ServerReport (shutdown)
+//! ```
+//!
+//! Ordering discipline (the Pelikan rule the net door already follows):
+//! every atomic is `Relaxed`. Totals are read either after a thread
+//! join (shutdown snapshot — the join is the synchronization edge) or
+//! as a statistical observation (live scrape), never to establish
+//! happens-before. Histograms sit behind a `Mutex` — each is written by
+//! exactly one shard thread, so the lock is uncontended in steady state
+//! and only fought over during a scrape.
+//!
+//! The [`recorder`] half holds the flight recorder: an off-by-default
+//! bounded ring of per-lane step events (cache decisions, STR
+//! partitions, stage timings). Invariant shared by both halves:
+//! observation can never change a cache decision or a served latent —
+//! recording reads serving state, serving never reads recording state.
+
+pub mod recorder;
+
+pub use recorder::{
+    EventKind, FlightRecorder, TraceEvent, DEFAULT_TRACE_EVENT_CAP, NON_LAYER,
+};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::NetStats;
+use crate::metrics::LatencyHistogram;
+use crate::server::ShardReport;
+use crate::store::WarmStore;
+
+/// A monotonic event count, updated lock-free.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        if n != 0 {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (occupancy, high-water marks).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if it is higher (high-water semantics).
+    pub fn raise(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A latency histogram behind a mutex. Single-writer by construction
+/// (one shard thread records; scrapes clone a snapshot), so the lock is
+/// uncontended on the hot path.
+#[derive(Debug, Default)]
+pub struct Hist(Mutex<LatencyHistogram>);
+
+impl Hist {
+    pub fn record(&self, ms: f64) {
+        self.0.lock().expect("hist lock poisoned").record(ms);
+    }
+
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.lock().expect("hist lock poisoned").clone()
+    }
+}
+
+/// One shard's live series — the in-flight form of [`ShardReport`].
+/// The shard thread updates these as it serves; anyone holding the Arc
+/// can [`snapshot`](Self::snapshot) a consistent-enough view at any
+/// time, and the shutdown report IS the final snapshot.
+#[derive(Debug)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    started: Instant,
+    /// Wall time at shard exit in µs; 0 while the shard is running.
+    /// Lets snapshots taken after drain report the true serving window
+    /// instead of ever-growing uptime.
+    finished_us: AtomicU64,
+    pub completed: Counter,
+    pub step_calls: Counter,
+    pub lane_steps: Counter,
+    pub padded_flops: Counter,
+    pub deadline_jobs: Counter,
+    pub deadline_hits: Counter,
+    pub best_effort_jobs: Counter,
+    pub deadline_sheds: Counter,
+    pub warm_admissions: Counter,
+    pub warm_layers: Counter,
+    pub scratch_bytes: Gauge,
+    pub threads: Gauge,
+    /// Per-(step, layer) cache decisions, by action — the live view of
+    /// FastCache's whole value proposition. Counted for EVERY lane
+    /// (traced or not): counting reads the decision, never shapes it.
+    pub decisions_compute: Counter,
+    pub decisions_approx: Counter,
+    pub decisions_reuse: Counter,
+    /// STR token partition: motion rows recomputed vs static rows served
+    /// from cache, summed over (lane, step) prologues.
+    pub str_motion_tokens: Counter,
+    pub str_static_tokens: Counter,
+    pub e2e: Hist,
+    pub admission_wait: Hist,
+}
+
+impl ShardMetrics {
+    pub fn new(shard: usize) -> ShardMetrics {
+        ShardMetrics {
+            shard,
+            started: Instant::now(),
+            finished_us: AtomicU64::new(0),
+            completed: Counter::default(),
+            step_calls: Counter::default(),
+            lane_steps: Counter::default(),
+            padded_flops: Counter::default(),
+            deadline_jobs: Counter::default(),
+            deadline_hits: Counter::default(),
+            best_effort_jobs: Counter::default(),
+            deadline_sheds: Counter::default(),
+            warm_admissions: Counter::default(),
+            warm_layers: Counter::default(),
+            scratch_bytes: Gauge::default(),
+            threads: Gauge::default(),
+            decisions_compute: Counter::default(),
+            decisions_approx: Counter::default(),
+            decisions_reuse: Counter::default(),
+            str_motion_tokens: Counter::default(),
+            str_static_tokens: Counter::default(),
+            e2e: Hist::default(),
+            admission_wait: Hist::default(),
+        }
+    }
+
+    /// Freeze the wall clock: called once when the shard thread exits.
+    pub fn mark_finished(&self) {
+        let us = self.started.elapsed().as_micros() as u64;
+        // A zero-µs shard lifetime is indistinguishable from "running";
+        // round up so the sentinel stays unambiguous.
+        self.finished_us.store(us.max(1), Ordering::Relaxed);
+    }
+
+    /// Shard lifetime in seconds: elapsed-so-far while running, frozen
+    /// at the [`mark_finished`](Self::mark_finished) instant after.
+    pub fn wall_s(&self) -> f64 {
+        match self.finished_us.load(Ordering::Relaxed) {
+            0 => self.started.elapsed().as_secs_f64(),
+            us => us as f64 / 1e6,
+        }
+    }
+
+    /// Materialize the classic report struct from the live series.
+    pub fn snapshot(&self) -> ShardReport {
+        ShardReport {
+            shard: self.shard,
+            completed: self.completed.get(),
+            e2e: self.e2e.snapshot(),
+            admission_wait: self.admission_wait.snapshot(),
+            wall_s: self.wall_s(),
+            step_calls: self.step_calls.get(),
+            lane_steps: self.lane_steps.get(),
+            padded_flops: self.padded_flops.get(),
+            deadline_jobs: self.deadline_jobs.get(),
+            deadline_hits: self.deadline_hits.get(),
+            best_effort_jobs: self.best_effort_jobs.get(),
+            deadline_sheds: self.deadline_sheds.get(),
+            warm_admissions: self.warm_admissions.get(),
+            warm_layers: self.warm_layers.get(),
+            scratch_bytes: self.scratch_bytes.get(),
+            threads: self.threads.get().max(1),
+        }
+    }
+}
+
+/// The network door's live series — the in-flight form of [`NetStats`].
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    pub conns_accepted: Counter,
+    pub conns_door_shed: Counter,
+    pub reqs_submitted: Counter,
+    pub reqs_completed: Counter,
+    pub reqs_shed: Counter,
+    pub reqs_door_shed: Counter,
+    pub door_sheds_deadline: Counter,
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+}
+
+impl NetMetrics {
+    pub fn snapshot(&self) -> NetStats {
+        NetStats {
+            conns_accepted: self.conns_accepted.get(),
+            conns_door_shed: self.conns_door_shed.get(),
+            reqs_submitted: self.reqs_submitted.get(),
+            reqs_completed: self.reqs_completed.get(),
+            reqs_shed: self.reqs_shed.get(),
+            reqs_door_shed: self.reqs_door_shed.get(),
+            door_sheds_deadline: self.door_sheds_deadline.get(),
+            bytes_in: self.bytes_in.get(),
+            bytes_out: self.bytes_out.get(),
+        }
+    }
+}
+
+/// Five-number summary of a histogram, cheap enough for the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl HistSummary {
+    pub fn of(h: &LatencyHistogram) -> HistSummary {
+        let pcts = h.percentiles(&[50.0, 95.0, 99.0]);
+        HistSummary {
+            count: h.count(),
+            mean_ms: h.mean(),
+            p50_ms: pcts[0],
+            p95_ms: pcts[1],
+            p99_ms: pcts[2],
+            max_ms: h.max(),
+        }
+    }
+}
+
+/// One named series in a registry scrape. The name is dot-namespaced
+/// by owner (`server.`, `cache.`, `str.`, `latency.`, `shard{i}.`,
+/// `store.`, `net.`) — see docs/OBSERVABILITY.md for the full
+/// reference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub value: SeriesValue,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SeriesValue {
+    Counter(u64),
+    Gauge(u64),
+    Hist(HistSummary),
+}
+
+impl Series {
+    fn counter(name: &str, v: u64) -> Series {
+        Series { name: name.to_string(), value: SeriesValue::Counter(v) }
+    }
+
+    fn gauge(name: &str, v: u64) -> Series {
+        Series { name: name.to_string(), value: SeriesValue::Gauge(v) }
+    }
+
+    fn hist(name: &str, h: &LatencyHistogram) -> Series {
+        Series { name: name.to_string(), value: SeriesValue::Hist(HistSummary::of(h)) }
+    }
+}
+
+/// The server's telemetry registry: every live series, scrapeable at
+/// any time. Built once by the dispatcher; the net door and the CLI
+/// hold clones of the Arc.
+#[derive(Debug)]
+pub struct Registry {
+    shards: Vec<Arc<ShardMetrics>>,
+    net: Arc<NetMetrics>,
+    store: Option<Arc<WarmStore>>,
+    started: Instant,
+}
+
+impl Registry {
+    pub fn new(shards: Vec<Arc<ShardMetrics>>, store: Option<Arc<WarmStore>>) -> Registry {
+        Registry { shards, net: Arc::new(NetMetrics::default()), store, started: Instant::now() }
+    }
+
+    pub fn shards(&self) -> &[Arc<ShardMetrics>] {
+        &self.shards
+    }
+
+    /// The net door's series. The door holds this Arc and bumps it
+    /// directly; in-process-only servers simply never touch it.
+    pub fn net(&self) -> &Arc<NetMetrics> {
+        &self.net
+    }
+
+    /// Sum of per-(step, layer) cache decisions across shards, indexed
+    /// `[compute, approx, reuse]`.
+    pub fn decision_totals(&self) -> [u64; 3] {
+        let mut t = [0u64; 3];
+        for s in &self.shards {
+            t[0] += s.decisions_compute.get();
+            t[1] += s.decisions_approx.get();
+            t[2] += s.decisions_reuse.get();
+        }
+        t
+    }
+
+    /// Scrape every series. Aggregates mirror `ServerReport::merge`
+    /// (sums, except `scratch_bytes`/`threads` which take the max);
+    /// per-shard completion counts ride along so operators can see
+    /// routing skew without a shutdown.
+    pub fn series(&self) -> Vec<Series> {
+        let mut out = Vec::new();
+        let sum =
+            |f: &dyn Fn(&ShardMetrics) -> u64| self.shards.iter().map(|s| f(s)).sum::<u64>();
+        let max = |f: &dyn Fn(&ShardMetrics) -> u64| {
+            self.shards.iter().map(|s| f(s)).max().unwrap_or(0)
+        };
+        out.push(Series::gauge(
+            "server.uptime_us",
+            self.started.elapsed().as_micros() as u64,
+        ));
+        out.push(Series::gauge("server.shards", self.shards.len() as u64));
+        out.push(Series::counter("server.completed", sum(&|s| s.completed.get())));
+        out.push(Series::counter("server.step_calls", sum(&|s| s.step_calls.get())));
+        out.push(Series::counter("server.lane_steps", sum(&|s| s.lane_steps.get())));
+        out.push(Series::counter("server.padded_flops", sum(&|s| s.padded_flops.get())));
+        out.push(Series::counter("server.deadline_jobs", sum(&|s| s.deadline_jobs.get())));
+        out.push(Series::counter("server.deadline_hits", sum(&|s| s.deadline_hits.get())));
+        out.push(Series::counter(
+            "server.best_effort_jobs",
+            sum(&|s| s.best_effort_jobs.get()),
+        ));
+        out.push(Series::counter("server.deadline_sheds", sum(&|s| s.deadline_sheds.get())));
+        out.push(Series::counter(
+            "server.warm_admissions",
+            sum(&|s| s.warm_admissions.get()),
+        ));
+        out.push(Series::counter("server.warm_layers", sum(&|s| s.warm_layers.get())));
+        out.push(Series::gauge("server.scratch_bytes", max(&|s| s.scratch_bytes.get())));
+        out.push(Series::gauge("server.threads", max(&|s| s.threads.get()).max(1)));
+        let [c, a, r] = self.decision_totals();
+        out.push(Series::counter("cache.decisions_compute", c));
+        out.push(Series::counter("cache.decisions_approx", a));
+        out.push(Series::counter("cache.decisions_reuse", r));
+        out.push(Series::counter(
+            "str.motion_tokens",
+            sum(&|s| s.str_motion_tokens.get()),
+        ));
+        out.push(Series::counter(
+            "str.static_tokens",
+            sum(&|s| s.str_static_tokens.get()),
+        ));
+        let mut e2e = LatencyHistogram::new();
+        let mut wait = LatencyHistogram::new();
+        for s in &self.shards {
+            e2e.merge(&s.e2e.snapshot());
+            wait.merge(&s.admission_wait.snapshot());
+        }
+        out.push(Series::hist("latency.e2e_ms", &e2e));
+        out.push(Series::hist("latency.admission_ms", &wait));
+        for s in &self.shards {
+            out.push(Series::counter(&format!("shard{}.completed", s.shard), s.completed.get()));
+        }
+        if let Some(store) = &self.store {
+            let st = store.stats();
+            out.push(Series::counter("store.hits", st.hits));
+            out.push(Series::counter("store.misses", st.misses));
+            out.push(Series::counter("store.inserts", st.inserts));
+            out.push(Series::counter("store.evictions", st.evictions));
+            out.push(Series::counter("store.rejected", st.rejected));
+            out.push(Series::gauge("store.entries", st.entries as u64));
+            out.push(Series::gauge("store.used_bytes", st.used_bytes as u64));
+            out.push(Series::gauge("store.budget_bytes", st.budget_bytes as u64));
+        }
+        out.push(Series::counter("net.conns_accepted", self.net.conns_accepted.get()));
+        out.push(Series::counter("net.conns_door_shed", self.net.conns_door_shed.get()));
+        out.push(Series::counter("net.reqs_submitted", self.net.reqs_submitted.get()));
+        out.push(Series::counter("net.reqs_completed", self.net.reqs_completed.get()));
+        out.push(Series::counter("net.reqs_shed", self.net.reqs_shed.get()));
+        out.push(Series::counter("net.reqs_door_shed", self.net.reqs_door_shed.get()));
+        out.push(Series::counter(
+            "net.door_sheds_deadline",
+            self.net.door_sheds_deadline.get(),
+        ));
+        out.push(Series::counter("net.bytes_in", self.net.bytes_in.get()));
+        out.push(Series::counter("net.bytes_out", self.net.bytes_out.get()));
+        out
+    }
+
+    /// The text form of a scrape, for `--stats-every` and the CLI.
+    pub fn render_text(&self) -> String {
+        render_series(&self.series())
+    }
+}
+
+/// Render a scrape as aligned text, one series per line.
+pub fn render_series(series: &[Series]) -> String {
+    let width = series.iter().map(|s| s.name.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for s in series {
+        let (kind, val) = match &s.value {
+            SeriesValue::Counter(v) => ("counter", v.to_string()),
+            SeriesValue::Gauge(v) => ("gauge", v.to_string()),
+            SeriesValue::Hist(h) => (
+                "hist",
+                format!(
+                    "count={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}",
+                    h.count, h.mean_ms, h.p50_ms, h.p95_ms, h.p99_ms, h.max_ms
+                ),
+            ),
+        };
+        out.push_str(&format!("{:width$}  {kind:7}  {val}\n", s.name, width = width));
+    }
+    out
+}
+
+/// Everything the lane stepper needs to observe a step: where to count
+/// (always) and where to record events (only for traced lanes).
+#[derive(Clone)]
+pub struct StepObserver {
+    pub shard: u32,
+    pub metrics: Arc<ShardMetrics>,
+    pub recorder: Option<Arc<FlightRecorder>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        c.add(0);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(7);
+        g.raise(3);
+        assert_eq!(g.get(), 7);
+        g.raise(11);
+        assert_eq!(g.get(), 11);
+    }
+
+    #[test]
+    fn shard_metrics_snapshot_matches_live_series() {
+        let m = ShardMetrics::new(3);
+        m.completed.add(5);
+        m.step_calls.add(10);
+        m.lane_steps.add(20);
+        m.padded_flops.add(1 << 30);
+        m.deadline_jobs.add(2);
+        m.deadline_hits.inc();
+        m.best_effort_jobs.add(3);
+        m.deadline_sheds.inc();
+        m.warm_admissions.add(4);
+        m.warm_layers.add(40);
+        m.scratch_bytes.set(4096);
+        m.threads.set(2);
+        m.e2e.record(12.5);
+        m.admission_wait.record(0.5);
+        let r = m.snapshot();
+        assert_eq!(r.shard, 3);
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.step_calls, 10);
+        assert_eq!(r.lane_steps, 20);
+        assert_eq!(r.padded_flops, 1 << 30);
+        assert_eq!(r.deadline_jobs, 2);
+        assert_eq!(r.deadline_hits, 1);
+        assert_eq!(r.best_effort_jobs, 3);
+        assert_eq!(r.deadline_sheds, 1);
+        assert_eq!(r.warm_admissions, 4);
+        assert_eq!(r.warm_layers, 40);
+        assert_eq!(r.scratch_bytes, 4096);
+        assert_eq!(r.threads, 2);
+        assert_eq!(r.e2e.count(), 1);
+        assert_eq!(r.admission_wait.count(), 1);
+        assert!(r.wall_s > 0.0, "running shard reports elapsed-so-far wall time");
+        // Snapshot-after-finish freezes the clock.
+        m.mark_finished();
+        let frozen = m.snapshot().wall_s;
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert_eq!(m.snapshot().wall_s, frozen, "wall time must freeze at shard exit");
+    }
+
+    #[test]
+    fn net_metrics_snapshot_round_trips_every_field() {
+        let n = NetMetrics::default();
+        n.conns_accepted.add(1);
+        n.conns_door_shed.add(2);
+        n.reqs_submitted.add(3);
+        n.reqs_completed.add(4);
+        n.reqs_shed.add(5);
+        n.reqs_door_shed.add(6);
+        n.door_sheds_deadline.add(7);
+        n.bytes_in.add(8);
+        n.bytes_out.add(9);
+        let s = n.snapshot();
+        assert_eq!(
+            (s.conns_accepted, s.conns_door_shed, s.reqs_submitted, s.reqs_completed),
+            (1, 2, 3, 4)
+        );
+        assert_eq!(
+            (s.reqs_shed, s.reqs_door_shed, s.door_sheds_deadline, s.bytes_in, s.bytes_out),
+            (5, 6, 7, 8, 9)
+        );
+    }
+
+    #[test]
+    fn registry_series_aggregates_like_report_merge() {
+        let shards = vec![Arc::new(ShardMetrics::new(0)), Arc::new(ShardMetrics::new(1))];
+        shards[0].completed.add(3);
+        shards[1].completed.add(4);
+        shards[0].scratch_bytes.set(100);
+        shards[1].scratch_bytes.set(250);
+        shards[0].decisions_compute.add(10);
+        shards[1].decisions_compute.add(5);
+        shards[0].decisions_reuse.add(7);
+        shards[0].e2e.record(10.0);
+        shards[1].e2e.record(30.0);
+        let reg = Registry::new(shards, None);
+        reg.net().reqs_submitted.add(7);
+        let series = reg.series();
+        let get = |name: &str| {
+            series
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing series {name}"))
+                .value
+                .clone()
+        };
+        assert_eq!(get("server.completed"), SeriesValue::Counter(7));
+        // Resource fields take the max across shards, not the sum.
+        assert_eq!(get("server.scratch_bytes"), SeriesValue::Gauge(250));
+        assert_eq!(get("cache.decisions_compute"), SeriesValue::Counter(15));
+        assert_eq!(get("cache.decisions_reuse"), SeriesValue::Counter(7));
+        assert_eq!(get("shard0.completed"), SeriesValue::Counter(3));
+        assert_eq!(get("shard1.completed"), SeriesValue::Counter(4));
+        assert_eq!(get("net.reqs_submitted"), SeriesValue::Counter(7));
+        assert_eq!(reg.decision_totals(), [15, 0, 7]);
+        match get("latency.e2e_ms") {
+            SeriesValue::Hist(h) => {
+                assert_eq!(h.count, 2);
+                assert!((h.mean_ms - 20.0).abs() < 1e-9);
+                assert_eq!(h.max_ms, 30.0);
+            }
+            other => panic!("e2e must be a histogram, got {other:?}"),
+        }
+        // No store attached: no store.* series.
+        assert!(!series.iter().any(|s| s.name.starts_with("store.")));
+        let text = render_series(&series);
+        assert!(text.contains("server.completed"));
+        assert!(text.contains("counter"));
+        assert!(text.lines().count() == series.len());
+    }
+}

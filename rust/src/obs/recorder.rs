@@ -1,0 +1,372 @@
+//! The flight recorder: an off-by-default, bounded ring buffer of
+//! per-lane step events — every (step, layer) cache decision with the
+//! relative-change statistic it saw and the threshold it faced, STR
+//! token partitions, fit convergence state, and stage timings from
+//! queue wait to per-step kernel time.
+//!
+//! Sampling is per-LANE and deterministic: a request id either records
+//! every event of its lifetime or none (`--trace-sample-rate`), decided
+//! by a multiplicative hash of the id — no RNG, so reruns trace the
+//! same lanes. The ring drops its OLDEST events on overflow (a flight
+//! recorder keeps the latest window) and counts what it dropped.
+//!
+//! Invariant: recording observes decisions, it never makes them. The
+//! stepper consults [`FlightRecorder`] only to ask "is this lane
+//! sampled?" and to push events — nothing in the denoise loop reads a
+//! recorded value back.
+//!
+//! Dump formats: NDJSON (one event per line, grep/jq-friendly) and
+//! Chrome `trace_event` JSON (load in `chrome://tracing` / Perfetto;
+//! shards become processes, lanes become tracks).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity in events (~64k). At S-variant scale one
+/// traced request is `steps × layers` decision events plus a handful of
+/// stage/partition events, so this holds the last few hundred lanes.
+pub const DEFAULT_TRACE_EVENT_CAP: usize = 1 << 16;
+
+/// `layer` value for events that are not layer-scoped (stage timings,
+/// STR partitions).
+pub const NON_LAYER: u32 = u32::MAX;
+
+/// One recorded event. `ts_us` is µs since recorder construction;
+/// `dur_us == 0` marks an instant event, anything else a span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub shard: u32,
+    /// The lane's request id — the same correlator the wire uses.
+    pub lane: u64,
+    pub step: u32,
+    pub layer: u32,
+    pub kind: EventKind,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// One per (step, layer): the cache action taken, the relative-
+    /// change statistic that drove it (`delta`; infinite on the first
+    /// step, serialized as null), the configured base threshold it was
+    /// judged against, and the fit-confidence state (`fit_updates`
+    /// observed; `downgraded` when the confidence gate demoted an
+    /// Approx to Compute).
+    Decision {
+        action: &'static str,
+        delta: f64,
+        threshold: f64,
+        fit_updates: u64,
+        downgraded: bool,
+    },
+    /// STR's per-step token split: `motion_tokens` rows recomputed,
+    /// the remaining `total_tokens - motion_tokens` served from cache.
+    StrPartition { motion_tokens: u32, total_tokens: u32 },
+    /// A named stage span: `queue_wait` (submit → admission) and `step`
+    /// (one whole denoise step for this lane's batch).
+    Stage { stage: &'static str },
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// The bounded event ring. One per server; shared by every shard via
+/// Arc. The mutex is only held for a push or a dump — pushes happen at
+/// most a few times per (lane, layer, step), orders of magnitude below
+/// the kernel work between them.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    rate: f64,
+    cap: usize,
+    t0: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    pub fn new(rate: f64, cap: usize) -> FlightRecorder {
+        FlightRecorder { rate, cap: cap.max(1), t0: Instant::now(), inner: Mutex::default() }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Deterministic per-lane sampling: hash the request id to [0, 1)
+    /// and compare against the rate. Same id ⇒ same verdict, across
+    /// shards and across reruns.
+    pub fn sampled(&self, id: u64) -> bool {
+        if self.rate >= 1.0 {
+            return true;
+        }
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let h = id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 11) as f64 / (1u64 << 53) as f64) < self.rate
+    }
+
+    /// µs since recorder construction — the timebase of every event.
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        let mut inner = self.inner.lock().expect("recorder lock poisoned");
+        if inner.events.len() == self.cap {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        inner.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("recorder lock poisoned").events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by the ring since construction.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().expect("recorder lock poisoned").dropped
+    }
+
+    /// Snapshot the ring, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.inner.lock().expect("recorder lock poisoned").events.iter().cloned().collect()
+    }
+
+    /// Decision events currently in the ring, as `[compute, approx,
+    /// reuse]` — the reconciliation hook for tests and smoke scripts.
+    pub fn decision_counts(&self) -> [u64; 3] {
+        let inner = self.inner.lock().expect("recorder lock poisoned");
+        let mut t = [0u64; 3];
+        for ev in &inner.events {
+            if let EventKind::Decision { action, .. } = ev.kind {
+                match action {
+                    "compute" => t[0] += 1,
+                    "approx" => t[1] += 1,
+                    _ => t[2] += 1,
+                }
+            }
+        }
+        t
+    }
+
+    /// One JSON object per line; non-finite floats serialize as null.
+    pub fn to_ndjson(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&event_json(&ev));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` format: instants (`ph:"i"`) for decisions
+    /// and partitions, complete spans (`ph:"X"`) for stages; shard as
+    /// pid, lane as tid so each lane gets its own track.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let events = self.events();
+        for (i, ev) in events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&chrome_json(ev));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// A float for hand-rolled JSON: non-finite becomes null (JSON has no
+/// Infinity/NaN literals).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> String {
+    let head = format!(
+        "{{\"ts_us\":{},\"dur_us\":{},\"shard\":{},\"lane\":{},\"step\":{},\"layer\":{}",
+        ev.ts_us,
+        ev.dur_us,
+        ev.shard,
+        ev.lane,
+        ev.step,
+        if ev.layer == NON_LAYER { "null".to_string() } else { ev.layer.to_string() },
+    );
+    match &ev.kind {
+        EventKind::Decision { action, delta, threshold, fit_updates, downgraded } => format!(
+            "{head},\"kind\":\"decision\",\"action\":\"{action}\",\"delta\":{},\
+             \"threshold\":{},\"fit_updates\":{fit_updates},\"downgraded\":{downgraded}}}",
+            json_f64(*delta),
+            json_f64(*threshold),
+        ),
+        EventKind::StrPartition { motion_tokens, total_tokens } => format!(
+            "{head},\"kind\":\"str_partition\",\"motion_tokens\":{motion_tokens},\
+             \"total_tokens\":{total_tokens}}}"
+        ),
+        EventKind::Stage { stage } => format!("{head},\"kind\":\"stage\",\"stage\":\"{stage}\"}}"),
+    }
+}
+
+fn chrome_json(ev: &TraceEvent) -> String {
+    let common = format!("\"pid\":{},\"tid\":{},\"ts\":{}", ev.shard, ev.lane, ev.ts_us);
+    match &ev.kind {
+        EventKind::Decision { action, delta, threshold, fit_updates, downgraded } => format!(
+            "{{\"name\":\"decision:{action}\",\"ph\":\"i\",\"s\":\"t\",{common},\
+             \"args\":{{\"step\":{},\"layer\":{},\"delta\":{},\"threshold\":{},\
+             \"fit_updates\":{fit_updates},\"downgraded\":{downgraded}}}}}",
+            ev.step,
+            ev.layer,
+            json_f64(*delta),
+            json_f64(*threshold),
+        ),
+        EventKind::StrPartition { motion_tokens, total_tokens } => format!(
+            "{{\"name\":\"str_partition\",\"ph\":\"i\",\"s\":\"t\",{common},\
+             \"args\":{{\"step\":{},\"motion_tokens\":{motion_tokens},\
+             \"total_tokens\":{total_tokens}}}}}",
+            ev.step,
+        ),
+        EventKind::Stage { stage } => format!(
+            "{{\"name\":\"{stage}\",\"ph\":\"X\",{common},\"dur\":{},\
+             \"args\":{{\"step\":{}}}}}",
+            ev.dur_us, ev.step,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decision(lane: u64, step: u32, layer: u32, action: &'static str) -> TraceEvent {
+        TraceEvent {
+            ts_us: 10,
+            dur_us: 0,
+            shard: 0,
+            lane,
+            step,
+            layer,
+            kind: EventKind::Decision {
+                action,
+                delta: 0.25,
+                threshold: 0.1,
+                fit_updates: 3,
+                downgraded: false,
+            },
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_rate_faithful() {
+        let all = FlightRecorder::new(1.0, 16);
+        let none = FlightRecorder::new(0.0, 16);
+        let half = FlightRecorder::new(0.5, 16);
+        for id in 0..1000u64 {
+            assert!(all.sampled(id), "rate 1.0 must trace every lane");
+            assert!(!none.sampled(id), "rate 0.0 must trace no lane");
+            assert_eq!(half.sampled(id), half.sampled(id), "verdict must be stable");
+        }
+        let hits = (0..10_000u64).filter(|&id| half.sampled(id)).count();
+        assert!(
+            (3_000..7_000).contains(&hits),
+            "rate 0.5 traced {hits}/10000 — hash badly skewed"
+        );
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_drops() {
+        let rec = FlightRecorder::new(1.0, 3);
+        for i in 0..5u64 {
+            rec.push(decision(i, 0, 0, "compute"));
+        }
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.dropped(), 2);
+        let lanes: Vec<u64> = rec.events().iter().map(|e| e.lane).collect();
+        assert_eq!(lanes, vec![2, 3, 4], "the LATEST window survives");
+    }
+
+    #[test]
+    fn decision_counts_reconcile() {
+        let rec = FlightRecorder::new(1.0, 16);
+        rec.push(decision(1, 0, 0, "compute"));
+        rec.push(decision(1, 0, 1, "approx"));
+        rec.push(decision(1, 1, 0, "reuse"));
+        rec.push(decision(1, 1, 1, "reuse"));
+        rec.push(TraceEvent {
+            ts_us: 99,
+            dur_us: 50,
+            shard: 0,
+            lane: 1,
+            step: 1,
+            layer: NON_LAYER,
+            kind: EventKind::Stage { stage: "step" },
+        });
+        assert_eq!(rec.decision_counts(), [1, 1, 2]);
+    }
+
+    #[test]
+    fn ndjson_and_chrome_dumps_are_parseable_shapes() {
+        let rec = FlightRecorder::new(1.0, 16);
+        rec.push(decision(7, 2, 5, "approx"));
+        rec.push(TraceEvent {
+            ts_us: 20,
+            dur_us: 0,
+            shard: 1,
+            lane: 7,
+            step: 2,
+            layer: NON_LAYER,
+            kind: EventKind::StrPartition { motion_tokens: 40, total_tokens: 64 },
+        });
+        rec.push(TraceEvent {
+            ts_us: 30,
+            dur_us: 1000,
+            shard: 1,
+            lane: 7,
+            step: 2,
+            layer: NON_LAYER,
+            kind: EventKind::Stage { stage: "queue_wait" },
+        });
+        // First-step deltas are infinite and must serialize as null,
+        // not as an invalid JSON literal.
+        rec.push(TraceEvent {
+            kind: EventKind::Decision {
+                action: "compute",
+                delta: f64::INFINITY,
+                threshold: 0.1,
+                fit_updates: 0,
+                downgraded: false,
+            },
+            ..decision(7, 0, 0, "compute")
+        });
+        let nd = rec.to_ndjson();
+        assert_eq!(nd.lines().count(), 4);
+        for line in nd.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "bad NDJSON line: {line}");
+        }
+        assert!(nd.contains("\"kind\":\"decision\""));
+        assert!(nd.contains("\"kind\":\"str_partition\""));
+        assert!(nd.contains("\"kind\":\"stage\""));
+        assert!(nd.contains("\"delta\":null"), "infinite delta must be null");
+        assert!(!nd.contains("inf"), "no raw inf in JSON output");
+        let chrome = rec.to_chrome_trace();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        assert!(chrome.ends_with("]}"));
+        assert!(chrome.contains("\"ph\":\"X\""), "stages must be spans");
+        assert!(chrome.contains("\"ph\":\"i\""), "decisions must be instants");
+        assert!(chrome.contains("\"dur\":1000"));
+        assert_eq!(rec.dropped(), 0);
+    }
+}

@@ -29,6 +29,7 @@ use crate::cache::{
 };
 use crate::config::{ApproxMode, FastCacheConfig, PolicyKind, C_IN};
 use crate::model::{native, DitModel, ScratchArena};
+use crate::obs::{EventKind, StepObserver, TraceEvent, NON_LAYER};
 use crate::rng::Rng;
 use crate::store::lru::LruCounters;
 use crate::tensor::Tensor;
@@ -100,22 +101,6 @@ impl GenRequest {
         }
     }
 
-    #[deprecated(since = "0.7.0", note = "use GenRequest::builder(id, seed).steps(n).build()")]
-    pub fn simple(id: u64, seed: u64, steps: usize) -> GenRequest {
-        GenRequest::builder(id, seed)
-            .steps(steps)
-            .build()
-            .expect("legacy GenRequest::simple arguments failed validation")
-    }
-
-    /// Tag the request with an SLA deadline (ms from submission).
-    #[deprecated(since = "0.7.0", note = "use .into_builder().deadline_ms(ms).build()")]
-    pub fn with_deadline(self, ms: f64) -> GenRequest {
-        self.into_builder()
-            .deadline_ms(ms)
-            .build()
-            .expect("legacy GenRequest::with_deadline arguments failed validation")
-    }
 }
 
 /// Builder for [`GenRequest`] — the ONE place request validation lives.
@@ -357,6 +342,11 @@ pub struct Lane {
     /// steady-state compute path allocates nothing. Persisted across
     /// steps (rebuilding it per step would re-allocate at layer 0).
     scratch_out: Tensor,
+    /// Whether the flight recorder sampled this lane: decided once at
+    /// lane construction from the request id, so a lane records every
+    /// event of its lifetime or none. Pure observation — no decision
+    /// path ever reads it.
+    traced: bool,
 }
 
 impl Lane {
@@ -398,6 +388,11 @@ impl Lane {
 
     pub fn is_done(&self) -> bool {
         self.step >= self.schedule.len()
+    }
+
+    /// Whether the flight recorder sampled this lane at construction.
+    pub fn traced(&self) -> bool {
+        self.traced
     }
 
     /// Adopt warm fits from the cross-request store, one slot per layer
@@ -519,6 +514,10 @@ pub struct LaneStepper<'m> {
     fc: FastCacheConfig,
     arena: ScratchArena,
     temb: TembCache,
+    /// Telemetry sink (decision counters + optional flight recorder).
+    /// `None` outside the server — engines and tests step unobserved.
+    /// Observation is strictly one-way: the stepper writes, never reads.
+    obs: Option<StepObserver>,
 }
 
 impl<'m> LaneStepper<'m> {
@@ -538,7 +537,14 @@ impl<'m> LaneStepper<'m> {
     ) -> LaneStepper<'m> {
         let mut arena = ScratchArena::new();
         arena.set_threads(threads);
-        LaneStepper { model, fc, arena, temb: TembCache::new() }
+        LaneStepper { model, fc, arena, temb: TembCache::new(), obs: None }
+    }
+
+    /// Attach a telemetry observer (the shard loop installs one).
+    /// Counters record for every lane; trace events only for lanes the
+    /// recorder sampled at construction.
+    pub fn set_observer(&mut self, obs: StepObserver) {
+        self.obs = Some(obs);
     }
 
     pub fn model(&self) -> &'m DitModel {
@@ -627,6 +633,11 @@ impl<'m> LaneStepper<'m> {
             warm_layers: 0,
             delta_log,
             scratch_out: Tensor::empty(),
+            traced: self
+                .obs
+                .as_ref()
+                .and_then(|o| o.recorder.as_deref())
+                .is_some_and(|r| r.sampled(req.id)),
         }
     }
 
@@ -635,8 +646,9 @@ impl<'m> LaneStepper<'m> {
     /// artifact in chunks; everything else runs its per-lane path exactly
     /// as the single-request loop always did.
     pub fn step(&mut self, lanes: &mut [Lane]) -> Result<()> {
-        let Self { model, fc, arena, temb } = &mut *self;
+        let Self { model, fc, arena, temb, obs } = &mut *self;
         let model: &DitModel = model;
+        let obs = obs.as_ref();
         let cfg = model.cfg;
         let (n, d, layers) = (cfg.n_tokens, cfg.d, cfg.layers);
         let nl = lanes.len();
@@ -647,6 +659,14 @@ impl<'m> LaneStepper<'m> {
             lanes.iter().all(|l| !l.is_done()),
             "stepping a finished lane — retire lanes before calling step()"
         );
+        // Telemetry for this call, batched into locals and flushed once
+        // at the end — the hot loops touch no atomics. The "step" stage
+        // span needs a timestamp in the recorder's timebase.
+        let step_t0 = Instant::now();
+        let step_ts = obs.and_then(|o| o.recorder.as_deref()).map(|r| r.now_us());
+        let mut dec = [0u64; 3];
+        let mut str_motion = 0u64;
+        let mut str_static = 0u64;
 
         // ---- Step prologue, per lane: temb + embed + policy + STR. ----
         // temb(t) is pure in (t, variant, weight seed), so the stepper's
@@ -705,6 +725,28 @@ impl<'m> LaneStepper<'m> {
             };
             let motion_idx: Option<Vec<usize>> = part.as_ref().map(tokens::pad_to_bucket);
             let motion_tokens = part.as_ref().map(|p| p.motion.len()).unwrap_or(n);
+            if part.is_some() {
+                str_motion += motion_tokens as u64;
+                str_static += (n - motion_tokens) as u64;
+                if lane.traced {
+                    if let Some(o) = obs {
+                        if let Some(rec) = o.recorder.as_deref() {
+                            rec.push(TraceEvent {
+                                ts_us: rec.now_us(),
+                                dur_us: 0,
+                                shard: o.shard,
+                                lane: lane.req.id,
+                                step: step as u32,
+                                layer: NON_LAYER,
+                                kind: EventKind::StrPartition {
+                                    motion_tokens: motion_tokens as u32,
+                                    total_tokens: n as u32,
+                                },
+                            });
+                        }
+                    }
+                }
+            }
 
             lane.cache.store_temb_from(&c);
             lane.cache.store_embed_from(&h0);
@@ -775,15 +817,41 @@ impl<'m> LaneStepper<'m> {
                 // (whose adopted fits arrive converged) approximates
                 // earlier and executes measurably fewer FLOPs. 0 = legacy
                 // behavior, bit-identical to pre-gate serving.
+                let mut downgraded = false;
                 if action == BlockAction::Approx
                     && fc.fit_min_updates > 0
                     && lane.cache.fit(l).updates() < fc.fit_min_updates
                 {
                     action = BlockAction::Compute;
+                    downgraded = true;
                 }
                 lane.flops_full += cfg.block_flops(cur_n);
                 lane.token_sites_total += cur_n as u64;
                 lane.active += t0.elapsed();
+                // Observation only, after the decision is final: count it,
+                // and record the full decision context for traced lanes.
+                dec[action as usize] += 1;
+                if lane.traced {
+                    if let Some(o) = obs {
+                        if let Some(rec) = o.recorder.as_deref() {
+                            rec.push(TraceEvent {
+                                ts_us: rec.now_us(),
+                                dur_us: 0,
+                                shard: o.shard,
+                                lane: lane.req.id,
+                                step: ctx.rec.step as u32,
+                                layer: l as u32,
+                                kind: EventKind::Decision {
+                                    action: action.name(),
+                                    delta: delta.unwrap_or(f64::INFINITY),
+                                    threshold: fc.tau_delta0,
+                                    fit_updates: lane.cache.fit(l).updates(),
+                                    downgraded,
+                                },
+                            });
+                        }
+                    }
+                }
                 actions.push(action);
             }
 
@@ -1013,6 +1081,33 @@ impl<'m> LaneStepper<'m> {
             lane.cache_bytes_peak = lane.cache_bytes_peak.max(lane.cache.size_bytes());
             lane.step += 1;
             lane.active += t0.elapsed();
+        }
+
+        // ---- Telemetry flush: one atomic add per series per call. ----
+        if let Some(o) = obs {
+            o.metrics.decisions_compute.add(dec[0]);
+            o.metrics.decisions_approx.add(dec[1]);
+            o.metrics.decisions_reuse.add(dec[2]);
+            o.metrics.str_motion_tokens.add(str_motion);
+            o.metrics.str_static_tokens.add(str_static);
+            if let (Some(rec), Some(ts)) = (o.recorder.as_deref(), step_ts) {
+                let dur_us = step_t0.elapsed().as_micros() as u64;
+                for lane in lanes.iter() {
+                    if lane.traced {
+                        rec.push(TraceEvent {
+                            ts_us: ts,
+                            dur_us,
+                            shard: o.shard,
+                            lane: lane.req.id,
+                            // `lane.step` was advanced in the epilogue;
+                            // the span covers the step just executed.
+                            step: (lane.step - 1) as u32,
+                            layer: NON_LAYER,
+                            kind: EventKind::Stage { stage: "step" },
+                        });
+                    }
+                }
+            }
         }
         Ok(())
     }

@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use crate::config::{FastCacheConfig, ModelConfig, ServerConfig};
 use crate::model::DitModel;
+use crate::obs::{FlightRecorder, Registry, ShardMetrics, DEFAULT_TRACE_EVENT_CAP};
 use crate::scheduler::ScheduleCache;
 use crate::store::WarmStore;
 
@@ -71,6 +72,13 @@ pub struct Dispatcher {
     /// dispatcher (fleet semantics).
     store: Option<Arc<WarmStore>>,
     started: Instant,
+    /// The live telemetry registry: every shard's series plus the net
+    /// door's, scrapeable while the server runs. The shutdown report is
+    /// the registry's final snapshot.
+    registry: Arc<Registry>,
+    /// Flight recorder, shared by every shard (`None` unless
+    /// `ServerConfig::trace_sample_rate > 0`).
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl Dispatcher {
@@ -94,6 +102,12 @@ impl Dispatcher {
         let factory = Arc::new(model_factory);
         let schedules = Arc::new(Mutex::new(ScheduleCache::new()));
         let step_flops = ModelConfig::of(scfg.variant).full_step_flops();
+        let recorder = (scfg.trace_sample_rate > 0.0).then(|| {
+            Arc::new(FlightRecorder::new(scfg.trace_sample_rate, DEFAULT_TRACE_EVENT_CAP))
+        });
+        let shard_metrics: Vec<Arc<ShardMetrics>> =
+            (0..workers).map(|id| Arc::new(ShardMetrics::new(id))).collect();
+        let registry = Arc::new(Registry::new(shard_metrics.clone(), store.clone()));
 
         let shards = (0..workers)
             .map(|id| {
@@ -107,6 +121,8 @@ impl Dispatcher {
                     load: Arc::clone(&load),
                     schedules: Arc::clone(&schedules),
                     warm_store: store.clone(),
+                    metrics: Arc::clone(&shard_metrics[id]),
+                    recorder: recorder.clone(),
                 };
                 let f = Arc::clone(&factory);
                 let handle = std::thread::Builder::new()
@@ -117,7 +133,18 @@ impl Dispatcher {
             })
             .collect();
 
-        Dispatcher { shards, step_flops, store, started: Instant::now() }
+        Dispatcher { shards, step_flops, store, started: Instant::now(), registry, recorder }
+    }
+
+    /// The live telemetry registry (scraped by the net door's `Stats`
+    /// frame, `--stats-every`, and the CLI).
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// The flight recorder, when tracing is enabled.
+    pub fn recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.recorder.clone()
     }
 
     pub fn workers(&self) -> usize {

@@ -33,6 +33,7 @@ use crate::cache::calibrate::calibrated_l2c;
 use crate::config::{FastCacheConfig, PolicyKind, ServerConfig};
 use crate::metrics::LatencyHistogram;
 use crate::model::DitModel;
+use crate::obs::{EventKind, FlightRecorder, Registry, ShardMetrics, StepObserver, TraceEvent, NON_LAYER};
 use crate::scheduler::{GenRequest, Lane, LaneStepper, ScheduleCache};
 use crate::store::{ModelFingerprint, StoreStats, WarmStore};
 
@@ -87,27 +88,6 @@ pub struct ShardReport {
 }
 
 impl ShardReport {
-    fn new(shard: usize) -> ShardReport {
-        ShardReport {
-            shard,
-            completed: 0,
-            e2e: LatencyHistogram::new(),
-            admission_wait: LatencyHistogram::new(),
-            wall_s: 0.0,
-            step_calls: 0,
-            lane_steps: 0,
-            padded_flops: 0,
-            deadline_jobs: 0,
-            deadline_hits: 0,
-            best_effort_jobs: 0,
-            deadline_sheds: 0,
-            warm_admissions: 0,
-            warm_layers: 0,
-            scratch_bytes: 0,
-            threads: 1,
-        }
-    }
-
     /// Fraction of deadline-class jobs that met their budget. Shed jobs
     /// count in the denominator — dropping an expired job is an SLA
     /// failure, and excluding it would let a shedding server report a
@@ -340,6 +320,17 @@ impl Server {
         }
     }
 
+    /// The live telemetry registry: scrape series at any time with
+    /// [`Registry::series`]. The shutdown report is its final snapshot.
+    pub fn registry(&self) -> Arc<Registry> {
+        self.dispatcher.registry()
+    }
+
+    /// The flight recorder (`None` unless `trace_sample_rate > 0`).
+    pub fn recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.dispatcher.recorder()
+    }
+
     /// Close every shard queue and wait for the shards to drain.
     pub fn shutdown(self) -> ServerReport {
         self.dispatcher.shutdown()
@@ -380,6 +371,12 @@ pub(crate) struct ShardCtx {
     pub load: Arc<ShardLoad>,
     pub schedules: Arc<Mutex<ScheduleCache>>,
     pub warm_store: Option<Arc<WarmStore>>,
+    /// This shard's live telemetry series (registered in the dispatcher's
+    /// [`Registry`]). The shard updates them lock-free on the hot path;
+    /// the shutdown `ShardReport` is their final snapshot.
+    pub metrics: Arc<ShardMetrics>,
+    /// Shared flight recorder (`None` unless tracing is enabled).
+    pub recorder: Option<Arc<FlightRecorder>>,
 }
 
 /// One shard's serve loop: continuous batching with SLA-aware admission,
@@ -391,7 +388,8 @@ where
 {
     use std::sync::atomic::Ordering;
 
-    let ShardCtx { id: shard_id, scfg, fc, queue, load, schedules, warm_store } = ctx;
+    let ShardCtx { id: shard_id, scfg, fc, queue, load, schedules, warm_store, metrics, recorder } =
+        ctx;
     let (queue, load, schedules) = (queue.as_ref(), load.as_ref(), schedules.as_ref());
     let warm_store = warm_store.as_deref();
 
@@ -423,8 +421,16 @@ where
     // this only changes wall time, never outputs.
     let threads = scfg.effective_threads();
     let mut stepper = LaneStepper::with_threads(&model, fc, threads);
-    let mut report = ShardReport::new(shard_id);
-    report.threads = threads as u64;
+    metrics.threads.set(threads as u64);
+    // Hand the stepper its observation channel: per-step counters flush
+    // into this shard's registry series; traced lanes' decision events go
+    // to the shared flight recorder. Observation only — the stepper's
+    // decision path never reads any of it.
+    stepper.set_observer(StepObserver {
+        shard: shard_id as u32,
+        metrics: Arc::clone(&metrics),
+        recorder: recorder.clone(),
+    });
     // Guard against unvalidated configs: max_batch = 0 must degrade to
     // solo serving, not livelock the admission loop.
     let max_batch = scfg.max_batch.max(1);
@@ -440,7 +446,6 @@ where
         (f.policy, f.l2c_threshold, f.fit_min_updates.max(1), fits_used)
     };
     let layers = model.cfg.layers;
-    let t0 = Instant::now();
 
     let mut lanes: Vec<Lane> = Vec::new();
     let mut inflight: Vec<Inflight> = Vec::new();
@@ -477,13 +482,27 @@ where
             // immediately rather than lingering behind live ones.)
             if job.expired(admitted) {
                 load.queued_flops.fetch_sub(job.cost, Ordering::Relaxed);
-                report.deadline_sheds += 1;
+                metrics.deadline_sheds.inc();
                 job.shed();
                 continue;
             }
-            report
-                .admission_wait
-                .record(admitted.duration_since(job.submitted).as_secs_f64() * 1e3);
+            let waited = admitted.duration_since(job.submitted);
+            metrics.admission_wait.record(waited.as_secs_f64() * 1e3);
+            // Traced lanes get a queue-wait stage span so the Chrome
+            // timeline shows submit → admission alongside the step spans.
+            if let Some(rec) = recorder.as_deref() {
+                if rec.sampled(job.req.id) {
+                    rec.push(TraceEvent {
+                        ts_us: rec.now_us(),
+                        dur_us: waited.as_micros() as u64,
+                        shard: shard_id as u32,
+                        lane: job.req.id,
+                        step: 0,
+                        layer: NON_LAYER,
+                        kind: EventKind::Stage { stage: "queue_wait" },
+                    });
+                }
+            }
             load.queued_flops.fetch_sub(job.cost, Ordering::Relaxed);
             let schedule = schedules.lock().expect("schedule cache poisoned").get(job.req.steps);
             // Warm start at admission: threshold policies calibrate from
@@ -511,8 +530,8 @@ where
                 warmed_layers = lane.warm_start_fits(&warm);
             }
             if calibrated || warmed_layers > 0 {
-                report.warm_admissions += 1;
-                report.warm_layers += warmed_layers as u64;
+                metrics.warm_admissions.inc();
+                metrics.warm_layers.add(warmed_layers as u64);
             }
             lanes.push(lane);
             inflight.push(Inflight { job, admitted });
@@ -531,8 +550,8 @@ where
 
         // One denoise step across the whole active set (lanes may sit at
         // different step indices — the stepper handles that).
-        report.step_calls += 1;
-        report.lane_steps += lanes.len() as u64;
+        metrics.step_calls.inc();
+        metrics.lane_steps.add(lanes.len() as u64);
         stepper.step(&mut lanes).expect("denoise step failed");
 
         // Progress ticks for streaming submissions: `step_index()` is the
@@ -575,21 +594,21 @@ where
                 }
             }
             let result = lane.into_result();
-            report.padded_flops += result.flops_padded;
+            metrics.padded_flops.add(result.flops_padded);
             let e2e = fl.job.submitted.elapsed().as_secs_f64() * 1e3;
             let queued_ms = fl.admitted.duration_since(fl.job.submitted).as_secs_f64() * 1e3;
             let deadline_met = fl.job.req.deadline_ms.map(|budget| e2e <= budget);
             match deadline_met {
                 Some(met) => {
-                    report.deadline_jobs += 1;
+                    metrics.deadline_jobs.inc();
                     if met {
-                        report.deadline_hits += 1;
+                        metrics.deadline_hits.inc();
                     }
                 }
-                None => report.best_effort_jobs += 1,
+                None => metrics.best_effort_jobs.inc(),
             }
-            report.e2e.record(e2e);
-            report.completed += 1;
+            metrics.e2e.record(e2e);
+            metrics.completed.inc();
             let _ = fl.job.resp.send(Event::Done(Outcome::Completed(GenResponse {
                 result,
                 queued_ms,
@@ -602,9 +621,9 @@ where
         publish_load(load, &lanes);
     }
 
-    report.wall_s = t0.elapsed().as_secs_f64();
-    report.scratch_bytes = stepper.scratch_high_water_bytes() as u64;
-    report
+    metrics.scratch_bytes.set(stepper.scratch_high_water_bytes() as u64);
+    metrics.mark_finished();
+    metrics.snapshot()
 }
 
 #[cfg(test)]
@@ -1048,5 +1067,174 @@ mod tests {
             other => panic!("expected only a terminal event, got {other:?}"),
         }
         server.shutdown();
+    }
+
+    /// A zeroed per-shard report for merge-arithmetic tests (shards build
+    /// theirs by snapshotting live metrics; tests build them directly).
+    fn blank_shard(shard: usize) -> ShardReport {
+        ShardReport {
+            shard,
+            completed: 0,
+            e2e: LatencyHistogram::new(),
+            admission_wait: LatencyHistogram::new(),
+            wall_s: 0.0,
+            step_calls: 0,
+            lane_steps: 0,
+            padded_flops: 0,
+            deadline_jobs: 0,
+            deadline_hits: 0,
+            best_effort_jobs: 0,
+            deadline_sheds: 0,
+            warm_admissions: 0,
+            warm_layers: 0,
+            scratch_bytes: 0,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_capacity_fields() {
+        let mut a = blank_shard(0);
+        a.completed = 3;
+        a.step_calls = 10;
+        a.lane_steps = 25;
+        a.padded_flops = 1_000;
+        a.warm_admissions = 2;
+        a.warm_layers = 7;
+        a.scratch_bytes = 4096;
+        a.threads = 2;
+        a.e2e.record(10.0);
+        a.admission_wait.record(1.0);
+
+        let mut b = blank_shard(1);
+        b.completed = 5;
+        b.step_calls = 4;
+        b.lane_steps = 4;
+        b.padded_flops = 500;
+        b.warm_admissions = 1;
+        b.warm_layers = 3;
+        b.scratch_bytes = 8192; // larger arena wins the max
+        b.threads = 1;
+        b.e2e.record(20.0);
+        b.e2e.record(30.0);
+
+        let r = ServerReport::merge(vec![a, b], 2.5, None);
+        assert_eq!(r.completed, 8);
+        assert_eq!(r.step_calls, 14);
+        assert_eq!(r.lane_steps, 29);
+        assert_eq!(r.padded_flops, 1_500);
+        assert_eq!(r.warm_admissions, 3);
+        assert_eq!(r.warm_layers, 10);
+        // Capacity-style fields merge by MAX, not sum: each shard's
+        // scratch arena is independent, and threads is a per-shard clamp.
+        assert_eq!(r.scratch_bytes, 8192);
+        assert_eq!(r.threads, 2);
+        assert_eq!(r.wall_s, 2.5);
+        assert_eq!(r.e2e.count(), 3);
+        assert_eq!(r.admission_wait.count(), 1);
+        assert_eq!(r.store, None);
+        assert_eq!(r.net, None);
+        assert_eq!(r.shards.len(), 2);
+        let shard_sum: u64 = r.shards.iter().map(|s| s.completed).sum();
+        assert_eq!(shard_sum, r.completed);
+    }
+
+    #[test]
+    fn hit_rate_counts_queue_and_door_sheds_in_denominator() {
+        let mut a = blank_shard(0);
+        a.deadline_jobs = 4;
+        a.deadline_hits = 3;
+        let mut b = blank_shard(1);
+        b.deadline_jobs = 2;
+        b.deadline_hits = 1;
+        b.deadline_sheds = 2; // queue-side sheds: misses, not vanished
+        b.best_effort_jobs = 5;
+
+        let mut r = ServerReport::merge(vec![a, b], 1.0, None);
+        assert_eq!(r.deadline_jobs, 6);
+        assert_eq!(r.deadline_hits, 4);
+        assert_eq!(r.deadline_sheds, 2);
+        assert_eq!(r.best_effort_jobs, 5);
+        // 4 hits / (6 served + 2 shed) — best-effort jobs stay out.
+        assert_eq!(r.deadline_hit_rate(), Some(0.5));
+
+        // Door refusals join the denominator on absorb_net.
+        r.absorb_net(NetStats { door_sheds_deadline: 2, ..NetStats::default() });
+        assert_eq!(r.door_sheds, 2);
+        assert_eq!(r.deadline_hit_rate(), Some(0.4));
+    }
+
+    #[test]
+    fn hit_rate_is_none_without_deadline_traffic() {
+        let mut s = blank_shard(0);
+        s.best_effort_jobs = 9;
+        let r = ServerReport::merge(vec![s], 1.0, None);
+        assert_eq!(r.deadline_hit_rate(), None, "best-effort-only traffic has no SLA rate");
+        // And the per-shard rate agrees.
+        assert_eq!(r.shards[0].deadline_hit_rate(), None);
+
+        // All-shed traffic: denominator exists, rate is a hard 0.
+        let mut s = blank_shard(0);
+        s.deadline_sheds = 3;
+        let r = ServerReport::merge(vec![s], 1.0, None);
+        assert_eq!(r.deadline_hit_rate(), Some(0.0));
+    }
+
+    #[test]
+    fn flight_recorder_never_changes_served_latents() {
+        // The tentpole's core invariant: tracing observes decisions, it
+        // never makes them. Fixed-seed traffic served with the recorder
+        // at full sampling must be BIT-identical to the untraced run.
+        let plain = serve_latents(ServerConfig::default());
+        let traced =
+            serve_latents(ServerConfig { trace_sample_rate: 1.0, ..ServerConfig::default() });
+        assert_eq!(plain.len(), traced.len());
+        for (p, t) in plain.iter().zip(traced.iter()) {
+            assert_eq!(p.len(), t.len());
+            for (x, y) in p.iter().zip(t.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "tracing perturbed a served latent");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_counts_traffic_while_serving() {
+        let scfg = ServerConfig {
+            max_batch: 2,
+            queue_depth: 8,
+            trace_sample_rate: 1.0,
+            ..ServerConfig::default()
+        };
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
+        let registry = server.registry();
+        let recorder = server.recorder().expect("rate 1.0 must attach a recorder");
+
+        let steps = 4usize;
+        let n_reqs = 3u64;
+        for i in 0..n_reqs {
+            let rx =
+                server.submit(&GenRequest::builder(i, 300 + i).steps(steps).build().unwrap()).unwrap();
+            rx.wait().completed();
+        }
+        // Live scrape BEFORE shutdown: the registry is readable while the
+        // server runs — that is its entire reason to exist.
+        let completed: u64 = registry.shards().iter().map(|s| s.completed.get()).sum();
+        assert_eq!(completed, n_reqs);
+        let dec = registry.decision_totals();
+        let layers = crate::config::ModelConfig::of(Variant::S).layers;
+        assert_eq!(
+            dec.iter().sum::<u64>(),
+            n_reqs * steps as u64 * layers as u64,
+            "one decision per (lane, step, layer)"
+        );
+        // At sample rate 1.0 the recorder saw every one of them, and its
+        // per-action counts reconcile with the registry's counters.
+        assert_eq!(recorder.decision_counts(), dec);
+
+        let report = server.shutdown();
+        assert_eq!(report.completed, n_reqs, "shutdown report is the registry's final snapshot");
+        assert_eq!(report.step_calls, registry.shards().iter().map(|s| s.step_calls.get()).sum());
     }
 }

@@ -11,6 +11,7 @@ use fastcache_dit::config::{FastCacheConfig, PolicyKind, ServerConfig, Variant};
 use fastcache_dit::model::DitModel;
 use fastcache_dit::net::proto::{self, Frame};
 use fastcache_dit::net::{NetClient, NetServer, VERSION};
+use fastcache_dit::obs::SeriesValue;
 use fastcache_dit::scheduler::GenRequest;
 use fastcache_dit::server::Server;
 use fastcache_dit::tensor::Tensor;
@@ -199,6 +200,112 @@ fn graceful_drain_finishes_every_admitted_lane_with_zero_lost_responses() {
     let net = report.net.expect("net stats");
     assert_eq!(net.reqs_completed, 4, "every admitted response must reach the wire");
     drop(client);
+}
+
+#[test]
+fn traced_lanes_reconcile_with_the_registry_over_the_wire() {
+    // Sample rate 1.0: every lane is traced. The acceptance property —
+    // per-lane Decision events, the registry's cache counters, and the
+    // wire-scraped series must all describe the same steps × layers
+    // decision grid.
+    let scfg = ServerConfig {
+        max_batch: 2,
+        queue_depth: 64,
+        workers: 1,
+        trace_sample_rate: 1.0,
+        ..ServerConfig::default()
+    };
+    let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+    fc.enable_str = false;
+    let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 5)));
+    // Grab the handles BEFORE the door consumes the server — they are
+    // Arcs into the live plane, valid for the server's whole life.
+    let registry = server.registry();
+    let recorder = server.recorder().expect("sample rate 1.0 creates the recorder");
+    let door = NetServer::start(server, "127.0.0.1:0", 4).expect("bind loopback");
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+
+    let n_req = 3u64;
+    let steps = 4usize;
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            let req = GenRequest::builder(i, i ^ 0xAB).steps(steps).build().unwrap();
+            client.submit(&req).expect("submit")
+        })
+        .collect();
+    for rx in rxs {
+        rx.wait().completed();
+    }
+
+    // Live mid-connection scrape: one Stats frame on the same socket the
+    // submits used, answered from the registry without a drain.
+    let series = client.stats().expect("stats scrape");
+    let get = |name: &str| -> u64 {
+        match &series.iter().find(|s| s.name == name).unwrap_or_else(|| panic!("{name}")).value
+        {
+            SeriesValue::Counter(v) | SeriesValue::Gauge(v) => *v,
+            other => panic!("{name}: unexpected series kind {other:?}"),
+        }
+    };
+    assert_eq!(get("server.completed"), n_req);
+    assert_eq!(get("net.reqs_submitted"), n_req);
+    assert_eq!(get("net.reqs_completed"), n_req);
+    assert!(get("net.bytes_in") > 0 && get("net.bytes_out") > 0);
+
+    let layers = fastcache_dit::config::ModelConfig::of(Variant::S).layers as u64;
+    let dec = registry.decision_totals();
+    assert_eq!(
+        dec.iter().sum::<u64>(),
+        n_req * steps as u64 * layers,
+        "one cache decision per (request, step, layer)"
+    );
+    assert_eq!(
+        get("cache.decisions_compute") + get("cache.decisions_approx")
+            + get("cache.decisions_reuse"),
+        dec.iter().sum::<u64>(),
+        "wire scrape must agree with the in-process registry"
+    );
+    assert_eq!(
+        recorder.decision_counts(),
+        dec,
+        "every counted decision must also be a recorded event at rate 1.0"
+    );
+
+    client.close();
+    let report = door.shutdown();
+    assert_eq!(report.completed, n_req);
+    // The shutdown report is a final snapshot of the same registry.
+    assert_eq!(report.net.expect("net stats").reqs_completed, n_req);
+}
+
+#[test]
+fn stats_scrapes_interleave_with_in_flight_requests() {
+    let door = start_door(1, 16, 2);
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    // Scrape an idle server: all traffic counters are zero, but the
+    // series set itself is complete and well-formed.
+    let idle = client.stats().expect("idle scrape");
+    let completed = |series: &[fastcache_dit::obs::Series]| -> u64 {
+        series
+            .iter()
+            .find_map(|s| match (&s.name[..], &s.value) {
+                ("server.completed", SeriesValue::Counter(v)) => Some(*v),
+                _ => None,
+            })
+            .expect("server.completed series present")
+    };
+    assert_eq!(completed(&idle), 0);
+
+    // Interleave: submit, scrape while the lane may still be running,
+    // then wait — the scrape must neither block nor corrupt the stream.
+    let req = GenRequest::builder(1, 0xCAFE).steps(4).build().unwrap();
+    let rx = client.submit(&req).expect("submit");
+    let _mid = client.stats().expect("mid-flight scrape");
+    rx.wait().completed();
+    let after = client.stats().expect("post-completion scrape");
+    assert_eq!(completed(&after), 1);
+    client.close();
+    door.shutdown();
 }
 
 #[test]

@@ -11,6 +11,7 @@ use fastcache_dit::net::proto::{
     self, decode_slice, encode, partial_frames, read_frame, Completed, PARTIAL_CHUNK_F32,
 };
 use fastcache_dit::net::{Frame, ProtoError, MAX_FRAME_LEN, VERSION};
+use fastcache_dit::obs::{HistSummary, Series, SeriesValue};
 use fastcache_dit::rng::Rng;
 use fastcache_dit::scheduler::{GenRequest, Turbulence};
 use fastcache_dit::tensor::Tensor;
@@ -61,6 +62,37 @@ fn sample_frames() -> Vec<Frame> {
         Frame::Shed { id: 8, waited_ms: 1234.5, deadline_ms: 1000.0 },
         Frame::Error { id: 0, code: ErrorCode::Busy.code(), detail: String::new() },
         Frame::Error { id: 9, code: 0xBEEF, detail: "unknown codes round-trip raw".into() },
+        Frame::Stats,
+        // An empty scrape and one exercising every series kind, plus the
+        // edges: empty name, zero count, zero values.
+        Frame::StatsReply(Vec::new()),
+        Frame::StatsReply(vec![
+            Series { name: "server.completed".into(), value: SeriesValue::Counter(u64::MAX) },
+            Series { name: String::new(), value: SeriesValue::Counter(0) },
+            Series { name: "server.scratch_bytes".into(), value: SeriesValue::Gauge(1 << 20) },
+            Series {
+                name: "latency.e2e_ms".into(),
+                value: SeriesValue::Hist(HistSummary {
+                    count: 12,
+                    mean_ms: 41.5,
+                    p50_ms: 38.0,
+                    p95_ms: 92.25,
+                    p99_ms: 140.5,
+                    max_ms: 151.0,
+                }),
+            },
+            Series {
+                name: "latency.admission_ms".into(),
+                value: SeriesValue::Hist(HistSummary {
+                    count: 0,
+                    mean_ms: 0.0,
+                    p50_ms: 0.0,
+                    p95_ms: 0.0,
+                    p99_ms: 0.0,
+                    max_ms: 0.0,
+                }),
+            },
+        ]),
     ];
     for n in [0usize, 1, 3, 1000] {
         frames.push(Frame::Partial {
@@ -259,15 +291,33 @@ fn completed_reassembly_validates_shape_against_values() {
 
 #[test]
 fn version_is_stable_and_request_response_spaces_are_disjoint() {
-    assert_eq!(VERSION, 1);
+    // v2 added the Stats/StatsReply telemetry pair (docs/PROTOCOL.md).
+    assert_eq!(VERSION, 2);
     assert_eq!(proto::MAGIC, u32::from_le_bytes(*b"FCP1"));
     // Request frames encode type bytes < 0x80, responses >= 0x80.
     for frame in sample_frames() {
         let ty = encode(&frame)[4];
         let is_request = matches!(
             frame,
-            Frame::Hello { .. } | Frame::Submit { .. } | Frame::Goodbye
+            Frame::Hello { .. } | Frame::Submit { .. } | Frame::Goodbye | Frame::Stats
         );
         assert_eq!(ty < 0x80, is_request, "type byte space violated for {frame:?}");
     }
+}
+
+#[test]
+fn stats_reply_with_unknown_series_kind_is_malformed_not_a_panic() {
+    let buf = encode(&Frame::StatsReply(vec![Series {
+        name: "x".into(),
+        value: SeriesValue::Counter(7),
+    }]));
+    // Payload layout: len(4) type(1) count(4) name_len(2) name(1) kind(1)…
+    let kind_at = 4 + 1 + 4 + 2 + 1;
+    let mut bad = buf.clone();
+    bad[kind_at] = 0x7F;
+    assert!(matches!(decode_slice(&bad), Err(ProtoError::Malformed(_))));
+    // A lying series count is caught by the pre-allocation guard.
+    let mut lying = buf;
+    lying[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(decode_slice(&lying), Err(ProtoError::Malformed(_))));
 }

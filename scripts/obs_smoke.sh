@@ -1,0 +1,115 @@
+#!/usr/bin/env bash
+# Observability smoke (docs/OBSERVABILITY.md): boot `fastcache-serve
+# serve --listen` with the flight recorder at sample rate 1.0 and a
+# trace dump path, drive traffic over the wire, scrape the live registry
+# mid-flight with `fastcache-serve stats`, then drain and validate the
+# Chrome trace dump is well-formed JSON with the expected event kinds.
+# CI runs exactly this (see .github/workflows/ci.yml, job obs-smoke).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "obs_smoke: cargo not found on PATH — install a Rust toolchain (rustup) first" >&2
+    exit 1
+fi
+
+cargo build --release
+
+BIN=target/release/fastcache-serve
+OUT=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$OUT"
+}
+trap cleanup EXIT
+
+# --- boot: recorder on for every lane, periodic scrape to stderr,
+# Chrome trace dumped at drain. Stdin is a held-open fifo so we control
+# when the drain happens.
+mkfifo "$OUT/ctl"
+"$BIN" serve --native --model s --steps 6 --listen 127.0.0.1:0 --net-max-conns 8 \
+    --trace-sample-rate 1.0 --trace-out "$OUT/trace.json" --stats-every 1 \
+    < "$OUT/ctl" > "$OUT/server.log" 2> "$OUT/server.err" &
+SERVER_PID=$!
+exec 9>"$OUT/ctl"
+
+for _ in $(seq 1 100); do
+    grep -q "^listening on " "$OUT/server.log" && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "obs_smoke: server died during startup" >&2
+        cat "$OUT/server.log" "$OUT/server.err" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$OUT/server.log" | head -n1)
+if [ -z "$ADDR" ]; then
+    echo "obs_smoke: no 'listening on' line after 10s" >&2
+    cat "$OUT/server.log" "$OUT/server.err" >&2
+    exit 1
+fi
+echo "obs_smoke: door is up on $ADDR"
+
+# --- an idle scrape answers with a complete, all-zero-traffic registry.
+"$BIN" stats --connect "$ADDR" > "$OUT/stats_idle.log"
+grep -Eq "^server\.completed +counter +0$" "$OUT/stats_idle.log"
+grep -Eq "^cache\.decisions_compute +counter +0$" "$OUT/stats_idle.log"
+echo "obs_smoke: idle scrape OK"
+
+# --- traffic, then a live scrape: counters must show exactly what was
+# served, and the decision counters must cover the full steps x layers
+# grid (model s = 3 layers, 6 steps, 4 requests => 72 decisions).
+"$BIN" client --connect "$ADDR" --requests 4 --steps 6 > "$OUT/client.log" 2>&1
+grep -q "client done: 4/4 completed" "$OUT/client.log"
+"$BIN" stats --connect "$ADDR" > "$OUT/stats_live.log"
+grep -Eq "^server\.completed +counter +4$" "$OUT/stats_live.log"
+grep -Eq "^net\.reqs_completed +counter +4$" "$OUT/stats_live.log"
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$OUT/stats_live.log" <<'EOF'
+import sys
+vals = {}
+for line in open(sys.argv[1]):
+    parts = line.split()
+    if len(parts) >= 3 and parts[1] in ("counter", "gauge"):
+        vals[parts[0]] = int(parts[2])
+dec = sum(vals[k] for k in
+          ("cache.decisions_compute", "cache.decisions_approx", "cache.decisions_reuse"))
+want = 4 * 6 * 3  # requests x steps x layers (model s)
+assert dec == want, f"decision grid {dec} != {want}"
+assert vals["server.lane_steps"] == 4 * 6, vals["server.lane_steps"]
+print(f"obs_smoke: decision grid reconciles ({dec} decisions)")
+EOF
+fi
+echo "obs_smoke: live scrape OK"
+
+# --- drain: the periodic ticker must have fired at least once, and the
+# trace dump must be valid Chrome trace_event JSON carrying decision,
+# partition-or-stage, and span events.
+echo drain >&9
+exec 9>&-
+if ! wait "$SERVER_PID"; then
+    echo "obs_smoke: server exited non-zero after drain" >&2
+    cat "$OUT/server.log" "$OUT/server.err" >&2
+    exit 1
+fi
+SERVER_PID=""
+grep -q -- "--- stats ---" "$OUT/server.err"
+grep -q "^trace: " "$OUT/server.log"
+[ -s "$OUT/trace.json" ]
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$OUT/trace.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+events = doc["traceEvents"]
+assert events, "trace dump is empty"
+names = {e["name"] for e in events}
+phases = {e["ph"] for e in events}
+assert any(n.startswith("decision:") for n in names), names
+assert "queue_wait" in names or "step" in names, names
+assert "i" in phases and "X" in phases, phases
+print(f"obs_smoke: trace dump OK ({len(events)} events)")
+EOF
+fi
+echo "obs_smoke: graceful drain + trace dump OK"
+echo "obs_smoke: OK"
