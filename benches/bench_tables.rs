@@ -930,6 +930,110 @@ fn obs() {
     write_json("obs", json_rows);
 }
 
+/// Robustness: the same fixed-seed deadline burst served three ways —
+/// clean, under an armed fault plan (one kernel panic mid-flight plus
+/// delayed queue pops), and with the degrade ladder on under deliberately
+/// tight deadlines. The signal: a panic costs exactly the faulted request
+/// (internal_errors = 1, siblings complete), sheds and internal errors
+/// stay visible in the deadline-hit denominator, and degradation converts
+/// would-be sheds into completed-but-degraded lanes with the rung count
+/// on the record. Methodology: docs/ROBUSTNESS.md.
+fn robustness() {
+    use fastcache_dit::api::{ErrorCode, Outcome};
+    use fastcache_dit::config::ServerConfig;
+    use fastcache_dit::scheduler::GenRequest;
+    use fastcache_dit::server::Server;
+    let (requests, steps) = if smoke() { (6u64, 6usize) } else { (12, 10) };
+    // (label, fault plan, degrade ladder, per-request deadline ms). The
+    // generous deadline keeps rows 1-2 about fault cost, not timing; the
+    // tight one exists to push lanes onto the ladder.
+    let configs: [(&str, Option<&str>, bool, f64); 3] = [
+        ("clean (faults off)", None, false, 300_000.0),
+        (
+            "fault plan armed",
+            Some("panic step=2 layer=1 req=3; popdelay ms=5 count=2"),
+            false,
+            300_000.0,
+        ),
+        ("degrade ladder, tight deadlines", None, true, 40.0),
+    ];
+    let mut t = Table::new(
+        "Robustness — fault containment and graceful degradation",
+        &[
+            "Config",
+            "req/s↑",
+            "Completed",
+            "Internal",
+            "Shed",
+            "Degraded lanes",
+            "Rungs",
+            "Deadline hit",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for (label, plan, degrade, deadline_ms) in configs {
+        let scfg = ServerConfig {
+            variant: Variant::S,
+            steps,
+            workers: 1,
+            max_batch: 4,
+            fault_plan: plan.map(str::to_string),
+            degrade,
+            ..ServerConfig::default()
+        };
+        let mut cfg = fc(PolicyKind::FastCache);
+        cfg.enable_str = false;
+        let server = Server::start(scfg, cfg, || Ok(DitModel::native(Variant::S, 0xD17)));
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..requests)
+            .map(|i| {
+                let req = GenRequest::builder(i, i ^ 0xB0B)
+                    .steps(steps)
+                    .deadline_ms(deadline_ms)
+                    .build()
+                    .unwrap();
+                server.submit_blocking(&req).expect("submit")
+            })
+            .collect();
+        let (mut completed, mut internal, mut shed, mut degraded) = (0u64, 0u64, 0u64, 0u64);
+        for rx in rxs {
+            match rx.wait() {
+                Outcome::Completed(resp) => {
+                    completed += 1;
+                    degraded += u64::from(resp.result.degraded);
+                }
+                Outcome::Rejected(rej) if rej.code == ErrorCode::Internal => internal += 1,
+                Outcome::Rejected(_) => shed += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let report = server.shutdown();
+        assert_eq!(report.internal_errors, internal, "report must agree with outcomes");
+        assert_eq!(report.degraded_lanes, degraded, "report must agree with outcomes");
+        let rps = completed as f64 / wall;
+        let hit = report.deadline_hit_rate();
+        t.row(&[
+            label.to_string(),
+            format!("{rps:.2}"),
+            format!("{completed}"),
+            format!("{internal}"),
+            format!("{shed}"),
+            format!("{degraded}"),
+            format!("{}", report.degrade_rungs),
+            hit.map(pct).unwrap_or_else(|| "n/a".to_string()),
+        ]);
+        json_rows.push(format!(
+            "{{\"label\":\"{label}\",\"rps\":{rps:.4},\"completed\":{completed},\
+             \"internal_errors\":{internal},\"shed\":{shed},\"degraded_lanes\":{degraded},\
+             \"degrade_rungs\":{},\"deadline_hit_rate\":{}}}",
+            report.degrade_rungs,
+            hit.map(|v| format!("{v:.4}")).unwrap_or_else(|| "null".to_string())
+        ));
+    }
+    println!("{}", t.render());
+    write_json("robustness", json_rows);
+}
+
 /// Figure 1: derivative-magnitude heatmap, high- vs low-motion content.
 fn fig1() {
     let v = Variant::B;
@@ -1099,6 +1203,9 @@ fn main() {
     }
     if want("obs") {
         obs();
+    }
+    if want("robustness") {
+        robustness();
     }
     if want("fig1") {
         fig1();

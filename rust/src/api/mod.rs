@@ -47,6 +47,13 @@ pub enum ErrorCode {
     /// The request itself is invalid (failed `GenRequest` validation or
     /// an undecodable frame). Retrying the same request cannot succeed.
     BadRequest = 4,
+    /// The server hit an internal fault (e.g. a panicking kernel) while
+    /// serving this request. The lane was quarantined — the shard and
+    /// its sibling lanes keep serving. Counts AGAINST
+    /// `deadline_hit_rate()` for deadline-tagged requests (the
+    /// sheds-count-against-SLA rule: a fault is never a vanished
+    /// denominator). Retrying MAY succeed (the fault is per-request).
+    Internal = 5,
 }
 
 impl ErrorCode {
@@ -63,6 +70,7 @@ impl ErrorCode {
             2 => Some(ErrorCode::Expired),
             3 => Some(ErrorCode::Closed),
             4 => Some(ErrorCode::BadRequest),
+            5 => Some(ErrorCode::Internal),
             _ => None,
         }
     }
@@ -75,6 +83,7 @@ impl std::fmt::Display for ErrorCode {
             ErrorCode::Expired => "expired",
             ErrorCode::Closed => "closed",
             ErrorCode::BadRequest => "bad-request",
+            ErrorCode::Internal => "internal",
         };
         write!(f, "{name}({})", self.code())
     }
@@ -118,6 +127,12 @@ impl Reject {
     /// The request failed validation.
     pub fn bad_request(id: u64, detail: impl Into<String>) -> Reject {
         Reject::new(ErrorCode::BadRequest, id, detail)
+    }
+
+    /// The server faulted while serving this request (panicking kernel,
+    /// poisoned lane). The lane was quarantined; siblings keep serving.
+    pub fn internal(id: u64, detail: impl Into<String>) -> Reject {
+        Reject::new(ErrorCode::Internal, id, detail)
     }
 
     /// A queued job whose absolute deadline passed before admission —
@@ -258,8 +273,14 @@ mod tests {
         assert_eq!(ErrorCode::Expired.code(), 2);
         assert_eq!(ErrorCode::Closed.code(), 3);
         assert_eq!(ErrorCode::BadRequest.code(), 4);
-        for c in [ErrorCode::Busy, ErrorCode::Expired, ErrorCode::Closed, ErrorCode::BadRequest]
-        {
+        assert_eq!(ErrorCode::Internal.code(), 5);
+        for c in [
+            ErrorCode::Busy,
+            ErrorCode::Expired,
+            ErrorCode::Closed,
+            ErrorCode::BadRequest,
+            ErrorCode::Internal,
+        ] {
             assert_eq!(ErrorCode::from_code(c.code()), Some(c));
         }
         assert_eq!(ErrorCode::from_code(0), None);
@@ -271,6 +292,7 @@ mod tests {
         assert_eq!(Reject::busy(1, "q").code, ErrorCode::Busy);
         assert_eq!(Reject::closed(2, "c").code, ErrorCode::Closed);
         assert_eq!(Reject::bad_request(3, "b").code, ErrorCode::BadRequest);
+        assert_eq!(Reject::internal(5, "panic").code, ErrorCode::Internal);
         let e = Reject::expired(4, 12.5, 10.0);
         assert_eq!(e.code, ErrorCode::Expired);
         assert_eq!(e.id, 4);

@@ -61,6 +61,14 @@ impl Chi2Rule {
         self.threshold_sq(nd).sqrt()
     }
 
+    /// Relax the noise floor δ₀ by `factor` (degrade ladder rung 1).
+    /// The skip region — and the Eq. 9 error bound — grow with it: this
+    /// is an explicit quality-for-latency trade, never applied silently.
+    pub fn relax(&mut self, factor: f64) {
+        assert!(factor.is_finite() && factor > 0.0);
+        self.delta0 *= factor;
+    }
+
     pub fn alpha(&self) -> f64 {
         self.alpha
     }

@@ -53,6 +53,10 @@ impl CachePolicy for FastCachePolicy {
         }
     }
 
+    fn relax(&mut self, factor: f64) {
+        self.rule.relax(factor);
+    }
+
     fn reset(&mut self) {}
 }
 
@@ -90,6 +94,19 @@ mod tests {
         let cfg = FastCacheConfig { approx: ApproxMode::Reuse, ..FastCacheConfig::default() };
         let mut p = FastCachePolicy::new(&cfg);
         assert_eq!(p.decide(&ctx(Some(0.01), 6144)), BlockAction::Reuse);
+    }
+
+    #[test]
+    fn relax_widens_the_skip_region() {
+        let cfg = FastCacheConfig::default();
+        let mut p = FastCachePolicy::new(&cfg);
+        let nd = 64 * 96;
+        let t = Chi2Rule::new(cfg.alpha, cfg.tau_delta0).threshold_sq(nd).sqrt();
+        // Just above the stock threshold: computed...
+        assert_eq!(p.decide(&ctx(Some(t * 1.5), nd)), BlockAction::Compute);
+        // ...but inside the skip region after a 2x relax (rung 1).
+        p.relax(2.0);
+        assert_eq!(p.decide(&ctx(Some(t * 1.5), nd)), BlockAction::Approx);
     }
 
     #[test]

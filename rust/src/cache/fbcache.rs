@@ -55,6 +55,10 @@ impl CachePolicy for FbCache {
         }
     }
 
+    fn relax(&mut self, factor: f64) {
+        self.rdt *= factor.max(0.0);
+    }
+
     fn reset(&mut self) {
         self.skip_rest = false;
         self.seen_first_output = false;

@@ -44,6 +44,21 @@ impl AffineFit {
         self.updates
     }
 
+    pub fn decay_factor(&self) -> f64 {
+        self.decay
+    }
+
+    /// The per-channel sufficient statistics (snapshot serialization).
+    pub fn channels(&self) -> &[PairStats] {
+        &self.chan
+    }
+
+    /// Rebuild a fit from its serialized parts (warm-store snapshot
+    /// restore). `chan.len()` defines D.
+    pub fn from_parts(decay: f64, updates: u64, chan: Vec<PairStats>) -> AffineFit {
+        AffineFit { d: chan.len(), chan, decay, updates }
+    }
+
     /// Feed a computed (input, output) pair. Shapes [N, D] (or [B, N, D]
     /// flattened — any leading structure collapses to rows of D).
     pub fn update(&mut self, input: &Tensor, output: &Tensor) {

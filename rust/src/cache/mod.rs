@@ -88,6 +88,14 @@ pub trait CachePolicy: Send {
     /// vs the cached previous output (drives FBCache-style gates).
     fn observe_output(&mut self, _layer: usize, _delta_out: f64) {}
 
+    /// Degrade-ladder rung 1: multiply the policy's skip threshold by
+    /// `factor` (> 1.0 = more permissive, more Approx/Reuse decisions).
+    /// Default is a no-op — policies without a tunable threshold
+    /// (NoCache, StaticCache, schedule-driven L2C/AdaCache) cannot
+    /// trade quality for latency this way. Only the server's degrade
+    /// ladder ever calls this, and only on deadline-tagged lanes.
+    fn relax(&mut self, _factor: f64) {}
+
     /// Reset all adaptive state (new request).
     fn reset(&mut self);
 }

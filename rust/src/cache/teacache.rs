@@ -64,6 +64,10 @@ impl CachePolicy for TeaCache {
         }
     }
 
+    fn relax(&mut self, factor: f64) {
+        self.threshold *= factor.max(0.0);
+    }
+
     fn reset(&mut self) {
         self.accumulated = 0.0;
         self.skip_step = false;

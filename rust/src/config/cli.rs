@@ -20,7 +20,8 @@ const VALUE_OPTS: &[&str] = &[
     "tea-threshold", "l2c-threshold", "static-period", "out", "table",
     "warmup", "iters", "quant", "deadline-every", "deadline-ms",
     "warm-budget-mib", "fit-min-updates", "listen", "net-max-conns", "connect",
-    "trace-sample-rate", "trace-out", "stats-every",
+    "trace-sample-rate", "trace-out", "stats-every", "fault-plan",
+    "degrade-rungs", "warm-snapshot", "retries",
 ];
 
 impl Args {

@@ -90,6 +90,25 @@ pub struct ServerConfig {
     /// Period (seconds) for printing a registry scrape to stderr while
     /// serving. 0.0 (the default) disables the ticker.
     pub stats_every: f64,
+    /// Deterministic fault-injection plan (`--fault-plan` / `[faults]
+    /// plan`), e.g. `"panic step=2 layer=1 req=3; popdelay ms=40"`. `None`
+    /// (the default) compiles the chaos harness out of every hot path —
+    /// serving is bit-identical to a plan-free build. Grammar:
+    /// `crate::faults::FaultPlan::parse`.
+    pub fault_plan: Option<String>,
+    /// Degrade-instead-of-drop: when a deadline-tagged lane is predicted
+    /// to miss its budget, walk the degrade ladder (relax the cache
+    /// threshold → tighten the STR keep-ratio → truncate remaining steps)
+    /// before ever shedding it. Default OFF; best-effort lanes are never
+    /// touched either way.
+    pub degrade: bool,
+    /// How many ladder rungs a lane may descend (1..=3). Only consulted
+    /// when `degrade` is on.
+    pub degrade_rungs: usize,
+    /// Warm-store snapshot path: loaded (checksummed; corruption degrades
+    /// to a cold store) before serving and saved at drain. `None` (the
+    /// default) means the store lives and dies with the process.
+    pub warm_snapshot: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -113,6 +132,10 @@ impl Default for ServerConfig {
             trace_sample_rate: 0.0,
             trace_out: None,
             stats_every: 0.0,
+            fault_plan: None,
+            degrade: false,
+            degrade_rungs: 3,
+            warm_snapshot: None,
         }
     }
 }
@@ -174,6 +197,21 @@ impl ServerConfig {
                 "stats_every must be a finite period in seconds >= 0 (0 disables the ticker), got {}",
                 self.stats_every
             ));
+        }
+        if let Some(plan) = &self.fault_plan {
+            crate::faults::FaultPlan::parse(plan)
+                .map_err(|e| format!("fault_plan: {e}"))?;
+        }
+        if self.degrade_rungs == 0 || self.degrade_rungs > 3 {
+            return Err(format!(
+                "degrade_rungs must be 1..=3 (relax cache -> tighten STR -> truncate steps), got {}",
+                self.degrade_rungs
+            ));
+        }
+        if let Some(path) = &self.warm_snapshot {
+            if path.is_empty() {
+                return Err("warm_snapshot must be a non-empty path".into());
+            }
         }
         Ok(())
     }
@@ -299,6 +337,36 @@ mod tests {
             assert!(c.validate().is_err(), "stats_every {bad} must be rejected");
         }
         let c = ServerConfig { stats_every: 2.5, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn robustness_knobs_default_off_and_are_validated() {
+        let d = ServerConfig::default();
+        assert_eq!(d.fault_plan, None, "faults must default OFF");
+        assert!(!d.degrade, "degrade ladder must default OFF");
+        assert_eq!(d.degrade_rungs, 3);
+        assert_eq!(d.warm_snapshot, None, "no snapshot I/O unless asked");
+
+        let c = ServerConfig {
+            fault_plan: Some("panic step=2 layer=1 req=3; popdelay ms=40".into()),
+            ..ServerConfig::default()
+        };
+        assert!(c.validate().is_ok());
+        let bad = ServerConfig { fault_plan: Some("panic layer=1".into()), ..ServerConfig::default() };
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("fault_plan"), "unexpected message: {err}");
+
+        for rungs in [0usize, 4] {
+            let c = ServerConfig { degrade_rungs: rungs, ..ServerConfig::default() };
+            assert!(c.validate().is_err(), "degrade_rungs {rungs} must be rejected");
+        }
+        let c = ServerConfig { degrade: true, degrade_rungs: 1, ..ServerConfig::default() };
+        assert!(c.validate().is_ok());
+
+        let c = ServerConfig { warm_snapshot: Some(String::new()), ..ServerConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ServerConfig { warm_snapshot: Some("/tmp/warm.fcws".into()), ..ServerConfig::default() };
         assert!(c.validate().is_ok());
     }
 

@@ -233,6 +233,14 @@ pub fn apply(
     if let Some(v) = doc.get("obs.trace_out").and_then(|v| v.as_str()) {
         scfg.trace_out = Some(v.to_string());
     }
+    if let Some(v) = doc.get("faults.plan").and_then(|v| v.as_str()) {
+        scfg.fault_plan = Some(v.to_string());
+    }
+    bool_key!("server.degrade", scfg.degrade);
+    usize_key!("server.degrade_rungs", scfg.degrade_rungs);
+    if let Some(v) = doc.get("server.warm_snapshot").and_then(|v| v.as_str()) {
+        scfg.warm_snapshot = Some(v.to_string());
+    }
     fc.validate()?;
     scfg.validate()?;
     Ok(())
@@ -264,6 +272,12 @@ threads = 2
 int8 = true
 artifacts_dir = "artifacts"
 warm_budget_mib = 4
+degrade = true
+degrade_rungs = 2
+warm_snapshot = "warm.fcws"
+
+[faults]
+plan = "panic step=2 layer=1 req=3"
 
 [net]
 listen = "127.0.0.1:0"
@@ -308,6 +322,19 @@ stats_every = 5
         assert_eq!(scfg.trace_sample_rate, 0.25);
         assert_eq!(scfg.trace_out.as_deref(), Some("trace.json"));
         assert_eq!(scfg.stats_every, 5.0);
+        assert_eq!(scfg.fault_plan.as_deref(), Some("panic step=2 layer=1 req=3"));
+        assert!(scfg.degrade);
+        assert_eq!(scfg.degrade_rungs, 2);
+        assert_eq!(scfg.warm_snapshot.as_deref(), Some("warm.fcws"));
+    }
+
+    #[test]
+    fn rejects_invalid_fault_plan() {
+        let doc = TomlDoc::parse("[faults]\nplan = \"panic layer=1\"").unwrap();
+        let mut fc = FastCacheConfig::default();
+        let mut scfg = ServerConfig::default();
+        let err = apply(&doc, &mut fc, &mut scfg).unwrap_err();
+        assert!(err.contains("fault_plan"), "unexpected message: {err}");
     }
 
     #[test]

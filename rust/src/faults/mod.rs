@@ -1,0 +1,383 @@
+//! Deterministic fault injection — the test harness for the fault
+//! containment layer.
+//!
+//! A [`FaultPlan`] is a parsed, seeded-by-construction list of fault
+//! sites that the serving stack consults at well-defined points:
+//!
+//! - **kernel panics** at a chosen `(shard, step, layer[, req])` site
+//!   inside `LaneStepper::step` — exercises the shard's `catch_unwind`
+//!   quarantine + survivor-replay path;
+//! - **queue-pop delays** — burns a shard's admission clock to force
+//!   deadline pressure (drives the degrade-ladder tests without
+//!   trusting wall-clock races);
+//! - **socket resets** — the Nth accepted connection is torn down
+//!   before the handshake, exercising the client's connect retry and
+//!   the door's accounting;
+//! - **snapshot corruption** — warm-store snapshot bytes are truncated
+//!   or bit-flipped at load, exercising the checksum/cold-degrade path.
+//!
+//! Every spec is bounded (`count=`, default 1) and every firing is
+//! counted, so a chaos run can assert "exactly the planned faults
+//! fired". The plan is OFF by default: no `--fault-plan` / `[faults]`
+//! config means no `FaultPlan` is ever constructed and none of the
+//! injection points execute anything beyond an `Option` check — the
+//! "faults never fire when unconfigured" invariant in ROADMAP.md.
+//!
+//! Grammar (`docs/ROBUSTNESS.md` is the reference):
+//!
+//! ```text
+//! plan  := spec (';' spec)*
+//! spec  := kind (key '=' value)*          # whitespace-separated
+//! kind  := 'panic' | 'popdelay' | 'sockreset' | 'snapcorrupt'
+//! panic       keys: step, layer  (required)  shard, req, count, raw
+//! popdelay    keys: ms           (required)  shard, count
+//! sockreset   keys: conn         (required)  count
+//! snapcorrupt keys: mode=truncate|bitflip (required)  count
+//! ```
+//!
+//! Determinism: there is no RNG anywhere in this module. A plan string
+//! plus a fixed workload reproduces the exact same fault sequence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Typed panic payload carried by injected kernel panics so the shard's
+/// `catch_unwind` handler can identify exactly which lane faulted and
+/// quarantine only it. A panic WITHOUT this payload (a genuine bug, or
+/// an injected `raw=1` panic simulating one) quarantines the whole
+/// batch instead — the handler cannot trust any lane's state.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPanic {
+    /// The request whose lane was executing when the panic fired.
+    pub req_id: u64,
+}
+
+/// How an injected panic unwinds: `Typed` carries a [`FaultPanic`]
+/// payload (per-lane quarantine), `Raw` panics with a plain message
+/// (whole-batch quarantine, simulating an unattributed kernel bug).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanicShape {
+    Typed,
+    Raw,
+}
+
+impl PanicShape {
+    /// Unwind now. Called from the kernel site once a spec armed it.
+    pub fn fire(self, req_id: u64) -> ! {
+        match self {
+            PanicShape::Typed => std::panic::panic_any(FaultPanic { req_id }),
+            PanicShape::Raw => panic!("injected raw kernel panic (fault plan)"),
+        }
+    }
+}
+
+/// How snapshot bytes are corrupted at load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// Drop the second half of the byte stream.
+    Truncate,
+    /// Flip one bit in the middle byte.
+    BitFlip,
+}
+
+#[derive(Debug, PartialEq)]
+enum Site {
+    Panic { shard: Option<u32>, step: usize, layer: usize, req: Option<u64>, raw: bool },
+    PopDelay { shard: Option<u32>, ms: u64 },
+    SockReset { conn: u64 },
+    SnapCorrupt { mode: CorruptMode },
+}
+
+#[derive(Debug)]
+struct Spec {
+    site: Site,
+    /// Remaining firings; decremented atomically so concurrent shard
+    /// threads can never over-fire a bounded spec.
+    remaining: AtomicU64,
+}
+
+impl Spec {
+    /// Claim one firing if any remain (lock-free decrement-if-positive).
+    fn claim(&self) -> bool {
+        let mut cur = self.remaining.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.remaining.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+        false
+    }
+}
+
+/// A parsed fault plan plus live fired-counters. Shared as an
+/// `Arc<FaultPlan>` across shard threads, the net door, and the warm
+/// store; the registry exposes the counters as `faults.*` series.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<Spec>,
+    panics: AtomicU64,
+    pop_delays: AtomicU64,
+    sock_resets: AtomicU64,
+    snap_corruptions: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a plan string (see module docs for the grammar). An empty
+    /// or all-whitespace string parses to an empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut specs = Vec::new();
+        for raw_spec in s.split(';') {
+            let tokens: Vec<&str> = raw_spec.split_whitespace().collect();
+            let Some((&kind, kvs)) = tokens.split_first() else { continue };
+            let mut step = None;
+            let mut layer = None;
+            let mut shard = None;
+            let mut req = None;
+            let mut count = 1u64;
+            let mut ms = None;
+            let mut conn = None;
+            let mut mode = None;
+            let mut raw = false;
+            for kv in kvs {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault spec token `{kv}` is not key=value"))?;
+                let num = || -> Result<u64, String> {
+                    v.parse::<u64>().map_err(|_| format!("fault key {k}={v}: not a number"))
+                };
+                match k {
+                    "step" => step = Some(num()? as usize),
+                    "layer" => layer = Some(num()? as usize),
+                    "shard" => shard = Some(num()? as u32),
+                    "req" => req = Some(num()?),
+                    "count" => count = num()?,
+                    "ms" => ms = Some(num()?),
+                    "conn" => conn = Some(num()?),
+                    "raw" => raw = num()? != 0,
+                    "mode" => {
+                        mode = Some(match v {
+                            "truncate" => CorruptMode::Truncate,
+                            "bitflip" => CorruptMode::BitFlip,
+                            other => {
+                                return Err(format!(
+                                    "snapcorrupt mode must be truncate|bitflip, got {other}"
+                                ))
+                            }
+                        })
+                    }
+                    other => return Err(format!("unknown fault key `{other}` in `{kind}` spec")),
+                }
+            }
+            if count == 0 {
+                return Err(format!("`{kind}` spec has count=0 (would never fire)"));
+            }
+            let site = match kind {
+                "panic" => Site::Panic {
+                    shard,
+                    step: step.ok_or("panic spec requires step=")?,
+                    layer: layer.ok_or("panic spec requires layer=")?,
+                    req,
+                    raw,
+                },
+                "popdelay" => {
+                    Site::PopDelay { shard, ms: ms.ok_or("popdelay spec requires ms=")? }
+                }
+                "sockreset" => {
+                    Site::SockReset { conn: conn.ok_or("sockreset spec requires conn=")? }
+                }
+                "snapcorrupt" => {
+                    Site::SnapCorrupt { mode: mode.ok_or("snapcorrupt spec requires mode=")? }
+                }
+                other => return Err(format!("unknown fault kind `{other}`")),
+            };
+            specs.push(Spec { site, remaining: AtomicU64::new(count) });
+        }
+        Ok(FaultPlan { specs, ..FaultPlan::default() })
+    }
+
+    /// True when the plan carries no specs at all.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Kernel-panic site check, called per (lane, layer) inside the
+    /// stepper. Claims and counts the firing; the caller must then
+    /// invoke [`PanicShape::fire`] (split so the counter is already
+    /// bumped when the unwind starts).
+    pub fn armed_panic(&self, shard: u32, step: usize, layer: usize, req: u64) -> Option<PanicShape> {
+        for spec in &self.specs {
+            if let Site::Panic { shard: s, step: st, layer: l, req: r, raw } = &spec.site {
+                let here = s.map_or(true, |want| want == shard)
+                    && *st == step
+                    && *l == layer
+                    && r.map_or(true, |want| want == req);
+                if here && spec.claim() {
+                    self.panics.fetch_add(1, Ordering::Relaxed);
+                    return Some(if *raw { PanicShape::Raw } else { PanicShape::Typed });
+                }
+            }
+        }
+        None
+    }
+
+    /// Queue-pop delay for this shard, if one is armed. The caller
+    /// sleeps for the returned milliseconds before popping.
+    pub fn pop_delay_ms(&self, shard: u32) -> Option<u64> {
+        for spec in &self.specs {
+            if let Site::PopDelay { shard: s, ms } = &spec.site {
+                if s.map_or(true, |want| want == shard) && spec.claim() {
+                    self.pop_delays.fetch_add(1, Ordering::Relaxed);
+                    return Some(*ms);
+                }
+            }
+        }
+        None
+    }
+
+    /// Should the `conn`-th accepted connection (1-based, in accept
+    /// order) be torn down before its handshake?
+    pub fn reset_conn(&self, conn: u64) -> bool {
+        for spec in &self.specs {
+            if let Site::SockReset { conn: c } = &spec.site {
+                if *c == conn && spec.claim() {
+                    self.sock_resets.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Corrupt snapshot bytes in place if a `snapcorrupt` spec is armed.
+    /// Returns whether a corruption was applied. Deterministic: truncate
+    /// halves the stream, bitflip flips bit 3 of the middle byte.
+    pub fn corrupt_snapshot(&self, bytes: &mut Vec<u8>) -> bool {
+        for spec in &self.specs {
+            if let Site::SnapCorrupt { mode } = &spec.site {
+                if spec.claim() {
+                    self.snap_corruptions.fetch_add(1, Ordering::Relaxed);
+                    match mode {
+                        CorruptMode::Truncate => {
+                            let keep = bytes.len() / 2;
+                            bytes.truncate(keep);
+                        }
+                        CorruptMode::BitFlip => {
+                            if !bytes.is_empty() {
+                                let mid = bytes.len() / 2;
+                                bytes[mid] ^= 1 << 3;
+                            }
+                        }
+                    }
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Fired-counter snapshots, surfaced as `faults.*` registry series.
+    pub fn panics_fired(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    pub fn pop_delays_fired(&self) -> u64 {
+        self.pop_delays.load(Ordering::Relaxed)
+    }
+
+    pub fn sock_resets_fired(&self) -> u64 {
+        self.sock_resets.load(Ordering::Relaxed)
+    }
+
+    pub fn snap_corruptions_fired(&self) -> u64 {
+        self.snap_corruptions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_counts_firings() {
+        let plan = FaultPlan::parse(
+            "panic shard=0 step=2 layer=1 req=7; popdelay ms=50 count=2; \
+             sockreset conn=1; snapcorrupt mode=truncate",
+        )
+        .unwrap();
+        assert!(!plan.is_empty());
+
+        // Panic: wrong site never fires, right site fires exactly once.
+        assert_eq!(plan.armed_panic(0, 1, 1, 7), None);
+        assert_eq!(plan.armed_panic(1, 2, 1, 7), None, "shard filter");
+        assert_eq!(plan.armed_panic(0, 2, 1, 9), None, "req filter");
+        assert_eq!(plan.armed_panic(0, 2, 1, 7), Some(PanicShape::Typed));
+        assert_eq!(plan.armed_panic(0, 2, 1, 7), None, "one-shot");
+        assert_eq!(plan.panics_fired(), 1);
+
+        // Pop delay: count=2 then dry.
+        assert_eq!(plan.pop_delay_ms(3), Some(50));
+        assert_eq!(plan.pop_delay_ms(0), Some(50));
+        assert_eq!(plan.pop_delay_ms(0), None);
+        assert_eq!(plan.pop_delays_fired(), 2);
+
+        // Socket reset: only the named connection, once.
+        assert!(!plan.reset_conn(2));
+        assert!(plan.reset_conn(1));
+        assert!(!plan.reset_conn(1));
+        assert_eq!(plan.sock_resets_fired(), 1);
+
+        // Snapshot corruption: truncation halves the stream, once.
+        let mut bytes = vec![0xAAu8; 64];
+        assert!(plan.corrupt_snapshot(&mut bytes));
+        assert_eq!(bytes.len(), 32);
+        assert!(!plan.corrupt_snapshot(&mut bytes));
+        assert_eq!(plan.snap_corruptions_fired(), 1);
+    }
+
+    #[test]
+    fn bitflip_touches_exactly_one_bit() {
+        let plan = FaultPlan::parse("snapcorrupt mode=bitflip").unwrap();
+        let mut bytes = vec![0u8; 9];
+        assert!(plan.corrupt_snapshot(&mut bytes));
+        let flipped: Vec<usize> =
+            bytes.iter().enumerate().filter(|(_, b)| **b != 0).map(|(i, _)| i).collect();
+        assert_eq!(flipped, vec![4]);
+        assert_eq!(bytes[4].count_ones(), 1);
+    }
+
+    #[test]
+    fn raw_and_wildcard_specs_parse() {
+        let plan = FaultPlan::parse("panic step=0 layer=0 raw=1 count=3").unwrap();
+        // No shard/req filter: any shard, any request matches.
+        assert_eq!(plan.armed_panic(5, 0, 0, 123), Some(PanicShape::Raw));
+        assert_eq!(plan.armed_panic(0, 0, 0, 1), Some(PanicShape::Raw));
+        assert_eq!(plan.panics_fired(), 2);
+    }
+
+    #[test]
+    fn empty_and_invalid_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert!(FaultPlan::parse("panic step=1").is_err(), "missing layer=");
+        assert!(FaultPlan::parse("popdelay").is_err(), "missing ms=");
+        assert!(FaultPlan::parse("sockreset conn=x").is_err(), "non-numeric");
+        assert!(FaultPlan::parse("snapcorrupt mode=zero").is_err(), "bad mode");
+        assert!(FaultPlan::parse("explode now").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("panic step=1 layer=0 count=0").is_err(), "count=0");
+        assert!(FaultPlan::parse("panic step=1 layer=0 flavor=mild").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn typed_fire_carries_the_request_id() {
+        let err = std::panic::catch_unwind(|| PanicShape::Typed.fire(42)).unwrap_err();
+        let fp = err.downcast_ref::<FaultPanic>().expect("typed payload");
+        assert_eq!(fp.req_id, 42);
+        let err = std::panic::catch_unwind(|| PanicShape::Raw.fire(42)).unwrap_err();
+        assert!(err.downcast_ref::<FaultPanic>().is_none(), "raw payload is untyped");
+    }
+}

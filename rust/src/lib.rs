@@ -30,6 +30,7 @@ pub mod api;
 pub mod cache;
 pub mod config;
 pub mod experiments;
+pub mod faults;
 pub mod metrics;
 pub mod model;
 pub mod net;

@@ -40,6 +40,15 @@
 //! turns on the flight recorder for fraction R of lanes, and
 //! --trace-out PATH dumps the recorded events at drain (.json = Chrome
 //! trace_event for chrome://tracing / Perfetto, otherwise NDJSON).
+//!
+//! Robustness (docs/ROBUSTNESS.md): --degrade walks deadline-doomed
+//! lanes down the degrade ladder instead of shedding them
+//! (--degrade-rungs 1..=3 bounds the descent); --warm-snapshot PATH
+//! restores the warm store before serving and saves it at drain;
+//! --fault-plan "SPEC; SPEC" arms the deterministic chaos harness
+//! (kernel panics, queue-pop delays, socket resets, snapshot
+//! corruption); client-side --retries N retries Busy rejections and
+//! connect failures with deterministic backoff.
 
 use std::sync::Arc;
 
@@ -125,6 +134,17 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     }
     scfg.stats_every =
         args.parse_num("stats-every", scfg.stats_every).map_err(anyhow::Error::msg)?;
+    if let Some(plan) = args.get("fault-plan") {
+        scfg.fault_plan = Some(plan.to_string());
+    }
+    if args.flag("degrade") {
+        scfg.degrade = true;
+    }
+    scfg.degrade_rungs =
+        args.parse_num("degrade-rungs", scfg.degrade_rungs).map_err(anyhow::Error::msg)?;
+    if let Some(path) = args.get("warm-snapshot") {
+        scfg.warm_snapshot = Some(path.to_string());
+    }
     scfg.validate().map_err(anyhow::Error::msg)?;
     Ok((variant, fc, scfg))
 }
@@ -378,8 +398,13 @@ fn print_outcome(outcome: &fastcache_dit::api::Outcome) {
                 None => "",
             };
             let warm = if resp.result.warm_layers > 0 { "  [warm]" } else { "" };
+            let degraded = if resp.result.degraded {
+                format!("  [degraded x{}]", resp.result.degrade_rungs)
+            } else {
+                String::new()
+            };
             println!(
-                "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}{warm}",
+                "  req {:>3}: e2e {:>8.1} ms (queued {:>7.1} ms)  skip={:>5.1}%{sla}{warm}{degraded}",
                 resp.result.id,
                 resp.e2e_ms,
                 resp.queued_ms,
@@ -427,6 +452,18 @@ fn print_report(report: &fastcache_dit::server::ServerReport) {
     }
     if report.door_sheds > 0 {
         println!("SLA: {} deadline-tagged requests shed at the door", report.door_sheds);
+    }
+    if report.degraded_lanes > 0 {
+        println!(
+            "degrade: {} lanes walked the ladder ({} rungs total) instead of shedding",
+            report.degraded_lanes, report.degrade_rungs
+        );
+    }
+    if report.internal_errors > 0 {
+        println!(
+            "faults: {} requests answered Internal (quarantined by fault containment)",
+            report.internal_errors
+        );
     }
     if let Some(n) = &report.net {
         println!(
@@ -476,6 +513,8 @@ fn print_report(report: &fastcache_dit::server::ServerReport) {
 /// Options: --connect HOST:PORT (required)  --requests N  --steps N
 ///   --seed S  --motion calm|mixed|stormy  --deadline-every K
 ///   --deadline-ms D  --progress (stream per-step progress frames)
+///   --retries N (retry Busy rejections / connect failures with
+///   deterministic backoff; default 0 = fail fast)
 fn cmd_client(args: &Args) -> Result<()> {
     use fastcache_dit::api::{Event, GenClient};
     let (_, _, scfg) = parse_common(args)?;
@@ -489,8 +528,9 @@ fn cmd_client(args: &Args) -> Result<()> {
     let deadline_ms: f64 =
         args.parse_num("deadline-ms", 60_000.0).map_err(anyhow::Error::msg)?;
     let progress = args.flag("progress");
+    let retries: u32 = args.parse_num("retries", 0).map_err(anyhow::Error::msg)?;
 
-    let client = fastcache_dit::net::NetClient::connect(addr)
+    let client = fastcache_dit::net::NetClient::connect_with_retries(addr, retries)
         .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
     println!("connected to {addr}, submitting {n_req} requests");
 

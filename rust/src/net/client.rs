@@ -45,12 +45,57 @@ pub struct NetClient {
     stream: TcpStream,
     reader: Option<JoinHandle<()>>,
     writer: Option<JoinHandle<()>>,
+    /// Bounded retry budget for `generate` (Busy outcomes) — set by
+    /// [`NetClient::connect_with_retries`], 0 means fail fast.
+    retries: u32,
+}
+
+/// Deterministic backoff for 0-based attempt N: 2, 4, 8, … ms capped at
+/// 256. No jitter — reproducibility outranks thundering-herd avoidance at
+/// this scale, and the chaos harness depends on runs being replayable.
+fn backoff_ms(attempt: u32) -> u64 {
+    (2u64 << attempt.min(7)).min(256)
+}
+
+/// Connection-level failures worth retrying: the peer was unreachable or
+/// vanished mid-handshake (`Closed` — includes injected socket resets) or
+/// refused us at the door (`Busy`). Version and validation mismatches are
+/// permanent and surface immediately.
+fn connect_retryable(rej: &Reject) -> bool {
+    matches!(rej.code, ErrorCode::Closed | ErrorCode::Busy)
 }
 
 impl NetClient {
     /// Connect and handshake. Every failure comes back as a typed
     /// [`Reject`] (connection-level, `id == 0`).
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient, Reject> {
+        Self::connect_with_retries(addr, 0)
+    }
+
+    /// [`NetClient::connect`] with a bounded retry budget: up to
+    /// `retries` extra attempts on retryable connection failures
+    /// (connect refused/reset, door-shed `Busy`), deterministic
+    /// exponential backoff between attempts. The final failure is
+    /// surfaced unchanged. The budget is also inherited by
+    /// [`GenClient::generate`] for `Busy` outcomes.
+    pub fn connect_with_retries<A: ToSocketAddrs>(
+        addr: A,
+        retries: u32,
+    ) -> Result<NetClient, Reject> {
+        let mut attempt = 0u32;
+        loop {
+            match Self::connect_once(&addr, retries) {
+                Ok(client) => return Ok(client),
+                Err(rej) if attempt < retries && connect_retryable(&rej) => {
+                    std::thread::sleep(std::time::Duration::from_millis(backoff_ms(attempt)));
+                    attempt += 1;
+                }
+                Err(rej) => return Err(rej),
+            }
+        }
+    }
+
+    fn connect_once<A: ToSocketAddrs>(addr: &A, retries: u32) -> Result<NetClient, Reject> {
         let mut stream = TcpStream::connect(addr)
             .map_err(|e| Reject::closed(0, format!("connect failed: {e}")))?;
         let _ = stream.set_nodelay(true);
@@ -119,6 +164,7 @@ impl NetClient {
             stream,
             reader: Some(reader),
             writer: Some(writer),
+            retries,
         })
     }
 
@@ -197,6 +243,30 @@ impl GenClient for NetClient {
 
     fn submit_streaming(&self, req: &GenRequest) -> Result<ResponseStream, Reject> {
         self.submit_inner(req, true)
+    }
+
+    /// Bounded-retry override of the trait default (which retries `Busy`
+    /// forever): over the wire a `Busy` arrives as a terminal outcome
+    /// after the round-trip, so retry the whole submission up to the
+    /// connection's `retries` budget with deterministic backoff, then
+    /// surface the final rejection unchanged.
+    fn generate(&self, req: &GenRequest) -> Outcome {
+        let mut attempt = 0u32;
+        loop {
+            let outcome = match self.submit(req) {
+                Ok(stream) => stream.wait(),
+                Err(rej) => Outcome::Rejected(rej),
+            };
+            match &outcome {
+                Outcome::Rejected(rej)
+                    if rej.code == ErrorCode::Busy && attempt < self.retries =>
+                {
+                    std::thread::sleep(std::time::Duration::from_millis(backoff_ms(attempt)));
+                    attempt += 1;
+                }
+                _ => return outcome,
+            }
+        }
     }
 }
 
@@ -300,5 +370,16 @@ fn demux_loop(stream: &mut TcpStream, pending: &PendingMap, waiters: &StatsWaite
                 return;
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::backoff_ms;
+
+    #[test]
+    fn backoff_is_deterministic_exponential_with_a_cap() {
+        let ms: Vec<u64> = (0..10).map(backoff_ms).collect();
+        assert_eq!(ms, vec![2, 4, 8, 16, 32, 64, 128, 256, 256, 256]);
     }
 }

@@ -37,8 +37,10 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"FCP1");
 /// with `Error{BadRequest}` and the connection closes.
 ///
 /// History: v1 — initial protocol; v2 — adds the `Stats`/`StatsReply`
-/// telemetry-scrape pair.
-pub const VERSION: u16 = 2;
+/// telemetry-scrape pair; v3 — `Completed` carries the degrade-ladder
+/// verdict (`degraded` flag + rungs walked) and servers may answer
+/// `Error{Internal}` (code 5) for fault-quarantined requests.
+pub const VERSION: u16 = 3;
 
 /// Upper bound on `len` (type byte + payload): 16 MiB. Far above any
 /// legitimate frame (the largest — `Partial` — is ~64 KiB) while small
@@ -133,6 +135,8 @@ pub struct Completed {
     pub flops_padded: u64,
     pub cache_bytes_peak: u64,
     pub warm_layers: u64,
+    pub degraded: bool,
+    pub degrade_rungs: u64,
 }
 
 impl Completed {
@@ -156,6 +160,8 @@ impl Completed {
             flops_padded: r.flops_padded,
             cache_bytes_peak: r.cache_bytes_peak as u64,
             warm_layers: r.warm_layers as u64,
+            degraded: r.degraded,
+            degrade_rungs: r.degrade_rungs as u64,
         }
     }
 
@@ -190,6 +196,8 @@ impl Completed {
                 flops_padded: self.flops_padded,
                 cache_bytes_peak: self.cache_bytes_peak as usize,
                 warm_layers: self.warm_layers as usize,
+                degraded: self.degraded,
+                degrade_rungs: self.degrade_rungs as u32,
             },
             queued_ms: self.queued_ms,
             e2e_ms: self.e2e_ms,
@@ -371,6 +379,8 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             e.u64(c.flops_padded);
             e.u64(c.cache_bytes_peak);
             e.u64(c.warm_layers);
+            e.u8(u8::from(c.degraded));
+            e.u64(c.degrade_rungs);
         }
         Frame::Shed { id, waited_ms, deadline_ms } => {
             e.u8(T_SHED);
@@ -608,6 +618,8 @@ fn decode_completed(cur: &mut Cur) -> Result<Completed, ProtoError> {
         flops_padded: cur.u64()?,
         cache_bytes_peak: cur.u64()?,
         warm_layers: cur.u64()?,
+        degraded: cur.u8()? != 0,
+        degrade_rungs: cur.u64()?,
     })
 }
 

@@ -44,6 +44,12 @@ struct Shared {
     /// Connection budget and the live reservation count.
     max_conns: usize,
     active_conns: AtomicUsize,
+    /// Armed fault plan (chaos harness): `sockreset` specs fire here, in
+    /// the accept loop. `None` on every unconfigured server.
+    faults: Option<Arc<crate::faults::FaultPlan>>,
+    /// 1-based count of accepted connections, matched against
+    /// `sockreset conn=N` sites.
+    conns_seen: AtomicUsize,
 }
 
 /// A running network front door wrapping an in-process [`Server`].
@@ -73,6 +79,7 @@ impl NetServer {
 
         let registry = server.registry();
         let stats = Arc::clone(registry.net());
+        let faults = server.fault_plan();
         let shared = Arc::new(Shared {
             server,
             registry,
@@ -80,6 +87,8 @@ impl NetServer {
             draining: AtomicBool::new(false),
             max_conns: max_conns.max(1),
             active_conns: AtomicUsize::new(0),
+            faults,
+            conns_seen: AtomicUsize::new(0),
         });
         let conns: Arc<Mutex<Vec<(JoinHandle<()>, TcpStream)>>> =
             Arc::new(Mutex::new(Vec::new()));
@@ -135,6 +144,16 @@ fn accept_loop(
     loop {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // Chaos harness: an armed `sockreset conn=N` spec resets
+                // the N-th accepted connection before the handshake — the
+                // client sees a hard peer failure, not a typed refusal.
+                let nth = shared.conns_seen.fetch_add(1, Ordering::Relaxed) + 1;
+                if let Some(plan) = &shared.faults {
+                    if plan.reset_conn(nth as u64) {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                }
                 // Reservation gate: increment first, compare what we
                 // reserved, roll back if over budget — atomic RMW, so
                 // two racing accepts cannot both take the last slot.

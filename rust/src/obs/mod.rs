@@ -41,6 +41,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::api::NetStats;
+use crate::faults::FaultPlan;
 use crate::metrics::LatencyHistogram;
 use crate::server::ShardReport;
 use crate::store::WarmStore;
@@ -134,6 +135,13 @@ pub struct ShardMetrics {
     /// from cache, summed over (lane, step) prologues.
     pub str_motion_tokens: Counter,
     pub str_static_tokens: Counter,
+    /// Fault containment: requests this shard answered `Internal` after
+    /// a panic/step-error quarantined their lane.
+    pub internal_errors: Counter,
+    /// Degrade ladder: deadline lanes touched at least once / total
+    /// rungs applied. Both stay 0 unless `ServerConfig::degrade` is on.
+    pub degraded_lanes: Counter,
+    pub degrade_rungs: Counter,
     pub e2e: Hist,
     pub admission_wait: Hist,
 }
@@ -161,6 +169,9 @@ impl ShardMetrics {
             decisions_reuse: Counter::default(),
             str_motion_tokens: Counter::default(),
             str_static_tokens: Counter::default(),
+            internal_errors: Counter::default(),
+            degraded_lanes: Counter::default(),
+            degrade_rungs: Counter::default(),
             e2e: Hist::default(),
             admission_wait: Hist::default(),
         }
@@ -202,6 +213,9 @@ impl ShardMetrics {
             warm_layers: self.warm_layers.get(),
             scratch_bytes: self.scratch_bytes.get(),
             threads: self.threads.get().max(1),
+            internal_errors: self.internal_errors.get(),
+            degraded_lanes: self.degraded_lanes.get(),
+            degrade_rungs: self.degrade_rungs.get(),
         }
     }
 }
@@ -300,12 +314,29 @@ pub struct Registry {
     shards: Vec<Arc<ShardMetrics>>,
     net: Arc<NetMetrics>,
     store: Option<Arc<WarmStore>>,
+    /// The fault plan, when one is armed: its fired-counters scrape as
+    /// `faults.*` series so chaos runs can reconcile injected vs
+    /// observed faults without a shutdown.
+    faults: Option<Arc<FaultPlan>>,
     started: Instant,
 }
 
 impl Registry {
     pub fn new(shards: Vec<Arc<ShardMetrics>>, store: Option<Arc<WarmStore>>) -> Registry {
-        Registry { shards, net: Arc::new(NetMetrics::default()), store, started: Instant::now() }
+        Registry {
+            shards,
+            net: Arc::new(NetMetrics::default()),
+            store,
+            faults: None,
+            started: Instant::now(),
+        }
+    }
+
+    /// Attach an armed fault plan so its fired-counters scrape as
+    /// `faults.*` series (builder-style, called before the Arc wrap).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Registry {
+        self.faults = Some(plan);
+        self
     }
 
     pub fn shards(&self) -> &[Arc<ShardMetrics>] {
@@ -376,6 +407,18 @@ impl Registry {
             "str.static_tokens",
             sum(&|s| s.str_static_tokens.get()),
         ));
+        out.push(Series::counter(
+            "server.internal_errors",
+            sum(&|s| s.internal_errors.get()),
+        ));
+        out.push(Series::counter("sla.degraded", sum(&|s| s.degraded_lanes.get())));
+        out.push(Series::counter("sla.degrade_rungs", sum(&|s| s.degrade_rungs.get())));
+        if let Some(plan) = &self.faults {
+            out.push(Series::counter("faults.panics", plan.panics_fired()));
+            out.push(Series::counter("faults.pop_delays", plan.pop_delays_fired()));
+            out.push(Series::counter("faults.sock_resets", plan.sock_resets_fired()));
+            out.push(Series::counter("faults.snap_corruptions", plan.snap_corruptions_fired()));
+        }
         let mut e2e = LatencyHistogram::new();
         let mut wait = LatencyHistogram::new();
         for s in &self.shards {
@@ -574,9 +617,50 @@ mod tests {
         }
         // No store attached: no store.* series.
         assert!(!series.iter().any(|s| s.name.starts_with("store.")));
+        // No fault plan armed: no faults.* series either.
+        assert!(!series.iter().any(|s| s.name.starts_with("faults.")));
         let text = render_series(&series);
         assert!(text.contains("server.completed"));
         assert!(text.contains("counter"));
         assert!(text.lines().count() == series.len());
+    }
+
+    #[test]
+    fn fault_and_degrade_series_scrape() {
+        let shards = vec![Arc::new(ShardMetrics::new(0))];
+        shards[0].internal_errors.inc();
+        shards[0].degraded_lanes.add(2);
+        shards[0].degrade_rungs.add(5);
+        let plan = Arc::new(FaultPlan::parse("panic step=0 layer=0").expect("plan parses"));
+        let reg = Registry::new(shards, None).with_faults(Arc::clone(&plan));
+        let series = reg.series();
+        let get = |name: &str| {
+            series
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing series {name}"))
+                .value
+                .clone()
+        };
+        assert_eq!(get("server.internal_errors"), SeriesValue::Counter(1));
+        assert_eq!(get("sla.degraded"), SeriesValue::Counter(2));
+        assert_eq!(get("sla.degrade_rungs"), SeriesValue::Counter(5));
+        assert_eq!(get("faults.panics"), SeriesValue::Counter(0));
+        // Fire the armed panic spec and re-scrape: the counter follows.
+        assert!(plan.armed_panic(0, 0, 0, 42).is_some());
+        assert_eq!(get("faults.panics"), SeriesValue::Counter(0), "old scrape is a snapshot");
+        let series2 = reg.series();
+        let fired = series2.iter().find(|s| s.name == "faults.panics").unwrap();
+        assert_eq!(fired.value, SeriesValue::Counter(1));
+        assert_eq!(
+            series2.iter().filter(|s| s.name.starts_with("faults.")).count(),
+            4,
+            "all four fault classes scrape"
+        );
+        // The shard snapshot carries the new fields into ShardReport.
+        let r = reg.shards()[0].snapshot();
+        assert_eq!(r.internal_errors, 1);
+        assert_eq!(r.degraded_lanes, 2);
+        assert_eq!(r.degrade_rungs, 5);
     }
 }

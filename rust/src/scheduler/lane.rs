@@ -28,6 +28,7 @@ use crate::cache::{
     build_policy, AffineFit, BlockAction, BlockCtx, CachePolicy, CacheState, StepInfo,
 };
 use crate::config::{ApproxMode, FastCacheConfig, PolicyKind, C_IN};
+use crate::faults::FaultPlan;
 use crate::model::{native, DitModel, ScratchArena};
 use crate::obs::{EventKind, StepObserver, TraceEvent, NON_LAYER};
 use crate::rng::Rng;
@@ -263,6 +264,12 @@ pub struct GenResult {
     /// Layers whose affine fit was warm-started from the cross-request
     /// store at admission (0 on the cold path / with warm-start off).
     pub warm_layers: usize,
+    /// Whether the degrade ladder touched this lane (deadline pressure
+    /// relaxed its cache threshold, tightened STR, or truncated steps).
+    /// Always `false` for best-effort lanes and with the ladder off.
+    pub degraded: bool,
+    /// How many degrade rungs were applied (0 when `!degraded`).
+    pub degrade_rungs: u32,
 }
 
 impl GenResult {
@@ -347,6 +354,15 @@ pub struct Lane {
     /// event of its lifetime or none. Pure observation — no decision
     /// path ever reads it.
     traced: bool,
+    /// Degrade rung 2: the stepper's STR partition uses this tau_s
+    /// instead of the config's when set (a larger value keeps fewer
+    /// motion tokens). Only the server's degrade ladder ever sets it.
+    tau_s_override: Option<f64>,
+    /// Degrade rung 3: the lane finishes at this step index instead of
+    /// `schedule.len()` (always clamped to the schedule).
+    step_limit: Option<usize>,
+    /// How many degrade rungs have been applied to this lane.
+    degrade_rungs: u8,
 }
 
 impl Lane {
@@ -369,7 +385,7 @@ impl Lane {
     /// would shrink together and cancel the saving. The sharded
     /// dispatcher balances on this estimate, not lane counts.
     pub fn remaining_flops_estimate(&self) -> u64 {
-        let rem = self.schedule.len().saturating_sub(self.step) as u64;
+        let rem = self.effective_steps().saturating_sub(self.step) as u64;
         if self.step == 0 {
             return rem * self.full_step_flops;
         }
@@ -386,8 +402,56 @@ impl Lane {
         self.schedule.len()
     }
 
+    /// Steps this lane will actually run: the schedule length, unless
+    /// degrade rung 3 truncated it.
+    pub fn effective_steps(&self) -> usize {
+        self.step_limit.map_or(self.schedule.len(), |l| l.min(self.schedule.len()))
+    }
+
     pub fn is_done(&self) -> bool {
-        self.step >= self.schedule.len()
+        self.step >= self.effective_steps()
+    }
+
+    /// FLOPs this lane has actually executed so far.
+    pub fn flops_done(&self) -> u64 {
+        self.flops_done
+    }
+
+    /// ACTIVE wall time this lane has occupied the worker so far (ms).
+    pub fn active_ms(&self) -> f64 {
+        self.active.as_secs_f64() * 1e3
+    }
+
+    /// Degrade rungs applied so far (0 = untouched).
+    pub fn degrade_rungs(&self) -> u32 {
+        self.degrade_rungs as u32
+    }
+
+    /// Degrade rung 1: relax the cache policy's skip threshold by
+    /// `factor` (> 1.0 = more permissive — more Approx/Reuse decisions,
+    /// fewer FLOPs). Policies without a tunable threshold ignore it;
+    /// the rung is still recorded so accounting stays honest.
+    pub fn degrade_relax_policy(&mut self, factor: f64) {
+        self.policy.relax(factor);
+        self.degrade_rungs = self.degrade_rungs.saturating_add(1);
+    }
+
+    /// Degrade rung 2: tighten the STR keep-ratio by raising the
+    /// motion/static partition threshold to `tau_s` (more tokens ride
+    /// the static bypass). No-op on the decision path when STR is off —
+    /// the stepper only reads the override where it reads `fc.tau_s`.
+    pub fn degrade_tighten_str(&mut self, tau_s: f64) {
+        self.tau_s_override = Some(tau_s);
+        self.degrade_rungs = self.degrade_rungs.saturating_add(1);
+    }
+
+    /// Degrade rung 3: truncate the lane to at most `remaining` more
+    /// steps (floored at one — a lane always runs at least one more
+    /// step so its latent reflects SOME denoising past this point).
+    pub fn degrade_truncate_steps(&mut self, remaining: usize) {
+        let limit = (self.step + remaining.max(1)).min(self.schedule.len());
+        self.step_limit = Some(limit);
+        self.degrade_rungs = self.degrade_rungs.saturating_add(1);
     }
 
     /// Whether the flight recorder sampled this lane at construction.
@@ -460,6 +524,7 @@ impl Lane {
             cache_bytes_peak,
             active,
             warm_layers,
+            degrade_rungs,
             ..
         } = self;
         let counters = cache.counters;
@@ -480,6 +545,8 @@ impl Lane {
                 flops_padded,
                 cache_bytes_peak,
                 warm_layers,
+                degraded: degrade_rungs > 0,
+                degrade_rungs: degrade_rungs as u32,
             },
             policy,
         )
@@ -518,6 +585,10 @@ pub struct LaneStepper<'m> {
     /// `None` outside the server — engines and tests step unobserved.
     /// Observation is strictly one-way: the stepper writes, never reads.
     obs: Option<StepObserver>,
+    /// Fault-injection hook: `(shard id, plan)`. `None` (the default,
+    /// and always outside chaos runs) costs one Option check per
+    /// (lane, layer) site and can never fire.
+    faults: Option<(u32, Arc<FaultPlan>)>,
 }
 
 impl<'m> LaneStepper<'m> {
@@ -537,7 +608,7 @@ impl<'m> LaneStepper<'m> {
     ) -> LaneStepper<'m> {
         let mut arena = ScratchArena::new();
         arena.set_threads(threads);
-        LaneStepper { model, fc, arena, temb: TembCache::new(), obs: None }
+        LaneStepper { model, fc, arena, temb: TembCache::new(), obs: None, faults: None }
     }
 
     /// Attach a telemetry observer (the shard loop installs one).
@@ -545,6 +616,18 @@ impl<'m> LaneStepper<'m> {
     /// recorder sampled at construction.
     pub fn set_observer(&mut self, obs: StepObserver) {
         self.obs = Some(obs);
+    }
+
+    /// Detach the telemetry observer (the shard's replay recovery steps
+    /// unobserved so recovered work is never double-counted).
+    pub fn take_observer(&mut self) -> Option<StepObserver> {
+        self.obs.take()
+    }
+
+    /// Arm deterministic fault injection for this stepper (chaos runs
+    /// only — a stepper without a plan has no injection path).
+    pub fn set_fault_plan(&mut self, shard: u32, plan: Arc<FaultPlan>) {
+        self.faults = Some((shard, plan));
     }
 
     pub fn model(&self) -> &'m DitModel {
@@ -638,6 +721,9 @@ impl<'m> LaneStepper<'m> {
                 .as_ref()
                 .and_then(|o| o.recorder.as_deref())
                 .is_some_and(|r| r.sampled(req.id)),
+            tau_s_override: None,
+            step_limit: None,
+            degrade_rungs: 0,
         }
     }
 
@@ -646,9 +732,10 @@ impl<'m> LaneStepper<'m> {
     /// artifact in chunks; everything else runs its per-lane path exactly
     /// as the single-request loop always did.
     pub fn step(&mut self, lanes: &mut [Lane]) -> Result<()> {
-        let Self { model, fc, arena, temb, obs } = &mut *self;
+        let Self { model, fc, arena, temb, obs, faults } = &mut *self;
         let model: &DitModel = model;
         let obs = obs.as_ref();
+        let faults = faults.as_ref();
         let cfg = model.cfg;
         let (n, d, layers) = (cfg.n_tokens, cfg.d, cfg.layers);
         let nl = lanes.len();
@@ -717,9 +804,11 @@ impl<'m> LaneStepper<'m> {
                 input_delta,
             });
 
-            // STR: motion/static partition on the embedded state.
+            // STR: motion/static partition on the embedded state. The
+            // degrade ladder's rung 2 overrides the threshold per lane.
+            let tau_s = lane.tau_s_override.unwrap_or(fc.tau_s);
             let part = if fc.enable_str {
-                lane.cache.prev_embed.as_ref().map(|p| partition(&h0, p, fc.tau_s))
+                lane.cache.prev_embed.as_ref().map(|p| partition(&h0, p, tau_s))
             } else {
                 None
             };
@@ -773,6 +862,16 @@ impl<'m> LaneStepper<'m> {
             // Per-lane: midpoint merge, delta, and the policy decision.
             let mut actions = Vec::with_capacity(nl);
             for (lane, ctx) in lanes.iter_mut().zip(ctxs.iter_mut()) {
+                // Injected kernel panic (chaos runs only): unwinds out
+                // of step() mid-layer, leaving lanes partially mutated —
+                // exactly the state the shard's quarantine-and-replay
+                // recovery must handle.
+                if let Some((shard, plan)) = faults {
+                    if let Some(shape) = plan.armed_panic(*shard, ctx.rec.step, l, lane.req.id)
+                    {
+                        shape.fire(lane.req.id);
+                    }
+                }
                 let t0 = Instant::now();
                 if l == merge_at && l > 0 {
                     // Importance = spatial kNN density x temporal saliency.
@@ -1368,6 +1467,80 @@ mod tests {
             hw,
             "arena grew after the first step — the steady-state path allocated"
         );
+    }
+
+    #[test]
+    fn degrade_rungs_truncate_and_tighten() {
+        let model = DitModel::native(Variant::S, 7);
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = true;
+        let mut stepper = LaneStepper::new(&model, fc);
+        let mut schedules = ScheduleCache::new();
+        let steps = 8;
+
+        let mut base = stepper
+            .make_lane(&GenRequest::builder(0, 5).steps(steps).build().unwrap(), schedules.get(steps));
+        while !base.is_done() {
+            stepper.step(std::slice::from_mut(&mut base)).unwrap();
+        }
+        let base_r = base.into_result();
+        assert!(!base_r.degraded, "untouched lanes never report degradation");
+        assert_eq!(base_r.degrade_rungs, 0);
+
+        // All three rungs after three steps: looser policy threshold,
+        // STR threshold way up, two remaining steps. The lane completes
+        // early, executes less work, and the accounting records the rungs.
+        let mut deg = stepper
+            .make_lane(&GenRequest::builder(1, 5).steps(steps).build().unwrap(), schedules.get(steps));
+        for _ in 0..3 {
+            stepper.step(std::slice::from_mut(&mut deg)).unwrap();
+        }
+        let before = deg.remaining_flops_estimate();
+        deg.degrade_relax_policy(4.0);
+        deg.degrade_tighten_str(1e9);
+        deg.degrade_truncate_steps(2);
+        assert_eq!(deg.effective_steps(), 5);
+        assert!(
+            deg.remaining_flops_estimate() < before,
+            "truncation must shrink the remaining-work prediction"
+        );
+        while !deg.is_done() {
+            stepper.step(std::slice::from_mut(&mut deg)).unwrap();
+        }
+        let deg_r = deg.into_result();
+        assert!(deg_r.degraded);
+        assert_eq!(deg_r.degrade_rungs, 3);
+        assert_eq!(deg_r.records.len(), 5, "rung 3 truncated 8 steps to 5");
+        assert!(deg_r.token_sites_computed < base_r.token_sites_computed);
+        assert!(deg_r.latent.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn armed_fault_plan_panics_at_the_exact_site() {
+        use crate::faults::{FaultPanic, FaultPlan};
+        use std::panic::AssertUnwindSafe;
+        let model = DitModel::native(Variant::S, 7);
+        let mut stepper =
+            LaneStepper::new(&model, FastCacheConfig::with_policy(PolicyKind::NoCache));
+        stepper.set_fault_plan(
+            0,
+            Arc::new(FaultPlan::parse("panic step=1 layer=2 req=9").unwrap()),
+        );
+        let mut schedules = ScheduleCache::new();
+        let mut lane =
+            stepper.make_lane(&GenRequest::builder(9, 3).steps(4).build().unwrap(), schedules.get(4));
+        stepper.step(std::slice::from_mut(&mut lane)).unwrap(); // step 0: not armed
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _ = stepper.step(std::slice::from_mut(&mut lane));
+        }))
+        .unwrap_err();
+        assert_eq!(err.downcast_ref::<FaultPanic>().unwrap().req_id, 9);
+        // The spec is one-shot: a rebuilt lane steps clean thereafter.
+        let mut fresh =
+            stepper.make_lane(&GenRequest::builder(9, 3).steps(4).build().unwrap(), schedules.get(4));
+        while !fresh.is_done() {
+            stepper.step(std::slice::from_mut(&mut fresh)).unwrap();
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{FastCacheConfig, ModelConfig, ServerConfig};
+use crate::faults::FaultPlan;
 use crate::model::DitModel;
 use crate::obs::{FlightRecorder, Registry, ShardMetrics, DEFAULT_TRACE_EVENT_CAP};
 use crate::scheduler::ScheduleCache;
@@ -59,6 +60,9 @@ struct Shard {
     queue: Arc<JobQueue>,
     load: Arc<ShardLoad>,
     handle: JoinHandle<ShardReport>,
+    /// Kept so shutdown can still produce this shard's report from its
+    /// live metrics if the thread died instead of returning one.
+    metrics: Arc<ShardMetrics>,
 }
 
 /// The sharded serving core behind `server::Server`.
@@ -79,6 +83,9 @@ pub struct Dispatcher {
     /// Flight recorder, shared by every shard (`None` unless
     /// `ServerConfig::trace_sample_rate > 0`).
     recorder: Option<Arc<FlightRecorder>>,
+    /// Deterministic fault plan parsed from `ServerConfig::fault_plan`
+    /// (`None` — and zero overhead — unless one was configured).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Dispatcher {
@@ -105,9 +112,23 @@ impl Dispatcher {
         let recorder = (scfg.trace_sample_rate > 0.0).then(|| {
             Arc::new(FlightRecorder::new(scfg.trace_sample_rate, DEFAULT_TRACE_EVENT_CAP))
         });
+        // Parse the fault plan once; an empty plan collapses to `None` so
+        // the serve loops carry no fault state at all. A malformed plan is
+        // a caller bug — `ServerConfig::validate` rejects it first on
+        // every config-driven path.
+        let faults = scfg
+            .fault_plan
+            .as_deref()
+            .map(|s| FaultPlan::parse(s).expect("invalid fault plan (ServerConfig::validate catches this)"))
+            .filter(|p| !p.is_empty())
+            .map(Arc::new);
         let shard_metrics: Vec<Arc<ShardMetrics>> =
             (0..workers).map(|id| Arc::new(ShardMetrics::new(id))).collect();
-        let registry = Arc::new(Registry::new(shard_metrics.clone(), store.clone()));
+        let registry = Registry::new(shard_metrics.clone(), store.clone());
+        let registry = Arc::new(match &faults {
+            Some(plan) => registry.with_faults(Arc::clone(plan)),
+            None => registry,
+        });
 
         let shards = (0..workers)
             .map(|id| {
@@ -123,17 +144,39 @@ impl Dispatcher {
                     warm_store: store.clone(),
                     metrics: Arc::clone(&shard_metrics[id]),
                     recorder: recorder.clone(),
+                    faults: faults.clone(),
                 };
                 let f = Arc::clone(&factory);
+                let metrics = Arc::clone(&shard_metrics[id]);
                 let handle = std::thread::Builder::new()
                     .name(format!("fastcache-shard-{id}"))
                     .spawn(move || shard_loop(ctx, f.as_ref()))
                     .expect("spawning shard thread");
-                Shard { queue, load, handle }
+                Shard { queue, load, handle, metrics }
             })
             .collect();
 
-        Dispatcher { shards, step_flops, store, started: Instant::now(), registry, recorder }
+        Dispatcher {
+            shards,
+            step_flops,
+            store,
+            started: Instant::now(),
+            registry,
+            recorder,
+            faults,
+        }
+    }
+
+    /// The parsed fault plan, when one is configured (shared with the
+    /// net door for socket-reset injection and with the CLI for
+    /// counter assertions in chaos runs).
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.clone()
+    }
+
+    /// The warm store attached to this dispatcher, if any.
+    pub fn warm_store(&self) -> Option<Arc<WarmStore>> {
+        self.store.clone()
     }
 
     /// The live telemetry registry (scraped by the net door's `Stats`
@@ -196,10 +239,26 @@ impl Dispatcher {
         for shard in &self.shards {
             shard.queue.close();
         }
+        // A shard thread that died without returning a report (a panic
+        // that escaped fault containment — e.g. model-load failure) must
+        // not take shutdown down with it: its queue's DrainOnExit guard
+        // already answered its submitters, so fall back to the thread's
+        // last live metrics and keep merging.
         let reports: Vec<ShardReport> = self
             .shards
             .into_iter()
-            .map(|s| s.handle.join().expect("shard panicked"))
+            .map(|s| match s.handle.join() {
+                Ok(report) => report,
+                Err(_) => {
+                    let report = s.metrics.snapshot();
+                    eprintln!(
+                        "shard {}: thread died outside fault containment; \
+                         reporting its last metrics snapshot",
+                        report.shard
+                    );
+                    report
+                }
+            })
             .collect();
         let store_stats = self.store.as_ref().map(|s| s.stats());
         ServerReport::merge(reports, self.started.elapsed().as_secs_f64(), store_stats)

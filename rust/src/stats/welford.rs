@@ -113,6 +113,19 @@ impl PairStats {
         (a as f32, b as f32)
     }
 
+    /// The raw sufficient statistics `(n, mean_x, mean_y, m2_x, c_xy)` —
+    /// everything needed to reconstruct this accumulator byte-exactly
+    /// (warm-store snapshot serialization).
+    pub fn raw(&self) -> (u64, f64, f64, f64, f64) {
+        (self.n, self.mean_x, self.mean_y, self.m2_x, self.c_xy)
+    }
+
+    /// Rebuild an accumulator from [`raw`](Self::raw) output. The decode
+    /// path validates finiteness before trusting disk bytes.
+    pub fn from_raw(n: u64, mean_x: f64, mean_y: f64, m2_x: f64, c_xy: f64) -> PairStats {
+        PairStats { n, mean_x, mean_y, m2_x, c_xy }
+    }
+
     /// Pool two accumulators (pairwise Welford merge of the sufficient
     /// statistics) — pooled regression over both samples. The fleet-level
     /// warm-start store merges fits published by independent lanes with

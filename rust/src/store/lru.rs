@@ -118,6 +118,13 @@ impl<K: Eq + Hash + Clone, V: ByteSized> LruBytes<K, V> {
         self.map.get(k).map(|e| &e.value)
     }
 
+    /// Visit every resident entry without touching recency or counters
+    /// (iteration order is the map's — callers needing determinism must
+    /// sort). Powers the warm store's snapshot writer.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, e)| (k, &e.value))
+    }
+
     /// The key that would be evicted next (least recently used).
     pub fn lru_key(&self) -> Option<K> {
         self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())

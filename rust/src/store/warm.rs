@@ -25,11 +25,14 @@
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::path::Path;
 use std::sync::Mutex;
 
 use crate::cache::calibrate::DeltaProfile;
 use crate::cache::AffineFit;
 use crate::config::{PolicyKind, Variant};
+use crate::faults::FaultPlan;
+use crate::stats::PairStats;
 
 use super::lru::{ByteSized, LruBytes};
 
@@ -298,6 +301,299 @@ impl WarmStore {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    // --- snapshot/restore (FCWS v1, see docs/ROBUSTNESS.md) ---
+    //
+    // A snapshot is the store's learned evidence serialized to a single
+    // checksummed blob: magic "FCWS", version, entry count, sorted
+    // entries, trailing FNV-1a-64 over everything before it. Restore
+    // verifies the checksum BEFORE parsing a single field, and parses the
+    // whole blob before inserting anything, so a corrupt or truncated
+    // file degrades to an error (caller stays cold) — never a panic and
+    // never a half-restored store.
+
+    fn snapshot_encoded(&self) -> (Vec<u8>, usize) {
+        let mut entries: Vec<Vec<u8>> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().expect("warm store poisoned");
+            for (k, v) in shard.iter() {
+                let mut e = Vec::new();
+                encode_entry(k, v, &mut e);
+                entries.push(e);
+            }
+        }
+        // HashMap iteration order is nondeterministic; sorted encodings
+        // make identical contents produce identical bytes.
+        entries.sort();
+        let mut out = Vec::new();
+        out.extend_from_slice(SNAP_MAGIC);
+        put_u32(&mut out, SNAP_VERSION);
+        put_u32(&mut out, entries.len() as u32);
+        for e in &entries {
+            out.extend_from_slice(e);
+        }
+        let sum = fnv1a64(&out);
+        put_u64(&mut out, sum);
+        (out, entries.len())
+    }
+
+    /// The serialized snapshot blob (tests and diagnostics; servers use
+    /// [`save_snapshot`](Self::save_snapshot)).
+    pub fn snapshot_bytes(&self) -> Vec<u8> {
+        self.snapshot_encoded().0
+    }
+
+    /// Parse and ingest a snapshot blob. All-or-nothing: any validation
+    /// failure (checksum, magic, version, dimensions, non-finite floats)
+    /// returns `Err` without touching the store. Returns the number of
+    /// entries that fit under the byte budget.
+    pub fn restore_bytes(&self, bytes: &[u8]) -> Result<usize, String> {
+        if bytes.len() < SNAP_MAGIC.len() + 4 + 4 + 8 {
+            return Err(format!("snapshot too short ({} bytes)", bytes.len()));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        let got = fnv1a64(body);
+        if got != want {
+            return Err(format!("checksum mismatch (stored {want:#018x}, computed {got:#018x})"));
+        }
+        let mut r = SnapReader { buf: body, pos: 0 };
+        if r.take(SNAP_MAGIC.len())? != SNAP_MAGIC {
+            return Err("bad snapshot magic (not an FCWS file)".to_string());
+        }
+        let version = r.u32()?;
+        if version != SNAP_VERSION {
+            return Err(format!("unsupported snapshot version {version} (want {SNAP_VERSION})"));
+        }
+        let count = r.u32()? as usize;
+        let mut decoded = Vec::with_capacity(count);
+        for i in 0..count {
+            decoded.push(decode_entry(&mut r).map_err(|e| format!("entry {i}: {e}"))?);
+        }
+        if r.pos != body.len() {
+            return Err(format!("{} trailing bytes after {count} entries", body.len() - r.pos));
+        }
+        let mut restored = 0usize;
+        for (k, v) in decoded {
+            if self.shard(&k).lock().expect("warm store poisoned").insert(k, v) {
+                restored += 1;
+            }
+        }
+        Ok(restored)
+    }
+
+    /// Serialize every resident entry to `path` (parent directories are
+    /// created). Returns the entry count written.
+    pub fn save_snapshot(&self, path: &Path) -> Result<usize, String> {
+        let (bytes, n) = self.snapshot_encoded();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, &bytes).map_err(|e| format!("write {}: {e}", path.display()))?;
+        Ok(n)
+    }
+
+    /// Read and ingest a snapshot file. When a fault plan with an armed
+    /// `snapcorrupt` spec is supplied, the corruption is applied to the
+    /// in-memory bytes first (the deterministic chaos harness — the file
+    /// on disk is untouched). Returns the number of entries restored.
+    pub fn load_snapshot(&self, path: &Path, faults: Option<&FaultPlan>) -> Result<usize, String> {
+        let mut bytes =
+            std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        if let Some(plan) = faults {
+            plan.corrupt_snapshot(&mut bytes);
+        }
+        self.restore_bytes(&bytes)
+    }
+}
+
+const SNAP_MAGIC: &[u8; 4] = b"FCWS";
+const SNAP_VERSION: u32 = 1;
+/// Ceiling on decoded `steps * layers` profile cells: bounds the
+/// allocation a (checksum-valid but hostile) snapshot can demand.
+const SNAP_MAX_CELLS: usize = 1 << 24;
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty to catch disk
+/// truncation and bit rot (not a cryptographic integrity claim).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Enum → stable wire index via position in the type's `ALL` array (the
+/// arrays are append-only, so indexes survive enum reordering in source).
+fn variant_index(v: Variant) -> u8 {
+    Variant::ALL.iter().position(|&x| x == v).expect("variant listed in ALL") as u8
+}
+
+fn policy_index(p: PolicyKind) -> u8 {
+    PolicyKind::ALL.iter().position(|&x| x == p).expect("policy listed in ALL") as u8
+}
+
+fn encode_entry(key: &StoreKey, value: &StoreValue, out: &mut Vec<u8>) {
+    match key {
+        StoreKey::Fit { fp, policy, steps, layer } => {
+            out.push(0);
+            out.push(variant_index(fp.variant));
+            put_u64(out, fp.weight_seed);
+            out.push(policy_index(*policy));
+            put_u64(out, *steps as u64);
+            put_u64(out, *layer as u64);
+        }
+        StoreKey::Profile { fp, steps } => {
+            out.push(1);
+            out.push(variant_index(fp.variant));
+            put_u64(out, fp.weight_seed);
+            put_u64(out, *steps as u64);
+        }
+    }
+    match value {
+        StoreValue::Fit(f) => {
+            put_f64(out, f.decay_factor());
+            put_u64(out, f.updates());
+            put_u64(out, f.channels().len() as u64);
+            for c in f.channels() {
+                let (n, mean_x, mean_y, m2_x, c_xy) = c.raw();
+                put_u64(out, n);
+                put_f64(out, mean_x);
+                put_f64(out, mean_y);
+                put_f64(out, m2_x);
+                put_f64(out, c_xy);
+            }
+        }
+        StoreValue::Profile(p) => {
+            let layers = p.sum.first().map(Vec::len).unwrap_or(0);
+            put_u64(out, p.sum.len() as u64);
+            put_u64(out, layers as u64);
+            for row in &p.sum {
+                for &v in row {
+                    put_f64(out, v);
+                }
+            }
+            for row in &p.cnt {
+                for &c in row {
+                    put_u32(out, c);
+                }
+            }
+        }
+    }
+}
+
+struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!("snapshot truncated at byte {}", self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn finite_f64(&mut self, what: &str) -> Result<f64, String> {
+        let v = self.f64()?;
+        if v.is_finite() {
+            Ok(v)
+        } else {
+            Err(format!("non-finite {what}"))
+        }
+    }
+}
+
+fn decode_entry(r: &mut SnapReader) -> Result<(StoreKey, StoreValue), String> {
+    let tag = r.u8()?;
+    let vi = r.u8()? as usize;
+    let variant = *Variant::ALL.get(vi).ok_or_else(|| format!("unknown variant index {vi}"))?;
+    let fp = ModelFingerprint { variant, weight_seed: r.u64()? };
+    match tag {
+        0 => {
+            let pi = r.u8()? as usize;
+            let policy =
+                *PolicyKind::ALL.get(pi).ok_or_else(|| format!("unknown policy index {pi}"))?;
+            let steps = r.u64()? as usize;
+            let layer = r.u64()? as usize;
+            let decay = r.finite_f64("fit decay")?;
+            if !(decay > 0.0 && decay <= 1.0) {
+                return Err(format!("fit decay {decay} outside (0, 1]"));
+            }
+            let updates = r.u64()?;
+            let d = r.u64()? as usize;
+            if d == 0 || d > SNAP_MAX_CELLS {
+                return Err(format!("implausible fit dimension {d}"));
+            }
+            let mut chan = Vec::with_capacity(d);
+            for _ in 0..d {
+                let n = r.u64()?;
+                let mean_x = r.finite_f64("fit mean_x")?;
+                let mean_y = r.finite_f64("fit mean_y")?;
+                let m2_x = r.finite_f64("fit m2_x")?;
+                let c_xy = r.finite_f64("fit c_xy")?;
+                chan.push(PairStats::from_raw(n, mean_x, mean_y, m2_x, c_xy));
+            }
+            Ok((
+                StoreKey::Fit { fp, policy, steps, layer },
+                StoreValue::Fit(AffineFit::from_parts(decay, updates, chan)),
+            ))
+        }
+        1 => {
+            let steps = r.u64()? as usize;
+            let layers = r.u64()? as usize;
+            if steps.checked_mul(layers).map_or(true, |c| c > SNAP_MAX_CELLS) {
+                return Err(format!("implausible profile dims {steps}x{layers}"));
+            }
+            let mut p = ProfileStat::new(steps, layers);
+            for s in 0..steps {
+                for l in 0..layers {
+                    p.sum[s][l] = r.finite_f64("profile sum")?;
+                }
+            }
+            for s in 0..steps {
+                for l in 0..layers {
+                    p.cnt[s][l] = r.u32()?;
+                }
+            }
+            Ok((StoreKey::Profile { fp, steps }, StoreValue::Profile(p)))
+        }
+        t => Err(format!("unknown entry tag {t}")),
+    }
 }
 
 #[cfg(test)]
@@ -386,6 +682,82 @@ mod tests {
         assert!(store.warm_fit(fp(), PolicyKind::FastCache, 20, 0).is_none());
         // The most recently published layer survives.
         assert!(store.warm_fit(fp(), PolicyKind::FastCache, 20, 7).is_some());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_fits_and_profiles() {
+        let store = WarmStore::new(1 << 20, 2);
+        let f = trained_fit(8, 1.5, -0.25, 21);
+        store.publish_fit(fp(), PolicyKind::FastCache, 20, 0, &f);
+        store.publish_fit(fp(), PolicyKind::FastCache, 20, 3, &f);
+        store.publish_profile(fp(), 3, &[vec![0.25, 0.5], vec![0.1, 0.2], vec![0.3, 0.4]]);
+        let dir = std::env::temp_dir().join(format!("fcws_rt_{}", std::process::id()));
+        let path = dir.join("warm.fcws");
+        let saved = store.save_snapshot(&path).expect("save");
+        assert_eq!(saved, 3);
+
+        // Restore into a store with a DIFFERENT shard count: keys re-hash.
+        let fresh = WarmStore::new(1 << 20, 4);
+        let restored = fresh.load_snapshot(&path, None).expect("load");
+        assert_eq!(restored, 3);
+        let got = fresh.warm_fit(fp(), PolicyKind::FastCache, 20, 0).expect("fit restored");
+        assert_eq!(got.coeffs(), f.coeffs());
+        assert_eq!(got.updates(), f.updates());
+        let p = fresh.warm_profile(fp(), 3).expect("profile restored");
+        let orig = store.warm_profile(fp(), 3).unwrap();
+        assert_eq!(p.deltas, orig.deltas);
+        // Identical contents serialize to identical bytes regardless of
+        // sharding or map iteration order.
+        assert_eq!(store.snapshot_bytes(), fresh.snapshot_bytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_snapshots_are_rejected_and_the_store_stays_cold() {
+        let store = WarmStore::new(1 << 20, 1);
+        store.publish_fit(fp(), PolicyKind::FastCache, 12, 0, &trained_fit(8, 2.0, 0.5, 22));
+        let bytes = store.snapshot_bytes();
+        let cold = WarmStore::new(1 << 20, 1);
+        // Truncation (what `snapcorrupt mode=truncate` produces).
+        assert!(cold.restore_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(cold.is_empty(), "rejected snapshot must leave the store cold");
+        // A single flipped bit anywhere in the body fails the checksum.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 1 << 3;
+        let err = cold.restore_bytes(&flipped).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+        // Bad magic with a recomputed (valid) checksum hits the magic check.
+        let mut magic = bytes.clone();
+        magic[0] = b'X';
+        let body = magic.len() - 8;
+        let sum = fnv1a64(&magic[..body]).to_le_bytes();
+        magic[body..].copy_from_slice(&sum);
+        let err = cold.restore_bytes(&magic).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+        assert!(cold.is_empty());
+        // The store is fully usable cold after every rejection.
+        cold.publish_fit(fp(), PolicyKind::FastCache, 12, 0, &trained_fit(8, 2.0, 0.5, 23));
+        assert!(cold.warm_fit(fp(), PolicyKind::FastCache, 12, 0).is_some());
+    }
+
+    #[test]
+    fn fault_plan_corruption_degrades_load_to_cold_then_spends_itself() {
+        let store = WarmStore::new(1 << 20, 1);
+        store.publish_fit(fp(), PolicyKind::FastCache, 12, 1, &trained_fit(8, 1.1, 0.0, 24));
+        let dir = std::env::temp_dir().join(format!("fcws_chaos_{}", std::process::id()));
+        let path = dir.join("warm.fcws");
+        store.save_snapshot(&path).expect("save");
+        let plan = FaultPlan::parse("snapcorrupt mode=bitflip").unwrap();
+        let cold = WarmStore::new(1 << 20, 1);
+        assert!(cold.load_snapshot(&path, Some(&plan)).is_err());
+        assert_eq!(plan.snap_corruptions_fired(), 1);
+        assert!(cold.is_empty());
+        // The plan's single shot is spent: the retry loads clean. The file
+        // itself was never modified.
+        assert_eq!(cold.load_snapshot(&path, Some(&plan)).expect("clean retry"), 1);
+        assert_eq!(plan.snap_corruptions_fired(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

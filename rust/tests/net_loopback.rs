@@ -309,6 +309,74 @@ fn stats_scrapes_interleave_with_in_flight_requests() {
 }
 
 #[test]
+fn injected_socket_resets_are_survived_by_bounded_connect_retries() {
+    // A fault plan that resets the first two accepted connections, before
+    // they cost a budget slot. A budget-less connect takes the first reset
+    // on the chin; a retrying connect absorbs the second and lands on the
+    // third, healthy accept — and the surviving connection serves traffic.
+    let scfg = ServerConfig {
+        max_batch: 1,
+        queue_depth: 16,
+        workers: 1,
+        fault_plan: Some("sockreset conn=1; sockreset conn=2".into()),
+        ..ServerConfig::default()
+    };
+    let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+    fc.enable_str = false;
+    let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 5)));
+    let door = NetServer::start(server, "127.0.0.1:0", 4).expect("bind loopback");
+
+    let rej = NetClient::connect(door.local_addr())
+        .err()
+        .expect("first connection must be reset by the plan");
+    assert_eq!(rej.code, ErrorCode::Closed, "injected reset must surface as Closed, got {rej:?}");
+
+    let client = NetClient::connect_with_retries(door.local_addr(), 2)
+        .expect("one retry must outlast the remaining injected reset");
+    let req = GenRequest::builder(1, 0xF00D).steps(3).build().unwrap();
+    let resp = client.generate(&req).completed();
+    assert!(resp.result.latent.data().iter().all(|v| v.is_finite()));
+    client.close();
+    door.shutdown();
+}
+
+#[test]
+fn a_dead_peer_resolves_pending_streams_to_closed_promptly() {
+    use std::io::Write;
+    // A hand-rolled door that handshakes, accepts one Submit, and dies
+    // without answering — the wire-level version of "the worker behind
+    // this request is gone". The pending stream must degrade to a typed
+    // Closed rejection addressed to the request, not hang.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().expect("accept");
+        match proto::read_frame(&mut sock).expect("read Hello") {
+            Some((Frame::Hello { version }, _)) => assert_eq!(version, VERSION),
+            other => panic!("expected Hello, got {other:?}"),
+        }
+        sock.write_all(&proto::encode(&Frame::HelloAck { version: VERSION })).unwrap();
+        match proto::read_frame(&mut sock).expect("read Submit") {
+            Some((Frame::Submit { req, .. }, _)) => assert_eq!(req.id, 7),
+            other => panic!("expected Submit, got {other:?}"),
+        }
+        drop(sock);
+    });
+
+    let client = NetClient::connect(addr).expect("connect");
+    let req = GenRequest::builder(7, 7).steps(4).build().unwrap();
+    let rx = client.submit(&req).expect("submit");
+    match rx.wait() {
+        Outcome::Rejected(rej) => {
+            assert_eq!(rej.code, ErrorCode::Closed, "dead peer must surface as Closed, got {rej:?}");
+            assert_eq!(rej.id, 7, "the rejection must be addressed to the orphaned request");
+        }
+        other => panic!("expected Rejected(Closed), got {other:?}"),
+    }
+    peer.join().unwrap();
+}
+
+#[test]
 fn malformed_submit_gets_typed_error_and_the_connection_survives() {
     use std::io::Write;
     let door = start_door(1, 16, 2);

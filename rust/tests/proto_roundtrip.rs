@@ -34,6 +34,8 @@ fn sample_completed(id: u64, deadline_met: Option<bool>) -> Completed {
         flops_padded: 123,
         cache_bytes_peak: 4096,
         warm_layers: 3,
+        degraded: id % 2 == 1,
+        degrade_rungs: if id % 2 == 1 { 2 } else { 0 },
     }
 }
 
@@ -291,8 +293,9 @@ fn completed_reassembly_validates_shape_against_values() {
 
 #[test]
 fn version_is_stable_and_request_response_spaces_are_disjoint() {
-    // v2 added the Stats/StatsReply telemetry pair (docs/PROTOCOL.md).
-    assert_eq!(VERSION, 2);
+    // v3 added the Completed degrade-ladder verdict and the Internal
+    // error code (docs/PROTOCOL.md).
+    assert_eq!(VERSION, 3);
     assert_eq!(proto::MAGIC, u32::from_le_bytes(*b"FCP1"));
     // Request frames encode type bytes < 0x80, responses >= 0x80.
     for frame in sample_frames() {

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Bench smoke (CI): run the kernels + serving + sharding + warmstart +
-# obs tables of bench_tables at tiny sizes and leave the rendered tables plus
+# obs + robustness tables of bench_tables at tiny sizes and leave the rendered tables plus
 # machine-readable bench_out/BENCH_*.json behind for the workflow-artifact
 # upload, so the perf trajectory (kernel old-vs-new ratios, occupancy,
 # the cold-vs-warm FLOPs/step win, store hit rate) accumulates per-PR.
@@ -24,7 +24,7 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 mkdir -p bench_out
-BENCH_SMOKE=1 cargo bench --bench bench_tables -- kernels serving sharding warmstart obs \
+BENCH_SMOKE=1 cargo bench --bench bench_tables -- kernels serving sharding warmstart obs robustness \
     | tee bench_out/BENCH_smoke_tables.txt
 
 # Fold the per-table JSON rows into one committable snapshot.

@@ -1,0 +1,134 @@
+#!/usr/bin/env bash
+# Chaos smoke (docs/ROBUSTNESS.md): boot the network door with an armed
+# fault plan — a kernel panic mid-request, a socket reset at the door,
+# and a corrupted warm-store snapshot on the next boot — and assert the
+# containment story end to end over a real socket:
+#   * the panicked request answers a typed Internal; its siblings and the
+#     server survive and keep serving,
+#   * a client with --retries rides out the injected connection reset,
+#   * the drain stays graceful and loses zero admitted responses,
+#   * the corrupted snapshot degrades the next boot to a cold store
+#     (logged, non-fatal) instead of killing it.
+# CI runs exactly this (see .github/workflows/ci.yml, job chaos-smoke).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "chaos_smoke: cargo not found on PATH — install a Rust toolchain (rustup) first" >&2
+    exit 1
+fi
+
+cargo build --release
+
+BIN=target/release/fastcache-serve
+OUT=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$OUT"
+}
+trap cleanup EXIT
+
+SNAP="$OUT/warm.fcws"
+
+# --- boot 1: fault plan armed — one panic at (step 2, layer 0) of
+# request id 2, and a reset of the 2nd accepted connection. Warm store
+# on, snapshotted to disk at drain.
+mkfifo "$OUT/ctl"
+"$BIN" serve --native --model s --steps 6 --listen 127.0.0.1:0 --net-max-conns 8 \
+    --warm-start --warm-snapshot "$SNAP" \
+    --fault-plan "panic step=2 layer=0 req=2; sockreset conn=2" \
+    < "$OUT/ctl" > "$OUT/server.log" 2>&1 &
+SERVER_PID=$!
+exec 9>"$OUT/ctl"
+
+for _ in $(seq 1 100); do
+    grep -q "^listening on " "$OUT/server.log" && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "chaos_smoke: server died during startup" >&2
+        cat "$OUT/server.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$OUT/server.log" | head -n1)
+if [ -z "$ADDR" ]; then
+    echo "chaos_smoke: no 'listening on' line after 10s" >&2
+    cat "$OUT/server.log" >&2
+    exit 1
+fi
+echo "chaos_smoke: door is up on $ADDR (fault plan armed)"
+
+# --- panic containment: 4 requests on connection 1; request id 2 hits
+# the injected panic and must come back as a typed Internal rejection
+# while its 3 siblings complete on the same, still-alive server.
+"$BIN" client --connect "$ADDR" --requests 4 --steps 6 > "$OUT/panic.log" 2>&1
+grep -q "REJECTED (internal" "$OUT/panic.log"
+grep -q "client done: 3/4 completed" "$OUT/panic.log"
+if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "chaos_smoke: server died on an injected panic — containment failed" >&2
+    cat "$OUT/server.log" >&2
+    exit 1
+fi
+echo "chaos_smoke: panic containment OK (1 Internal, 3/4 siblings completed, server alive)"
+
+# --- socket-reset retry: the plan resets the 2nd accepted connection;
+# a client with a retry budget must absorb it and complete on the next
+# accept. (Without --retries this client would die on connect.)
+"$BIN" client --connect "$ADDR" --requests 2 --steps 6 --retries 2 \
+    > "$OUT/retry.log" 2>&1
+grep -q "client done: 2/2 completed" "$OUT/retry.log"
+echo "chaos_smoke: injected connection reset absorbed by --retries 2 (2/2 completed)"
+
+# --- graceful drain under an armed plan: report printed, Internal
+# accounted, snapshot saved, exit 0.
+echo drain >&9
+exec 9>&-
+if ! wait "$SERVER_PID"; then
+    echo "chaos_smoke: server exited non-zero after drain" >&2
+    cat "$OUT/server.log" >&2
+    exit 1
+fi
+SERVER_PID=""
+grep -q "draining..." "$OUT/server.log"
+grep -q "faults: 1 requests answered Internal" "$OUT/server.log"
+grep -q "warm store: saved" "$OUT/server.log"
+[ -f "$SNAP" ] || { echo "chaos_smoke: snapshot file missing after drain" >&2; exit 1; }
+echo "chaos_smoke: graceful drain OK (Internal accounted, snapshot saved)"
+
+# --- boot 2: the plan corrupts the snapshot bytes on load. The server
+# must log the rejection, start cold, and still serve — corruption is
+# never fatal.
+mkfifo "$OUT/ctl2"
+"$BIN" serve --native --model s --steps 6 --listen 127.0.0.1:0 --net-max-conns 8 \
+    --warm-start --warm-snapshot "$SNAP" --degrade \
+    --fault-plan "snapcorrupt mode=bitflip" \
+    < "$OUT/ctl2" > "$OUT/server2.log" 2>&1 &
+SERVER_PID=$!
+exec 9>"$OUT/ctl2"
+
+for _ in $(seq 1 100); do
+    grep -q "^listening on " "$OUT/server2.log" && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "chaos_smoke: server 2 died during startup — snapshot corruption was fatal" >&2
+        cat "$OUT/server2.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$OUT/server2.log" | head -n1)
+grep -q "starting cold" "$OUT/server2.log"
+echo "chaos_smoke: corrupted snapshot degraded to a cold start (non-fatal)"
+
+"$BIN" client --connect "$ADDR" --requests 2 --steps 6 > "$OUT/cold.log" 2>&1
+grep -q "client done: 2/2 completed" "$OUT/cold.log"
+echo drain >&9
+exec 9>&-
+if ! wait "$SERVER_PID"; then
+    echo "chaos_smoke: server 2 exited non-zero after drain" >&2
+    cat "$OUT/server2.log" >&2
+    exit 1
+fi
+SERVER_PID=""
+echo "chaos_smoke: cold-start server served traffic and drained cleanly"
+echo "chaos_smoke: OK"
