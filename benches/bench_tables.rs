@@ -930,35 +930,52 @@ fn obs() {
     write_json("obs", json_rows);
 }
 
-/// Robustness: the same fixed-seed deadline burst served three ways —
+/// Robustness: the same fixed-seed deadline burst served five ways —
 /// clean, under an armed fault plan (one kernel panic mid-flight plus
-/// delayed queue pops), and with the degrade ladder on under deliberately
-/// tight deadlines. The signal: a panic costs exactly the faulted request
+/// delayed queue pops), with the degrade ladder on under deliberately
+/// tight deadlines, and a clean-vs-flap pair with the shard supervisor
+/// armed. The signal: a panic costs exactly the faulted request
 /// (internal_errors = 1, siblings complete), sheds and internal errors
-/// stay visible in the deadline-hit denominator, and degradation converts
+/// stay visible in the deadline-hit denominator, degradation converts
 /// would-be sheds into completed-but-degraded lanes with the rung count
-/// on the record. Methodology: docs/ROBUSTNESS.md.
+/// on the record, an armed-but-idle supervisor costs nothing, and a
+/// flapping kernel costs exactly one supervised restart with every
+/// non-poisoned sibling completing. Methodology: docs/ROBUSTNESS.md.
 fn robustness() {
     use fastcache_dit::api::{ErrorCode, Outcome};
     use fastcache_dit::config::ServerConfig;
     use fastcache_dit::scheduler::GenRequest;
     use fastcache_dit::server::Server;
     let (requests, steps) = if smoke() { (6u64, 6usize) } else { (12, 10) };
-    // (label, fault plan, degrade ladder, per-request deadline ms). The
-    // generous deadline keeps rows 1-2 about fault cost, not timing; the
-    // tight one exists to push lanes onto the ladder.
-    let configs: [(&str, Option<&str>, bool, f64); 3] = [
-        ("clean (faults off)", None, false, 300_000.0),
+    // (label, fault plan, degrade ladder, per-request deadline ms,
+    // shard_restart_after, expected supervised restarts). The generous
+    // deadline keeps non-ladder rows about fault cost, not timing; the
+    // tight one exists to push lanes onto the ladder. The last two rows
+    // are the supervisor pair: same burst, supervisor armed, with and
+    // without a flap plan (two typed panics inside one 30s window).
+    let configs: [(&str, Option<&str>, bool, f64, usize, u64); 5] = [
+        ("clean (faults off)", None, false, 300_000.0, 0, 0),
         (
             "fault plan armed",
             Some("panic step=2 layer=1 req=3; popdelay ms=5 count=2"),
             false,
             300_000.0,
+            0,
+            0,
         ),
-        ("degrade ladder, tight deadlines", None, true, 40.0),
+        ("degrade ladder, tight deadlines", None, true, 40.0, 0, 0),
+        ("supervisor armed, clean", None, false, 300_000.0, 2, 0),
+        (
+            "flap plan, supervised restart",
+            Some("panic step=1 layer=0 req=1; panic step=2 layer=0 req=2"),
+            false,
+            300_000.0,
+            2,
+            1,
+        ),
     ];
     let mut t = Table::new(
-        "Robustness — fault containment and graceful degradation",
+        "Robustness — fault containment, degradation, self-healing",
         &[
             "Config",
             "req/s↑",
@@ -967,11 +984,12 @@ fn robustness() {
             "Shed",
             "Degraded lanes",
             "Rungs",
+            "Restarts",
             "Deadline hit",
         ],
     );
     let mut json_rows = Vec::new();
-    for (label, plan, degrade, deadline_ms) in configs {
+    for (label, plan, degrade, deadline_ms, restart_after, want_restarts) in configs {
         let scfg = ServerConfig {
             variant: Variant::S,
             steps,
@@ -979,6 +997,7 @@ fn robustness() {
             max_batch: 4,
             fault_plan: plan.map(str::to_string),
             degrade,
+            shard_restart_after: restart_after,
             ..ServerConfig::default()
         };
         let mut cfg = fc(PolicyKind::FastCache);
@@ -1010,6 +1029,10 @@ fn robustness() {
         let report = server.shutdown();
         assert_eq!(report.internal_errors, internal, "report must agree with outcomes");
         assert_eq!(report.degraded_lanes, degraded, "report must agree with outcomes");
+        assert_eq!(
+            report.shard_restarts, want_restarts,
+            "supervised restart count must match the plan ({label})"
+        );
         let rps = completed as f64 / wall;
         let hit = report.deadline_hit_rate();
         t.row(&[
@@ -1020,13 +1043,15 @@ fn robustness() {
             format!("{shed}"),
             format!("{degraded}"),
             format!("{}", report.degrade_rungs),
+            format!("{}", report.shard_restarts),
             hit.map(pct).unwrap_or_else(|| "n/a".to_string()),
         ]);
         json_rows.push(format!(
             "{{\"label\":\"{label}\",\"rps\":{rps:.4},\"completed\":{completed},\
              \"internal_errors\":{internal},\"shed\":{shed},\"degraded_lanes\":{degraded},\
-             \"degrade_rungs\":{},\"deadline_hit_rate\":{}}}",
+             \"degrade_rungs\":{},\"shard_restarts\":{},\"deadline_hit_rate\":{}}}",
             report.degrade_rungs,
+            report.shard_restarts,
             hit.map(|v| format!("{v:.4}")).unwrap_or_else(|| "null".to_string())
         ));
     }

@@ -54,6 +54,13 @@ pub enum ErrorCode {
     /// sheds-count-against-SLA rule: a fault is never a vanished
     /// denominator). Retrying MAY succeed (the fault is per-request).
     Internal = 5,
+    /// This request id is on the supervisor's poisoned-request blocklist:
+    /// its lane triggered repeated typed quarantines, so re-admitting it
+    /// would re-poison a shard batch. Rejected AT ADMISSION (in-process
+    /// and at the net door) before it costs a queue slot. Deadline-tagged
+    /// rejections still count against `deadline_hit_rate()`. Not
+    /// retryable — the same request keeps hitting the same fault.
+    Poisoned = 6,
 }
 
 impl ErrorCode {
@@ -71,6 +78,7 @@ impl ErrorCode {
             3 => Some(ErrorCode::Closed),
             4 => Some(ErrorCode::BadRequest),
             5 => Some(ErrorCode::Internal),
+            6 => Some(ErrorCode::Poisoned),
             _ => None,
         }
     }
@@ -84,6 +92,7 @@ impl std::fmt::Display for ErrorCode {
             ErrorCode::Closed => "closed",
             ErrorCode::BadRequest => "bad-request",
             ErrorCode::Internal => "internal",
+            ErrorCode::Poisoned => "poisoned",
         };
         write!(f, "{name}({})", self.code())
     }
@@ -133,6 +142,12 @@ impl Reject {
     /// poisoned lane). The lane was quarantined; siblings keep serving.
     pub fn internal(id: u64, detail: impl Into<String>) -> Reject {
         Reject::new(ErrorCode::Internal, id, detail)
+    }
+
+    /// The request id is on the poisoned-request blocklist — refused at
+    /// admission before it can re-poison a shard batch.
+    pub fn poisoned(id: u64, detail: impl Into<String>) -> Reject {
+        Reject::new(ErrorCode::Poisoned, id, detail)
     }
 
     /// A queued job whose absolute deadline passed before admission —
@@ -274,12 +289,14 @@ mod tests {
         assert_eq!(ErrorCode::Closed.code(), 3);
         assert_eq!(ErrorCode::BadRequest.code(), 4);
         assert_eq!(ErrorCode::Internal.code(), 5);
+        assert_eq!(ErrorCode::Poisoned.code(), 6);
         for c in [
             ErrorCode::Busy,
             ErrorCode::Expired,
             ErrorCode::Closed,
             ErrorCode::BadRequest,
             ErrorCode::Internal,
+            ErrorCode::Poisoned,
         ] {
             assert_eq!(ErrorCode::from_code(c.code()), Some(c));
         }
@@ -293,6 +310,7 @@ mod tests {
         assert_eq!(Reject::closed(2, "c").code, ErrorCode::Closed);
         assert_eq!(Reject::bad_request(3, "b").code, ErrorCode::BadRequest);
         assert_eq!(Reject::internal(5, "panic").code, ErrorCode::Internal);
+        assert_eq!(Reject::poisoned(6, "blocklisted").code, ErrorCode::Poisoned);
         let e = Reject::expired(4, 12.5, 10.0);
         assert_eq!(e.code, ErrorCode::Expired);
         assert_eq!(e.id, 4);

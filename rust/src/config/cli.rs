@@ -21,7 +21,8 @@ const VALUE_OPTS: &[&str] = &[
     "warmup", "iters", "quant", "deadline-every", "deadline-ms",
     "warm-budget-mib", "fit-min-updates", "listen", "net-max-conns", "connect",
     "trace-sample-rate", "trace-out", "stats-every", "fault-plan",
-    "degrade-rungs", "warm-snapshot", "retries",
+    "degrade-rungs", "warm-snapshot", "retries", "warm-snapshot-every",
+    "shard-restart-after", "poison-after", "step-stall-ms",
 ];
 
 impl Args {

@@ -109,6 +109,28 @@ pub struct ServerConfig {
     /// to a cold store) before serving and saved at drain. `None` (the
     /// default) means the store lives and dies with the process.
     pub warm_snapshot: Option<String>,
+    /// Period (seconds) for PERIODIC warm-store snapshots from a ticker
+    /// thread (atomic tmp-file + rename, so a crash mid-write can never
+    /// corrupt the last good snapshot). Requires `warm_snapshot`. 0.0
+    /// (the default) keeps the at-drain-only behavior.
+    pub warm_snapshot_every: f64,
+    /// Supervisor flap control: tear a shard down and restart it cleanly
+    /// (fresh stepper + arena, survivors solo-replayed at their exact
+    /// step indices) once its quarantine count inside the sliding flap
+    /// window reaches this threshold. 0 (the default) disables
+    /// supervised restarts — quarantine behavior is exactly PR-9's.
+    pub shard_restart_after: usize,
+    /// Poisoned-request blocklist: a request id whose lane triggers this
+    /// many TYPED quarantines is refused at admission (in-process and at
+    /// the net door) with `ErrorCode::Poisoned`. 0 (the default)
+    /// disables the blocklist.
+    pub poison_after: usize,
+    /// Stuck-step watchdog: a shard with active lanes whose step
+    /// heartbeat hasn't advanced for this many milliseconds is marked
+    /// unhealthy, its queue is shed honestly (sheds count as SLA
+    /// misses), and a supervised restart is requested. 0 (the default)
+    /// disables the watchdog thread entirely.
+    pub step_stall_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -136,6 +158,10 @@ impl Default for ServerConfig {
             degrade: false,
             degrade_rungs: 3,
             warm_snapshot: None,
+            warm_snapshot_every: 0.0,
+            shard_restart_after: 0,
+            poison_after: 0,
+            step_stall_ms: 0,
         }
     }
 }
@@ -212,6 +238,23 @@ impl ServerConfig {
             if path.is_empty() {
                 return Err("warm_snapshot must be a non-empty path".into());
             }
+        }
+        if !self.warm_snapshot_every.is_finite() || self.warm_snapshot_every < 0.0 {
+            return Err(format!(
+                "warm_snapshot_every must be a finite period in seconds >= 0 (0 disables the ticker), got {}",
+                self.warm_snapshot_every
+            ));
+        }
+        if self.warm_snapshot_every > 0.0 && self.warm_snapshot.is_none() {
+            return Err(
+                "warm_snapshot_every requires warm_snapshot (a path to snapshot to)".into()
+            );
+        }
+        if self.step_stall_ms > 0 && self.step_stall_ms < 10 {
+            return Err(format!(
+                "step_stall_ms must be 0 (watchdog off) or >= 10 ms (sub-10ms budgets flag healthy steps as stalls), got {}",
+                self.step_stall_ms
+            ));
         }
         Ok(())
     }
@@ -368,6 +411,46 @@ mod tests {
         assert!(c.validate().is_err());
         let c = ServerConfig { warm_snapshot: Some("/tmp/warm.fcws".into()), ..ServerConfig::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn supervisor_knobs_default_off_and_are_validated() {
+        let d = ServerConfig::default();
+        assert_eq!(d.shard_restart_after, 0, "supervised restarts must default OFF");
+        assert_eq!(d.poison_after, 0, "blocklist must default OFF");
+        assert_eq!(d.step_stall_ms, 0, "watchdog must default OFF");
+        assert_eq!(d.warm_snapshot_every, 0.0, "periodic snapshots must default OFF");
+
+        let c = ServerConfig {
+            shard_restart_after: 2,
+            poison_after: 1,
+            step_stall_ms: 250,
+            ..ServerConfig::default()
+        };
+        assert!(c.validate().is_ok());
+
+        let c = ServerConfig { step_stall_ms: 5, ..ServerConfig::default() };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("step_stall_ms"), "unexpected message: {err}");
+
+        // Periodic snapshots need a path to snapshot to.
+        let c = ServerConfig { warm_snapshot_every: 5.0, ..ServerConfig::default() };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("warm_snapshot"), "unexpected message: {err}");
+        let c = ServerConfig {
+            warm_snapshot: Some("/tmp/warm.fcws".into()),
+            warm_snapshot_every: 5.0,
+            ..ServerConfig::default()
+        };
+        assert!(c.validate().is_ok());
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let c = ServerConfig {
+                warm_snapshot: Some("/tmp/warm.fcws".into()),
+                warm_snapshot_every: bad,
+                ..ServerConfig::default()
+            };
+            assert!(c.validate().is_err(), "warm_snapshot_every {bad} must be rejected");
+        }
     }
 
     #[test]

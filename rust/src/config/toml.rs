@@ -241,6 +241,13 @@ pub fn apply(
     if let Some(v) = doc.get("server.warm_snapshot").and_then(|v| v.as_str()) {
         scfg.warm_snapshot = Some(v.to_string());
     }
+    f64_key!("server.warm_snapshot_every", scfg.warm_snapshot_every);
+    usize_key!("server.shard_restart_after", scfg.shard_restart_after);
+    usize_key!("server.poison_after", scfg.poison_after);
+    if let Some(v) = doc.get("server.step_stall_ms") {
+        scfg.step_stall_ms =
+            v.as_usize().ok_or("server.step_stall_ms must be an integer")? as u64;
+    }
     fc.validate()?;
     scfg.validate()?;
     Ok(())
@@ -275,6 +282,10 @@ warm_budget_mib = 4
 degrade = true
 degrade_rungs = 2
 warm_snapshot = "warm.fcws"
+warm_snapshot_every = 30.0
+shard_restart_after = 3
+poison_after = 2
+step_stall_ms = 400
 
 [faults]
 plan = "panic step=2 layer=1 req=3"
@@ -326,6 +337,10 @@ stats_every = 5
         assert!(scfg.degrade);
         assert_eq!(scfg.degrade_rungs, 2);
         assert_eq!(scfg.warm_snapshot.as_deref(), Some("warm.fcws"));
+        assert_eq!(scfg.warm_snapshot_every, 30.0);
+        assert_eq!(scfg.shard_restart_after, 3);
+        assert_eq!(scfg.poison_after, 2);
+        assert_eq!(scfg.step_stall_ms, 400);
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //!   before the handshake, exercising the client's connect retry and
 //!   the door's accounting;
 //! - **snapshot corruption** — warm-store snapshot bytes are truncated
-//!   or bit-flipped at load, exercising the checksum/cold-degrade path.
+//!   or bit-flipped at load, exercising the checksum/cold-degrade path;
+//! - **step stalls** — a bounded busy-wait at a `(shard, step)` site
+//!   inside `LaneStepper::step`, simulating a wedged (not panicking)
+//!   kernel so the stuck-step watchdog is deterministically testable.
+//!   The wait is bounded because a wedged thread cannot be killed in
+//!   safe Rust: the stalled shard must eventually return so the
+//!   supervisor's restart can be observed end to end.
 //!
 //! Every spec is bounded (`count=`, default 1) and every firing is
 //! counted, so a chaos run can assert "exactly the planned faults
@@ -28,11 +34,12 @@
 //! ```text
 //! plan  := spec (';' spec)*
 //! spec  := kind (key '=' value)*          # whitespace-separated
-//! kind  := 'panic' | 'popdelay' | 'sockreset' | 'snapcorrupt'
+//! kind  := 'panic' | 'popdelay' | 'sockreset' | 'snapcorrupt' | 'stall'
 //! panic       keys: step, layer  (required)  shard, req, count, raw
 //! popdelay    keys: ms           (required)  shard, count
 //! sockreset   keys: conn         (required)  count
 //! snapcorrupt keys: mode=truncate|bitflip (required)  count
+//! stall       keys: step, ms     (required)  shard, count
 //! ```
 //!
 //! Determinism: there is no RNG anywhere in this module. A plan string
@@ -85,6 +92,7 @@ enum Site {
     PopDelay { shard: Option<u32>, ms: u64 },
     SockReset { conn: u64 },
     SnapCorrupt { mode: CorruptMode },
+    Stall { shard: Option<u32>, step: usize, ms: u64 },
 }
 
 #[derive(Debug)]
@@ -124,6 +132,7 @@ pub struct FaultPlan {
     pop_delays: AtomicU64,
     sock_resets: AtomicU64,
     snap_corruptions: AtomicU64,
+    stalls: AtomicU64,
 }
 
 impl FaultPlan {
@@ -193,6 +202,11 @@ impl FaultPlan {
                 "snapcorrupt" => {
                     Site::SnapCorrupt { mode: mode.ok_or("snapcorrupt spec requires mode=")? }
                 }
+                "stall" => Site::Stall {
+                    shard,
+                    step: step.ok_or("stall spec requires step=")?,
+                    ms: ms.ok_or("stall spec requires ms=")?,
+                },
                 other => return Err(format!("unknown fault kind `{other}`")),
             };
             specs.push(Spec { site, remaining: AtomicU64::new(count) });
@@ -280,6 +294,24 @@ impl FaultPlan {
         false
     }
 
+    /// Step-stall site check, consulted once per (lane, step) inside the
+    /// stepper. Returns the busy-wait duration (ms) when a `stall` spec
+    /// matches this `(shard, step)` site and still has firings left. The
+    /// caller spins for that long — simulating a wedged kernel the
+    /// watchdog must detect — then resumes normally (the wait is bounded
+    /// so the stalled thread can be supervised back to health).
+    pub fn armed_stall(&self, shard: u32, step: usize) -> Option<u64> {
+        for spec in &self.specs {
+            if let Site::Stall { shard: s, step: st, ms } = &spec.site {
+                if s.map_or(true, |want| want == shard) && *st == step && spec.claim() {
+                    self.stalls.fetch_add(1, Ordering::Relaxed);
+                    return Some(*ms);
+                }
+            }
+        }
+        None
+    }
+
     /// Fired-counter snapshots, surfaced as `faults.*` registry series.
     pub fn panics_fired(&self) -> u64 {
         self.panics.load(Ordering::Relaxed)
@@ -296,6 +328,10 @@ impl FaultPlan {
     pub fn snap_corruptions_fired(&self) -> u64 {
         self.snap_corruptions.load(Ordering::Relaxed)
     }
+
+    pub fn stalls_fired(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -306,7 +342,7 @@ mod tests {
     fn parses_every_kind_and_counts_firings() {
         let plan = FaultPlan::parse(
             "panic shard=0 step=2 layer=1 req=7; popdelay ms=50 count=2; \
-             sockreset conn=1; snapcorrupt mode=truncate",
+             sockreset conn=1; snapcorrupt mode=truncate; stall shard=1 step=3 ms=40",
         )
         .unwrap();
         assert!(!plan.is_empty());
@@ -337,6 +373,13 @@ mod tests {
         assert_eq!(bytes.len(), 32);
         assert!(!plan.corrupt_snapshot(&mut bytes));
         assert_eq!(plan.snap_corruptions_fired(), 1);
+
+        // Stall: wrong site never fires, right site fires exactly once.
+        assert_eq!(plan.armed_stall(1, 2), None, "step filter");
+        assert_eq!(plan.armed_stall(0, 3), None, "shard filter");
+        assert_eq!(plan.armed_stall(1, 3), Some(40));
+        assert_eq!(plan.armed_stall(1, 3), None, "one-shot");
+        assert_eq!(plan.stalls_fired(), 1);
     }
 
     #[test]
@@ -370,6 +413,8 @@ mod tests {
         assert!(FaultPlan::parse("explode now").is_err(), "unknown kind");
         assert!(FaultPlan::parse("panic step=1 layer=0 count=0").is_err(), "count=0");
         assert!(FaultPlan::parse("panic step=1 layer=0 flavor=mild").is_err(), "unknown key");
+        assert!(FaultPlan::parse("stall step=1").is_err(), "missing ms=");
+        assert!(FaultPlan::parse("stall ms=50").is_err(), "missing step=");
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //!                                  same workload over the wire
 //!   stats --connect HOST:PORT    — scrape a running front door's live
 //!                                  telemetry registry (one Stats frame)
+//!   health --connect HOST:PORT   — probe a running front door's per-shard
+//!                                  liveness (one Health frame; answered
+//!                                  even while the server drains)
 //!
 //! Common options: --model s|b|l|xl  --policy fastcache|fbcache|...
 //!   --steps N --requests N --alpha A --tau-s T --gamma G --max-batch B
@@ -47,8 +50,17 @@
 //! restores the warm store before serving and saves it at drain;
 //! --fault-plan "SPEC; SPEC" arms the deterministic chaos harness
 //! (kernel panics, queue-pop delays, socket resets, snapshot
-//! corruption); client-side --retries N retries Busy rejections and
-//! connect failures with deterministic backoff.
+//! corruption, seeded step stalls); client-side --retries N retries
+//! Busy rejections and connect failures with deterministic backoff.
+//!
+//! Self-healing (docs/ROBUSTNESS.md): --shard-restart-after N restarts a
+//! shard that quarantines N batches inside the flap window (survivors
+//! replayed bit-exactly); --poison-after K blocklists a request id after
+//! K typed quarantines (rejected with error code Poisoned at both
+//! doors); --step-stall-ms D arms the stuck-step watchdog (a shard whose
+//! step heartbeat stalls > D ms has its queue shed honestly and is
+//! restarted); --warm-snapshot-every S saves the warm store atomically
+//! every S seconds in addition to the snapshot at drain.
 
 use std::sync::Arc;
 
@@ -145,6 +157,16 @@ fn parse_common(args: &Args) -> Result<(Variant, FastCacheConfig, ServerConfig)>
     if let Some(path) = args.get("warm-snapshot") {
         scfg.warm_snapshot = Some(path.to_string());
     }
+    scfg.warm_snapshot_every = args
+        .parse_num("warm-snapshot-every", scfg.warm_snapshot_every)
+        .map_err(anyhow::Error::msg)?;
+    scfg.shard_restart_after = args
+        .parse_num("shard-restart-after", scfg.shard_restart_after)
+        .map_err(anyhow::Error::msg)?;
+    scfg.poison_after =
+        args.parse_num("poison-after", scfg.poison_after).map_err(anyhow::Error::msg)?;
+    scfg.step_stall_ms =
+        args.parse_num("step-stall-ms", scfg.step_stall_ms).map_err(anyhow::Error::msg)?;
     scfg.validate().map_err(anyhow::Error::msg)?;
     Ok((variant, fc, scfg))
 }
@@ -465,6 +487,24 @@ fn print_report(report: &fastcache_dit::server::ServerReport) {
             report.internal_errors
         );
     }
+    if report.shard_restarts > 0 {
+        println!(
+            "supervisor: {} supervised shard restart(s) (flap control / watchdog escalation)",
+            report.shard_restarts
+        );
+    }
+    if report.watchdog_sheds > 0 {
+        println!(
+            "supervisor: {} queued jobs shed by the stuck-step watchdog",
+            report.watchdog_sheds
+        );
+    }
+    if report.blocklisted > 0 || report.poisoned_rejections > 0 {
+        println!(
+            "supervisor: {} request id(s) blocklisted as poisoned, {} resubmits rejected ({} counted as SLA misses)",
+            report.blocklisted, report.poisoned_rejections, report.poisoned_sheds
+        );
+    }
     if let Some(n) = &report.net {
         println!(
             "net: {} conns accepted, {} door-shed conns, {} submits ({} completed, {} shed, \
@@ -599,6 +639,42 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One-shot liveness probe of a running `serve --listen` front door:
+/// sends a single `Health` frame, prints the per-shard states plus the
+/// restart / blocklist / drain counters, and disconnects. Exits 0 iff
+/// every shard reports Healthy and the server is not draining — usable
+/// directly as a readiness check.
+///
+/// Options: --connect HOST:PORT (required)
+fn cmd_health(args: &Args) -> Result<()> {
+    use fastcache_dit::server::HealthState;
+    let addr = args
+        .get("connect")
+        .context("health needs --connect HOST:PORT")?;
+    let client = fastcache_dit::net::NetClient::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let body = client
+        .health()
+        .map_err(|e| anyhow::anyhow!("health probe failed: {e}"))?;
+    println!(
+        "server: {} | restarts {} | blocklisted {}",
+        if body.draining { "draining" } else { "serving" },
+        body.restarts,
+        body.blocklisted
+    );
+    let mut all_healthy = true;
+    for &(shard, code) in &body.shards {
+        let state = HealthState::from_code(code);
+        all_healthy &= state == HealthState::Healthy;
+        println!("  shard {shard}: {}", state.name());
+    }
+    client.close();
+    if !all_healthy || body.draining {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse().map_err(anyhow::Error::msg)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("info");
@@ -608,6 +684,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "stats" => cmd_stats(&args),
-        other => bail!("unknown command {other} (want info|generate|serve|client|stats)"),
+        "health" => cmd_health(&args),
+        other => bail!("unknown command {other} (want info|generate|serve|client|stats|health)"),
     }
 }

@@ -19,7 +19,7 @@ use crate::api::{ErrorCode, Event, GenClient, Outcome, Progress, Reject, Respons
 use crate::obs::Series;
 use crate::scheduler::GenRequest;
 
-use super::proto::{self, Frame, VERSION};
+use super::proto::{self, Frame, HealthBody, VERSION};
 
 /// Client-side state of one in-flight request.
 struct Pending {
@@ -35,6 +35,11 @@ type PendingMap = Arc<Mutex<HashMap<u64, Pending>>>;
 /// `StatsReply`.
 type StatsWaiters = Arc<Mutex<VecDeque<mpsc::Sender<Vec<Series>>>>>;
 
+/// In-flight `Health` probes, FIFO — same in-order pairing argument as
+/// [`StatsWaiters`], kept as a separate queue because the two reply types
+/// interleave freely on one connection.
+type HealthWaiters = Arc<Mutex<VecDeque<mpsc::Sender<HealthBody>>>>;
+
 /// A connected remote client. Dropping it tears the connection down
 /// (in-flight streams resolve to `Rejected(Closed)`); [`NetClient::close`]
 /// says `Goodbye` first for a clean close.
@@ -42,6 +47,7 @@ pub struct NetClient {
     wtx: mpsc::Sender<Vec<u8>>,
     pending: PendingMap,
     stats_waiters: StatsWaiters,
+    health_waiters: HealthWaiters,
     stream: TcpStream,
     reader: Option<JoinHandle<()>>,
     writer: Option<JoinHandle<()>>,
@@ -125,6 +131,7 @@ impl NetClient {
 
         let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
         let stats_waiters: StatsWaiters = Arc::new(Mutex::new(VecDeque::new()));
+        let health_waiters: HealthWaiters = Arc::new(Mutex::new(VecDeque::new()));
         let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
 
         let writer = {
@@ -151,9 +158,10 @@ impl NetClient {
                 .map_err(|e| Reject::closed(0, format!("stream clone failed: {e}")))?;
             let pending = Arc::clone(&pending);
             let waiters = Arc::clone(&stats_waiters);
+            let hwaiters = Arc::clone(&health_waiters);
             std::thread::Builder::new()
                 .name("fastcache-client-reader".into())
-                .spawn(move || demux_loop(&mut half, &pending, &waiters))
+                .spawn(move || demux_loop(&mut half, &pending, &waiters, &hwaiters))
                 .expect("spawning client reader")
         };
 
@@ -161,6 +169,7 @@ impl NetClient {
             wtx,
             pending,
             stats_waiters,
+            health_waiters,
             stream,
             reader: Some(reader),
             writer: Some(writer),
@@ -182,6 +191,22 @@ impl NetClient {
             return Err(Reject::closed(0, "connection writer gone"));
         }
         rx.recv().map_err(|_| Reject::closed(0, "connection closed before stats reply"))
+    }
+
+    /// Probe the server's liveness: one `Health` frame out, one
+    /// `HealthReply` back (v4+). Answered even while the server drains —
+    /// the whole point of the frame is that it never goes dark before the
+    /// socket does.
+    pub fn health(&self) -> Result<HealthBody, Reject> {
+        let (tx, rx) = mpsc::channel();
+        // Enqueue BEFORE writing, mirroring stats(): the reply cannot
+        // race past its waiter.
+        self.health_waiters.lock().expect("health waiters poisoned").push_back(tx);
+        if self.wtx.send(proto::encode(&Frame::Health)).is_err() {
+            self.health_waiters.lock().expect("health waiters poisoned").pop_back();
+            return Err(Reject::closed(0, "connection writer gone"));
+        }
+        rx.recv().map_err(|_| Reject::closed(0, "connection closed before health reply"))
     }
 
     fn submit_inner(&self, req: &GenRequest, progress: bool) -> Result<ResponseStream, Reject> {
@@ -279,17 +304,24 @@ fn finish(pending: &PendingMap, id: u64, outcome: Outcome) {
 
 /// Connection is gone: every in-flight request resolves to a typed
 /// `Closed` rejection — a client must never hang on a dead socket.
-/// Pending stats scrapes unblock too: dropping their senders makes the
-/// blocked `recv` fail, which [`NetClient::stats`] maps to `Closed`.
-fn fail_all(pending: &PendingMap, waiters: &StatsWaiters, why: &str) {
+/// Pending stats scrapes and health probes unblock too: dropping their
+/// senders makes the blocked `recv` fail, which [`NetClient::stats`] and
+/// [`NetClient::health`] map to `Closed`.
+fn fail_all(pending: &PendingMap, waiters: &StatsWaiters, hwaiters: &HealthWaiters, why: &str) {
     let mut map = pending.lock().expect("pending map poisoned");
     for (id, p) in map.drain() {
         let _ = p.tx.send(Event::Done(Outcome::Rejected(Reject::closed(id, why))));
     }
     waiters.lock().expect("stats waiters poisoned").clear();
+    hwaiters.lock().expect("health waiters poisoned").clear();
 }
 
-fn demux_loop(stream: &mut TcpStream, pending: &PendingMap, waiters: &StatsWaiters) {
+fn demux_loop(
+    stream: &mut TcpStream,
+    pending: &PendingMap,
+    waiters: &StatsWaiters,
+    hwaiters: &HealthWaiters,
+) {
     loop {
         match proto::read_frame(stream) {
             Ok(Some((Frame::Progress(Progress { id, step, total }), _))) => {
@@ -306,7 +338,12 @@ fn demux_loop(stream: &mut TcpStream, pending: &PendingMap, waiters: &StatsWaite
                     || p.latent.len() + values.len() > total as usize
                 {
                     drop(map);
-                    fail_all(pending, waiters, "partial chunk out of order — stream corrupt");
+                    fail_all(
+                        pending,
+                        waiters,
+                        hwaiters,
+                        "partial chunk out of order — stream corrupt",
+                    );
                     return;
                 }
                 p.latent.extend_from_slice(&values);
@@ -347,26 +384,34 @@ fn demux_loop(stream: &mut TcpStream, pending: &PendingMap, waiters: &StatsWaite
                     let _ = tx.send(series);
                 }
             }
+            Ok(Some((Frame::HealthReply(body), _))) => {
+                // Same FIFO pairing as StatsReply, on the health queue.
+                let waiter =
+                    hwaiters.lock().expect("health waiters poisoned").pop_front();
+                if let Some(tx) = waiter {
+                    let _ = tx.send(body);
+                }
+            }
             // Connection-level error, server Goodbye, clean EOF, or a
             // broken stream: nothing more will arrive.
             Ok(Some((Frame::Error { detail, .. }, _))) => {
-                fail_all(pending, waiters, &format!("connection error: {detail}"));
+                fail_all(pending, waiters, hwaiters, &format!("connection error: {detail}"));
                 return;
             }
             Ok(Some((Frame::Goodbye, _))) => {
-                fail_all(pending, waiters, "server said goodbye");
+                fail_all(pending, waiters, hwaiters, "server said goodbye");
                 return;
             }
             Ok(Some(_)) => {
-                fail_all(pending, waiters, "unexpected frame on response path");
+                fail_all(pending, waiters, hwaiters, "unexpected frame on response path");
                 return;
             }
             Ok(None) => {
-                fail_all(pending, waiters, "connection closed");
+                fail_all(pending, waiters, hwaiters, "connection closed");
                 return;
             }
             Err(e) => {
-                fail_all(pending, waiters, &format!("read failed: {e}"));
+                fail_all(pending, waiters, hwaiters, &format!("read failed: {e}"));
                 return;
             }
         }

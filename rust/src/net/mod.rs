@@ -31,5 +31,5 @@ pub mod proto;
 pub mod server;
 
 pub use client::NetClient;
-pub use proto::{Frame, ProtoError, MAGIC, MAX_FRAME_LEN, VERSION};
+pub use proto::{Frame, HealthBody, ProtoError, MAGIC, MAX_FRAME_LEN, VERSION};
 pub use server::NetServer;

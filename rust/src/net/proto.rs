@@ -39,8 +39,11 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"FCP1");
 /// History: v1 — initial protocol; v2 — adds the `Stats`/`StatsReply`
 /// telemetry-scrape pair; v3 — `Completed` carries the degrade-ladder
 /// verdict (`degraded` flag + rungs walked) and servers may answer
-/// `Error{Internal}` (code 5) for fault-quarantined requests.
-pub const VERSION: u16 = 3;
+/// `Error{Internal}` (code 5) for fault-quarantined requests; v4 — adds
+/// the `Health`/`HealthReply` liveness pair (answered even while
+/// draining) and servers may answer `Error{Poisoned}` (code 6) for
+/// blocklisted requests.
+pub const VERSION: u16 = 4;
 
 /// Upper bound on `len` (type byte + payload): 16 MiB. Far above any
 /// legitimate frame (the largest — `Partial` — is ~64 KiB) while small
@@ -56,6 +59,7 @@ const T_HELLO: u8 = 0x01;
 const T_SUBMIT: u8 = 0x02;
 const T_GOODBYE: u8 = 0x03;
 const T_STATS: u8 = 0x04;
+const T_HEALTH: u8 = 0x05;
 const T_HELLO_ACK: u8 = 0x81;
 const T_PROGRESS: u8 = 0x82;
 const T_PARTIAL: u8 = 0x83;
@@ -63,6 +67,7 @@ const T_COMPLETED: u8 = 0x84;
 const T_SHED: u8 = 0x85;
 const T_ERROR: u8 = 0x86;
 const T_STATS_REPLY: u8 = 0x87;
+const T_HEALTH_REPLY: u8 = 0x88;
 
 /// Decode/IO failure modes. `BadRequest` is the one *semantic* rejection:
 /// the frame was structurally valid but the request inside failed the
@@ -206,6 +211,25 @@ impl Completed {
     }
 }
 
+/// The liveness body of a `HealthReply` frame (v4+). Deliberately tiny —
+/// a health probe must stay answerable even when the server is drowning,
+/// so the payload is a handful of integers, never a latent or a series
+/// dump.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthBody {
+    /// True once graceful drain has begun. Health probes are still
+    /// answered during drain — that is the point of the frame.
+    pub draining: bool,
+    /// Supervised shard restarts since boot (flap + watchdog escalations).
+    pub restarts: u64,
+    /// Request ids currently blocklisted as poisoned.
+    pub blocklisted: u64,
+    /// Per-shard `(shard index, state code)` pairs. State codes stay a
+    /// raw u8 so unknown states from newer peers round-trip; map through
+    /// `server::HealthState::from_code` to interpret.
+    pub shards: Vec<(u32, u8)>,
+}
+
 /// One protocol frame. Request frames flow client → server, response
 /// frames server → client; `Goodbye` is valid in both directions (clean
 /// close / end-of-drain marker).
@@ -221,6 +245,10 @@ pub enum Frame {
     /// Telemetry scrape request (empty payload, v2+). Valid any time
     /// after the handshake; answered with one `StatsReply`.
     Stats,
+    /// Liveness probe (empty payload, v4+). Valid any time after the
+    /// handshake and answered with one `HealthReply` — even while the
+    /// server is draining.
+    Health,
     /// Server handshake answer.
     HelloAck { version: u16 },
     /// Per-step progress tick (streaming submissions only).
@@ -240,6 +268,9 @@ pub enum Frame {
     /// A registry scrape: every live series at the instant the server
     /// handled the `Stats` frame (v2+).
     StatsReply(Vec<Series>),
+    /// Per-shard liveness at the instant the server handled the `Health`
+    /// frame (v4+).
+    HealthReply(HealthBody),
 }
 
 // ---------------------------------------------------------------- encode
@@ -335,6 +366,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         }
         Frame::Goodbye => e.u8(T_GOODBYE),
         Frame::Stats => e.u8(T_STATS),
+        Frame::Health => e.u8(T_HEALTH),
         Frame::HelloAck { version } => {
             e.u8(T_HELLO_ACK);
             e.u32(MAGIC);
@@ -418,6 +450,17 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                         e.f64(h.max_ms);
                     }
                 }
+            }
+        }
+        Frame::HealthReply(h) => {
+            e.u8(T_HEALTH_REPLY);
+            e.u8(u8::from(h.draining));
+            e.u64(h.restarts);
+            e.u64(h.blocklisted);
+            e.u32(h.shards.len() as u32);
+            for &(shard, state) in &h.shards {
+                e.u32(shard);
+                e.u8(state);
             }
         }
     }
@@ -676,6 +719,7 @@ pub fn decode_slice(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
         T_SUBMIT => decode_submit(&mut cur)?,
         T_GOODBYE => Frame::Goodbye,
         T_STATS => Frame::Stats,
+        T_HEALTH => Frame::Health,
         T_HELLO_ACK => Frame::HelloAck { version: decode_handshake(&mut cur)? },
         T_PROGRESS => {
             let id = cur.u64()?;
@@ -704,6 +748,19 @@ pub fn decode_slice(buf: &[u8]) -> Result<(Frame, usize), ProtoError> {
             Frame::Error { id, code, detail }
         }
         T_STATS_REPLY => Frame::StatsReply(decode_stats_reply(&mut cur)?),
+        T_HEALTH_REPLY => {
+            let draining = cur.u8()? != 0;
+            let restarts = cur.u64()?;
+            let blocklisted = cur.u64()?;
+            let n = cur.count(5)?;
+            let mut shards = Vec::with_capacity(n);
+            for _ in 0..n {
+                let shard = cur.u32()?;
+                let state = cur.u8()?;
+                shards.push((shard, state));
+            }
+            Frame::HealthReply(HealthBody { draining, restarts, blocklisted, shards })
+        }
         other => return Err(ProtoError::UnknownType(other)),
     };
     cur.done()?;

@@ -375,6 +375,27 @@ fn run_connection(reader: &mut TcpStream, wtx: &FrameTx, shared: &Arc<Shared>) {
                     Frame::Stats => {
                         send_frame(wtx, &Frame::StatsReply(shared.registry.series()));
                     }
+                    // Liveness probe: answered even while draining — a
+                    // probe that goes dark during drain is indistinguishable
+                    // from a wedged server, which defeats its purpose.
+                    Frame::Health => {
+                        let snap = shared.server.health_snapshot();
+                        let shards = snap
+                            .states
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| (i as u32, *s as u8))
+                            .collect();
+                        send_frame(
+                            wtx,
+                            &Frame::HealthReply(proto::HealthBody {
+                                draining: shared.draining.load(Ordering::Relaxed),
+                                restarts: snap.restarts,
+                                blocklisted: snap.blocklisted,
+                                shards,
+                            }),
+                        );
+                    }
                     Frame::Goodbye => break,
                     other => {
                         send_frame(

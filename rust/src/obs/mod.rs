@@ -43,7 +43,7 @@ use std::time::Instant;
 use crate::api::NetStats;
 use crate::faults::FaultPlan;
 use crate::metrics::LatencyHistogram;
-use crate::server::ShardReport;
+use crate::server::{ShardReport, Supervisor};
 use crate::store::WarmStore;
 
 /// A monotonic event count, updated lock-free.
@@ -142,6 +142,14 @@ pub struct ShardMetrics {
     /// rungs applied. Both stay 0 unless `ServerConfig::degrade` is on.
     pub degraded_lanes: Counter,
     pub degrade_rungs: Counter,
+    /// Supervised restarts: times this shard tore down and rebuilt its
+    /// stepper + model after flap-threshold quarantines or a watchdog
+    /// escalation. Stays 0 unless the supervisor knobs are armed.
+    pub restarts: Counter,
+    /// Jobs the stuck-step watchdog shed from this shard's queue while
+    /// it was wedged. Deadline-tagged sheds ALSO bump `deadline_sheds`
+    /// so they count against the SLA — sheds are never silent.
+    pub watchdog_sheds: Counter,
     pub e2e: Hist,
     pub admission_wait: Hist,
 }
@@ -172,6 +180,8 @@ impl ShardMetrics {
             internal_errors: Counter::default(),
             degraded_lanes: Counter::default(),
             degrade_rungs: Counter::default(),
+            restarts: Counter::default(),
+            watchdog_sheds: Counter::default(),
             e2e: Hist::default(),
             admission_wait: Hist::default(),
         }
@@ -216,6 +226,8 @@ impl ShardMetrics {
             internal_errors: self.internal_errors.get(),
             degraded_lanes: self.degraded_lanes.get(),
             degrade_rungs: self.degrade_rungs.get(),
+            restarts: self.restarts.get(),
+            watchdog_sheds: self.watchdog_sheds.get(),
         }
     }
 }
@@ -318,6 +330,10 @@ pub struct Registry {
     /// `faults.*` series so chaos runs can reconcile injected vs
     /// observed faults without a shutdown.
     faults: Option<Arc<FaultPlan>>,
+    /// The shard supervisor, when serving: its blocklist counters and
+    /// per-shard health states scrape as `supervisor.*` /
+    /// `shard{i}.health` series so restarts are never silent.
+    supervisor: Option<Arc<Supervisor>>,
     started: Instant,
 }
 
@@ -328,6 +344,7 @@ impl Registry {
             net: Arc::new(NetMetrics::default()),
             store,
             faults: None,
+            supervisor: None,
             started: Instant::now(),
         }
     }
@@ -336,6 +353,13 @@ impl Registry {
     /// `faults.*` series (builder-style, called before the Arc wrap).
     pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Registry {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Attach the shard supervisor so blocklist counters and per-shard
+    /// health states scrape (builder-style, called before the Arc wrap).
+    pub fn with_supervisor(mut self, sup: Arc<Supervisor>) -> Registry {
+        self.supervisor = Some(sup);
         self
     }
 
@@ -413,11 +437,28 @@ impl Registry {
         ));
         out.push(Series::counter("sla.degraded", sum(&|s| s.degraded_lanes.get())));
         out.push(Series::counter("sla.degrade_rungs", sum(&|s| s.degrade_rungs.get())));
+        out.push(Series::counter("shard.restarts", sum(&|s| s.restarts.get())));
+        out.push(Series::counter(
+            "server.watchdog_sheds",
+            sum(&|s| s.watchdog_sheds.get()),
+        ));
+        if let Some(sup) = &self.supervisor {
+            out.push(Series::counter("supervisor.blocklisted", sup.blocklisted()));
+            out.push(Series::counter(
+                "supervisor.poisoned_rejections",
+                sup.poisoned_rejections(),
+            ));
+            out.push(Series::counter("supervisor.poisoned_sheds", sup.poisoned_sheds()));
+            for (i, state) in sup.states().iter().enumerate() {
+                out.push(Series::gauge(&format!("shard{i}.health"), *state as u64));
+            }
+        }
         if let Some(plan) = &self.faults {
             out.push(Series::counter("faults.panics", plan.panics_fired()));
             out.push(Series::counter("faults.pop_delays", plan.pop_delays_fired()));
             out.push(Series::counter("faults.sock_resets", plan.sock_resets_fired()));
             out.push(Series::counter("faults.snap_corruptions", plan.snap_corruptions_fired()));
+            out.push(Series::counter("faults.stalls", plan.stalls_fired()));
         }
         let mut e2e = LatencyHistogram::new();
         let mut wait = LatencyHistogram::new();
@@ -654,13 +695,51 @@ mod tests {
         assert_eq!(fired.value, SeriesValue::Counter(1));
         assert_eq!(
             series2.iter().filter(|s| s.name.starts_with("faults.")).count(),
-            4,
-            "all four fault classes scrape"
+            5,
+            "all five fault classes scrape"
         );
         // The shard snapshot carries the new fields into ShardReport.
         let r = reg.shards()[0].snapshot();
         assert_eq!(r.internal_errors, 1);
         assert_eq!(r.degraded_lanes, 2);
         assert_eq!(r.degrade_rungs, 5);
+    }
+
+    #[test]
+    fn supervisor_series_scrape_and_shard_restart_counters() {
+        use crate::config::ServerConfig;
+        let shards = vec![Arc::new(ShardMetrics::new(0)), Arc::new(ShardMetrics::new(1))];
+        shards[0].restarts.inc();
+        shards[1].restarts.add(2);
+        shards[1].watchdog_sheds.add(3);
+        let scfg =
+            ServerConfig { shard_restart_after: 2, poison_after: 1, ..ServerConfig::default() };
+        let sup = Arc::new(Supervisor::new(2, &scfg));
+        let reg = Registry::new(shards, None).with_supervisor(Arc::clone(&sup));
+        let series = reg.series();
+        let get = |name: &str| {
+            series
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing series {name}"))
+                .value
+                .clone()
+        };
+        assert_eq!(get("shard.restarts"), SeriesValue::Counter(3));
+        assert_eq!(get("server.watchdog_sheds"), SeriesValue::Counter(3));
+        assert_eq!(get("supervisor.blocklisted"), SeriesValue::Counter(0));
+        assert_eq!(get("supervisor.poisoned_rejections"), SeriesValue::Counter(0));
+        assert_eq!(get("shard0.health"), SeriesValue::Gauge(0), "shards start Healthy");
+        assert_eq!(get("shard1.health"), SeriesValue::Gauge(0));
+        // The shard snapshot carries the counters into ShardReport.
+        let r = reg.shards()[1].snapshot();
+        assert_eq!(r.restarts, 2);
+        assert_eq!(r.watchdog_sheds, 3);
+        // Without a supervisor attached, no supervisor.* series scrape
+        // (but shard.restarts always does).
+        let reg2 = Registry::new(vec![Arc::new(ShardMetrics::new(0))], None);
+        let series2 = reg2.series();
+        assert!(!series2.iter().any(|s| s.name.starts_with("supervisor.")));
+        assert!(series2.iter().any(|s| s.name == "shard.restarts"));
     }
 }

@@ -764,6 +764,20 @@ impl<'m> LaneStepper<'m> {
         for lane in lanes.iter_mut() {
             let t0 = Instant::now();
             let step = lane.step;
+            // Injected step stall (chaos runs only): a bounded busy-wait
+            // simulating a wedged — not panicking — kernel at this
+            // (shard, step) site. The shard's heartbeat stops advancing
+            // while we spin, which is exactly what the stuck-step
+            // watchdog must detect; the wait is bounded so the stalled
+            // thread can return and be supervised back to health.
+            if let Some((shard, plan)) = faults {
+                if let Some(ms) = plan.armed_stall(*shard, step) {
+                    let until = Instant::now() + Duration::from_millis(ms);
+                    while Instant::now() < until {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
             let tval = lane.schedule.timesteps[step];
 
             // Conditioning embedding c = temb(t) + cond.

@@ -18,9 +18,9 @@
 //! uploads are required anyway.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -31,9 +31,10 @@ use crate::obs::{FlightRecorder, Registry, ShardMetrics, DEFAULT_TRACE_EVENT_CAP
 use crate::scheduler::ScheduleCache;
 use crate::store::WarmStore;
 
-use crate::api::Reject;
+use crate::api::{Event, Outcome, Reject};
 
 use super::queue::{Job, JobQueue, Push};
+use super::supervisor::{HealthState, Supervisor};
 use super::worker::{shard_loop, ServerReport, ShardReport};
 
 /// Live load signals one shard publishes for the router.
@@ -86,6 +87,14 @@ pub struct Dispatcher {
     /// Deterministic fault plan parsed from `ServerConfig::fault_plan`
     /// (`None` — and zero overhead — unless one was configured).
     faults: Option<Arc<FaultPlan>>,
+    /// The shard supervisor: flap control, poisoned-request blocklist,
+    /// heartbeats, and per-shard health. Always present (the health
+    /// surface must answer even on an unconfigured server); inert with
+    /// all knobs at 0.
+    supervisor: Arc<Supervisor>,
+    /// The stuck-step watchdog thread (armed by `step_stall_ms > 0`):
+    /// stop-sender + join handle, shut down before the shards drain.
+    watchdog: Option<(mpsc::Sender<()>, JoinHandle<()>)>,
 }
 
 impl Dispatcher {
@@ -124,13 +133,15 @@ impl Dispatcher {
             .map(Arc::new);
         let shard_metrics: Vec<Arc<ShardMetrics>> =
             (0..workers).map(|id| Arc::new(ShardMetrics::new(id))).collect();
-        let registry = Registry::new(shard_metrics.clone(), store.clone());
+        let supervisor = Arc::new(Supervisor::new(workers, scfg));
+        let registry = Registry::new(shard_metrics.clone(), store.clone())
+            .with_supervisor(Arc::clone(&supervisor));
         let registry = Arc::new(match &faults {
             Some(plan) => registry.with_faults(Arc::clone(plan)),
             None => registry,
         });
 
-        let shards = (0..workers)
+        let shards: Vec<Shard> = (0..workers)
             .map(|id| {
                 let queue = Arc::new(JobQueue::new(cap));
                 let load = Arc::new(ShardLoad::default());
@@ -145,6 +156,7 @@ impl Dispatcher {
                     metrics: Arc::clone(&shard_metrics[id]),
                     recorder: recorder.clone(),
                     faults: faults.clone(),
+                    supervisor: Arc::clone(&supervisor),
                 };
                 let f = Arc::clone(&factory);
                 let metrics = Arc::clone(&shard_metrics[id]);
@@ -156,6 +168,25 @@ impl Dispatcher {
             })
             .collect();
 
+        let watchdog = (scfg.step_stall_ms > 0).then(|| {
+            let (stop_tx, stop_rx) = mpsc::channel::<()>();
+            let watch: Vec<WatchedShard> = shards
+                .iter()
+                .map(|s| WatchedShard {
+                    queue: Arc::clone(&s.queue),
+                    load: Arc::clone(&s.load),
+                    metrics: Arc::clone(&s.metrics),
+                })
+                .collect();
+            let sup = Arc::clone(&supervisor);
+            let stall = Duration::from_millis(scfg.step_stall_ms);
+            let handle = std::thread::Builder::new()
+                .name("fastcache-watchdog".into())
+                .spawn(move || watchdog_loop(sup, watch, stall, stop_rx))
+                .expect("spawning watchdog thread");
+            (stop_tx, handle)
+        });
+
         Dispatcher {
             shards,
             step_flops,
@@ -164,6 +195,8 @@ impl Dispatcher {
             registry,
             recorder,
             faults,
+            supervisor,
+            watchdog,
         }
     }
 
@@ -190,6 +223,13 @@ impl Dispatcher {
         self.recorder.clone()
     }
 
+    /// The shard supervisor (health states, blocklist counters) —
+    /// shared with the registry, the net door's `Health` frame, and the
+    /// CLI.
+    pub fn supervisor(&self) -> Arc<Supervisor> {
+        Arc::clone(&self.supervisor)
+    }
+
     pub fn workers(&self) -> usize {
         self.shards.len()
     }
@@ -198,6 +238,22 @@ impl Dispatcher {
     /// through heavier shards when queues are full. `Busy` only when
     /// every shard pushed back; `Closed` only when every shard is gone.
     pub fn submit(&self, mut job: Job) -> Result<(), Reject> {
+        // Poisoned-request gate: a blocklisted req_id is refused BEFORE
+        // it takes a queue slot. One gate covers both doors — the net
+        // front door funnels through this same submit path. The
+        // rejection still counts against the SLA when the request
+        // carried a deadline (see `ServerReport::deadline_hit_rate`).
+        if self.supervisor.is_poisoned(job.req.id) {
+            self.supervisor.note_poisoned_rejection(job.req.deadline_ms.is_some());
+            return Err(Reject::poisoned(
+                job.req.id,
+                format!(
+                    "request {} blocklisted after {} typed quarantines",
+                    job.req.id,
+                    self.supervisor.poison_after()
+                ),
+            ));
+        }
         job.cost = job.req.steps as u64 * self.step_flops;
         let mut order: Vec<usize> = (0..self.shards.len()).collect();
         order.sort_by_key(|&i| {
@@ -236,6 +292,12 @@ impl Dispatcher {
     /// their reports into one aggregate with a per-shard breakdown (plus
     /// the warm store's counters, when one was attached).
     pub fn shutdown(self) -> ServerReport {
+        // Stop the watchdog FIRST: a slow graceful drain must not be
+        // mistaken for a stall and have its queues shed.
+        if let Some((stop_tx, handle)) = self.watchdog {
+            drop(stop_tx);
+            let _ = handle.join();
+        }
         for shard in &self.shards {
             shard.queue.close();
         }
@@ -261,6 +323,95 @@ impl Dispatcher {
             })
             .collect();
         let store_stats = self.store.as_ref().map(|s| s.stats());
-        ServerReport::merge(reports, self.started.elapsed().as_secs_f64(), store_stats)
+        let mut report =
+            ServerReport::merge(reports, self.started.elapsed().as_secs_f64(), store_stats);
+        // Admission-time rejections never reach a shard, so the merge
+        // can't see them: fold the supervisor's counters in here.
+        report.poisoned_rejections = self.supervisor.poisoned_rejections();
+        report.poisoned_sheds = self.supervisor.poisoned_sheds();
+        report.blocklisted = self.supervisor.blocklisted();
+        report
+    }
+}
+
+/// The per-shard handles the watchdog needs to shed a wedged shard's
+/// queue (it never touches the stepper — only the shard thread owns
+/// that).
+struct WatchedShard {
+    queue: Arc<JobQueue>,
+    load: Arc<ShardLoad>,
+    metrics: Arc<ShardMetrics>,
+}
+
+/// Stuck-step watchdog: poll the per-shard heartbeats a few times per
+/// stall budget. A heartbeat that stops advancing WHILE LANES ARE ACTIVE
+/// for longer than `stall` means a step is wedged (a panic would have
+/// been caught and quarantined — this is the no-unwind failure shape):
+/// mark the shard [`HealthState::Unhealthy`], shed its queue honestly
+/// (deadline sheds count as SLA misses), and request a supervised
+/// restart, which the shard thread performs when the wedged step
+/// finally returns. Exits when the stop channel drops (shutdown).
+fn watchdog_loop(
+    sup: Arc<Supervisor>,
+    watch: Vec<WatchedShard>,
+    stall: Duration,
+    stop_rx: mpsc::Receiver<()>,
+) {
+    struct Seen {
+        beat: u64,
+        since: Instant,
+        flagged: bool,
+    }
+    let now = Instant::now();
+    let mut seen: Vec<Seen> = watch
+        .iter()
+        .enumerate()
+        .map(|(i, _)| Seen { beat: sup.heartbeat(i), since: now, flagged: false })
+        .collect();
+    let tick = (stall / 4).max(Duration::from_millis(10));
+    loop {
+        match stop_rx.recv_timeout(tick) {
+            Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        let now = Instant::now();
+        for (i, w) in watch.iter().enumerate() {
+            let beat = sup.heartbeat(i);
+            let s = &mut seen[i];
+            // Progress, or nothing in flight: the shard is not stuck.
+            // (An idle shard parks in pop_blocking without beating, so
+            // activity — not the heartbeat alone — arms the timer.)
+            if beat != s.beat || w.load.active_lanes.load(Ordering::Relaxed) == 0 {
+                s.beat = beat;
+                s.since = now;
+                s.flagged = false;
+                continue;
+            }
+            if s.flagged || now.duration_since(s.since) < stall {
+                continue;
+            }
+            s.flagged = true;
+            sup.set_state(i, HealthState::Unhealthy);
+            sup.request_restart(i);
+            // Shed the wedged shard's queue honestly: every shed is
+            // counted, answered, and (when deadline-tagged) an SLA miss.
+            // Work already routed here would otherwise wait behind a
+            // stall of unknown length.
+            while let Some(job) = w.queue.try_pop() {
+                w.load.queued_flops.fetch_sub(job.cost, Ordering::Relaxed);
+                w.metrics.watchdog_sheds.inc();
+                if job.req.deadline_ms.is_some() {
+                    w.metrics.deadline_sheds.inc();
+                }
+                let rej = Reject::internal(
+                    job.req.id,
+                    format!(
+                        "shard {i} step heartbeat stalled > {} ms; queue shed by watchdog",
+                        stall.as_millis()
+                    ),
+                );
+                let _ = job.resp.send(Event::Done(Outcome::Rejected(rej)));
+            }
+        }
     }
 }

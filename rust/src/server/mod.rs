@@ -15,6 +15,10 @@
 //!   each job to the shard with the least *predicted* remaining FLOPs
 //!   (cache-policy-aware, see `Lane::remaining_flops_estimate`), and
 //!   threads the shared `store::WarmStore` to every shard.
+//! - `supervisor` — the self-healing layer: per-shard flap control with
+//!   supervised restarts, the poisoned-request blocklist consulted at
+//!   admission, step heartbeats, and the health states the stuck-step
+//!   watchdog and the wire `Health` frame read.
 //!
 //! Threading note: tokio is not vendored in the offline registry, so the
 //! server uses std threads + mutex/condvar queues. Each shard owns its
@@ -24,10 +28,12 @@
 
 pub mod dispatch;
 pub mod queue;
+pub mod supervisor;
 pub mod worker;
 
 pub use dispatch::{Dispatcher, ShardLoad};
 pub use queue::{Job, JobQueue};
+pub use supervisor::{HealthSnapshot, HealthState, Supervisor};
 pub use worker::{Server, ServerReport, ShardReport};
 
 // Response-side types moved to `crate::api` in the front-door redesign;

@@ -1,0 +1,446 @@
+//! Shard supervisor: the self-healing layer over the fault-contained
+//! serving loop.
+//!
+//! PR-9 taught a shard to QUARANTINE a poisoned lane — answer it
+//! `Internal`, rebuild the stepper, solo-replay the survivors — and keep
+//! serving. That containment is the right first response, but it leaves
+//! three failure shapes unhandled, and this module closes each one:
+//!
+//! - **Flapping**: a shard that quarantines over and over (a bad weight
+//!   block, a corrupted arena, an overheating core) burns its batch's
+//!   latency budget on endless replays. The supervisor tracks quarantine
+//!   events per shard in a sliding [`FLAP_WINDOW`]; past
+//!   `--shard-restart-after N` it tears the shard down and restarts it
+//!   cleanly — fresh stepper, fresh arena, freshly built model — with
+//!   surviving lanes re-admitted at their exact step indices through the
+//!   same solo-replay path (so the batched-equals-solo invariant keeps
+//!   the restart bit-exact for survivors).
+//! - **Poison pills**: a request whose lane keeps triggering TYPED
+//!   quarantines will poison every shard it lands on. After
+//!   `--poison-after K` strikes its req_id goes on a byte-bounded
+//!   blocklist ([`LruBytes`], so an adversarial id stream cannot grow
+//!   memory) and is refused at ADMISSION — in-process and at the net
+//!   door, which funnel through the same dispatcher gate — with
+//!   [`ErrorCode::Poisoned`](crate::api::ErrorCode). Deadline-tagged
+//!   rejections still count against the SLA: refusing work is an answer,
+//!   not an excuse.
+//! - **Wedged (not panicking) kernels**: a stuck step never unwinds, so
+//!   `catch_unwind` never fires. Every `step()` call bumps a relaxed
+//!   per-shard heartbeat; the watchdog thread (armed by
+//!   `--step-stall-ms`) watches for a heartbeat that stops advancing
+//!   while lanes are active, marks the shard [`HealthState::Unhealthy`],
+//!   sheds its queue honestly (deadline sheds count as misses), and
+//!   escalates to a supervised restart once the wedged step returns.
+//!
+//! Invariant: **restarts are never silent**. Every restart, blocklist
+//! insertion, and watchdog shed is visible in the registry
+//! (`shard.restarts`, `supervisor.*`, `server.watchdog_sheds`), in the
+//! shutdown `ServerReport`, and over the wire in the `HealthReply`
+//! frame — which is answered even while draining, because liveness
+//! questions deserve answers exactly when the server is sickest.
+//!
+//! The supervisor is ALWAYS constructed (so `health` works on an
+//! unconfigured server) but is inert with all knobs at 0: it then only
+//! counts heartbeats and reports `Healthy`, and serving stays
+//! bit-identical to a supervisor-less build.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+use crate::store::{ByteSized, LruBytes};
+
+/// Sliding window over which quarantine events count toward the flap
+/// threshold. Events older than this no longer argue for a restart.
+pub const FLAP_WINDOW: Duration = Duration::from_secs(30);
+
+/// Byte budget for the poisoned-request blocklist. Strikes are tiny
+/// (u32 + entry overhead), so this holds ~600 distinct offender ids —
+/// far more than any sane workload produces — while an adversarial
+/// stream of fresh req_ids evicts old strikes instead of growing memory.
+pub const BLOCKLIST_BUDGET_BYTES: usize = 64 * 1024;
+
+/// One shard's health, as reported on the wire and in the registry.
+/// Discriminants are the wire encoding (PROTOCOL.md v4) — append-only.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy = 0,
+    /// At least one quarantine inside the flap window, below threshold.
+    Degraded = 1,
+    /// Supervised teardown + survivor replay in progress.
+    Restarting = 2,
+    /// Watchdog-flagged stall: heartbeat stopped with lanes active.
+    Unhealthy = 3,
+}
+
+impl HealthState {
+    pub fn from_code(v: u8) -> HealthState {
+        match v {
+            1 => HealthState::Degraded,
+            2 => HealthState::Restarting,
+            3 => HealthState::Unhealthy,
+            _ => HealthState::Healthy,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Restarting => "restarting",
+            HealthState::Unhealthy => "unhealthy",
+        }
+    }
+}
+
+/// One liveness observation of a running server: what the in-process
+/// `Server::health_snapshot` returns and the wire `HealthReply` frame
+/// carries (the net door adds its own drain flag on top).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    /// Per-shard health, indexed by shard id.
+    pub states: Vec<HealthState>,
+    /// Supervised restarts, summed over shards.
+    pub restarts: u64,
+    /// Distinct request ids ever blocklisted.
+    pub blocklisted: u64,
+}
+
+/// Strike count for one request id on the blocklist.
+struct PoisonEntry {
+    strikes: u32,
+}
+
+impl ByteSized for PoisonEntry {
+    fn size_bytes(&self) -> usize {
+        std::mem::size_of::<u32>()
+    }
+}
+
+/// Per-shard supervised state. The heartbeat is bumped by the shard
+/// thread on EVERY `step()` call with one relaxed add — cheap enough to
+/// leave on unconditionally, and observation never shapes serving.
+struct ShardHealth {
+    state: AtomicU8,
+    heartbeat: AtomicU64,
+    restart_requested: AtomicBool,
+    /// Quarantine instants inside the flap window (pruned on record).
+    window: Mutex<VecDeque<Instant>>,
+}
+
+impl ShardHealth {
+    fn new() -> ShardHealth {
+        ShardHealth {
+            state: AtomicU8::new(HealthState::Healthy as u8),
+            heartbeat: AtomicU64::new(0),
+            restart_requested: AtomicBool::new(false),
+            window: Mutex::new(VecDeque::new()),
+        }
+    }
+}
+
+/// The supervisor: flap control, poisoned-request blocklist, and the
+/// heartbeat/health surface the watchdog and the `Health` frame read.
+/// One per server, shared as an `Arc` by the dispatcher, every shard
+/// thread, the watchdog, the registry, and the net door.
+pub struct Supervisor {
+    restart_after: usize,
+    poison_after: usize,
+    stall_ms: u64,
+    shards: Vec<ShardHealth>,
+    blocklist: Mutex<LruBytes<u64, PoisonEntry>>,
+    blocklisted_total: AtomicU64,
+    poisoned_rejections: AtomicU64,
+    poisoned_sheds: AtomicU64,
+}
+
+impl Supervisor {
+    pub fn new(n_shards: usize, scfg: &ServerConfig) -> Supervisor {
+        Supervisor {
+            restart_after: scfg.shard_restart_after,
+            poison_after: scfg.poison_after,
+            stall_ms: scfg.step_stall_ms,
+            shards: (0..n_shards).map(|_| ShardHealth::new()).collect(),
+            blocklist: Mutex::new(LruBytes::new(BLOCKLIST_BUDGET_BYTES)),
+            blocklisted_total: AtomicU64::new(0),
+            poisoned_rejections: AtomicU64::new(0),
+            poisoned_sheds: AtomicU64::new(0),
+        }
+    }
+
+    pub fn restart_after(&self) -> usize {
+        self.restart_after
+    }
+
+    pub fn poison_after(&self) -> usize {
+        self.poison_after
+    }
+
+    pub fn stall_ms(&self) -> u64 {
+        self.stall_ms
+    }
+
+    // ---- heartbeats -----------------------------------------------------
+
+    /// Bump the shard's step heartbeat (called before every `step()`).
+    pub fn beat(&self, shard: usize) {
+        self.shards[shard].heartbeat.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn heartbeat(&self, shard: usize) -> u64 {
+        self.shards[shard].heartbeat.load(Ordering::Relaxed)
+    }
+
+    // ---- health states --------------------------------------------------
+
+    pub fn state(&self, shard: usize) -> HealthState {
+        HealthState::from_code(self.shards[shard].state.load(Ordering::Relaxed))
+    }
+
+    pub fn set_state(&self, shard: usize, state: HealthState) {
+        self.shards[shard].state.store(state as u8, Ordering::Relaxed);
+    }
+
+    pub fn states(&self) -> Vec<HealthState> {
+        (0..self.shards.len()).map(|i| self.state(i)).collect()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    // ---- flap control ---------------------------------------------------
+
+    /// Record one quarantine event on `shard`. `req_id` is the offender
+    /// for TYPED faults (a `FaultPanic` attributed to one lane) and
+    /// `None` for untyped batch quarantines — only attributed faults
+    /// file a blocklist strike, because an unattributed panic must not
+    /// blocklist innocent batch-mates. Returns `true` when the flap
+    /// threshold is reached and the caller (the shard thread, which owns
+    /// its stepper) must perform a supervised restart.
+    pub fn record_quarantine(&self, shard: usize, req_id: Option<u64>) -> bool {
+        if let Some(id) = req_id {
+            self.note_strike(id);
+        }
+        let now = Instant::now();
+        let mut window = self.shards[shard].window.lock().expect("flap window poisoned");
+        window.push_back(now);
+        while window.front().is_some_and(|t| now.duration_since(*t) > FLAP_WINDOW) {
+            window.pop_front();
+        }
+        let flapping = self.restart_after > 0 && window.len() >= self.restart_after;
+        if flapping {
+            // The restart resets the evidence: a post-restart quarantine
+            // starts a fresh case against the (now fresh) shard.
+            window.clear();
+        }
+        drop(window);
+        self.set_state(
+            shard,
+            if flapping { HealthState::Restarting } else { HealthState::Degraded },
+        );
+        flapping
+    }
+
+    /// Quarantine events currently inside the flap window (diagnostics).
+    pub fn flap_count(&self, shard: usize) -> usize {
+        self.shards[shard].window.lock().expect("flap window poisoned").len()
+    }
+
+    /// Mark a supervised restart complete: the shard is fresh, so its
+    /// health and flap history reset.
+    pub fn finish_restart(&self, shard: usize) {
+        self.shards[shard].window.lock().expect("flap window poisoned").clear();
+        self.shards[shard].restart_requested.store(false, Ordering::Relaxed);
+        self.set_state(shard, HealthState::Healthy);
+    }
+
+    // ---- watchdog escalation --------------------------------------------
+
+    /// Watchdog: ask the shard thread to restart at its next loop
+    /// iteration (it owns the stepper; nobody else can rebuild it).
+    pub fn request_restart(&self, shard: usize) {
+        self.shards[shard].restart_requested.store(true, Ordering::Relaxed);
+    }
+
+    /// Shard thread: consume a pending restart request, if any.
+    pub fn take_restart_request(&self, shard: usize) -> bool {
+        self.shards[shard].restart_requested.swap(false, Ordering::Relaxed)
+    }
+
+    // ---- poisoned-request blocklist -------------------------------------
+
+    /// File one strike against `req_id`. Crossing the `poison_after`
+    /// threshold counts a blocklist insertion (once per crossing).
+    fn note_strike(&self, req_id: u64) {
+        if self.poison_after == 0 {
+            return;
+        }
+        let mut bl = self.blocklist.lock().expect("blocklist poisoned");
+        let strikes = bl.peek(&req_id).map_or(0, |e| e.strikes).saturating_add(1);
+        bl.insert(req_id, PoisonEntry { strikes });
+        if strikes as usize == self.poison_after {
+            self.blocklisted_total.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Admission gate: is this request id blocklisted? Refreshes the
+    /// entry's recency so active offenders stay resident.
+    pub fn is_poisoned(&self, req_id: u64) -> bool {
+        if self.poison_after == 0 {
+            return false;
+        }
+        let mut bl = self.blocklist.lock().expect("blocklist poisoned");
+        bl.get(&req_id).is_some_and(|e| e.strikes as usize >= self.poison_after)
+    }
+
+    /// Count one admission-time `Poisoned` rejection (`deadline`: the
+    /// request carried an SLA budget, so the rejection is an SLA miss).
+    pub fn note_poisoned_rejection(&self, deadline: bool) {
+        self.poisoned_rejections.fetch_add(1, Ordering::Relaxed);
+        if deadline {
+            self.poisoned_sheds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Distinct request ids that have ever crossed the strike threshold.
+    pub fn blocklisted(&self) -> u64 {
+        self.blocklisted_total.load(Ordering::Relaxed)
+    }
+
+    /// Requests refused at admission with `ErrorCode::Poisoned`.
+    pub fn poisoned_rejections(&self) -> u64 {
+        self.poisoned_rejections.load(Ordering::Relaxed)
+    }
+
+    /// The deadline-tagged subset of those rejections (SLA misses).
+    pub fn poisoned_sheds(&self) -> u64 {
+        self.poisoned_sheds.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for Supervisor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Supervisor")
+            .field("restart_after", &self.restart_after)
+            .field("poison_after", &self.poison_after)
+            .field("stall_ms", &self.stall_ms)
+            .field("shards", &self.shards.len())
+            .field("states", &self.states())
+            .field("blocklisted", &self.blocklisted())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sup(restart_after: usize, poison_after: usize) -> Supervisor {
+        let scfg = ServerConfig {
+            shard_restart_after: restart_after,
+            poison_after,
+            ..ServerConfig::default()
+        };
+        Supervisor::new(2, &scfg)
+    }
+
+    #[test]
+    fn inert_with_default_knobs() {
+        let s = sup(0, 0);
+        assert!(!s.record_quarantine(0, Some(42)), "restart_after=0 never asks for a restart");
+        assert!(!s.record_quarantine(0, Some(42)));
+        assert!(!s.is_poisoned(42), "poison_after=0 never blocklists");
+        assert_eq!(s.blocklisted(), 0);
+        // Quarantines still degrade health — visibility stays on even
+        // when the self-healing actions are off.
+        assert_eq!(s.state(0), HealthState::Degraded);
+        assert_eq!(s.state(1), HealthState::Healthy);
+    }
+
+    #[test]
+    fn flap_threshold_requests_restart_and_resets_window() {
+        let s = sup(3, 0);
+        assert!(!s.record_quarantine(0, Some(1)));
+        // Untyped batch quarantines count toward the flap too.
+        assert!(!s.record_quarantine(0, None));
+        assert_eq!(s.state(0), HealthState::Degraded);
+        assert_eq!(s.flap_count(0), 2);
+        assert!(s.record_quarantine(0, Some(3)), "third quarantine in the window trips the flap");
+        assert_eq!(s.state(0), HealthState::Restarting);
+        assert_eq!(s.flap_count(0), 0, "tripping the threshold resets the evidence");
+        s.finish_restart(0);
+        assert_eq!(s.state(0), HealthState::Healthy);
+        // A fresh case builds from zero; shard 1's window is independent.
+        assert!(!s.record_quarantine(0, Some(4)));
+        assert!(!s.record_quarantine(1, Some(5)));
+        assert_eq!(s.flap_count(1), 1);
+    }
+
+    #[test]
+    fn strikes_blocklist_a_request_after_k_typed_quarantines() {
+        let s = sup(0, 2);
+        assert!(!s.is_poisoned(7));
+        s.record_quarantine(0, Some(7));
+        assert!(!s.is_poisoned(7), "one strike is not enough");
+        s.record_quarantine(1, Some(7));
+        assert!(s.is_poisoned(7), "second strike blocklists the id");
+        assert_eq!(s.blocklisted(), 1);
+        // Further strikes don't re-count the insertion.
+        s.record_quarantine(0, Some(7));
+        assert_eq!(s.blocklisted(), 1);
+        // Unattributed quarantines never strike anyone.
+        s.record_quarantine(0, None);
+        assert!(!s.is_poisoned(0));
+        // Rejection accounting separates SLA misses from best-effort.
+        s.note_poisoned_rejection(true);
+        s.note_poisoned_rejection(false);
+        assert_eq!(s.poisoned_rejections(), 2);
+        assert_eq!(s.poisoned_sheds(), 1);
+    }
+
+    #[test]
+    fn blocklist_is_byte_bounded() {
+        let s = sup(0, 1);
+        // Far more distinct offender ids than the budget holds: memory
+        // must stay bounded (LRU eviction), not grow without limit.
+        for id in 0..10_000u64 {
+            s.record_quarantine(0, Some(id));
+        }
+        let bl = s.blocklist.lock().unwrap();
+        assert!(bl.used_bytes() <= BLOCKLIST_BUDGET_BYTES);
+        assert!(bl.len() < 1000, "entries evict instead of accumulating");
+    }
+
+    #[test]
+    fn heartbeats_and_restart_requests() {
+        let s = sup(0, 0);
+        assert_eq!(s.heartbeat(0), 0);
+        s.beat(0);
+        s.beat(0);
+        assert_eq!(s.heartbeat(0), 2);
+        assert_eq!(s.heartbeat(1), 0, "heartbeats are per-shard");
+        assert!(!s.take_restart_request(0));
+        s.request_restart(0);
+        assert!(s.take_restart_request(0), "request is delivered once");
+        assert!(!s.take_restart_request(0), "and consumed");
+    }
+
+    #[test]
+    fn health_state_codes_round_trip() {
+        for st in [
+            HealthState::Healthy,
+            HealthState::Degraded,
+            HealthState::Restarting,
+            HealthState::Unhealthy,
+        ] {
+            assert_eq!(HealthState::from_code(st as u8), st);
+        }
+        assert_eq!(HealthState::from_code(250), HealthState::Healthy, "unknown codes degrade");
+        assert_eq!(HealthState::Unhealthy.name(), "unhealthy");
+    }
+}

@@ -47,6 +47,7 @@ use crate::api::{
 
 use super::dispatch::{Dispatcher, ShardLoad};
 use super::queue::{Job, JobQueue};
+use super::supervisor::{HealthState, Supervisor};
 
 /// One shard's slice of the final report.
 #[derive(Debug)]
@@ -97,6 +98,13 @@ pub struct ShardReport {
     /// `ServerConfig::degrade` is on AND some lane fell behind budget.
     pub degraded_lanes: u64,
     pub degrade_rungs: u64,
+    /// Supervised restarts: flap-threshold teardowns plus watchdog
+    /// escalations. 0 unless the supervisor knobs are armed.
+    pub restarts: u64,
+    /// Jobs the stuck-step watchdog shed from this shard's queue while
+    /// it was wedged (deadline-tagged ones ALSO count in
+    /// `deadline_sheds`, so watchdog sheds are SLA misses).
+    pub watchdog_sheds: u64,
 }
 
 impl ShardReport {
@@ -153,6 +161,17 @@ pub struct ServerReport {
     pub internal_errors: u64,
     pub degraded_lanes: u64,
     pub degrade_rungs: u64,
+    /// Self-healing accounting: supervised shard restarts and
+    /// watchdog-shed jobs, summed over shards.
+    pub shard_restarts: u64,
+    pub watchdog_sheds: u64,
+    /// Poisoned-request blocklist accounting, from the supervisor:
+    /// requests refused at admission with `ErrorCode::Poisoned`, the
+    /// deadline-tagged subset (SLA misses), and distinct request ids
+    /// ever blocklisted. All 0 unless `poison_after > 0`.
+    pub poisoned_rejections: u64,
+    pub poisoned_sheds: u64,
+    pub blocklisted: u64,
     /// Warm-start store counters/occupancy at shutdown (`None` when the
     /// server ran without a store).
     pub store: Option<StoreStats>,
@@ -188,6 +207,11 @@ impl ServerReport {
             internal_errors: 0,
             degraded_lanes: 0,
             degrade_rungs: 0,
+            shard_restarts: 0,
+            watchdog_sheds: 0,
+            poisoned_rejections: 0,
+            poisoned_sheds: 0,
+            blocklisted: 0,
             store,
             net: None,
             shards: Vec::new(),
@@ -210,6 +234,8 @@ impl ServerReport {
             r.internal_errors += s.internal_errors;
             r.degraded_lanes += s.degraded_lanes;
             r.degrade_rungs += s.degrade_rungs;
+            r.shard_restarts += s.restarts;
+            r.watchdog_sheds += s.watchdog_sheds;
         }
         r.shards = shards;
         r
@@ -241,10 +267,13 @@ impl ServerReport {
     /// Fraction of deadline-class jobs that finished within their
     /// deadline. Shed jobs count as misses (they were dropped unserved)
     /// — and so do deadline-tagged requests refused at the network door
-    /// — so the rate cannot be inflated by shedding anywhere in the
-    /// stack. `None` when the workload had no deadline-class jobs.
+    /// or rejected at admission as `Poisoned` — so the rate cannot be
+    /// inflated by shedding or refusing anywhere in the stack. (Watchdog
+    /// sheds already live inside `deadline_sheds`.) `None` when the
+    /// workload had no deadline-class jobs.
     pub fn deadline_hit_rate(&self) -> Option<f64> {
-        let attempted = self.deadline_jobs + self.deadline_sheds + self.door_sheds;
+        let attempted =
+            self.deadline_jobs + self.deadline_sheds + self.door_sheds + self.poisoned_sheds;
         if attempted == 0 {
             None
         } else {
@@ -268,6 +297,12 @@ pub struct Server {
     /// Path the warm store snapshots to at shutdown / restored from at
     /// start (`ServerConfig::warm_snapshot`; `None` = no persistence).
     warm_snapshot: Option<String>,
+    /// Periodic-snapshot ticker thread (armed by
+    /// `ServerConfig::warm_snapshot_every > 0`): stop-sender + join
+    /// handle. Each tick saves atomically (tmp file + rename), so a
+    /// crash between shutdowns loses at most one period of published
+    /// fits instead of all of them.
+    snapshot_ticker: Option<(mpsc::Sender<()>, std::thread::JoinHandle<()>)>,
 }
 
 impl Server {
@@ -320,7 +355,33 @@ impl Server {
                 }
             }
         }
-        Server { dispatcher, warm_snapshot }
+        // Periodic snapshots: a ticker thread saves the store every
+        // `warm_snapshot_every` seconds. `save_snapshot` is atomic (tmp
+        // file + rename), so a reader — or a crash — never observes a
+        // half-written file.
+        let snapshot_ticker = match (&warm_snapshot, dispatcher.warm_store()) {
+            (Some(path), Some(store)) if scfg.warm_snapshot_every > 0.0 => {
+                let (stop_tx, stop_rx) = mpsc::channel::<()>();
+                let path = path.clone();
+                let period = Duration::from_secs_f64(scfg.warm_snapshot_every);
+                let handle = std::thread::Builder::new()
+                    .name("fastcache-warm-snapshot".into())
+                    .spawn(move || loop {
+                        match stop_rx.recv_timeout(period) {
+                            Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        }
+                        match store.save_snapshot(std::path::Path::new(&path)) {
+                            Ok(n) => eprintln!("warm store: periodic snapshot of {n} entries to {path}"),
+                            Err(e) => eprintln!("warm store: periodic snapshot to {path} failed: {e}"),
+                        }
+                    })
+                    .expect("spawning warm-snapshot ticker");
+                Some((stop_tx, handle))
+            }
+            _ => None,
+        };
+        Server { dispatcher, warm_snapshot, snapshot_ticker }
     }
 
     /// Number of worker shards serving this instance.
@@ -381,11 +442,37 @@ impl Server {
         self.dispatcher.fault_plan()
     }
 
+    /// The shard supervisor (health states, blocklist counters).
+    pub fn supervisor(&self) -> Arc<Supervisor> {
+        self.dispatcher.supervisor()
+    }
+
+    /// One liveness observation: per-shard health states plus restart
+    /// and blocklist totals. This is what the wire `Health` frame
+    /// answers with — cheap enough to call at any time, including while
+    /// the server drains.
+    pub fn health_snapshot(&self) -> super::supervisor::HealthSnapshot {
+        let sup = self.dispatcher.supervisor();
+        let restarts =
+            self.registry().shards().iter().map(|s| s.restarts.get()).sum();
+        super::supervisor::HealthSnapshot {
+            states: sup.states(),
+            restarts,
+            blocklisted: sup.blocklisted(),
+        }
+    }
+
     /// Close every shard queue and wait for the shards to drain. When a
     /// snapshot path is configured, the warm store's contents are saved
     /// after the drain (so the snapshot includes everything the final
     /// burst published).
     pub fn shutdown(self) -> ServerReport {
+        // Stop the periodic-snapshot ticker first: the final save below
+        // must not race a tick's rename.
+        if let Some((stop_tx, handle)) = self.snapshot_ticker {
+            drop(stop_tx);
+            let _ = handle.join();
+        }
         let store = self.dispatcher.warm_store();
         let report = self.dispatcher.shutdown();
         if let (Some(path), Some(store)) = (&self.warm_snapshot, store) {
@@ -452,6 +539,81 @@ fn apply_rung(lane: &mut Lane, rung: DegradeRung) {
     }
 }
 
+/// Solo-replay survivors onto a FRESH stepper after a quarantine or a
+/// supervised restart: rebuild each lane from its admission snapshot
+/// (calibration profile, warm fits), re-apply its logged degrade rungs
+/// at the exact boundaries they originally hit, and re-step it to its
+/// pre-fault step index — bit-exact by the batched-equals-solo parity
+/// invariant. Replay runs UNOBSERVED (pre-fault steps were already
+/// counted once) and beats the supervisor heartbeat per replayed step so
+/// a long replay is never mistaken for a stall. A survivor whose replay
+/// itself fails answers `Internal` like the faulted lane did.
+#[allow(clippy::too_many_arguments)]
+fn replay_survivors(
+    stepper: &mut LaneStepper<'_>,
+    schedules: &Mutex<ScheduleCache>,
+    metrics: &ShardMetrics,
+    supervisor: &Supervisor,
+    shard_id: usize,
+    l2c_thr: f64,
+    layers: usize,
+    survivors: Vec<(Inflight, usize)>,
+    lanes: &mut Vec<Lane>,
+    inflight: &mut Vec<Inflight>,
+) {
+    for (fl, target) in survivors {
+        let schedule = schedules.lock().expect("schedule cache poisoned").get(fl.job.req.steps);
+        let replayed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut lane = match &fl.profile {
+                Some(profile) => {
+                    let policy = Box::new(calibrated_l2c(profile, l2c_thr, layers));
+                    stepper.lane_with_policy(&fl.job.req, schedule, policy)
+                }
+                None => stepper.make_lane(&fl.job.req, schedule),
+            };
+            if let Some(w) = &fl.warm {
+                lane.warm_start_fits(w);
+            }
+            let mut next_rung = 0;
+            while lane.step_index() < target {
+                while next_rung < fl.degrade_log.len()
+                    && fl.degrade_log[next_rung].0 == lane.step_index()
+                {
+                    apply_rung(&mut lane, fl.degrade_log[next_rung].1);
+                    next_rung += 1;
+                }
+                supervisor.beat(shard_id);
+                stepper.step(std::slice::from_mut(&mut lane))?;
+            }
+            // Rungs logged at exactly the pre-fault boundary were
+            // applied before the step that never completed.
+            while next_rung < fl.degrade_log.len()
+                && fl.degrade_log[next_rung].0 == lane.step_index()
+            {
+                apply_rung(&mut lane, fl.degrade_log[next_rung].1);
+                next_rung += 1;
+            }
+            Ok::<Lane, anyhow::Error>(lane)
+        }));
+        match replayed {
+            Ok(Ok(lane)) => {
+                lanes.push(lane);
+                inflight.push(fl);
+            }
+            _ => {
+                metrics.internal_errors.inc();
+                if fl.job.req.deadline_ms.is_some() {
+                    metrics.deadline_sheds.inc();
+                }
+                let _ = fl.job.resp.send(Event::Done(Outcome::Rejected(Reject::internal(
+                    fl.job.req.id,
+                    "survivor replay failed after quarantine",
+                ))));
+            }
+        }
+    }
+}
+
 /// Publish this shard's predicted load for the dispatcher's router.
 fn publish_load(load: &ShardLoad, lanes: &[Lane]) {
     use std::sync::atomic::Ordering;
@@ -480,6 +642,10 @@ pub(crate) struct ShardCtx {
     /// `[faults]` configured one — the default). When absent, no fault
     /// branch in the serve loop is ever taken.
     pub faults: Option<Arc<FaultPlan>>,
+    /// The shard supervisor: this shard bumps its step heartbeat through
+    /// it, reports quarantines for flap control, and honors its restart
+    /// requests. Always present; inert with all knobs at 0.
+    pub supervisor: Arc<Supervisor>,
 }
 
 /// One shard's serve loop: continuous batching with SLA-aware admission,
@@ -502,6 +668,7 @@ where
         metrics,
         recorder,
         faults,
+        supervisor,
     } = ctx;
     let (queue, load, schedules) = (queue.as_ref(), load.as_ref(), schedules.as_ref());
     let warm_store = warm_store.as_deref();
@@ -574,6 +741,62 @@ where
     let mut closed = false;
 
     loop {
+        // Watchdog escalation: the watchdog flagged a stall while a step
+        // was wedged, shed this shard's queue, and requested a restart —
+        // which only this thread can perform, because it owns the
+        // stepper. Now that the wedged step has returned, tear down and
+        // rebuild (fresh model + stepper) and replay every active lane
+        // at its exact step index.
+        if supervisor.take_restart_request(shard_id) {
+            eprintln!(
+                "shard {shard_id}: watchdog requested a restart; replaying {} active lane(s)",
+                lanes.len()
+            );
+            supervisor.set_state(shard_id, HealthState::Restarting);
+            metrics.restarts.inc();
+            match model_factory() {
+                Ok(mut m) => {
+                    if scfg.int8 {
+                        m.quantize_int8();
+                    }
+                    model = m;
+                }
+                Err(e) => eprintln!(
+                    "shard {shard_id}: model rebuild failed ({e}); \
+                     restarting on resident weights"
+                ),
+            }
+            stepper = LaneStepper::with_threads(&model, fc_cfg.clone(), threads);
+            let old_lanes = std::mem::take(&mut lanes);
+            let old_inflight = std::mem::take(&mut inflight);
+            let survivors: Vec<(Inflight, usize)> = old_inflight
+                .into_iter()
+                .zip(old_lanes.iter().map(Lane::step_index))
+                .collect();
+            drop(old_lanes);
+            replay_survivors(
+                &mut stepper,
+                schedules,
+                &metrics,
+                &supervisor,
+                shard_id,
+                l2c_thr,
+                layers,
+                survivors,
+                &mut lanes,
+                &mut inflight,
+            );
+            stepper.set_observer(StepObserver {
+                shard: shard_id as u32,
+                metrics: Arc::clone(&metrics),
+                recorder: recorder.clone(),
+            });
+            if let Some(plan) = &faults {
+                stepper.set_fault_plan(shard_id as u32, Arc::clone(plan));
+            }
+            supervisor.finish_restart(shard_id);
+            publish_load(load, &lanes);
+        }
         // Admission, at the step boundary: fill free lane slots. The
         // queue pops deadline-tagged jobs first, so SLA traffic jumps
         // ahead of best-effort exactly here. Block only when idle;
@@ -745,6 +968,9 @@ where
         // Either way the shard and the process survive.
         metrics.step_calls.inc();
         metrics.lane_steps.add(lanes.len() as u64);
+        // One relaxed add per step call: the heartbeat the stuck-step
+        // watchdog monitors. Observation only — never read by serving.
+        supervisor.beat(shard_id);
         let step_outcome = std::panic::catch_unwind(AssertUnwindSafe(|| stepper.step(&mut lanes)));
         let failed: Option<Option<u64>> = match &step_outcome {
             Ok(Ok(())) => None,
@@ -760,6 +986,11 @@ where
                 _ => "unattributed panic in denoise step; batch quarantined".to_string(),
             };
             eprintln!("shard {shard_id}: {detail}");
+            // Flap control FIRST, before any client learns of the fault:
+            // a typed quarantine files its blocklist strike here, so by
+            // the time the offender's `Internal` answer reaches the wire
+            // an immediate resubmit already meets the blocklist.
+            let flapping = supervisor.record_quarantine(shard_id, faulted);
             // Quarantine: the faulted lane(s) answer `Internal` — for
             // deadline-tagged requests that is an SLA miss, never a
             // vanished denominator. Survivors are rebuilt from their
@@ -786,65 +1017,46 @@ where
                     survivors.push((fl, lane.step_index()));
                 }
             }
+            // Past the configured flap threshold the supervisor orders a
+            // full supervised restart: the quarantine path below already
+            // rebuilds the stepper, so escalation adds a FRESH MODEL —
+            // a corrupted weight bank must not survive the restart.
+            if flapping {
+                eprintln!(
+                    "shard {shard_id}: quarantine flap threshold reached; supervised restart"
+                );
+                metrics.restarts.inc();
+                match model_factory() {
+                    Ok(mut m) => {
+                        if scfg.int8 {
+                            m.quantize_int8();
+                        }
+                        model = m;
+                    }
+                    Err(e) => eprintln!(
+                        "shard {shard_id}: model rebuild failed ({e}); \
+                         restarting on resident weights"
+                    ),
+                }
+            }
             // The unwound stepper's arena/temb state is untrusted —
             // rebuild it. Replay runs UNOBSERVED (the panicked partial
             // step flushed no counters, and pre-panic steps were already
             // counted once) and UNARMED (a multi-shot panic spec must not
             // re-fire inside recovery).
             stepper = LaneStepper::with_threads(&model, fc_cfg.clone(), threads);
-            for (fl, target) in survivors {
-                let schedule =
-                    schedules.lock().expect("schedule cache poisoned").get(fl.job.req.steps);
-                let replayed = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    let mut lane = match &fl.profile {
-                        Some(profile) => {
-                            let policy = Box::new(calibrated_l2c(profile, l2c_thr, layers));
-                            stepper.lane_with_policy(&fl.job.req, schedule, policy)
-                        }
-                        None => stepper.make_lane(&fl.job.req, schedule),
-                    };
-                    if let Some(w) = &fl.warm {
-                        lane.warm_start_fits(w);
-                    }
-                    let mut next_rung = 0;
-                    while lane.step_index() < target {
-                        while next_rung < fl.degrade_log.len()
-                            && fl.degrade_log[next_rung].0 == lane.step_index()
-                        {
-                            apply_rung(&mut lane, fl.degrade_log[next_rung].1);
-                            next_rung += 1;
-                        }
-                        stepper.step(std::slice::from_mut(&mut lane))?;
-                    }
-                    // Rungs logged at exactly the pre-panic boundary were
-                    // applied before the step that never completed.
-                    while next_rung < fl.degrade_log.len()
-                        && fl.degrade_log[next_rung].0 == lane.step_index()
-                    {
-                        apply_rung(&mut lane, fl.degrade_log[next_rung].1);
-                        next_rung += 1;
-                    }
-                    Ok::<Lane, anyhow::Error>(lane)
-                }));
-                match replayed {
-                    Ok(Ok(lane)) => {
-                        lanes.push(lane);
-                        inflight.push(fl);
-                    }
-                    _ => {
-                        metrics.internal_errors.inc();
-                        if fl.job.req.deadline_ms.is_some() {
-                            metrics.deadline_sheds.inc();
-                        }
-                        let _ = fl.job.resp.send(Event::Done(Outcome::Rejected(
-                            Reject::internal(
-                                fl.job.req.id,
-                                "survivor replay failed after quarantine",
-                            ),
-                        )));
-                    }
-                }
-            }
+            replay_survivors(
+                &mut stepper,
+                schedules,
+                &metrics,
+                &supervisor,
+                shard_id,
+                l2c_thr,
+                layers,
+                survivors,
+                &mut lanes,
+                &mut inflight,
+            );
             stepper.set_observer(StepObserver {
                 shard: shard_id as u32,
                 metrics: Arc::clone(&metrics),
@@ -852,6 +1064,9 @@ where
             });
             if let Some(plan) = &faults {
                 stepper.set_fault_plan(shard_id as u32, Arc::clone(plan));
+            }
+            if flapping {
+                supervisor.finish_restart(shard_id);
             }
             publish_load(load, &lanes);
             continue;
@@ -1395,6 +1610,8 @@ mod tests {
             internal_errors: 0,
             degraded_lanes: 0,
             degrade_rungs: 0,
+            restarts: 0,
+            watchdog_sheds: 0,
         }
     }
 
@@ -1429,6 +1646,9 @@ mod tests {
         a.degrade_rungs = 4;
         b.internal_errors = 2;
         b.degrade_rungs = 1;
+        a.restarts = 1;
+        b.restarts = 2;
+        b.watchdog_sheds = 3;
 
         let r = ServerReport::merge(vec![a, b], 2.5, None);
         assert_eq!(r.completed, 8);
@@ -1440,6 +1660,8 @@ mod tests {
         assert_eq!(r.internal_errors, 3);
         assert_eq!(r.degraded_lanes, 2);
         assert_eq!(r.degrade_rungs, 5);
+        assert_eq!(r.shard_restarts, 3);
+        assert_eq!(r.watchdog_sheds, 3);
         // Capacity-style fields merge by MAX, not sum: each shard's
         // scratch arena is independent, and threads is a per-shard clamp.
         assert_eq!(r.scratch_bytes, 8192);
@@ -1568,6 +1790,139 @@ mod tests {
         // must never silently alter lanes that carry no deadline.
         let degraded = serve_latents(ServerConfig { degrade: true, ..ServerConfig::default() });
         assert_eq!(plain, degraded, "degrade ladder touched best-effort lanes");
+        // Supervisor knobs armed but never tripped: a flap threshold with
+        // no quarantines, a blocklist with no strikes, and a stall budget
+        // no healthy step approaches must all leave serving bit-identical.
+        let supervised = serve_latents(ServerConfig {
+            shard_restart_after: 3,
+            poison_after: 2,
+            step_stall_ms: 10_000,
+            ..ServerConfig::default()
+        });
+        assert_eq!(plain, supervised, "an idle supervisor changed served latents");
+    }
+
+    #[test]
+    fn flapping_kernel_triggers_supervised_restart_and_survivors_match() {
+        // Two typed quarantines inside the flap window trip the
+        // supervisor: the shard tears down and restarts (fresh stepper,
+        // fresh model), replaying survivors at their exact step indices —
+        // so the two untouched requests must be BIT-identical to a clean
+        // run, and the restart must be visible in the report.
+        let run = |plan: Option<&str>, restart_after: usize| {
+            let scfg = ServerConfig {
+                max_batch: 4,
+                queue_depth: 16,
+                shard_restart_after: restart_after,
+                fault_plan: plan.map(String::from),
+                ..ServerConfig::default()
+            };
+            let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+            fc.enable_str = false;
+            let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
+            let mut rxs = Vec::new();
+            for i in 0..4u64 {
+                rxs.push(
+                    server.submit(&GenRequest::builder(i, 800 + i).steps(4).build().unwrap()).unwrap(),
+                );
+            }
+            let mut outs = Vec::new();
+            for rx in rxs {
+                match rx.wait() {
+                    Outcome::Completed(resp) => outs.push(Some(resp.result.latent.data().to_vec())),
+                    Outcome::Rejected(rej) => {
+                        assert_eq!(rej.code, ErrorCode::Internal);
+                        outs.push(None);
+                    }
+                }
+            }
+            (outs, server.shutdown())
+        };
+        let (clean, clean_report) = run(None, 2);
+        assert!(clean.iter().all(Option::is_some));
+        assert_eq!(clean_report.shard_restarts, 0, "clean traffic must not restart anything");
+
+        // Two distinct requests panic at consecutive steps — two typed
+        // quarantine events on one shard, meeting the flap threshold.
+        let (faulted, report) =
+            run(Some("panic step=1 layer=0 req=1; panic step=2 layer=0 req=2"), 2);
+        assert!(faulted[1].is_none(), "first faulted request must answer Internal");
+        assert!(faulted[2].is_none(), "second faulted request must answer Internal");
+        for i in [0usize, 3] {
+            assert_eq!(
+                faulted[i], clean[i],
+                "survivor {i} diverged across the supervised restart"
+            );
+        }
+        assert_eq!(report.internal_errors, 2);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.shard_restarts, 1, "flap threshold 2 must restart exactly once");
+
+        // Same plan, threshold off: quarantines happen, no restart.
+        let (_, unsupervised) =
+            run(Some("panic step=1 layer=0 req=1; panic step=2 layer=0 req=2"), 0);
+        assert_eq!(unsupervised.shard_restarts, 0, "restart_after=0 must never restart");
+        assert_eq!(unsupervised.internal_errors, 2);
+    }
+
+    #[test]
+    fn watchdog_unsticks_a_stalled_shard_with_honest_shed_accounting() {
+        // A seeded stall wedges the head request's step far past the
+        // watchdog budget. The watchdog marks the shard unhealthy, sheds
+        // its queue honestly (typed Internal, SLA-counted), and escalates
+        // to a supervised restart; the head request itself completes once
+        // its bounded stall ends.
+        let scfg = ServerConfig {
+            max_batch: 1,
+            queue_depth: 8,
+            step_stall_ms: 50,
+            fault_plan: Some("stall step=1 ms=800".to_string()),
+            ..ServerConfig::default()
+        };
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        let server = Server::start(scfg, fc, || Ok(DitModel::native(Variant::S, 1)));
+        let head = server.submit(&GenRequest::builder(0, 900).steps(4).build().unwrap()).unwrap();
+        // Give the head a beat to occupy the lane before queuing victims,
+        // so the stall hits while these jobs wait in the queue.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let queued_be = server.submit(&GenRequest::builder(1, 901).steps(4).build().unwrap()).unwrap();
+        let queued_dl = server
+            .submit(&GenRequest::builder(2, 902).steps(4).deadline_ms(120_000.0).build().unwrap())
+            .unwrap();
+
+        let head_out = head.wait();
+        let resp = head_out.completed();
+        assert!(
+            resp.result.latent.data().iter().all(|v| v.is_finite()),
+            "stalled head request must still finish"
+        );
+        let mut sheds = 0usize;
+        for rx in [queued_be, queued_dl] {
+            match rx.wait() {
+                Outcome::Rejected(rej) => {
+                    assert_eq!(rej.code, ErrorCode::Internal);
+                    assert!(
+                        rej.detail.contains("watchdog"),
+                        "shed detail must name the watchdog: {}",
+                        rej.detail
+                    );
+                    sheds += 1;
+                }
+                Outcome::Completed(_) => {
+                    panic!("queued job served from a shard the watchdog declared stuck")
+                }
+            }
+        }
+        assert_eq!(sheds, 2, "both queued jobs behind the stall must be shed");
+        let report = server.shutdown();
+        assert_eq!(report.watchdog_sheds, 2);
+        assert!(report.shard_restarts >= 1, "watchdog must escalate to a restart");
+        assert_eq!(report.completed, 1, "only the head request completes");
+        // The deadline-tagged shed is an SLA miss, never a vanished
+        // denominator: one tagged job entered, zero hit.
+        assert_eq!(report.deadline_sheds, 1);
+        assert_eq!(report.deadline_hit_rate(), Some(0.0));
     }
 
     #[test]

@@ -383,7 +383,11 @@ impl WarmStore {
     }
 
     /// Serialize every resident entry to `path` (parent directories are
-    /// created). Returns the entry count written.
+    /// created). The write is ATOMIC: bytes land in a `.tmp` sibling
+    /// first and are renamed into place, so a crash mid-write — or a
+    /// concurrent reader — can never observe a truncated snapshot; the
+    /// last good file survives until the rename commits. Returns the
+    /// entry count written.
     pub fn save_snapshot(&self, path: &Path) -> Result<usize, String> {
         let (bytes, n) = self.snapshot_encoded();
         if let Some(dir) = path.parent() {
@@ -391,7 +395,15 @@ impl WarmStore {
                 std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
             }
         }
-        std::fs::write(path, &bytes).map_err(|e| format!("write {}: {e}", path.display()))?;
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, &bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            // Don't leave the orphan behind on a failed commit.
+            let _ = std::fs::remove_file(&tmp);
+            format!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })?;
         Ok(n)
     }
 
@@ -695,6 +707,15 @@ mod tests {
         let path = dir.join("warm.fcws");
         let saved = store.save_snapshot(&path).expect("save");
         assert_eq!(saved, 3);
+        // Atomic write: the rename committed and left no temp file.
+        assert!(path.exists());
+        assert!(
+            !dir.join("warm.fcws.tmp").exists(),
+            "save must rename its temp file into place"
+        );
+        // Repeated saves (the periodic ticker's pattern) replace the
+        // file in place without error.
+        assert_eq!(store.save_snapshot(&path).expect("re-save"), 3);
 
         // Restore into a store with a DIFFERENT shard count: keys re-hash.
         let fresh = WarmStore::new(1 << 20, 4);

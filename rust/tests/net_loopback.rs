@@ -341,6 +341,107 @@ fn injected_socket_resets_are_survived_by_bounded_connect_retries() {
 }
 
 #[test]
+fn poisoned_resubmit_is_rejected_at_both_doors() {
+    let poisoned_scfg = || ServerConfig {
+        max_batch: 1,
+        queue_depth: 16,
+        workers: 1,
+        poison_after: 1,
+        fault_plan: Some("panic step=1 layer=0 req=7".into()),
+        ..ServerConfig::default()
+    };
+    let poisoned_server = || {
+        let mut fc = FastCacheConfig::with_policy(PolicyKind::FastCache);
+        fc.enable_str = false;
+        Server::start(poisoned_scfg(), fc, || Ok(DitModel::native(Variant::S, 5)))
+    };
+
+    // Door 1, in-process: the first submission of req 7 panics in-kernel
+    // and is quarantined (typed Internal). That files the strike that
+    // blocklists the id, so the resubmit is refused AT ADMISSION — no
+    // queue slot, no lane, a typed Poisoned rejection.
+    let server = poisoned_server();
+    let rx = server.submit(&GenRequest::builder(7, 70).steps(4).build().unwrap()).unwrap();
+    match rx.wait() {
+        Outcome::Rejected(rej) => assert_eq!(rej.code, ErrorCode::Internal),
+        other => panic!("expected quarantine, got {other:?}"),
+    }
+    let rej = server
+        .submit(&GenRequest::builder(7, 70).steps(4).build().unwrap())
+        .err()
+        .expect("blocklisted resubmit must be refused at admission");
+    assert_eq!(rej.code, ErrorCode::Poisoned);
+    assert_eq!(rej.id, 7);
+    assert!(rej.detail.contains("blocklisted"), "detail must say why: {}", rej.detail);
+    // An innocent request with a different id sails through.
+    let ok = server.submit(&GenRequest::builder(8, 71).steps(2).build().unwrap()).unwrap();
+    ok.wait().completed();
+    let report = server.shutdown();
+    assert_eq!(report.blocklisted, 1);
+    assert_eq!(report.poisoned_rejections, 1);
+    assert_eq!(report.internal_errors, 1);
+
+    // Door 2, over a real socket: same sequence through the front door.
+    // The refusal arrives as an Error frame carrying the Poisoned code,
+    // and — because the resubmit was deadline-tagged — it counts against
+    // the SLA hit rate.
+    let door =
+        NetServer::start(poisoned_server(), "127.0.0.1:0", 2).expect("bind loopback");
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    let rx = client.submit(&GenRequest::builder(7, 70).steps(4).build().unwrap()).unwrap();
+    match rx.wait() {
+        Outcome::Rejected(rej) => assert_eq!(rej.code, ErrorCode::Internal),
+        other => panic!("expected quarantine over the wire, got {other:?}"),
+    }
+    let resubmit =
+        GenRequest::builder(7, 70).steps(4).deadline_ms(120_000.0).build().unwrap();
+    let rx = client.submit(&resubmit).expect("wire submit itself does not refuse");
+    match rx.wait() {
+        Outcome::Rejected(rej) => {
+            assert_eq!(rej.code, ErrorCode::Poisoned, "wire code must round-trip: {rej:?}");
+            assert_eq!(rej.id, 7);
+        }
+        other => panic!("expected Poisoned over the wire, got {other:?}"),
+    }
+    // The blocklist is visible on the wire too: one Health frame.
+    let health = client.health().expect("health probe");
+    assert!(!health.draining);
+    assert_eq!(health.blocklisted, 1);
+    assert_eq!(health.restarts, 0);
+    assert_eq!(health.shards.len(), 1);
+    client.close();
+    let report = door.shutdown();
+    assert_eq!(report.blocklisted, 1);
+    assert_eq!(report.poisoned_rejections, 1);
+    assert_eq!(report.poisoned_sheds, 1, "deadline-tagged poisoned refusal is an SLA event");
+    assert_eq!(
+        report.deadline_hit_rate(),
+        Some(0.0),
+        "the poisoned refusal must count as an SLA miss, not vanish"
+    );
+}
+
+#[test]
+fn health_probe_answers_on_a_healthy_and_a_draining_door() {
+    let door = start_door(1, 16, 2);
+    let client = NetClient::connect(door.local_addr()).expect("connect");
+    // Healthy, idle server: every shard reports state 0, nothing counted.
+    let body = client.health().expect("idle health probe");
+    assert!(!body.draining);
+    assert_eq!(body.restarts, 0);
+    assert_eq!(body.blocklisted, 0);
+    assert_eq!(body.shards.len(), 1);
+    assert_eq!(body.shards[0], (0, 0), "idle shard must report Healthy (code 0)");
+    // Probes interleave with traffic on the same connection.
+    let req = GenRequest::builder(1, 0xBEEF).steps(4).build().unwrap();
+    let rx = client.submit(&req).expect("submit");
+    let _mid = client.health().expect("mid-flight health probe");
+    rx.wait().completed();
+    client.close();
+    door.shutdown();
+}
+
+#[test]
 fn a_dead_peer_resolves_pending_streams_to_closed_promptly() {
     use std::io::Write;
     // A hand-rolled door that handshakes, accepts one Submit, and dies

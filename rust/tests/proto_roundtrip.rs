@@ -10,7 +10,7 @@ use fastcache_dit::config::{C_IN, N_TOKENS};
 use fastcache_dit::net::proto::{
     self, decode_slice, encode, partial_frames, read_frame, Completed, PARTIAL_CHUNK_F32,
 };
-use fastcache_dit::net::{Frame, ProtoError, MAX_FRAME_LEN, VERSION};
+use fastcache_dit::net::{Frame, HealthBody, ProtoError, MAX_FRAME_LEN, VERSION};
 use fastcache_dit::obs::{HistSummary, Series, SeriesValue};
 use fastcache_dit::rng::Rng;
 use fastcache_dit::scheduler::{GenRequest, Turbulence};
@@ -64,7 +64,34 @@ fn sample_frames() -> Vec<Frame> {
         Frame::Shed { id: 8, waited_ms: 1234.5, deadline_ms: 1000.0 },
         Frame::Error { id: 0, code: ErrorCode::Busy.code(), detail: String::new() },
         Frame::Error { id: 9, code: 0xBEEF, detail: "unknown codes round-trip raw".into() },
+        Frame::Error {
+            id: 7,
+            code: ErrorCode::Poisoned.code(),
+            detail: "request 7 blocklisted after 2 typed quarantines".into(),
+        },
         Frame::Stats,
+        Frame::Health,
+        // Liveness replies: an empty single-shard door, a draining door
+        // with every health state plus an unknown forward-compat code,
+        // and counter edges.
+        Frame::HealthReply(HealthBody {
+            draining: false,
+            restarts: 0,
+            blocklisted: 0,
+            shards: vec![(0, 0)],
+        }),
+        Frame::HealthReply(HealthBody {
+            draining: true,
+            restarts: u64::MAX,
+            blocklisted: 3,
+            shards: vec![(0, 0), (1, 1), (2, 2), (3, 3), (u32::MAX, 0xEE)],
+        }),
+        Frame::HealthReply(HealthBody {
+            draining: false,
+            restarts: 1,
+            blocklisted: 0,
+            shards: Vec::new(),
+        }),
         // An empty scrape and one exercising every series kind, plus the
         // edges: empty name, zero count, zero values.
         Frame::StatsReply(Vec::new()),
@@ -214,6 +241,18 @@ fn hostile_inputs_are_rejected_without_panic() {
     lying[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     assert!(matches!(decode_slice(&lying), Err(ProtoError::Malformed(_))));
 
+    // A HealthReply whose shard count lies about the payload: same
+    // pre-allocation guard as Partial.
+    let mut lying_health = encode(&Frame::HealthReply(HealthBody {
+        draining: false,
+        restarts: 0,
+        blocklisted: 0,
+        shards: vec![(0, 0)],
+    }));
+    let count_at = 4 + 1 + 1 + 8 + 8; // len, type, draining, restarts, blocklisted
+    lying_health[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(decode_slice(&lying_health), Err(ProtoError::Malformed(_))));
+
     // Invalid UTF-8 in an Error detail.
     let mut bad_utf8 = encode(&Frame::Error { id: 1, code: 1, detail: "ab".into() });
     let detail_at = bad_utf8.len() - 2;
@@ -293,16 +332,20 @@ fn completed_reassembly_validates_shape_against_values() {
 
 #[test]
 fn version_is_stable_and_request_response_spaces_are_disjoint() {
-    // v3 added the Completed degrade-ladder verdict and the Internal
+    // v4 added the Health/HealthReply liveness pair and the Poisoned
     // error code (docs/PROTOCOL.md).
-    assert_eq!(VERSION, 3);
+    assert_eq!(VERSION, 4);
     assert_eq!(proto::MAGIC, u32::from_le_bytes(*b"FCP1"));
     // Request frames encode type bytes < 0x80, responses >= 0x80.
     for frame in sample_frames() {
         let ty = encode(&frame)[4];
         let is_request = matches!(
             frame,
-            Frame::Hello { .. } | Frame::Submit { .. } | Frame::Goodbye | Frame::Stats
+            Frame::Hello { .. }
+                | Frame::Submit { .. }
+                | Frame::Goodbye
+                | Frame::Stats
+                | Frame::Health
         );
         assert_eq!(ty < 0x80, is_request, "type byte space violated for {frame:?}");
     }

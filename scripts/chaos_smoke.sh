@@ -8,7 +8,15 @@
 #   * a client with --retries rides out the injected connection reset,
 #   * the drain stays graceful and loses zero admitted responses,
 #   * the corrupted snapshot degrades the next boot to a cold store
-#     (logged, non-fatal) instead of killing it.
+#     (logged, non-fatal) instead of killing it,
+#   * a flapping kernel (two typed panics inside the window) triggers
+#     exactly ONE supervised shard restart while the sibling requests
+#     complete — and the restart is visible on the wire via
+#     `health --connect`,
+#   * a stalled step is caught by the stuck-step watchdog: the health
+#     probe sees the shard leave Healthy (Unhealthy/Restarting), then
+#     recover to Healthy with `restarts 1`, and the wedged request
+#     still completes after the supervised restart.
 # CI runs exactly this (see .github/workflows/ci.yml, job chaos-smoke).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -131,4 +139,135 @@ if ! wait "$SERVER_PID"; then
 fi
 SERVER_PID=""
 echo "chaos_smoke: cold-start server served traffic and drained cleanly"
+
+# --- boot 3: flap control. Two typed panics on two different requests
+# land in one shard's 30s window; --shard-restart-after 2 must order
+# exactly ONE supervised restart, the two offenders answer Internal,
+# and the two surviving siblings complete through the restart.
+mkfifo "$OUT/ctl3"
+"$BIN" serve --native --model s --steps 6 --listen 127.0.0.1:0 --net-max-conns 8 \
+    --workers 1 --shard-restart-after 2 \
+    --fault-plan "panic step=1 layer=0 req=1; panic step=2 layer=0 req=2" \
+    < "$OUT/ctl3" > "$OUT/server3.log" 2>&1 &
+SERVER_PID=$!
+exec 9>"$OUT/ctl3"
+
+for _ in $(seq 1 100); do
+    grep -q "^listening on " "$OUT/server3.log" && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "chaos_smoke: server 3 died during startup" >&2
+        cat "$OUT/server3.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$OUT/server3.log" | head -n1)
+echo "chaos_smoke: door 3 is up on $ADDR (flap plan armed, restart-after 2)"
+
+"$BIN" client --connect "$ADDR" --requests 4 --steps 6 > "$OUT/flap.log" 2>&1
+[ "$(grep -c "REJECTED (internal" "$OUT/flap.log")" -eq 2 ] || {
+    echo "chaos_smoke: expected exactly 2 Internal rejections under the flap plan" >&2
+    cat "$OUT/flap.log" >&2
+    exit 1
+}
+grep -q "client done: 2/4 completed" "$OUT/flap.log"
+# The restart is never silent: the wire liveness probe reports it while
+# the server is still serving (and all shards are Healthy again).
+"$BIN" health --connect "$ADDR" > "$OUT/health_flap.log" 2>&1 || {
+    echo "chaos_smoke: health probe reported not-ready after the flap restart" >&2
+    cat "$OUT/health_flap.log" >&2
+    exit 1
+}
+grep -q "restarts 1" "$OUT/health_flap.log"
+grep -q "shard 0: Healthy" "$OUT/health_flap.log"
+echo drain >&9
+exec 9>&-
+if ! wait "$SERVER_PID"; then
+    echo "chaos_smoke: server 3 exited non-zero after drain" >&2
+    cat "$OUT/server3.log" >&2
+    exit 1
+fi
+SERVER_PID=""
+grep -q "supervisor: 1 supervised shard restart" "$OUT/server3.log"
+grep -q "faults: 2 requests answered Internal" "$OUT/server3.log"
+echo "chaos_smoke: flap control OK (exactly 1 supervised restart, siblings completed, visible on the wire)"
+
+# --- boot 4: stuck-step watchdog. A 3s busy-wait stall at step 2 wedges
+# the only shard; with --step-stall-ms 300 the watchdog must flag it
+# (health probe sees a non-Healthy state), escalate to a supervised
+# restart, and the wedged request must still complete after replay.
+mkfifo "$OUT/ctl4"
+"$BIN" serve --native --model s --steps 6 --listen 127.0.0.1:0 --net-max-conns 8 \
+    --workers 1 --step-stall-ms 300 \
+    --fault-plan "stall step=2 ms=3000" \
+    < "$OUT/ctl4" > "$OUT/server4.log" 2>&1 &
+SERVER_PID=$!
+exec 9>"$OUT/ctl4"
+
+for _ in $(seq 1 100); do
+    grep -q "^listening on " "$OUT/server4.log" && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "chaos_smoke: server 4 died during startup" >&2
+        cat "$OUT/server4.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$OUT/server4.log" | head -n1)
+echo "chaos_smoke: door 4 is up on $ADDR (stall plan armed, watchdog at 300ms)"
+
+"$BIN" client --connect "$ADDR" --requests 1 --steps 6 > "$OUT/stall.log" 2>&1 &
+CLIENT_PID=$!
+
+# While the step is wedged the probe must see the shard leave Healthy
+# (Unhealthy once flagged, Restarting once the shard consumes the
+# escalation) — a watchdog nobody can observe is no watchdog.
+SAW_SICK=""
+for _ in $(seq 1 60); do
+    "$BIN" health --connect "$ADDR" > "$OUT/health_sick.log" 2>&1 || true
+    if grep -qE "shard 0: (Unhealthy|Restarting)" "$OUT/health_sick.log"; then
+        SAW_SICK=1
+        break
+    fi
+    sleep 0.1
+done
+[ -n "$SAW_SICK" ] || {
+    echo "chaos_smoke: health probe never saw the stalled shard leave Healthy" >&2
+    cat "$OUT/health_sick.log" >&2
+    exit 1
+}
+echo "chaos_smoke: watchdog flagged the stalled shard (probe saw $(sed -n 's/.*shard 0: //p' "$OUT/health_sick.log" | head -n1))"
+
+# ...and recovery: the supervised restart completes, the probe goes
+# green again (exit 0 requires every shard Healthy) with restarts 1.
+RECOVERED=""
+for _ in $(seq 1 100); do
+    if "$BIN" health --connect "$ADDR" > "$OUT/health_ok.log" 2>&1 \
+        && grep -q "restarts 1" "$OUT/health_ok.log"; then
+        RECOVERED=1
+        break
+    fi
+    sleep 0.1
+done
+[ -n "$RECOVERED" ] || {
+    echo "chaos_smoke: stalled shard never recovered to Healthy with restarts 1" >&2
+    cat "$OUT/health_ok.log" >&2
+    exit 1
+}
+if ! wait "$CLIENT_PID"; then
+    echo "chaos_smoke: client on the stalled server failed" >&2
+    cat "$OUT/stall.log" >&2
+    exit 1
+fi
+grep -q "client done: 1/1 completed" "$OUT/stall.log"
+echo drain >&9
+exec 9>&-
+if ! wait "$SERVER_PID"; then
+    echo "chaos_smoke: server 4 exited non-zero after drain" >&2
+    cat "$OUT/server4.log" >&2
+    exit 1
+fi
+SERVER_PID=""
+grep -q "supervisor: 1 supervised shard restart" "$OUT/server4.log"
+echo "chaos_smoke: watchdog OK (stall flagged on the wire, recovered to Healthy, request completed)"
 echo "chaos_smoke: OK"
